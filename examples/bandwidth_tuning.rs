@@ -1,0 +1,54 @@
+//! B-FASGD bandwidth tuning (Figure 3 at example scale): sweep the fetch
+//! gate's `c` value and watch bandwidth drop while convergence holds; then
+//! try the same on the push side and watch it hurt.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example bandwidth_tuning
+//! # CS=0,0.1,0.5,2.0 ITERS=8000 cargo run --release --example bandwidth_tuning
+//! ```
+
+use fasgd::config::ExperimentConfig;
+use fasgd::experiments::fig3;
+
+fn main() -> anyhow::Result<()> {
+    fasgd::util::logging::init();
+
+    let cs: Vec<f64> = std::env::var("CS")
+        .unwrap_or_else(|_| "0,0.05,0.2,1.0".into())
+        .split(',')
+        .map(|s| s.trim().parse().expect("CS"))
+        .collect();
+    let iters: u64 = std::env::var("ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5_000);
+
+    let mut base = ExperimentConfig::default();
+    base.iters = iters;
+    base.clients = 16;
+    base.batch = 8;
+    base.eval_every = 500;
+
+    let results = fig3::run(&base, &cs)?;
+    fig3::report(&results, std::path::Path::new("results"))?;
+
+    // Also demonstrate the Dean'12 fixed-period baseline for contrast.
+    println!("\nDean'12 fixed-period baseline (k_fetch = 10):");
+    let mut fixed = base.clone();
+    fixed.name = "fixed-kfetch10".into();
+    fixed.policy = fasgd::config::Policy::Fasgd;
+    fixed.alpha = fasgd::experiments::fig1::FASGD_LR;
+    fixed.bandwidth = fasgd::config::BandwidthMode::Fixed { k_push: 1, k_fetch: 10 };
+    let run = fasgd::experiments::common::run_experiment(&fixed)?;
+    println!(
+        "  final cost {:.4}, fetch copies/potential {:.3}, total reduction {:.2}x",
+        run.history.tail_mean(3),
+        run.bandwidth.fetch_ratio(),
+        run.bandwidth.reduction_factor()
+    );
+    println!(
+        "  (B-FASGD achieves its reduction adaptively — heavy traffic early \
+         when v is high, sparse later — the fixed baseline cannot.)"
+    );
+    Ok(())
+}

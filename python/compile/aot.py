@@ -1,0 +1,253 @@
+"""AOT lowering: JAX (L2, calling L1 Pallas kernels) -> HLO text artifacts.
+
+This is the only place Python touches the system; ``make artifacts`` runs it
+once and the rust coordinator consumes the output directory forever after.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(what the published ``xla`` rust crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every ``<name>.hlo.txt`` ships a ``<name>.meta.json`` sidecar describing the
+exact input/output signature so the rust loader can validate shapes before
+compiling, plus deterministic ``*_init.bin`` (little-endian f32) initial
+parameter vectors and a ``manifest.json`` index.
+
+Usage:
+    cd python && python -m compile.aot --out ../artifacts \
+        [--mus 1,4,8,16,32,128] [--eval-batch 512] [--seed 42] \
+        [--transformers tiny,e2e] [--skip-existing]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, transformer
+from .kernels.fasgd_update import fasgd_update
+
+F32 = "f32"
+S32 = "s32"
+
+# FASGD hyper-parameters baked into the update artifacts. The paper leaves
+# gamma/beta unlabelled ("we did not tune"); these are the Graves'13
+# RMSProp-style defaults recorded in DESIGN.md §5. The rust-native update
+# engine uses the same constants (rust/src/server/fasgd.rs) and the two are
+# cross-validated by rust/tests/runtime_roundtrip.rs.
+FASGD_GAMMA = 0.95
+FASGD_BETA = 0.9
+FASGD_EPS = 1e-8
+FASGD_V_FLOOR = 1e-6
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(name, shape, dtype):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+class Emitter:
+    def __init__(self, out_dir: str, skip_existing: bool):
+        self.out_dir = out_dir
+        self.skip_existing = skip_existing
+        self.manifest = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def _paths(self, name):
+        return (os.path.join(self.out_dir, f"{name}.hlo.txt"),
+                os.path.join(self.out_dir, f"{name}.meta.json"))
+
+    def emit(self, name: str, fn, example_args, meta: dict):
+        hlo_path, meta_path = self._paths(name)
+        meta = dict(meta)
+        meta["name"] = name
+        meta["hlo"] = os.path.basename(hlo_path)
+        if self.skip_existing and os.path.exists(hlo_path) \
+                and os.path.exists(meta_path):
+            print(f"  [skip] {name}")
+            self.manifest.append(meta)
+            return
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        with open(hlo_path, "w") as f:
+            f.write(text)
+        with open(meta_path, "w") as f:
+            json.dump(meta, f, indent=2, sort_keys=True)
+        self.manifest.append(meta)
+        print(f"  [ok]   {name}: {len(text) / 1024:.0f} KiB hlo")
+
+    def emit_bin(self, name: str, vec: np.ndarray, meta: dict):
+        path = os.path.join(self.out_dir, f"{name}.bin")
+        meta = dict(meta)
+        meta["name"] = name
+        meta["bin"] = os.path.basename(path)
+        meta["len"] = int(vec.size)
+        vec.astype("<f4").tofile(path)
+        with open(os.path.join(self.out_dir, f"{name}.meta.json"), "w") as f:
+            json.dump(meta, f, indent=2, sort_keys=True)
+        self.manifest.append(meta)
+        print(f"  [ok]   {name}: {vec.size} f32")
+
+    def finish(self):
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump({"artifacts": self.manifest}, f, indent=2,
+                      sort_keys=True)
+        print(f"manifest: {len(self.manifest)} artifacts")
+
+
+def emit_mlp(em: Emitter, mus, eval_batch: int, seed: int):
+    sizes = model.DEFAULT_SIZES
+    p = model.param_count(sizes)
+    layout = [
+        {"name": n, "shape": list(s)} for n, s in model.param_layout(sizes)
+    ]
+
+    em.emit_bin(
+        "mlp_init",
+        model.init_params(seed, sizes),
+        {"kind": "init", "model": "mlp", "param_count": p, "seed": seed,
+         "sizes": list(sizes), "layout": layout},
+    )
+
+    theta = jnp.zeros((p,), jnp.float32)
+    for mu in mus:
+        x = jnp.zeros((mu, sizes[0]), jnp.float32)
+        y = jnp.zeros((mu,), jnp.int32)
+        em.emit(
+            f"mlp_grad_mu{mu}",
+            lambda t, xx, yy: model.mlp_grad(t, xx, yy, sizes, True),
+            (theta, x, y),
+            {"kind": "grad", "model": "mlp", "param_count": p, "batch": mu,
+             "inputs": [_spec("theta", (p,), F32),
+                        _spec("x", (mu, sizes[0]), F32),
+                        _spec("y", (mu,), S32)],
+             "outputs": [_spec("loss", (), F32), _spec("grad", (p,), F32)]},
+        )
+
+    x = jnp.zeros((eval_batch, sizes[0]), jnp.float32)
+    y = jnp.zeros((eval_batch,), jnp.int32)
+    em.emit(
+        f"mlp_eval_b{eval_batch}",
+        lambda t, xx, yy: model.mlp_eval(t, xx, yy, sizes, True),
+        (theta, x, y),
+        {"kind": "eval", "model": "mlp", "param_count": p,
+         "batch": eval_batch,
+         "inputs": [_spec("theta", (p,), F32),
+                    _spec("x", (eval_batch, sizes[0]), F32),
+                    _spec("y", (eval_batch,), S32)],
+         "outputs": [_spec("loss", (), F32), _spec("acc", (), F32)]},
+    )
+    return p
+
+
+def emit_fasgd(em: Emitter, p: int, model_name: str):
+    vecs = tuple(jnp.zeros((p,), jnp.float32) for _ in range(5))
+    aot = jnp.zeros((1,), jnp.float32)
+    for variant in ("std", "inverse"):
+        em.emit(
+            f"fasgd_update_p{p}_{variant}",
+            lambda th, n, b, v, g, a, _v=variant: fasgd_update(
+                th, n, b, v, g, a, gamma=FASGD_GAMMA, beta=FASGD_BETA,
+                eps=FASGD_EPS, v_floor=FASGD_V_FLOOR, variant=_v),
+            (*vecs, aot),
+            {"kind": "fasgd_update", "model": model_name, "param_count": p,
+             "variant": variant,
+             "hparams": {"gamma": FASGD_GAMMA, "beta": FASGD_BETA,
+                         "eps": FASGD_EPS, "v_floor": FASGD_V_FLOOR},
+             "inputs": [_spec("theta", (p,), F32), _spec("n", (p,), F32),
+                        _spec("b", (p,), F32), _spec("v", (p,), F32),
+                        _spec("grad", (p,), F32),
+                        _spec("alpha_over_tau", (1,), F32)],
+             "outputs": [_spec("theta", (p,), F32), _spec("n", (p,), F32),
+                         _spec("b", (p,), F32), _spec("v", (p,), F32)]},
+        )
+
+
+def emit_transformer(em: Emitter, cfg_name: str, batch: int, seed: int):
+    cfg = transformer.CONFIGS[cfg_name]
+    p = transformer.param_count(cfg)
+    layout = [
+        {"name": n, "shape": list(s)}
+        for n, s in transformer.param_layout(cfg)
+    ]
+    em.emit_bin(
+        f"transformer_{cfg.name}_init",
+        transformer.init_params(seed, cfg),
+        {"kind": "init", "model": f"transformer_{cfg.name}",
+         "param_count": p, "seed": seed, "layout": layout,
+         "config": dataclass_dict(cfg)},
+    )
+    theta = jnp.zeros((p,), jnp.float32)
+    toks = jnp.zeros((batch, cfg.seq_len), jnp.int32)
+    common = {"model": f"transformer_{cfg.name}", "param_count": p,
+              "batch": batch, "config": dataclass_dict(cfg)}
+    em.emit(
+        f"transformer_{cfg.name}_grad_b{batch}",
+        lambda t, xx, yy: transformer.lm_grad(t, xx, yy, cfg, True),
+        (theta, toks, toks),
+        {**common, "kind": "grad",
+         "inputs": [_spec("theta", (p,), F32),
+                    _spec("tokens", (batch, cfg.seq_len), S32),
+                    _spec("targets", (batch, cfg.seq_len), S32)],
+         "outputs": [_spec("loss", (), F32), _spec("grad", (p,), F32)]},
+    )
+    em.emit(
+        f"transformer_{cfg.name}_eval_b{batch}",
+        lambda t, xx, yy: transformer.lm_eval(t, xx, yy, cfg, True),
+        (theta, toks, toks),
+        {**common, "kind": "eval",
+         "inputs": [_spec("theta", (p,), F32),
+                    _spec("tokens", (batch, cfg.seq_len), S32),
+                    _spec("targets", (batch, cfg.seq_len), S32)],
+         "outputs": [_spec("loss", (), F32), _spec("acc", (), F32)]},
+    )
+    return p
+
+
+def dataclass_dict(cfg):
+    return {k: getattr(cfg, k) for k in
+            ("name", "vocab", "d_model", "n_layers", "n_heads", "d_ff",
+             "seq_len")}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--mus", default="1,2,4,8,16,32,128")
+    ap.add_argument("--eval-batch", type=int, default=512)
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--transformers", default="tiny,e2e")
+    ap.add_argument("--transformer-batch", type=int, default=8)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    em = Emitter(args.out, args.skip_existing)
+    mus = [int(m) for m in args.mus.split(",") if m]
+
+    print("== mlp ==")
+    p_mlp = emit_mlp(em, mus, args.eval_batch, args.seed)
+    print("== fasgd update ==")
+    emit_fasgd(em, p_mlp, "mlp")
+    for name in [t for t in args.transformers.split(",") if t]:
+        print(f"== transformer {name} ==")
+        p_t = emit_transformer(em, name, args.transformer_batch, args.seed)
+        emit_fasgd(em, p_t, f"transformer_{name}")
+    em.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Layer-1 Pallas kernels and their pure-jnp oracles."""
+
+from . import dense, fasgd_update, ref  # noqa: F401

@@ -1,0 +1,152 @@
+"""Layer-1 Pallas kernel: fused dense layer ``act(x @ w + b)``.
+
+TPU mapping (DESIGN.md §4): the matmul is tiled MXU-style — the grid walks
+``(m/bm, n/bn, k/bk)``; each grid step keeps one ``(bm, bn)`` f32 accumulator
+block resident in VMEM while streaming ``(bm, bk)``/``(bk, bn)`` operand tiles
+from HBM, and the bias + activation epilogue is fused into the final k-step so
+the activation never round-trips to HBM.
+
+On this CPU-only image the kernel must run with ``interpret=True`` (real TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute); the
+tiling is therefore a *structural* optimization, validated numerically here
+and costed analytically in DESIGN.md §9.
+
+Shapes that do not divide the block sizes are zero-padded in the wrapper and
+sliced back after the call — zero padding is exact for matmul+bias+relu.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default tile sizes. Multiples of the 128x128 MXU tile; sized so the
+# paper's MLP layers (784x200, 200x10) and the transformer projections fit
+# in one or two grid steps (every grid step is a while-loop iteration in the
+# lowered HLO, and XLA cannot fuse across them — fewer, larger tiles win on
+# both TPU (pipelining) and the CPU interpret path). VMEM at the defaults:
+# x-tile 256*1024*4 = 1 MiB, w-tile 1024*256*4 = 1 MiB, acc 256*256*4
+# = 0.25 MiB -> ~2.3 MiB resident, well under the 16 MiB budget (DESIGN §9).
+BLOCK_M = 256
+BLOCK_N = 256
+BLOCK_K = 1024
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, k_steps: int,
+                   activation: str):
+    """One ``(bm, bn)`` output tile; grid dim 2 walks the k blocks."""
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ki == k_steps - 1)
+    def _epilogue():
+        y = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        if activation == "relu":
+            y = jnp.maximum(y, 0.0)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _pad_to(a, multiples):
+    pads = []
+    for dim, mult in zip(a.shape, multiples):
+        rem = (-dim) % mult
+        pads.append((0, rem))
+    if any(p[1] for p in pads):
+        a = jnp.pad(a, pads)
+    return a
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "block_m", "block_n", "block_k")
+)
+def dense(x, w, b, activation: str = "relu", *, block_m: int = BLOCK_M,
+          block_n: int = BLOCK_N, block_k: int = BLOCK_K):
+    """Fused ``act(x @ w + b)`` as a Pallas kernel.
+
+    Args:
+        x: ``f[m, k]`` activations.
+        w: ``f[k, n]`` weights.
+        b: ``f[n]`` bias.
+        activation: ``"relu"`` or ``"none"``.
+    Returns:
+        ``f[m, n]`` with the dtype of ``x``.
+    """
+    if activation not in ("relu", "none"):
+        raise ValueError(f"unknown activation {activation!r}")
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {x.shape} @ {w.shape}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+
+    # Clamp blocks to the problem so tiny layers stay single-tile (keeps the
+    # interpret-mode grid, and hence the emitted HLO, small).
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    xp = _pad_to(x, (bm, bk))
+    wp = _pad_to(w, (bk, bn))
+    bp = _pad_to(b, (bn,))
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _matmul_kernel, k_steps=grid[2], activation=activation
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, ki: (i, ki)),
+            pl.BlockSpec((bk, bn), lambda i, j, ki: (ki, j)),
+            pl.BlockSpec((bn,), lambda i, j, ki: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, ki: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        # VMEM scratch: the f32 accumulator tile (the MXU accumulation
+        # register file on real hardware; a numpy array under interpret).
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense_vjp(x, w, b, activation: str = "relu"):
+    """``dense`` with a hand-written VJP (Pallas kernels are not autodiffable).
+
+    The backward matmuls (``dx = dz @ w.T``, ``dw = x.T @ dz``) reuse the same
+    Pallas matmul kernel, so the gradient path exercises L1 as well.
+    """
+    return dense(x, w, b, activation)
+
+
+def _dense_fwd(x, w, b, activation):
+    y = dense(x, w, b, activation)
+    return y, (x, w, y)
+
+
+def _dense_bwd(activation, res, dy):
+    x, w, y = res
+    if activation == "relu":
+        # relu: z > 0  <=>  y > 0 (post-activation), so y is a valid mask.
+        dz = jnp.where(y > 0, dy, 0.0).astype(dy.dtype)
+    else:
+        dz = dy
+    zero_n = jnp.zeros((w.shape[0],), dtype=dz.dtype)
+    zero_m = jnp.zeros((w.shape[1],), dtype=dz.dtype)
+    dx = dense(dz, w.T, zero_n, "none")
+    dw = dense(x.T, dz, zero_m, "none")
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+dense_vjp.defvjp(_dense_fwd, _dense_bwd)

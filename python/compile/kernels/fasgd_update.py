@@ -1,0 +1,98 @@
+"""Layer-1 Pallas kernel: fused FASGD statistics + weight update (eqs. 4-8).
+
+One pass over the flat parameter vector ``f32[P]`` computes
+
+    n' = g*n + (1-g)*grad^2                (eq. 4)
+    b' = g*b + (1-g)*grad                  (eq. 5)
+    s  = sqrt(max(n' - b'^2, 0) + eps)
+    v' = B*v + (1-B)*s                     (eq. 6, "std" variant; see DESIGN §5)
+         B*v + (1-B)/s                     (eq. 6 literal, "inverse" variant)
+    theta' = theta - (a/tau)/max(v', floor) * grad    (eqs. 7-8)
+
+TPU mapping (DESIGN.md §4): pure-VPU elementwise work, blocked in
+``BLOCK``-element tiles so each grid step keeps 6 live ``f32[BLOCK]`` operands
+in VMEM (~1.5 MiB at the default block — far under the 16 MiB budget) while
+streaming the rest from HBM. ``alpha/tau`` varies per server update, so it is
+a runtime scalar input; gamma/beta/eps/floor are training-session constants
+and are baked into the artifact.
+
+interpret=True on this CPU image; see dense.py for why.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 65536
+
+
+def _fasgd_kernel(aot_ref, theta_ref, n_ref, b_ref, v_ref, g_ref,
+                  theta_o, n_o, b_o, v_o, *, gamma: float, beta: float,
+                  eps: float, v_floor: float, variant: str):
+    g = g_ref[...]
+    n2 = gamma * n_ref[...] + (1.0 - gamma) * g * g
+    b2 = gamma * b_ref[...] + (1.0 - gamma) * g
+    std = jnp.sqrt(jnp.maximum(n2 - b2 * b2, 0.0) + eps)
+    if variant == "std":
+        v2 = beta * v_ref[...] + (1.0 - beta) * std
+    else:  # "inverse": eq. 6 exactly as printed
+        v2 = beta * v_ref[...] + (1.0 - beta) / std
+    alpha_over_tau = aot_ref[0]
+    theta_o[...] = theta_ref[...] - alpha_over_tau / jnp.maximum(v2, v_floor) * g
+    n_o[...] = n2
+    b_o[...] = b2
+    v_o[...] = v2
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("gamma", "beta", "eps", "v_floor", "variant", "block"),
+)
+def fasgd_update(theta, n, b, v, g, alpha_over_tau, *, gamma: float = 0.95,
+                 beta: float = 0.9, eps: float = 1e-8, v_floor: float = 1e-6,
+                 variant: str = "std", block: int = BLOCK):
+    """Fused FASGD server update over flat ``f32[P]`` state.
+
+    Args:
+        theta, n, b, v: server state vectors, all ``f32[P]``.
+        g: the incoming (stale) gradient, ``f32[P]``.
+        alpha_over_tau: scalar ``f32[1]`` — master lr already divided by the
+            clamped step-staleness.
+    Returns:
+        ``(theta', n', b', v')``.
+    """
+    if variant not in ("std", "inverse"):
+        raise ValueError(f"unknown variant {variant!r}")
+    (p,) = theta.shape
+    blk = min(block, p)
+    pad = (-p) % blk
+    if pad:
+        # v pads with 1.0 so the padded lanes never divide by the floor;
+        # padded theta/g are zero so the padded update is exactly zero.
+        theta = jnp.pad(theta, (0, pad))
+        n = jnp.pad(n, (0, pad))
+        b = jnp.pad(b, (0, pad))
+        v = jnp.pad(v, (0, pad), constant_values=1.0)
+        g = jnp.pad(g, (0, pad))
+    pp = p + pad
+    grid = (pp // blk,)
+    vec_spec = pl.BlockSpec((blk,), lambda i: (i,))
+    scalar_spec = pl.BlockSpec((1,), lambda i: (0,))
+
+    outs = pl.pallas_call(
+        functools.partial(_fasgd_kernel, gamma=gamma, beta=beta, eps=eps,
+                          v_floor=v_floor, variant=variant),
+        grid=grid,
+        in_specs=[scalar_spec, vec_spec, vec_spec, vec_spec, vec_spec,
+                  vec_spec],
+        out_specs=[vec_spec] * 4,
+        out_shape=[jax.ShapeDtypeStruct((pp,), jnp.float32)] * 4,
+        interpret=True,
+    )(alpha_over_tau, theta, n, b, v, g)
+    if pad:
+        outs = [o[:p] for o in outs]
+    return tuple(outs)

@@ -1,0 +1,108 @@
+"""Layer-2 model: the paper's MLP (784 -> 200 relu -> 10, NLL cost).
+
+Flat-parameter convention (DESIGN.md §3): every exported graph takes the
+parameters as a single ``f32[P]`` vector. The layout is fixed and recorded in
+the artifact metadata so the rust coordinator can treat the model as an
+opaque flat vector:
+
+    [w1 (784*200) | b1 (200) | w2 (200*10) | b2 (10)]   row-major
+
+The dense layers call the Layer-1 Pallas kernel (``kernels.dense.dense_vjp``)
+so the AOT-lowered gradient graph contains the kernel in both the forward and
+backward directions. ``use_pallas=False`` swaps in the pure-jnp oracle
+(used by tests to isolate kernel bugs from model bugs).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.dense import dense_vjp
+
+# The paper's architecture: 2-layer MLP, 200 hidden units, relu, NLL.
+DEFAULT_SIZES = (784, 200, 10)
+
+
+def param_layout(sizes=DEFAULT_SIZES):
+    """The (name, shape) layout of the flat parameter vector, in order."""
+    layout = []
+    for i, (fan_in, fan_out) in enumerate(zip(sizes[:-1], sizes[1:])):
+        layout.append((f"w{i + 1}", (fan_in, fan_out)))
+        layout.append((f"b{i + 1}", (fan_out,)))
+    return layout
+
+
+def param_count(sizes=DEFAULT_SIZES) -> int:
+    return sum(int(np.prod(s)) for _, s in param_layout(sizes))
+
+
+def init_params(seed: int, sizes=DEFAULT_SIZES) -> np.ndarray:
+    """Deterministic Glorot-uniform init, returned as the flat f32 vector."""
+    rng = np.random.default_rng(seed)
+    chunks = []
+    for name, shape in param_layout(sizes):
+        if name.startswith("w"):
+            fan_in, fan_out = shape
+            limit = np.sqrt(6.0 / (fan_in + fan_out))
+            chunks.append(
+                rng.uniform(-limit, limit, size=shape).astype(np.float32)
+            )
+        else:
+            chunks.append(np.zeros(shape, dtype=np.float32))
+    return np.concatenate([c.reshape(-1) for c in chunks])
+
+
+def unflatten(theta, sizes=DEFAULT_SIZES):
+    """Slice the flat vector back into the (w, b) list. Trace-safe."""
+    params = []
+    off = 0
+    for _, shape in param_layout(sizes):
+        size = int(np.prod(shape))
+        params.append(theta[off:off + size].reshape(shape))
+        off += size
+    return params
+
+
+def mlp_logits(theta, x, sizes=DEFAULT_SIZES, use_pallas: bool = True):
+    """Forward pass to logits. ``x`` is ``f32[mu, sizes[0]]``."""
+    parts = unflatten(theta, sizes)
+    layer = dense_vjp if use_pallas else (
+        lambda x_, w_, b_, act: ref.dense_ref(x_, w_, b_, act)
+    )
+    h = x
+    n_layers = len(sizes) - 1
+    for i in range(n_layers):
+        w, b = parts[2 * i], parts[2 * i + 1]
+        act = "relu" if i < n_layers - 1 else "none"
+        h = layer(h, w, b, act)
+    return h
+
+
+def nll(logits, y):
+    """Mean negative log likelihood; ``y`` is ``i32[mu]`` class labels."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+
+def mlp_loss(theta, x, y, sizes=DEFAULT_SIZES, use_pallas: bool = True):
+    return nll(mlp_logits(theta, x, sizes, use_pallas), y)
+
+
+@functools.partial(jax.jit, static_argnames=("sizes", "use_pallas"))
+def mlp_grad(theta, x, y, sizes=DEFAULT_SIZES, use_pallas: bool = True):
+    """The client-side graph: ``(theta, x, y) -> (loss, grad_flat)``."""
+    loss, grad = jax.value_and_grad(mlp_loss)(theta, x, y, sizes, use_pallas)
+    return loss, grad
+
+
+@functools.partial(jax.jit, static_argnames=("sizes", "use_pallas"))
+def mlp_eval(theta, x, y, sizes=DEFAULT_SIZES, use_pallas: bool = True):
+    """The validation graph: ``(theta, x, y) -> (mean_nll, accuracy)``."""
+    logits = mlp_logits(theta, x, sizes, use_pallas)
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return nll(logits, y), acc

@@ -1,0 +1,185 @@
+"""Layer-2 model: decoder-only transformer char-LM for the E2E driver.
+
+The paper predates transformers; this model exists because the environment's
+end-to-end validation requires training a transformer through the full
+Rust -> PJRT -> HLO stack. Same flat-parameter convention as ``model.py``.
+
+All 2-D projections (QKV, attention output, both FF layers, the LM head) go
+through the Layer-1 Pallas dense kernel; attention softmax/masking and
+layer-norm stay plain jnp (their cost is negligible next to the matmuls and
+keeping them un-bloated keeps the interpret-mode HLO manageable).
+
+Configs (``CONFIGS``): ``tiny`` for tests, ``e2e`` (~0.9M params) for the
+end-to-end example, ``large`` (~110M params, paper-scale per the environment
+spec) which lowers identically but is not compiled by default on this
+CPU-only image — see DESIGN.md §5.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.dense import dense_vjp
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+CONFIGS = {
+    "tiny": TransformerConfig("tiny", vocab=64, d_model=64, n_layers=2,
+                              n_heads=2, d_ff=128, seq_len=32),
+    "e2e": TransformerConfig("e2e", vocab=128, d_model=128, n_layers=4,
+                             n_heads=4, d_ff=512, seq_len=64),
+    "large": TransformerConfig("large", vocab=32768, d_model=768, n_layers=12,
+                               n_heads=12, d_ff=3072, seq_len=512),
+}
+
+
+def param_layout(cfg: TransformerConfig):
+    """(name, shape) layout of the flat parameter vector, in order."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    layout = [("embed", (v, d)), ("pos_embed", (cfg.seq_len, d))]
+    for i in range(cfg.n_layers):
+        layout += [
+            (f"l{i}.ln1_scale", (d,)), (f"l{i}.ln1_bias", (d,)),
+            (f"l{i}.wqkv", (d, 3 * d)), (f"l{i}.bqkv", (3 * d,)),
+            (f"l{i}.wo", (d, d)), (f"l{i}.bo", (d,)),
+            (f"l{i}.ln2_scale", (d,)), (f"l{i}.ln2_bias", (d,)),
+            (f"l{i}.wff1", (d, f)), (f"l{i}.bff1", (f,)),
+            (f"l{i}.wff2", (f, d)), (f"l{i}.bff2", (d,)),
+        ]
+    layout += [("lnf_scale", (d,)), ("lnf_bias", (d,)), ("head", (d, v)),
+               ("head_bias", (v,))]
+    return layout
+
+
+def param_count(cfg: TransformerConfig) -> int:
+    return sum(int(np.prod(s)) for _, s in param_layout(cfg))
+
+
+def init_params(seed: int, cfg: TransformerConfig) -> np.ndarray:
+    """Deterministic init: scaled-normal weights, zero biases, unit ln."""
+    rng = np.random.default_rng(seed)
+    chunks = []
+    for name, shape in param_layout(cfg):
+        base = name.split(".")[-1]
+        if base.startswith(("ln1_scale", "ln2_scale")) or name == "lnf_scale":
+            chunks.append(np.ones(shape, dtype=np.float32))
+        elif base.startswith("b") or "bias" in name:
+            chunks.append(np.zeros(shape, dtype=np.float32))
+        else:
+            std = 0.02 if name in ("embed", "pos_embed") else (
+                1.0 / np.sqrt(shape[0]))
+            chunks.append(
+                (rng.standard_normal(shape) * std).astype(np.float32))
+    return np.concatenate([c.reshape(-1) for c in chunks])
+
+
+def _unflatten(theta, cfg: TransformerConfig):
+    out = {}
+    off = 0
+    for name, shape in param_layout(cfg):
+        size = int(np.prod(shape))
+        out[name] = theta[off:off + size].reshape(shape)
+        off += size
+    return out
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _proj(x2d, w, b, layer):
+    """2-D projection through the Pallas dense kernel (no activation)."""
+    return layer(x2d, w, b, "none")
+
+
+def transformer_logits(theta, tokens, cfg: TransformerConfig,
+                       use_pallas: bool = True):
+    """Causal LM forward. ``tokens`` is ``i32[batch, seq]``."""
+    p = _unflatten(theta, cfg)
+    layer = dense_vjp if use_pallas else (
+        lambda x_, w_, b_, act: ref.dense_ref(x_, w_, b_, act))
+    bsz, seq = tokens.shape
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+
+    x = p["embed"][tokens] + p["pos_embed"][None, :seq, :]
+    mask = jnp.tril(jnp.ones((seq, seq), dtype=bool))
+
+    for i in range(cfg.n_layers):
+        pre = _layer_norm(x, p[f"l{i}.ln1_scale"], p[f"l{i}.ln1_bias"])
+        qkv = _proj(pre.reshape(bsz * seq, d), p[f"l{i}.wqkv"],
+                    p[f"l{i}.bqkv"], layer).reshape(bsz, seq, 3, h, hd)
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+        # [b, h, s, hd]
+        q = q.transpose(0, 2, 1, 3) / np.sqrt(hd)
+        k = k.transpose(0, 2, 1, 3)
+        v = v.transpose(0, 2, 1, 3)
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k)
+        att = jnp.where(mask[None, None, :, :], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(bsz * seq, d)
+        x = x + _proj(ctx, p[f"l{i}.wo"], p[f"l{i}.bo"],
+                      layer).reshape(bsz, seq, d)
+
+        pre = _layer_norm(x, p[f"l{i}.ln2_scale"], p[f"l{i}.ln2_bias"])
+        ff = layer(pre.reshape(bsz * seq, d), p[f"l{i}.wff1"],
+                   p[f"l{i}.bff1"], "relu")
+        ff = _proj(ff, p[f"l{i}.wff2"], p[f"l{i}.bff2"], layer)
+        x = x + ff.reshape(bsz, seq, d)
+
+    x = _layer_norm(x, p["lnf_scale"], p["lnf_bias"])
+    logits = _proj(x.reshape(bsz * seq, d), p["head"], p["head_bias"], layer)
+    return logits.reshape(bsz, seq, cfg.vocab)
+
+
+def lm_loss(theta, tokens, targets, cfg: TransformerConfig,
+            use_pallas: bool = True):
+    """Mean next-token NLL. ``targets`` is ``tokens`` shifted by the caller."""
+    logits = transformer_logits(theta, tokens, cfg, use_pallas)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, targets[:, :, None], axis=-1)
+    return -jnp.mean(picked)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_pallas"))
+def lm_grad(theta, tokens, targets, cfg: TransformerConfig,
+            use_pallas: bool = True):
+    """The exported client graph: ``(theta, tokens, targets) -> (loss, grad)``."""
+    loss, grad = jax.value_and_grad(lm_loss)(theta, tokens, targets, cfg,
+                                             use_pallas)
+    return loss, grad
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_pallas"))
+def lm_eval(theta, tokens, targets, cfg: TransformerConfig,
+            use_pallas: bool = True):
+    """Validation graph: ``(theta, tokens, targets) -> (mean_nll, accuracy)``."""
+    logits = transformer_logits(theta, tokens, cfg, use_pallas)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, targets[:, :, None], axis=-1)
+    acc = jnp.mean(
+        (jnp.argmax(logits, axis=-1) == targets).astype(jnp.float32))
+    return -jnp.mean(picked), acc

@@ -1,0 +1,5 @@
+import os
+import sys
+
+# Allow `pytest tests/` from python/ without installing the package.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

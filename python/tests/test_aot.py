@@ -1,0 +1,90 @@
+"""AOT path: lowered HLO text is well-formed and metadata is consistent."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_smoke():
+    import jax
+
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 1.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert "ENTRY" in text
+    assert "f32[2,2]" in text
+
+
+def test_to_hlo_text_pallas_lowers_to_plain_hlo():
+    """interpret=True pallas must not leave custom-calls in the HLO."""
+    import jax
+    from compile.kernels.dense import dense
+
+    spec_x = jax.ShapeDtypeStruct((4, 8), jnp.float32)
+    spec_w = jax.ShapeDtypeStruct((8, 4), jnp.float32)
+    spec_b = jax.ShapeDtypeStruct((4,), jnp.float32)
+    text = aot.to_hlo_text(
+        jax.jit(lambda x, w, b: (dense(x, w, b, "relu"),)).lower(
+            spec_x, spec_w, spec_b))
+    assert "ENTRY" in text
+    assert "mosaic" not in text.lower()
+
+
+@pytest.mark.skipif(not os.path.isdir(ARTIFACTS),
+                    reason="run `make artifacts` first")
+class TestEmittedArtifacts:
+    def _manifest(self):
+        with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+            return json.load(f)["artifacts"]
+
+    def test_manifest_complete(self):
+        names = {m["name"] for m in self._manifest()}
+        assert "mlp_init" in names
+        assert "mlp_grad_mu128" in names
+        assert any(n.startswith("fasgd_update_p159010") for n in names)
+
+    def test_every_artifact_file_exists(self):
+        for meta in self._manifest():
+            fname = meta.get("hlo") or meta.get("bin")
+            assert os.path.exists(os.path.join(ARTIFACTS, fname)), fname
+
+    def test_meta_matches_model(self):
+        for meta in self._manifest():
+            if meta["name"] == "mlp_init":
+                assert meta["param_count"] == model.param_count()
+                vec = np.fromfile(
+                    os.path.join(ARTIFACTS, meta["bin"]), dtype="<f4")
+                assert vec.size == meta["param_count"]
+                np.testing.assert_array_equal(
+                    vec, model.init_params(meta["seed"]))
+
+    def test_grad_meta_signature(self):
+        for meta in self._manifest():
+            if meta["kind"] == "grad" and meta["model"] == "mlp":
+                p = meta["param_count"]
+                mu = meta["batch"]
+                ins = {i["name"]: i for i in meta["inputs"]}
+                assert ins["theta"]["shape"] == [p]
+                assert ins["x"]["shape"] == [mu, 784]
+                assert ins["y"]["shape"] == [mu]
+                outs = {o["name"]: o for o in meta["outputs"]}
+                assert outs["grad"]["shape"] == [p]
+
+    def test_hlo_files_parseable_header(self):
+        for meta in self._manifest():
+            if "hlo" not in meta:
+                continue
+            with open(os.path.join(ARTIFACTS, meta["hlo"])) as f:
+                text = f.read()
+            assert "ENTRY" in text, meta["name"]
+            assert "custom-call" not in text.lower(), (
+                f"{meta['name']}: CPU PJRT cannot run custom-calls")

@@ -1,0 +1,99 @@
+"""L1 correctness: fused FASGD update kernel vs oracle (paper eqs. 4-8)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.fasgd_update import fasgd_update
+from compile.kernels.ref import (fasgd_apply_ref, fasgd_fused_ref,
+                                 fasgd_stats_ref)
+
+settings.register_profile("kernels", deadline=None, max_examples=25)
+settings.load_profile("kernels")
+
+HP = dict(gamma=0.95, beta=0.9, eps=1e-8, v_floor=1e-6)
+
+
+def _state(rng, p):
+    theta = rng.standard_normal(p).astype(np.float32)
+    n = np.abs(rng.standard_normal(p)).astype(np.float32)
+    b = (rng.standard_normal(p) * 0.1).astype(np.float32)
+    v = np.abs(rng.standard_normal(p)).astype(np.float32) + 0.05
+    g = rng.standard_normal(p).astype(np.float32)
+    return theta, n, b, v, g
+
+
+@given(
+    p=st.sampled_from([1, 7, 1000, 65536, 65537, 159010]),
+    variant=st.sampled_from(["std", "inverse"]),
+    aot=st.floats(1e-5, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_matches_ref(p, variant, aot, seed):
+    rng = np.random.default_rng(seed)
+    theta, n, b, v, g = _state(rng, p)
+    got = fasgd_update(theta, n, b, v, g,
+                       jnp.array([aot], jnp.float32), variant=variant, **HP)
+    want = fasgd_fused_ref(theta, n, b, v, g, alpha_over_tau=aot,
+                           variant=variant, **HP)
+    # The inverse variant divides by std values as small as sqrt(eps)=1e-4,
+    # which amplifies f32 reassociation differences ~1e4x; tolerances are
+    # scaled accordingly.
+    rtol, atol = (1e-4, 1e-5) if variant == "std" else (2e-3, 1e-4)
+    for name, a, e in zip(("theta", "n", "b", "v"), got, want):
+        np.testing.assert_allclose(a, e, rtol=rtol, atol=atol,
+                                   err_msg=f"output {name}")
+
+
+def test_stats_recurrence_fixed_point():
+    """With a constant gradient, n -> g^2, b -> g, std -> sqrt(eps)."""
+    p = 64
+    g = np.full(p, 0.5, np.float32)
+    n = np.zeros(p, np.float32)
+    b = np.zeros(p, np.float32)
+    v = np.zeros(p, np.float32)
+    stats_hp = dict(gamma=HP["gamma"], beta=HP["beta"], eps=HP["eps"])
+    for _ in range(400):
+        n, b, v = fasgd_stats_ref(n, b, v, g, **stats_hp)
+    np.testing.assert_allclose(n, 0.25, rtol=1e-3)
+    np.testing.assert_allclose(b, 0.5, rtol=1e-3)
+    # std of a constant gradient is ~0 -> v decays toward sqrt(eps)
+    assert float(jnp.max(v)) < 1e-2
+
+
+def test_apply_direction_and_scale():
+    """Update moves against the gradient, scaled by 1/(v*tau)."""
+    p = 16
+    theta = np.zeros(p, np.float32)
+    v = np.full(p, 2.0, np.float32)
+    g = np.ones(p, np.float32)
+    out = fasgd_apply_ref(theta, v, g, alpha_over_tau=0.1, v_floor=1e-6)
+    np.testing.assert_allclose(out, -0.05, rtol=1e-6)
+
+
+def test_v_floor_prevents_blowup():
+    """Near-zero v must not produce a huge step (the floor engages)."""
+    p = 8
+    theta = np.zeros(p, np.float32)
+    v = np.zeros(p, np.float32)
+    g = np.ones(p, np.float32)
+    out = fasgd_apply_ref(theta, v, g, alpha_over_tau=1e-3, v_floor=1e-2)
+    np.testing.assert_allclose(out, -0.1, rtol=1e-5)
+
+
+def test_variants_differ():
+    """std and inverse variants must actually produce different v tracks."""
+    rng = np.random.default_rng(3)
+    theta, n, b, v, g = _state(rng, 128)
+    aot = jnp.array([0.01], jnp.float32)
+    out_std = fasgd_update(theta, n, b, v, g, aot, variant="std", **HP)
+    out_inv = fasgd_update(theta, n, b, v, g, aot, variant="inverse", **HP)
+    assert not np.allclose(out_std[3], out_inv[3])
+
+
+def test_rejects_bad_variant():
+    z = np.zeros(4, np.float32)
+    with pytest.raises(ValueError):
+        fasgd_update(z, z, z, z, z, jnp.array([0.1], jnp.float32),
+                     variant="bogus", **HP)

@@ -1,0 +1,102 @@
+"""L2 correctness: MLP model — shapes, gradient checks, pallas/jnp parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+SIZES = (12, 7, 5)  # small stand-in for (784, 200, 10); same structure
+
+
+def _batch(rng, mu, d_in, classes):
+    x = rng.standard_normal((mu, d_in)).astype(np.float32)
+    y = rng.integers(0, classes, size=(mu,)).astype(np.int32)
+    return x, y
+
+
+def test_param_count_paper_architecture():
+    # 784*200 + 200 + 200*10 + 10 from the paper's 2-layer, 200-unit MLP.
+    assert model.param_count((784, 200, 10)) == 159010
+
+
+def test_init_deterministic():
+    a = model.init_params(7, SIZES)
+    b = model.init_params(7, SIZES)
+    c = model.init_params(8, SIZES)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+    assert a.dtype == np.float32
+    assert a.shape == (model.param_count(SIZES),)
+
+
+def test_unflatten_roundtrip():
+    theta = model.init_params(0, SIZES)
+    parts = model.unflatten(jnp.asarray(theta), SIZES)
+    flat = np.concatenate([np.asarray(p).reshape(-1) for p in parts])
+    np.testing.assert_array_equal(flat, theta)
+
+
+@pytest.mark.parametrize("mu", [1, 4, 32])
+def test_grad_shapes_and_finiteness(mu):
+    rng = np.random.default_rng(0)
+    theta = jnp.asarray(model.init_params(0, SIZES))
+    x, y = _batch(rng, mu, SIZES[0], SIZES[-1])
+    loss, grad = model.mlp_grad(theta, x, y, SIZES, True)
+    assert loss.shape == ()
+    assert grad.shape == theta.shape
+    assert np.isfinite(float(loss))
+    assert np.all(np.isfinite(np.asarray(grad)))
+
+
+def test_pallas_matches_jnp_path():
+    """The kernel-backed model must agree with the oracle-backed model."""
+    rng = np.random.default_rng(1)
+    theta = jnp.asarray(model.init_params(3, SIZES))
+    x, y = _batch(rng, 16, SIZES[0], SIZES[-1])
+    lp, gp = model.mlp_grad(theta, x, y, SIZES, True)
+    lr, gr = model.mlp_grad(theta, x, y, SIZES, False)
+    np.testing.assert_allclose(lp, lr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(gp, gr, rtol=1e-4, atol=1e-5)
+
+
+def test_grad_against_finite_differences():
+    rng = np.random.default_rng(2)
+    sizes = (4, 3, 2)
+    theta = model.init_params(0, sizes) + 0.1
+    x, y = _batch(rng, 8, sizes[0], sizes[-1])
+    _, grad = model.mlp_grad(jnp.asarray(theta), x, y, sizes, True)
+    grad = np.asarray(grad)
+    eps = 1e-3
+    idxs = rng.choice(theta.size, size=6, replace=False)
+    for i in idxs:
+        tp, tm = theta.copy(), theta.copy()
+        tp[i] += eps
+        tm[i] -= eps
+        lp = float(model.mlp_loss(jnp.asarray(tp), x, y, sizes, False))
+        lm = float(model.mlp_loss(jnp.asarray(tm), x, y, sizes, False))
+        fd = (lp - lm) / (2 * eps)
+        assert abs(fd - grad[i]) < 5e-3, f"param {i}: fd={fd} ad={grad[i]}"
+
+
+def test_eval_accuracy_bounds():
+    rng = np.random.default_rng(3)
+    theta = jnp.asarray(model.init_params(0, SIZES))
+    x, y = _batch(rng, 64, SIZES[0], SIZES[-1])
+    loss, acc = model.mlp_eval(theta, x, y, SIZES, True)
+    assert 0.0 <= float(acc) <= 1.0
+    assert float(loss) > 0.0
+
+
+def test_sgd_reduces_loss():
+    """A few plain-SGD steps on a fixed batch must reduce the loss."""
+    rng = np.random.default_rng(4)
+    theta = jnp.asarray(model.init_params(0, SIZES))
+    x, y = _batch(rng, 32, SIZES[0], SIZES[-1])
+    l0, _ = model.mlp_grad(theta, x, y, SIZES, True)
+    for _ in range(60):
+        _, g = model.mlp_grad(theta, x, y, SIZES, True)
+        theta = theta - 0.2 * g
+    l1, _ = model.mlp_grad(theta, x, y, SIZES, True)
+    assert float(l1) < float(l0) * 0.8

@@ -1,0 +1,95 @@
+"""L2 correctness: transformer char-LM (the E2E driver model)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import transformer
+
+CFG = transformer.CONFIGS["tiny"]
+
+
+def _tokens(rng, batch, cfg):
+    toks = rng.integers(0, cfg.vocab, size=(batch, cfg.seq_len + 1))
+    return (toks[:, :-1].astype(np.int32), toks[:, 1:].astype(np.int32))
+
+
+def test_param_count_matches_layout():
+    p = transformer.param_count(CFG)
+    theta = transformer.init_params(0, CFG)
+    assert theta.shape == (p,)
+    assert theta.dtype == np.float32
+
+
+def test_init_deterministic():
+    a = transformer.init_params(5, CFG)
+    b = transformer.init_params(5, CFG)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_grad_shapes_and_finiteness():
+    rng = np.random.default_rng(0)
+    theta = jnp.asarray(transformer.init_params(0, CFG))
+    toks, tgts = _tokens(rng, 2, CFG)
+    loss, grad = transformer.lm_grad(theta, toks, tgts, CFG, True)
+    assert grad.shape == theta.shape
+    assert np.isfinite(float(loss))
+    assert np.all(np.isfinite(np.asarray(grad)))
+
+
+def test_initial_loss_near_uniform():
+    """Fresh init should predict ~uniform: loss ~= ln(vocab)."""
+    rng = np.random.default_rng(1)
+    theta = jnp.asarray(transformer.init_params(0, CFG))
+    toks, tgts = _tokens(rng, 4, CFG)
+    loss, _ = transformer.lm_eval(theta, toks, tgts, CFG, True)
+    assert abs(float(loss) - np.log(CFG.vocab)) < 0.5
+
+
+def test_pallas_matches_jnp_path():
+    rng = np.random.default_rng(2)
+    theta = jnp.asarray(transformer.init_params(0, CFG))
+    toks, tgts = _tokens(rng, 2, CFG)
+    lp, gp = transformer.lm_grad(theta, toks, tgts, CFG, True)
+    lr, gr = transformer.lm_grad(theta, toks, tgts, CFG, False)
+    np.testing.assert_allclose(lp, lr, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gp, gr, rtol=2e-3, atol=2e-4)
+
+
+def test_causality():
+    """Changing a future token must not change past logits."""
+    rng = np.random.default_rng(3)
+    theta = jnp.asarray(transformer.init_params(0, CFG))
+    toks, _ = _tokens(rng, 1, CFG)
+    logits_a = transformer.transformer_logits(theta, toks, CFG, False)
+    toks_b = toks.copy()
+    toks_b[0, -1] = (toks_b[0, -1] + 1) % CFG.vocab
+    logits_b = transformer.transformer_logits(theta, toks_b, CFG, False)
+    np.testing.assert_allclose(logits_a[0, :-1], logits_b[0, :-1],
+                               rtol=1e-5, atol=1e-5)
+    assert not np.allclose(logits_a[0, -1], logits_b[0, -1])
+
+
+def test_sgd_reduces_loss():
+    rng = np.random.default_rng(4)
+    theta = jnp.asarray(transformer.init_params(0, CFG))
+    toks, tgts = _tokens(rng, 4, CFG)
+    l0 = float(transformer.lm_loss(theta, toks, tgts, CFG, True))
+    for _ in range(10):
+        _, g = transformer.lm_grad(theta, toks, tgts, CFG, True)
+        theta = theta - 0.5 * g
+    l1 = float(transformer.lm_loss(theta, toks, tgts, CFG, True))
+    assert l1 < l0
+
+
+@pytest.mark.parametrize("name", ["tiny", "e2e", "large"])
+def test_configs_well_formed(name):
+    cfg = transformer.CONFIGS[name]
+    assert cfg.d_model % cfg.n_heads == 0
+    assert transformer.param_count(cfg) > 0
+
+
+def test_large_config_is_paper_scale():
+    """`large` must be ~100M params (the environment's E2E reference scale)."""
+    p = transformer.param_count(transformer.CONFIGS["large"])
+    assert 80e6 < p < 200e6, p

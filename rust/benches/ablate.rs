@@ -1,0 +1,127 @@
+//! Ablation benches for the design choices DESIGN.md §5 calls out:
+//!
+//! 1. eq. 6 interpretation — `v` as EMA of std (default) vs the literal
+//!    printed EMA of 1/std;
+//! 2. push-drop strategy — re-apply cached (paper) vs client-side
+//!    accumulate (paper's suggested alternative) vs plain skip;
+//! 3. staleness penalty family — SASGD's 1/τ vs Chan & Lane's exp(−ρτ)
+//!    (the paper's "reduces the learning rate too far" criticism);
+//! 4. update engine — fused rust loop vs AOT Pallas artifact (numerics; the
+//!    speed side lives in benches/micro.rs).
+
+use fasgd::bench_util::bench_iters;
+use fasgd::config::{BandwidthMode, ExperimentConfig, Policy, PushDropMode,
+                    UpdateEngineKind};
+use fasgd::experiments::common::run_experiment;
+use fasgd::metrics::writer::render_table;
+
+fn main() -> anyhow::Result<()> {
+    fasgd::util::logging::init();
+    let iters = bench_iters(4_000);
+
+    let mut base = ExperimentConfig::default();
+    base.iters = iters;
+    base.clients = 16;
+    base.batch = 8;
+    base.eval_every = (iters / 8).max(1);
+    base.alpha = fasgd::experiments::fig1::FASGD_LR;
+
+    // --- 1. eq. 6 variant -------------------------------------------------
+    println!("== ablation: eq.6 v-track variant ==");
+    let mut rows = Vec::new();
+    for (label, inverse) in [("std (default)", false), ("inverse (literal)", true)] {
+        let mut cfg = base.clone();
+        cfg.name = format!("ablate-eq6-{}", if inverse { "inv" } else { "std" });
+        cfg.fasgd.inverse_variant = inverse;
+        let s = run_experiment(&cfg)?;
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.4}", s.history.tail_mean(3)),
+            format!("{:.4}", s.best_val_loss()),
+        ]);
+    }
+    println!("{}", render_table(&["variant", "final cost", "best cost"], &rows));
+
+    // --- 2. push-drop strategy --------------------------------------------
+    println!("== ablation: push-drop strategy (c_push=0.3) ==");
+    let mut rows = Vec::new();
+    for (label, mode) in [
+        ("reapply cached (paper)", PushDropMode::ReapplyCached),
+        ("accumulate (alt.)", PushDropMode::Accumulate),
+        ("skip", PushDropMode::Skip),
+    ] {
+        let mut cfg = base.clone();
+        cfg.name = format!("ablate-drop-{label}");
+        cfg.bandwidth = BandwidthMode::Probabilistic {
+            c_push: 0.3,
+            c_fetch: 0.0,
+            eps: 1e-8,
+        };
+        cfg.push_drop = mode;
+        let s = run_experiment(&cfg)?;
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.4}", s.history.tail_mean(3)),
+            format!("{:.3}", s.bandwidth.push_ratio()),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(&["strategy", "final cost", "push copies/potential"], &rows)
+    );
+
+    // --- 3. staleness penalty family ---------------------------------------
+    println!("== ablation: staleness penalty (lambda=64 for heavier tails) ==");
+    let mut rows = Vec::new();
+    for (policy, alpha, rho) in [
+        (Policy::Sasgd, 0.04f32, 0.0f32),
+        (Policy::Exponential, 0.04, 0.05),
+        (Policy::Exponential, 0.04, 0.5),
+        (Policy::Asgd, 0.005, 0.0),
+        (Policy::Fasgd, 0.005, 0.0),
+    ] {
+        let mut cfg = base.clone();
+        cfg.policy = policy;
+        cfg.alpha = alpha;
+        cfg.rho = rho;
+        cfg.clients = 64;
+        cfg.batch = 2;
+        cfg.name = format!("ablate-penalty-{}-rho{rho}", policy.name());
+        let s = run_experiment(&cfg)?;
+        rows.push(vec![
+            format!("{}{}", policy.name(),
+                    if policy == Policy::Exponential { format!("(rho={rho})") } else { String::new() }),
+            format!("{:.4}", s.history.tail_mean(3)),
+            format!("{:.1}", s.staleness.mean()),
+        ]);
+    }
+    println!("{}", render_table(&["policy", "final cost", "mean tau"], &rows));
+    println!(
+        "paper claim: the exponential penalty over-suppresses at large tau; \
+         SASGD's 1/tau is better, FASGD better still."
+    );
+
+    // --- 4. update engine numerics ------------------------------------------
+    if fasgd::util::artifacts_dir().join("manifest.json").exists() {
+        println!("== ablation: FASGD update engine (rust fused vs AOT Pallas) ==");
+        let mut rows = Vec::new();
+        for (label, engine) in [
+            ("rust fused", UpdateEngineKind::Rust),
+            ("xla pallas", UpdateEngineKind::Xla),
+        ] {
+            let mut cfg = base.clone();
+            cfg.iters = iters.min(1_500); // per-update PJRT dispatch is slower
+            cfg.update_engine = engine;
+            cfg.name = format!("ablate-engine-{label}");
+            let s = run_experiment(&cfg)?;
+            rows.push(vec![
+                label.to_string(),
+                format!("{:.4}", s.history.tail_mean(3)),
+                format!("{:.1}s", s.wall_secs),
+            ]);
+        }
+        println!("{}", render_table(&["engine", "final cost", "wall"], &rows));
+        println!("(identical math ⇒ costs should agree to f32 noise)");
+    }
+    Ok(())
+}

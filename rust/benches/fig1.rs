@@ -1,0 +1,28 @@
+//! Regenerates Figure 1 (FASGD vs SASGD, 4 (µ,λ) panels, µλ=128).
+//!
+//! `cargo bench --bench fig1` runs a reduced-iteration version (the shape
+//! of the result — who wins in each panel — is the deliverable).
+//! `FASGD_BENCH_ITERS=100000 cargo bench --bench fig1` reproduces the
+//! paper's full budget; `repro fig1 --iters 100000` is equivalent.
+
+use fasgd::bench_util::bench_iters;
+use fasgd::config::ExperimentConfig;
+use fasgd::experiments::fig1;
+
+fn main() -> anyhow::Result<()> {
+    fasgd::util::logging::init();
+    let mut base = ExperimentConfig::default();
+    base.iters = bench_iters(3_000);
+    base.eval_every = (base.iters / 10).max(1);
+    println!("fig1 bench: iters={} (paper: 100000)\n", base.iters);
+
+    let results = fig1::run(&base)?;
+    fig1::report(&results, std::path::Path::new("results/bench"))?;
+
+    let wins = results.iter().filter(|r| r.fasgd_wins()).count();
+    println!(
+        "FASGD wins {wins}/{} panels (paper: 4/4 at 100k iterations)",
+        results.len()
+    );
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Regenerates Figure 2 (λ-scaling: FASGD vs SASGD at µ=128).
+//!
+//! Default: λ ∈ {250, 500, 1000} with a reduced iteration budget; the
+//! paper's λ=10000 point is included when `FASGD_BENCH_FULL=1` (it needs
+//! ≥30k iterations and ~7 GB of client parameter copies — see DESIGN.md
+//! §10). `repro fig2 --iters 100000` runs the paper's full configuration.
+
+use fasgd::bench_util::bench_iters;
+use fasgd::config::ExperimentConfig;
+use fasgd::experiments::fig2;
+
+fn main() -> anyhow::Result<()> {
+    fasgd::util::logging::init();
+    let mut base = ExperimentConfig::default();
+    base.iters = bench_iters(4_000);
+    base.eval_every = (base.iters / 8).max(1);
+
+    let mut lambdas = vec![250usize, 500, 1000];
+    if std::env::var("FASGD_BENCH_FULL").is_ok() {
+        lambdas.push(10_000);
+    }
+    println!(
+        "fig2 bench: iters>={} lambdas={lambdas:?} (paper: 100000 iters, +lambda=10000)\n",
+        base.iters
+    );
+
+    let results = fig2::run(&base, &lambdas)?;
+    fig2::report(&results, std::path::Path::new("results/bench"))?;
+
+    let wins = results.iter().filter(|r| r.fasgd_wins()).count();
+    println!("FASGD wins {wins}/{} lambda settings", results.len());
+    let gaps: Vec<f64> = results.iter().map(|r| r.gap()).collect();
+    let grows = gaps.windows(2).all(|w| w[1] >= w[0] - 0.02);
+    println!(
+        "gap vs lambda: {gaps:?} — {}",
+        if grows {
+            "non-decreasing (paper's scaling claim)"
+        } else {
+            "not monotone at this reduced budget"
+        }
+    );
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Micro-benchmarks for the L3 hot paths (EXPERIMENTS.md §Perf):
+//! the fused FASGD server update, the SASGD axpy, the PJRT dispatch cost of
+//! the grad/eval/update graphs, pure-rust grad, and the dispatcher's
+//! per-step overhead with gradient cost excluded.
+
+use std::time::Duration;
+
+use fasgd::bench_util::Bench;
+use fasgd::config::Policy;
+use fasgd::grad::{Batch, GradientEngine, RustMlpEngine, XlaGradEngine};
+use fasgd::tensor::{fasgd_update_fused, FasgdHparams};
+
+const P: usize = 159_010; // the paper MLP's flat parameter count
+
+fn main() -> anyhow::Result<()> {
+    fasgd::util::logging::init();
+    let bench = Bench::with_budget(Duration::from_millis(600));
+
+    // --- server update engines over P=159010 --------------------------------
+    let mut rng = fasgd::rng::stream(0, "bench", 0);
+    let mut theta: Vec<f32> = (0..P).map(|_| rng.f32() - 0.5).collect();
+    let mut n = vec![0.1f32; P];
+    let mut b = vec![0.0f32; P];
+    let mut v = vec![0.5f32; P];
+    let g: Vec<f32> = (0..P).map(|_| rng.f32() - 0.5).collect();
+    let hp = FasgdHparams::default();
+
+    let stats = bench.run("fasgd_update_fused (rust, P=159010)", || {
+        fasgd_update_fused(&mut theta, &mut n, &mut b, &mut v, &g, 1e-3, &hp);
+    });
+    let bytes = (P * 4 * 5) as f64; // 4 state streams rw + grad read ≈ 5 streams
+    println!(
+        "    -> {:.2} GB/s effective, {:.1} Melem/s",
+        bytes * stats.per_sec() / 1e9,
+        P as f64 * stats.per_sec() / 1e6
+    );
+
+    bench.run("sasgd axpy apply (P=159010)", || {
+        fasgd::tensor::sasgd_apply(&mut theta, &g, 1e-4);
+    });
+
+    // --- pure-rust grad engine ----------------------------------------------
+    let split = fasgd::data::synthetic::generate(0, 256, 0, 0.35);
+    let (x8, y8) = split.train.gather(&(0..8).collect::<Vec<_>>());
+    let mut rust_engine = RustMlpEngine::paper(8);
+    let mut grad_buf = vec![0.0f32; rust_engine.param_count()];
+    let theta_mlp: Vec<f32> =
+        fasgd::grad::rust_mlp::init_params(0, &[784, 200, 10]);
+    bench.run("rust MLP grad (mu=8)", || {
+        rust_engine
+            .grad(&theta_mlp, &Batch::Classif { x: &x8, y: &y8 }, &mut grad_buf)
+            .unwrap();
+    });
+
+    // --- PJRT graph dispatch -------------------------------------------------
+    if fasgd::util::artifacts_dir().join("manifest.json").exists() {
+        let engine = fasgd::experiments::common::shared_engine()?;
+        for mu in [1usize, 8, 128] {
+            let mut ge = XlaGradEngine::new(&engine, "mlp", mu)?;
+            let idx: Vec<usize> = (0..mu).collect();
+            let (x, y) = split.train.gather(&idx);
+            let theta = engine.registry().load_init("mlp")?;
+            let mut gb = vec![0.0f32; ge.param_count()];
+            bench.run(&format!("xla MLP grad execute (mu={mu})"), || {
+                ge.grad(&theta, &Batch::Classif { x: &x, y: &y }, &mut gb)
+                    .unwrap();
+            });
+        }
+        let upd = fasgd::grad::XlaUpdateEngine::new(&engine, P, &hp)?;
+        bench.run("xla fasgd_update (Pallas artifact, P=159010)", || {
+            upd.apply(&mut theta, &mut n, &mut b, &mut v, &g, 1e-3).unwrap();
+        });
+    } else {
+        println!("(artifacts missing; skipping PJRT benches — run `make artifacts`)");
+    }
+
+    // --- dispatcher overhead (tiny model isolates coordination cost) --------
+    let mut cfg = fasgd::experiments::common::fast_test_config(Policy::Fasgd);
+    cfg.mlp_hidden = 1;
+    cfg.batch = 1;
+    cfg.iters = u64::MAX; // stepped manually
+    cfg.eval_every = u64::MAX >> 1;
+    let mut sim = fasgd::experiments::common::build_sim(&cfg)?;
+    bench.run("dispatcher step (hidden=1: coordination + tiny grad)", || {
+        sim.step().unwrap();
+    });
+
+    Ok(())
+}

@@ -1,0 +1,9 @@
+//! Bandwidth gating (S4): the paper's B-FASGD probabilistic policy
+//! (eq. 9), the Dean'12 fixed-period baseline, and copies-vs-potential
+//! accounting for the Figure-3 reproduction.
+
+pub mod accounting;
+pub mod policy;
+
+pub use accounting::{BandwidthAccounting, BandwidthReport};
+pub use policy::{BandwidthPolicy, Direction};

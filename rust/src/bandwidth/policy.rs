@@ -1,0 +1,187 @@
+//! Transmit/drop decisions for each push and fetch opportunity.
+
+use crate::config::BandwidthMode;
+use crate::rng::Xoshiro256pp;
+
+/// Which side of the link a decision concerns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Client → server gradient transmission.
+    Push,
+    /// Server → client parameter transmission.
+    Fetch,
+}
+
+/// Stateful gate evaluated at every opportunity.
+pub struct BandwidthPolicy {
+    mode: BandwidthMode,
+    /// Per-client opportunity counters for the fixed-period baseline.
+    push_counters: Vec<u64>,
+    fetch_counters: Vec<u64>,
+    rng: Xoshiro256pp,
+}
+
+impl BandwidthPolicy {
+    pub fn new(mode: BandwidthMode, lambda: usize, rng: Xoshiro256pp) -> Self {
+        Self {
+            mode,
+            push_counters: vec![0; lambda],
+            fetch_counters: vec![0; lambda],
+            rng,
+        }
+    }
+
+    /// Decide one opportunity. `v_mean` is the FASGD server's mean moving-
+    /// average std (None for non-FASGD policies, which always transmit
+    /// under the probabilistic mode — eq. 9 is defined in terms of v).
+    pub fn decide(
+        &mut self,
+        dir: Direction,
+        client: usize,
+        v_mean: Option<f64>,
+    ) -> bool {
+        match &self.mode {
+            BandwidthMode::Always => true,
+            BandwidthMode::Fixed { k_push, k_fetch } => {
+                let (counter, k) = match dir {
+                    Direction::Push => {
+                        (&mut self.push_counters[client], *k_push)
+                    }
+                    Direction::Fetch => {
+                        (&mut self.fetch_counters[client], *k_fetch)
+                    }
+                };
+                let fire = *counter % k as u64 == 0;
+                *counter += 1;
+                fire
+            }
+            BandwidthMode::Probabilistic { c_push, c_fetch, eps } => {
+                let c = match dir {
+                    Direction::Push => *c_push,
+                    Direction::Fetch => *c_fetch,
+                };
+                if c == 0.0 {
+                    return true;
+                }
+                let Some(v) = v_mean else {
+                    return true; // no statistics to gate on
+                };
+                // Paper eq. 9: transmit iff r < 1 / (1 + c/(v̄+ε)).
+                let p = 1.0 / (1.0 + c / (v + eps));
+                self.rng.f64() < p
+            }
+        }
+    }
+
+    /// The transmit probability eq. 9 would use right now (for logs/tests).
+    pub fn transmit_probability(&self, dir: Direction, v_mean: f64) -> f64 {
+        match &self.mode {
+            BandwidthMode::Probabilistic { c_push, c_fetch, eps } => {
+                let c = match dir {
+                    Direction::Push => *c_push,
+                    Direction::Fetch => *c_fetch,
+                };
+                1.0 / (1.0 + c / (v_mean + eps))
+            }
+            _ => 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng;
+
+    fn rngs() -> Xoshiro256pp {
+        rng::stream(0, "bw-test", 0)
+    }
+
+    #[test]
+    fn always_transmits() {
+        let mut p = BandwidthPolicy::new(BandwidthMode::Always, 2, rngs());
+        for _ in 0..10 {
+            assert!(p.decide(Direction::Push, 0, None));
+            assert!(p.decide(Direction::Fetch, 1, Some(0.1)));
+        }
+    }
+
+    #[test]
+    fn fixed_period_pattern() {
+        let mode = BandwidthMode::Fixed { k_push: 3, k_fetch: 2 };
+        let mut p = BandwidthPolicy::new(mode, 1, rngs());
+        let pushes: Vec<bool> =
+            (0..6).map(|_| p.decide(Direction::Push, 0, None)).collect();
+        assert_eq!(pushes, vec![true, false, false, true, false, false]);
+        let fetches: Vec<bool> =
+            (0..4).map(|_| p.decide(Direction::Fetch, 0, None)).collect();
+        assert_eq!(fetches, vec![true, false, true, false]);
+    }
+
+    #[test]
+    fn fixed_counters_are_per_client() {
+        let mode = BandwidthMode::Fixed { k_push: 2, k_fetch: 2 };
+        let mut p = BandwidthPolicy::new(mode, 2, rngs());
+        assert!(p.decide(Direction::Push, 0, None));
+        assert!(p.decide(Direction::Push, 1, None)); // client 1 independent
+        assert!(!p.decide(Direction::Push, 0, None));
+    }
+
+    #[test]
+    fn probabilistic_follows_eq9() {
+        let mode = BandwidthMode::Probabilistic {
+            c_push: 1.0,
+            c_fetch: 1.0,
+            eps: 1e-8,
+        };
+        let mut p = BandwidthPolicy::new(mode, 1, rngs());
+        // v = 1 ⇒ p = 1/(1+1) = 0.5
+        let n = 20_000;
+        let hits = (0..n)
+            .filter(|_| p.decide(Direction::Push, 0, Some(1.0)))
+            .count();
+        let frac = hits as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.02, "{frac}");
+        // v huge ⇒ transmit nearly always
+        let hits = (0..1000)
+            .filter(|_| p.decide(Direction::Fetch, 0, Some(1e9)))
+            .count();
+        assert!(hits > 990);
+        // v tiny ⇒ transmit almost never
+        let hits = (0..1000)
+            .filter(|_| p.decide(Direction::Fetch, 0, Some(1e-12)))
+            .count();
+        assert!(hits < 10);
+    }
+
+    #[test]
+    fn probability_monotone_in_v() {
+        let mode = BandwidthMode::Probabilistic {
+            c_push: 0.5,
+            c_fetch: 2.0,
+            eps: 1e-8,
+        };
+        let p = BandwidthPolicy::new(mode, 1, rngs());
+        let lo = p.transmit_probability(Direction::Fetch, 0.01);
+        let hi = p.transmit_probability(Direction::Fetch, 1.0);
+        assert!(hi > lo);
+        // c_push < c_fetch ⇒ pushes more likely at same v
+        assert!(
+            p.transmit_probability(Direction::Push, 0.1)
+                > p.transmit_probability(Direction::Fetch, 0.1)
+        );
+    }
+
+    #[test]
+    fn c_zero_never_gates() {
+        let mode = BandwidthMode::Probabilistic {
+            c_push: 0.0,
+            c_fetch: 0.0,
+            eps: 1e-8,
+        };
+        let mut p = BandwidthPolicy::new(mode, 1, rngs());
+        for _ in 0..100 {
+            assert!(p.decide(Direction::Push, 0, Some(1e-15)));
+        }
+    }
+}

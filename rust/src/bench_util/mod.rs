@@ -1,0 +1,161 @@
+//! In-tree micro-benchmark harness (S16; criterion unavailable offline).
+//!
+//! Criterion-like surface: warmup, timed samples, and a stats line with
+//! mean / p50 / p99. `cargo bench` targets use `harness = false` and call
+//! [`Bench::run`] directly.
+
+use std::time::{Duration, Instant};
+
+/// Collected timing statistics (nanoseconds).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub samples: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Stats {
+    pub fn per_sec(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} mean {:>12} p50 {:>12} p99 {:>12} ({} samples)",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            self.samples
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner.
+pub struct Bench {
+    warmup: Duration,
+    measure: Duration,
+    max_samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_secs(1),
+            max_samples: 200,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(20),
+            measure: Duration::from_millis(150),
+            max_samples: 50,
+        }
+    }
+
+    pub fn with_budget(measure: Duration) -> Self {
+        Self { measure, ..Default::default() }
+    }
+
+    /// Time `f` repeatedly; prints and returns the stats.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Stats {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            f();
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure && samples.len() < self.max_samples
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        let stats = Self::stats(name, samples);
+        println!("{}", stats.line());
+        stats
+    }
+
+    fn stats(name: &str, mut samples: Vec<f64>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        Stats {
+            name: name.to_string(),
+            samples: samples.len(),
+            mean_ns: mean,
+            p50_ns: crate::tensor::quantile_sorted(&samples, 0.5),
+            p99_ns: crate::tensor::quantile_sorted(&samples, 0.99),
+            min_ns: samples[0],
+        }
+    }
+}
+
+/// Environment-tunable iteration scaling for the figure benches:
+/// `FASGD_BENCH_ITERS` overrides the default reduced iteration count.
+pub fn bench_iters(default: u64) -> u64 {
+    std::env::var("FASGD_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(10),
+            max_samples: 20,
+        };
+        let mut x = 0u64;
+        let s = b.run("noop-ish", || {
+            x = x.wrapping_add(1);
+            std::hint::black_box(x);
+        });
+        assert!(s.samples > 0);
+        assert!(s.mean_ns >= 0.0);
+        assert!(s.p99_ns >= s.p50_ns);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_ns(10.0).ends_with("ns"));
+        assert!(fmt_ns(10_000.0).ends_with("us"));
+        assert!(fmt_ns(10_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2e9).ends_with(" s"));
+    }
+
+    #[test]
+    fn bench_iters_env() {
+        std::env::remove_var("FASGD_BENCH_ITERS");
+        assert_eq!(bench_iters(123), 123);
+        std::env::set_var("FASGD_BENCH_ITERS", "77");
+        assert_eq!(bench_iters(1), 77);
+        std::env::remove_var("FASGD_BENCH_ITERS");
+    }
+}

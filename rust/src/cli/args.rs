@@ -1,0 +1,153 @@
+//! Flag parser: subcommand + `--key value`/`--key=value`/`--flag` options.
+
+use anyhow::{bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First positional token (the subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining positionals.
+    pub positional: Vec<String>,
+    /// `--key value` and `--key=value` pairs, in order.
+    pub options: Vec<(String, String)>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I, S>(tokens: I) -> Result<Self>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let toks: Vec<String> = tokens.into_iter().map(Into::into).collect();
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(body) = t.strip_prefix("--") {
+                if body.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.push((k.to_string(), v.to_string()));
+                } else if i + 1 < toks.len()
+                    && !toks[i + 1].starts_with("--")
+                {
+                    out.options.push((body.to_string(), toks[i + 1].clone()));
+                    i += 1;
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(t.clone());
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    /// Parse the process command line.
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Last value for `--key` (later overrides earlier).
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Typed getter with default.
+    pub fn get_parse<T: std::str::FromStr>(
+        &self,
+        key: &str,
+        default: T,
+    ) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Options not in `consumed`, for forwarding to `ExperimentConfig::set`.
+    pub fn remaining_options(&self, consumed: &[&str]) -> Vec<(&str, &str)> {
+        self.options
+            .iter()
+            .filter(|(k, _)| !consumed.contains(&k.as_str()))
+            .map(|(k, v)| (k.as_str(), v.as_str()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = Args::parse(vec![
+            "fig1", "extra", "--iters", "5000", "--policy=fasgd", "--quiet",
+        ])
+        .unwrap();
+        assert_eq!(a.command.as_deref(), Some("fig1"));
+        assert_eq!(a.get("iters"), Some("5000"));
+        assert_eq!(a.get("policy"), Some("fasgd"));
+        assert!(a.has_flag("quiet"));
+        assert_eq!(a.positional, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn dash_dash_followed_by_token_is_option() {
+        // `--flag value` is read as an option pair; a trailing `--flag`
+        // (or one followed by another `--opt`) is a switch.
+        let a = Args::parse(vec!["x", "--quiet", "extra"]).unwrap();
+        assert_eq!(a.get("quiet"), Some("extra"));
+        assert!(!a.has_flag("quiet"));
+    }
+
+    #[test]
+    fn later_option_wins() {
+        let a = Args::parse(vec!["x", "--k", "1", "--k", "2"]).unwrap();
+        assert_eq!(a.get("k"), Some("2"));
+    }
+
+    #[test]
+    fn typed_getter() {
+        let a = Args::parse(vec!["x", "--n", "12"]).unwrap();
+        assert_eq!(a.get_parse("n", 0usize).unwrap(), 12);
+        assert_eq!(a.get_parse("m", 7usize).unwrap(), 7);
+        let bad = Args::parse(vec!["x", "--n", "oops"]).unwrap();
+        assert!(bad.get_parse("n", 0usize).is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(vec!["x", "--verbose"]).unwrap();
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn remaining_options_forwarding() {
+        let a =
+            Args::parse(vec!["x", "--iters", "5", "--policy", "asgd"]).unwrap();
+        let rest = a.remaining_options(&["iters"]);
+        assert_eq!(rest, vec![("policy", "asgd")]);
+    }
+}

@@ -1,0 +1,10 @@
+//! In-tree CLI argument parsing (S13; clap is unavailable offline).
+//!
+//! Grammar: `repro <subcommand> [--key value | --key=value | --flag] ...`.
+//! Unrecognized `--key value` pairs are forwarded to
+//! [`crate::config::ExperimentConfig::set`] by the command layer, so every
+//! config knob is automatically a CLI flag.
+
+pub mod args;
+
+pub use args::Args;

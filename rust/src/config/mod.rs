@@ -1,0 +1,13 @@
+//! Typed experiment configuration (DESIGN.md S12).
+//!
+//! A run is fully described by an [`ExperimentConfig`]: policy, cluster
+//! shape (λ, µ), bandwidth gating, dataset, engines, and evaluation cadence.
+//! Configs are built from defaults, optionally a TOML file ([`toml`] — an
+//! in-tree subset parser, serde being unavailable offline), and CLI
+//! overrides; all three paths funnel through the same `set(key, value)`
+//! interface so every knob is reachable from every path.
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::*;

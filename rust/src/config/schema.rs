@@ -1,0 +1,583 @@
+//! The experiment schema: every knob of a simulated training run.
+
+use std::path::Path;
+use std::str::FromStr;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::FasgdHparams;
+
+/// Parameter-server policy (DESIGN.md §6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Synchronous SGD: barrier across all λ clients, mean gradient.
+    Sync,
+    /// Plain asynchronous SGD (Bengio'03 / Dean'12 style).
+    Asgd,
+    /// Staleness-aware ASGD (Zhang et al. 2015): divide α by τ.
+    Sasgd,
+    /// Exponential staleness penalty (Chan & Lane 2014): α·exp(−ρτ).
+    Exponential,
+    /// The paper's contribution: gradient-statistics-aware ASGD.
+    Fasgd,
+}
+
+impl FromStr for Policy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "sync" | "ssgd" => Policy::Sync,
+            "asgd" => Policy::Asgd,
+            "sasgd" => Policy::Sasgd,
+            "exponential" | "exp" => Policy::Exponential,
+            "fasgd" => Policy::Fasgd,
+            other => bail!("unknown policy {other:?}"),
+        })
+    }
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Sync => "sync",
+            Policy::Asgd => "asgd",
+            Policy::Sasgd => "sasgd",
+            Policy::Exponential => "exponential",
+            Policy::Fasgd => "fasgd",
+        }
+    }
+}
+
+/// Which engine computes client gradients.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GradEngineKind {
+    /// The real path: execute the AOT-lowered JAX/Pallas graph via PJRT.
+    Xla,
+    /// Pure-rust MLP forward/backward — a fast, dependency-free substrate
+    /// for tests; cross-validated against `Xla` (rust/tests).
+    RustMlp,
+}
+
+impl FromStr for GradEngineKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "xla" => GradEngineKind::Xla,
+            "rust" | "rust_mlp" | "rust-mlp" => GradEngineKind::RustMlp,
+            other => bail!("unknown grad engine {other:?}"),
+        })
+    }
+}
+
+/// Which engine applies the FASGD server update.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UpdateEngineKind {
+    /// Fused native loop (`tensor::fasgd_update_fused`) — the default.
+    Rust,
+    /// The AOT Pallas artifact (`fasgd_update_p*.hlo.txt`) via PJRT —
+    /// exercises L1 on the server path; benchmarked against `Rust`.
+    Xla,
+}
+
+impl FromStr for UpdateEngineKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "rust" => UpdateEngineKind::Rust,
+            "xla" => UpdateEngineKind::Xla,
+            other => bail!("unknown update engine {other:?}"),
+        })
+    }
+}
+
+/// What a client does when the bandwidth gate drops its push (paper §2.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushDropMode {
+    /// Server re-applies that client's most recent cached gradient
+    /// (the paper's choice; needs the server-side gradient cache).
+    ReapplyCached,
+    /// Client accumulates unsent gradients locally and sends the average at
+    /// the next transmitted push (the paper's suggested alternative).
+    Accumulate,
+    /// Drop means drop: no server update for this opportunity.
+    Skip,
+}
+
+impl FromStr for PushDropMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "reapply" | "reapply_cached" => PushDropMode::ReapplyCached,
+            "accumulate" => PushDropMode::Accumulate,
+            "skip" => PushDropMode::Skip,
+            other => bail!("unknown push drop mode {other:?}"),
+        })
+    }
+}
+
+/// Bandwidth gating mode (paper §2.3, Dean'12 baseline).
+#[derive(Debug, Clone, PartialEq)]
+pub enum BandwidthMode {
+    /// Transmit everything (plain FASGD/SASGD/ASGD).
+    Always,
+    /// Dean et al. 2012: fixed periods — push every `k_push`-th opportunity,
+    /// fetch every `k_fetch`-th.
+    Fixed { k_push: u32, k_fetch: u32 },
+    /// B-FASGD: transmit iff `r < 1/(1 + c/(v̄+ε))` (paper eq. 9).
+    Probabilistic { c_push: f64, c_fetch: f64, eps: f64 },
+}
+
+impl Default for BandwidthMode {
+    fn default() -> Self {
+        BandwidthMode::Always
+    }
+}
+
+/// Dispatcher client-selection rule (FRED's "probability of being selected
+/// and how that probability changes upon selection").
+#[derive(Debug, Clone, PartialEq)]
+pub enum SelectionRule {
+    /// Uniform over clients: a homogeneous cluster.
+    Uniform,
+    /// Static per-client weights drawn log-normal(0, sigma): a heterogeneous
+    /// cluster where some machines are persistently faster.
+    Heterogeneous { sigma: f64 },
+    /// On selection the client's weight is multiplied by `factor`, then all
+    /// weights recover multiplicatively by `recovery` each step: models
+    /// compute time between pushes.
+    Cooldown { factor: f64, recovery: f64 },
+}
+
+impl Default for SelectionRule {
+    fn default() -> Self {
+        SelectionRule::Uniform
+    }
+}
+
+/// Which model/workload the run trains.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    /// The paper's MNIST MLP (784-200-10).
+    Mlp,
+    /// Char-LM transformer, `tiny` config (tests).
+    TransformerTiny,
+    /// Char-LM transformer, `e2e` config (the end-to-end example).
+    TransformerE2e,
+}
+
+impl FromStr for ModelKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "mlp" => ModelKind::Mlp,
+            "transformer_tiny" | "transformer-tiny" | "tiny" => {
+                ModelKind::TransformerTiny
+            }
+            "transformer_e2e" | "transformer-e2e" | "e2e" => {
+                ModelKind::TransformerE2e
+            }
+            other => bail!("unknown model {other:?}"),
+        })
+    }
+}
+
+impl ModelKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Mlp => "mlp",
+            ModelKind::TransformerTiny => "transformer_tiny",
+            ModelKind::TransformerE2e => "transformer_e2e",
+        }
+    }
+
+    pub fn is_transformer(&self) -> bool {
+        !matches!(self, ModelKind::Mlp)
+    }
+}
+
+/// Dataset parameters (synthetic MNIST-class generator; see DESIGN.md §5).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetConfig {
+    /// Training examples generated (paper: 60k MNIST; default scaled down).
+    pub train: usize,
+    /// Validation examples (drives the "validation cost" curves).
+    pub val: usize,
+    /// Noise level of the synthetic generator (higher = harder task).
+    pub noise: f64,
+    /// Optional directory of real MNIST IDX files; overrides the generator.
+    pub mnist_dir: Option<String>,
+    pub seed_offset: u64,
+}
+
+impl Default for DatasetConfig {
+    fn default() -> Self {
+        Self {
+            train: 16_384,
+            val: 2_048,
+            noise: 0.35,
+            mnist_dir: None,
+            seed_offset: 0,
+        }
+    }
+}
+
+/// The complete description of one simulated training run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub seed: u64,
+    pub policy: Policy,
+    /// λ — number of clients.
+    pub clients: usize,
+    /// µ — per-client minibatch size.
+    pub batch: usize,
+    /// Total client gradient computations (the paper's "iterations").
+    pub iters: u64,
+    /// α — master learning rate.
+    pub alpha: f32,
+    /// ρ — exponential-penalty rate (Policy::Exponential only).
+    pub rho: f32,
+    pub fasgd: FasgdHparams,
+    pub bandwidth: BandwidthMode,
+    pub push_drop: PushDropMode,
+    pub selection: SelectionRule,
+    pub model: ModelKind,
+    pub dataset: DatasetConfig,
+    pub grad_engine: GradEngineKind,
+    pub update_engine: UpdateEngineKind,
+    /// Hidden width for the rust MLP engine (the AOT artifacts are fixed at
+    /// the paper's 200; smaller values make pure-rust tests fast).
+    pub mlp_hidden: usize,
+    /// Evaluate validation cost every this many *server updates*.
+    pub eval_every: u64,
+    /// Progress logging cadence, in iterations (0 = quiet).
+    pub log_every: u64,
+    /// Measure true B-Staleness (eq. 3) every this many iterations
+    /// (0 = off; costs one extra gradient per probe).
+    pub probe_every: u64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            name: "run".into(),
+            seed: 42,
+            policy: Policy::Fasgd,
+            clients: 16,
+            batch: 8,
+            iters: 10_000,
+            alpha: 0.005,
+            rho: 0.2,
+            fasgd: FasgdHparams::default(),
+            bandwidth: BandwidthMode::Always,
+            push_drop: PushDropMode::ReapplyCached,
+            selection: SelectionRule::Uniform,
+            model: ModelKind::Mlp,
+            dataset: DatasetConfig::default(),
+            grad_engine: GradEngineKind::Xla,
+            update_engine: UpdateEngineKind::Rust,
+            mlp_hidden: 200,
+            eval_every: 500,
+            log_every: 0,
+            probe_every: 0,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load defaults + a TOML file.
+    pub fn from_toml_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        let mut cfg = Self::default();
+        for (k, v) in super::toml::parse(&text)? {
+            cfg.set(&k, &v.to_config_string())
+                .with_context(|| format!("config key {k:?}"))?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Set a single knob by dotted key. Shared by TOML and CLI paths.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "name" => self.name = value.to_string(),
+            "seed" => self.seed = value.parse()?,
+            "policy" => self.policy = value.parse()?,
+            "clients" | "lambda" => self.clients = value.parse()?,
+            "batch" | "mu" => self.batch = value.parse()?,
+            "iters" | "iterations" => self.iters = value.parse()?,
+            "alpha" | "lr" => self.alpha = value.parse()?,
+            "rho" => self.rho = value.parse()?,
+            "model" => self.model = value.parse()?,
+            "grad_engine" => self.grad_engine = value.parse()?,
+            "update_engine" => self.update_engine = value.parse()?,
+            "mlp.hidden" => self.mlp_hidden = value.parse()?,
+            "eval_every" => self.eval_every = value.parse()?,
+            "log_every" => self.log_every = value.parse()?,
+            "probe_every" => self.probe_every = value.parse()?,
+            "push_drop" => self.push_drop = value.parse()?,
+            "fasgd.gamma" => self.fasgd.gamma = value.parse()?,
+            "fasgd.beta" => self.fasgd.beta = value.parse()?,
+            "fasgd.eps" => self.fasgd.eps = value.parse()?,
+            "fasgd.v_floor" => self.fasgd.v_floor = value.parse()?,
+            "fasgd.variant" => {
+                self.fasgd.inverse_variant = match value {
+                    "std" => false,
+                    "inverse" => true,
+                    other => bail!("unknown fasgd variant {other:?}"),
+                }
+            }
+            "bandwidth.mode" => {
+                self.bandwidth = match value {
+                    "always" => BandwidthMode::Always,
+                    "fixed" => BandwidthMode::Fixed { k_push: 1, k_fetch: 1 },
+                    "probabilistic" | "bfasgd" => BandwidthMode::Probabilistic {
+                        c_push: 0.0,
+                        c_fetch: 0.0,
+                        eps: 1e-8,
+                    },
+                    other => bail!("unknown bandwidth mode {other:?}"),
+                }
+            }
+            "bandwidth.k_push" => match &mut self.bandwidth {
+                BandwidthMode::Fixed { k_push, .. } => *k_push = value.parse()?,
+                _ => bail!("bandwidth.k_push requires bandwidth.mode = fixed"),
+            },
+            "bandwidth.k_fetch" => match &mut self.bandwidth {
+                BandwidthMode::Fixed { k_fetch, .. } => {
+                    *k_fetch = value.parse()?
+                }
+                _ => bail!("bandwidth.k_fetch requires bandwidth.mode = fixed"),
+            },
+            "bandwidth.c_push" => match &mut self.bandwidth {
+                BandwidthMode::Probabilistic { c_push, .. } => {
+                    *c_push = value.parse()?
+                }
+                _ => bail!(
+                    "bandwidth.c_push requires bandwidth.mode = probabilistic"
+                ),
+            },
+            "bandwidth.c_fetch" => match &mut self.bandwidth {
+                BandwidthMode::Probabilistic { c_fetch, .. } => {
+                    *c_fetch = value.parse()?
+                }
+                _ => bail!(
+                    "bandwidth.c_fetch requires bandwidth.mode = probabilistic"
+                ),
+            },
+            "bandwidth.eps" => match &mut self.bandwidth {
+                BandwidthMode::Probabilistic { eps, .. } => {
+                    *eps = value.parse()?
+                }
+                _ => bail!(
+                    "bandwidth.eps requires bandwidth.mode = probabilistic"
+                ),
+            },
+            "selection.rule" => {
+                self.selection = match value {
+                    "uniform" => SelectionRule::Uniform,
+                    "heterogeneous" => {
+                        SelectionRule::Heterogeneous { sigma: 1.0 }
+                    }
+                    "cooldown" => SelectionRule::Cooldown {
+                        factor: 0.25,
+                        recovery: 1.05,
+                    },
+                    other => bail!("unknown selection rule {other:?}"),
+                }
+            }
+            "selection.sigma" => match &mut self.selection {
+                SelectionRule::Heterogeneous { sigma } => {
+                    *sigma = value.parse()?
+                }
+                _ => bail!("selection.sigma requires heterogeneous rule"),
+            },
+            "selection.factor" => match &mut self.selection {
+                SelectionRule::Cooldown { factor, .. } => {
+                    *factor = value.parse()?
+                }
+                _ => bail!("selection.factor requires cooldown rule"),
+            },
+            "selection.recovery" => match &mut self.selection {
+                SelectionRule::Cooldown { recovery, .. } => {
+                    *recovery = value.parse()?
+                }
+                _ => bail!("selection.recovery requires cooldown rule"),
+            },
+            "dataset.train" => self.dataset.train = value.parse()?,
+            "dataset.val" => self.dataset.val = value.parse()?,
+            "dataset.noise" => self.dataset.noise = value.parse()?,
+            "dataset.mnist_dir" => {
+                self.dataset.mnist_dir = Some(value.to_string())
+            }
+            "dataset.seed_offset" => {
+                self.dataset.seed_offset = value.parse()?
+            }
+            other => bail!("unknown config key {other:?}"),
+        }
+        Ok(())
+    }
+
+    /// Sanity-check cross-field invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.clients == 0 {
+            bail!("clients must be >= 1");
+        }
+        if self.batch == 0 {
+            bail!("batch must be >= 1");
+        }
+        if !(self.alpha > 0.0) {
+            bail!("alpha must be positive");
+        }
+        if self.eval_every == 0 {
+            bail!("eval_every must be >= 1");
+        }
+        if !(0.0..1.0).contains(&(self.fasgd.gamma as f64)) {
+            bail!("fasgd.gamma must be in [0,1)");
+        }
+        if !(0.0..1.0).contains(&(self.fasgd.beta as f64)) {
+            bail!("fasgd.beta must be in [0,1)");
+        }
+        if let BandwidthMode::Fixed { k_push, k_fetch } = self.bandwidth {
+            if k_push == 0 || k_fetch == 0 {
+                bail!("fixed bandwidth periods must be >= 1");
+            }
+        }
+        if let BandwidthMode::Probabilistic { c_push, c_fetch, eps } =
+            self.bandwidth
+        {
+            if c_push < 0.0 || c_fetch < 0.0 || eps <= 0.0 {
+                bail!("probabilistic bandwidth params must be non-negative");
+            }
+        }
+        if self.model.is_transformer()
+            && self.grad_engine == GradEngineKind::RustMlp
+        {
+            bail!("the rust grad engine only implements the MLP");
+        }
+        if self.grad_engine == GradEngineKind::Xla && self.mlp_hidden != 200 {
+            bail!("AOT artifacts are built with hidden=200; mlp.hidden only applies to grad_engine=rust");
+        }
+        if self.policy == Policy::Sync && self.bandwidth != BandwidthMode::Always {
+            bail!("bandwidth gating is undefined for synchronous SGD");
+        }
+        if self.mlp_hidden == 0 {
+            bail!("mlp.hidden must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// Stable one-line summary for logs and reports.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} policy={} lambda={} mu={} iters={} alpha={} model={}",
+            self.name,
+            self.policy.name(),
+            self.clients,
+            self.batch,
+            self.iters,
+            self.alpha,
+            self.model.name()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn set_core_knobs() {
+        let mut c = ExperimentConfig::default();
+        c.set("policy", "sasgd").unwrap();
+        c.set("lambda", "128").unwrap();
+        c.set("mu", "1").unwrap();
+        c.set("lr", "0.04").unwrap();
+        assert_eq!(c.policy, Policy::Sasgd);
+        assert_eq!(c.clients, 128);
+        assert_eq!(c.batch, 1);
+        assert!((c.alpha - 0.04).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bandwidth_mode_dependent_keys() {
+        let mut c = ExperimentConfig::default();
+        assert!(c.set("bandwidth.c_fetch", "0.5").is_err());
+        c.set("bandwidth.mode", "probabilistic").unwrap();
+        c.set("bandwidth.c_fetch", "0.5").unwrap();
+        match c.bandwidth {
+            BandwidthMode::Probabilistic { c_fetch, .. } => {
+                assert!((c_fetch - 0.5).abs() < 1e-12)
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn fasgd_variant_parses() {
+        let mut c = ExperimentConfig::default();
+        c.set("fasgd.variant", "inverse").unwrap();
+        assert!(c.fasgd.inverse_variant);
+        assert!(c.set("fasgd.variant", "bogus").is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut c = ExperimentConfig::default();
+        c.clients = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = ExperimentConfig::default();
+        c.model = ModelKind::TransformerTiny;
+        c.grad_engine = GradEngineKind::RustMlp;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = ExperimentConfig::default();
+        assert!(c.set("no_such_key", "1").is_err());
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let dir = std::env::temp_dir().join("fasgd_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("exp.toml");
+        std::fs::write(
+            &path,
+            r#"
+            name = "fig1-panel-a"
+            policy = fasgd
+            clients = 128
+            batch = 1
+            alpha = 0.005
+            [bandwidth]
+            mode = probabilistic
+            c_fetch = 1.5
+            [selection]
+            rule = cooldown
+            factor = 0.5
+            "#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml_file(&path).unwrap();
+        assert_eq!(c.name, "fig1-panel-a");
+        assert_eq!(c.clients, 128);
+        assert!(matches!(c.bandwidth, BandwidthMode::Probabilistic { .. }));
+        assert!(
+            matches!(c.selection, SelectionRule::Cooldown { factor, .. } if (factor - 0.5).abs() < 1e-12)
+        );
+    }
+}

@@ -1,0 +1,240 @@
+//! Minimal TOML-subset parser: `[section]` headers, `key = value` lines,
+//! strings, integers, floats, booleans, and flat arrays. Comments with `#`.
+//!
+//! Output is a flat `dotted.key -> Value` map, which is exactly the shape
+//! [`super::schema::ExperimentConfig::set`] consumes, so TOML files and CLI
+//! `--key value` overrides share one code path.
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed TOML scalar or flat array.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Render back to the string form `set(key, str)` accepts.
+    pub fn to_config_string(&self) -> String {
+        match self {
+            Value::Str(s) => s.clone(),
+            Value::Int(i) => i.to_string(),
+            Value::Float(f) => f.to_string(),
+            Value::Bool(b) => b.to_string(),
+            Value::Arr(items) => items
+                .iter()
+                .map(|v| v.to_config_string())
+                .collect::<Vec<_>>()
+                .join(","),
+        }
+    }
+}
+
+/// Parse a TOML-subset document into `(dotted_key, value)` pairs, in order.
+pub fn parse(text: &str) -> Result<Vec<(String, Value)>> {
+    let mut section = String::new();
+    let mut out = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .with_context(|| format!("line {}: bad section", lineno + 1))?
+                .trim();
+            if name.is_empty() || name.contains('[') {
+                bail!("line {}: bad section name {name:?}", lineno + 1);
+            }
+            section = name.to_string();
+            continue;
+        }
+        let (key, value) = line.split_once('=').with_context(|| {
+            format!("line {}: expected key = value", lineno + 1)
+        })?;
+        let key = key.trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        let v = parse_value(value.trim())
+            .with_context(|| format!("line {}: bad value", lineno + 1))?;
+        out.push((full, v));
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').context("unterminated string")?;
+        return Ok(Value::Str(inner.replace("\\\"", "\"")));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').context("unterminated array")?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    // Bare identifiers (e.g. `policy = fasgd`) read as strings for
+    // ergonomics; full TOML would reject this.
+    if s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-') {
+        return Ok(Value::Str(s.to_string()));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = r#"
+            # experiment
+            name = "fig1-a"
+            iters = 100000
+            alpha = 0.005
+            [bandwidth]
+            mode = probabilistic
+            c_fetch = 0.5
+            enabled = true
+            mus = [1, 4, 8, 32]
+        "#;
+        let kv = parse(doc).unwrap();
+        let get = |k: &str| {
+            kv.iter().find(|(key, _)| key == k).map(|(_, v)| v.clone())
+        };
+        assert_eq!(get("name"), Some(Value::Str("fig1-a".into())));
+        assert_eq!(get("iters"), Some(Value::Int(100000)));
+        assert_eq!(get("alpha"), Some(Value::Float(0.005)));
+        assert_eq!(
+            get("bandwidth.mode"),
+            Some(Value::Str("probabilistic".into()))
+        );
+        assert_eq!(get("bandwidth.c_fetch"), Some(Value::Float(0.5)));
+        assert_eq!(get("bandwidth.enabled"), Some(Value::Bool(true)));
+        assert_eq!(
+            get("bandwidth.mus"),
+            Some(Value::Arr(vec![
+                Value::Int(1),
+                Value::Int(4),
+                Value::Int(8),
+                Value::Int(32)
+            ]))
+        );
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let kv = parse(r##"k = "a#b" # trailing"##).unwrap();
+        assert_eq!(kv[0].1, Value::Str("a#b".into()));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("novalue").is_err());
+        assert!(parse("k = [1, 2").is_err());
+        assert!(parse("k = \"open").is_err());
+    }
+
+    #[test]
+    fn config_string_roundtrip() {
+        assert_eq!(Value::Float(0.5).to_config_string(), "0.5");
+        assert_eq!(
+            Value::Arr(vec![Value::Int(1), Value::Int(2)]).to_config_string(),
+            "1,2"
+        );
+    }
+}

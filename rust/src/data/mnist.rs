@@ -1,0 +1,181 @@
+//! MNIST IDX file parser (LeCun et al. 1998 format), with gzip support.
+//!
+//! Layout expected by [`load_dir`]: the four canonical files
+//! (`train-images-idx3-ubyte`, `train-labels-idx1-ubyte`,
+//! `t10k-images-idx3-ubyte`, `t10k-labels-idx1-ubyte`), optionally with a
+//! `.gz` suffix. Pixels are scaled to `[0,1]` f32, matching the synthetic
+//! generator's range.
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use byteorder::{BigEndian, ReadBytesExt};
+use flate2::read::GzDecoder;
+
+use crate::data::{Dataset, Split};
+
+const MAGIC_IMAGES: u32 = 0x0000_0803;
+const MAGIC_LABELS: u32 = 0x0000_0801;
+
+/// Read an IDX images file (magic 0x803): returns (rows*cols dim, data).
+pub fn read_images<R: Read>(mut r: R) -> Result<(usize, Vec<f32>)> {
+    let magic = r.read_u32::<BigEndian>().context("reading magic")?;
+    if magic != MAGIC_IMAGES {
+        bail!("bad images magic {magic:#x}");
+    }
+    let count = r.read_u32::<BigEndian>()? as usize;
+    let rows = r.read_u32::<BigEndian>()? as usize;
+    let cols = r.read_u32::<BigEndian>()? as usize;
+    let dim = rows * cols;
+    let mut raw = vec![0u8; count * dim];
+    r.read_exact(&mut raw).context("reading pixel data")?;
+    Ok((dim, raw.iter().map(|&b| b as f32 / 255.0).collect()))
+}
+
+/// Read an IDX labels file (magic 0x801).
+pub fn read_labels<R: Read>(mut r: R) -> Result<Vec<i32>> {
+    let magic = r.read_u32::<BigEndian>().context("reading magic")?;
+    if magic != MAGIC_LABELS {
+        bail!("bad labels magic {magic:#x}");
+    }
+    let count = r.read_u32::<BigEndian>()? as usize;
+    let mut raw = vec![0u8; count];
+    r.read_exact(&mut raw).context("reading label data")?;
+    Ok(raw.iter().map(|&b| b as i32).collect())
+}
+
+fn open_maybe_gz(dir: &Path, base: &str) -> Result<Box<dyn Read>> {
+    let plain = dir.join(base);
+    if plain.exists() {
+        return Ok(Box::new(
+            std::fs::File::open(&plain).with_context(|| format!("{plain:?}"))?,
+        ));
+    }
+    let gz = dir.join(format!("{base}.gz"));
+    if gz.exists() {
+        let f =
+            std::fs::File::open(&gz).with_context(|| format!("{gz:?}"))?;
+        return Ok(Box::new(GzDecoder::new(f)));
+    }
+    bail!("neither {plain:?} nor {gz:?} exists")
+}
+
+fn load_pair(dir: &Path, images: &str, labels: &str) -> Result<Dataset> {
+    let (dim, x) = read_images(open_maybe_gz(dir, images)?)?;
+    let y = read_labels(open_maybe_gz(dir, labels)?)?;
+    if x.len() != y.len() * dim {
+        bail!(
+            "images/labels mismatch: {} pixels for {} labels of dim {dim}",
+            x.len(),
+            y.len()
+        );
+    }
+    Ok(Dataset { x, y, dim, classes: 10 })
+}
+
+/// Load the canonical four-file MNIST directory.
+pub fn load_dir(dir: &Path) -> Result<Split> {
+    Ok(Split {
+        train: load_pair(
+            dir,
+            "train-images-idx3-ubyte",
+            "train-labels-idx1-ubyte",
+        )?,
+        val: load_pair(dir, "t10k-images-idx3-ubyte", "t10k-labels-idx1-ubyte")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use byteorder::{BigEndian, WriteBytesExt};
+    use std::io::Write;
+
+    fn idx_images(count: usize, rows: usize, cols: usize) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.write_u32::<BigEndian>(MAGIC_IMAGES).unwrap();
+        b.write_u32::<BigEndian>(count as u32).unwrap();
+        b.write_u32::<BigEndian>(rows as u32).unwrap();
+        b.write_u32::<BigEndian>(cols as u32).unwrap();
+        for i in 0..count * rows * cols {
+            b.push((i % 256) as u8);
+        }
+        b
+    }
+
+    fn idx_labels(count: usize) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.write_u32::<BigEndian>(MAGIC_LABELS).unwrap();
+        b.write_u32::<BigEndian>(count as u32).unwrap();
+        for i in 0..count {
+            b.push((i % 10) as u8);
+        }
+        b
+    }
+
+    #[test]
+    fn parses_images_and_labels() {
+        let (dim, x) = read_images(&idx_images(3, 2, 2)[..]).unwrap();
+        assert_eq!(dim, 4);
+        assert_eq!(x.len(), 12);
+        assert!((x[1] - 1.0 / 255.0).abs() < 1e-7);
+        let y = read_labels(&idx_labels(5)[..]).unwrap();
+        assert_eq!(y, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        assert!(read_images(&idx_labels(3)[..]).is_err());
+        assert!(read_labels(&idx_images(1, 1, 1)[..]).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let img = idx_images(3, 2, 2);
+        assert!(read_images(&img[..img.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn load_dir_plain_and_gz() {
+        let dir = std::env::temp_dir().join("fasgd_mnist_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        // plain train files
+        std::fs::write(dir.join("train-images-idx3-ubyte"), idx_images(4, 2, 2))
+            .unwrap();
+        std::fs::write(dir.join("train-labels-idx1-ubyte"), idx_labels(4))
+            .unwrap();
+        // gzipped test files
+        for (name, bytes) in [
+            ("t10k-images-idx3-ubyte.gz", idx_images(2, 2, 2)),
+            ("t10k-labels-idx1-ubyte.gz", idx_labels(2)),
+        ] {
+            let f = std::fs::File::create(dir.join(name)).unwrap();
+            let mut enc =
+                flate2::write::GzEncoder::new(f, flate2::Compression::fast());
+            enc.write_all(&bytes).unwrap();
+            enc.finish().unwrap();
+        }
+        let split = load_dir(&dir).unwrap();
+        assert_eq!(split.train.len(), 4);
+        assert_eq!(split.val.len(), 2);
+        assert_eq!(split.train.dim, 4);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mismatched_counts_rejected() {
+        let dir = std::env::temp_dir().join("fasgd_mnist_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("train-images-idx3-ubyte"), idx_images(4, 2, 2))
+            .unwrap();
+        std::fs::write(dir.join("train-labels-idx1-ubyte"), idx_labels(3))
+            .unwrap();
+        std::fs::write(dir.join("t10k-images-idx3-ubyte"), idx_images(1, 2, 2))
+            .unwrap();
+        std::fs::write(dir.join("t10k-labels-idx1-ubyte"), idx_labels(1))
+            .unwrap();
+        assert!(load_dir(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,127 @@
+//! Dataset substrate (S10).
+//!
+//! The paper trains on MNIST; this environment has no network, so the
+//! default dataset is a deterministic synthetic 10-class, 784-dimensional
+//! generator ([`synthetic`]) that preserves the paper-relevant structure
+//! (input dim, class count, realistic difficulty — see DESIGN.md §5).
+//! Real MNIST IDX files are supported via [`mnist`] when a directory is
+//! provided. [`corpus`] generates the char-LM stream for the transformer
+//! E2E driver, and [`sampler`] provides the per-client deterministic
+//! minibatch samplers the simulator depends on.
+
+pub mod corpus;
+pub mod mnist;
+pub mod sampler;
+pub mod synthetic;
+
+use anyhow::Result;
+
+use crate::config::DatasetConfig;
+
+/// An in-memory classification dataset: row-major `f32` features + labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// `len * dim` features, row-major.
+    pub x: Vec<f32>,
+    /// `len` labels in `[0, classes)`.
+    pub y: Vec<i32>,
+    pub dim: usize,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Gather rows `idx` into a dense minibatch `(x, y)`.
+    pub fn gather(&self, idx: &[usize]) -> (Vec<f32>, Vec<i32>) {
+        let mut x = Vec::with_capacity(idx.len() * self.dim);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            x.extend_from_slice(self.row(i));
+            y.push(self.y[i]);
+        }
+        (x, y)
+    }
+}
+
+/// Train/validation pair.
+#[derive(Debug, Clone)]
+pub struct Split {
+    pub train: Dataset,
+    pub val: Dataset,
+}
+
+/// Materialize the configured classification dataset: real MNIST if a
+/// directory is given, the synthetic generator otherwise.
+pub fn load_classification(cfg: &DatasetConfig, seed: u64) -> Result<Split> {
+    if let Some(dir) = &cfg.mnist_dir {
+        let split = mnist::load_dir(std::path::Path::new(dir))?;
+        return Ok(truncate_split(split, cfg.train, cfg.val));
+    }
+    Ok(synthetic::generate(
+        seed.wrapping_add(cfg.seed_offset),
+        cfg.train,
+        cfg.val,
+        cfg.noise,
+    ))
+}
+
+fn truncate_split(split: Split, train: usize, val: usize) -> Split {
+    Split {
+        train: truncate(split.train, train),
+        val: truncate(split.val, val),
+    }
+}
+
+fn truncate(d: Dataset, n: usize) -> Dataset {
+    if n == 0 || n >= d.len() {
+        return d;
+    }
+    Dataset {
+        x: d.x[..n * d.dim].to_vec(),
+        y: d.y[..n].to_vec(),
+        dim: d.dim,
+        classes: d.classes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_shapes() {
+        let d = Dataset {
+            x: (0..12).map(|i| i as f32).collect(),
+            y: vec![0, 1, 2],
+            dim: 4,
+            classes: 3,
+        };
+        let (x, y) = d.gather(&[2, 0]);
+        assert_eq!(x, vec![8.0, 9.0, 10.0, 11.0, 0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(y, vec![2, 0]);
+    }
+
+    #[test]
+    fn load_synthetic_by_default() {
+        let cfg = DatasetConfig {
+            train: 64,
+            val: 32,
+            ..Default::default()
+        };
+        let s = load_classification(&cfg, 1).unwrap();
+        assert_eq!(s.train.len(), 64);
+        assert_eq!(s.val.len(), 32);
+        assert_eq!(s.train.dim, 784);
+    }
+}

@@ -1,0 +1,209 @@
+//! Shared launcher: config → engines → simulator → summary.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{ExperimentConfig, GradEngineKind, ModelKind, Policy,
+                    UpdateEngineKind};
+use crate::data::{self, corpus};
+use crate::grad::{RustMlpEngine, XlaEvalEngine, XlaGradEngine,
+                  XlaUpdateEngine};
+use crate::metrics::RunSummary;
+use crate::runtime::Engine;
+use crate::server::{build_server, UpdateEngine};
+use crate::sim::dispatcher::{DataSource, SimParts, Simulator};
+
+thread_local! {
+    static ENGINE: RefCell<Option<Rc<Engine>>> = const { RefCell::new(None) };
+}
+
+/// Thread-local PJRT engine (the `xla` crate's wrappers are thread-bound;
+/// each thread that touches PJRT gets its own client, and the executable
+/// cache inside makes repeat experiments on that thread cheap).
+pub fn shared_engine() -> Result<Rc<Engine>> {
+    ENGINE.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if let Some(e) = slot.as_ref() {
+            return Ok(e.clone());
+        }
+        let engine = Rc::new(Engine::open_default()?);
+        *slot = Some(engine.clone());
+        Ok(engine)
+    })
+}
+
+/// Transformer corpus parameters per model kind.
+fn corpus_params(model: ModelKind) -> (usize, usize, usize) {
+    // (vocab, seq, corpus length)
+    match model {
+        ModelKind::TransformerTiny => (64, 32, 20_000),
+        ModelKind::TransformerE2e => (128, 64, 200_000),
+        ModelKind::Mlp => unreachable!(),
+    }
+}
+
+fn transformer_model_name(model: ModelKind) -> &'static str {
+    match model {
+        ModelKind::TransformerTiny => "transformer_tiny",
+        ModelKind::TransformerE2e => "transformer_e2e",
+        ModelKind::Mlp => unreachable!(),
+    }
+}
+
+/// Build the simulator for a config (loading AOT artifacts as needed).
+pub fn build_sim(cfg: &ExperimentConfig) -> Result<Simulator> {
+    cfg.validate()?;
+    let parts = match (cfg.model, cfg.grad_engine) {
+        (ModelKind::Mlp, GradEngineKind::Xla) => {
+            let engine = shared_engine()?;
+            let engine = engine.as_ref();
+            let init = engine.registry().load_init("mlp")?;
+            let grad = XlaGradEngine::new(engine, "mlp", cfg.batch)
+                .context("fig batch sizes need matching artifacts; \
+                          re-run `make artifacts` with --mus including it")?;
+            let eval = XlaEvalEngine::new(engine, "mlp")?;
+            let update = match cfg.update_engine {
+                UpdateEngineKind::Rust => UpdateEngine::Rust,
+                UpdateEngineKind::Xla => UpdateEngine::Xla(
+                    XlaUpdateEngine::new(engine, init.len(), &cfg.fasgd)?,
+                ),
+            };
+            let server = build_server(cfg, init, update);
+            let split = data::load_classification(&cfg.dataset, cfg.seed)?;
+            SimParts {
+                server,
+                grad: Box::new(grad),
+                eval: Box::new(eval),
+                data: DataSource::Classif(split),
+            }
+        }
+        (ModelKind::Mlp, GradEngineKind::RustMlp) => {
+            let sizes = vec![784, cfg.mlp_hidden, 10];
+            let init = crate::grad::rust_mlp::init_params(cfg.seed, &sizes);
+            let grad = RustMlpEngine::new(sizes.clone(), cfg.batch);
+            let split = data::load_classification(&cfg.dataset, cfg.seed)?;
+            let eval_mu = split.val.len().min(512).max(1);
+            let eval = RustMlpEngine::new(sizes, eval_mu);
+            if cfg.update_engine == UpdateEngineKind::Xla {
+                bail!("update_engine=xla requires grad_engine=xla (artifact P must match)");
+            }
+            let server = build_server(cfg, init, UpdateEngine::Rust);
+            SimParts {
+                server,
+                grad: Box::new(grad),
+                eval: Box::new(eval),
+                data: DataSource::Classif(split),
+            }
+        }
+        (model, GradEngineKind::Xla) => {
+            let engine = shared_engine()?;
+            let engine = engine.as_ref();
+            let name = transformer_model_name(model);
+            let init = engine.registry().load_init(name)?;
+            let grad = XlaGradEngine::new(engine, name, cfg.batch)?;
+            let eval = XlaEvalEngine::new(engine, name)?;
+            let update = match cfg.update_engine {
+                UpdateEngineKind::Rust => UpdateEngine::Rust,
+                UpdateEngineKind::Xla => UpdateEngine::Xla(
+                    XlaUpdateEngine::new(engine, init.len(), &cfg.fasgd)?,
+                ),
+            };
+            let server = build_server(cfg, init, update);
+            let (vocab, seq, len) = corpus_params(model);
+            let meta = engine.registry().find_grad(name, cfg.batch)?;
+            let seq = meta.seq_len.unwrap_or(seq);
+            let vocab = meta.vocab.unwrap_or(vocab);
+            let corpus = corpus::generate(
+                cfg.seed.wrapping_add(cfg.dataset.seed_offset),
+                vocab,
+                len,
+            );
+            SimParts {
+                server,
+                grad: Box::new(grad),
+                eval: Box::new(eval),
+                data: DataSource::Lm { corpus, seq },
+            }
+        }
+        _ => unreachable!("validate() rejects transformer+rust"),
+    };
+    Simulator::new(cfg.clone(), parts)
+}
+
+/// Build and run one experiment end-to-end.
+pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunSummary> {
+    log::info!("run: {}", cfg.summary());
+    let sim = build_sim(cfg)?;
+    let summary = sim.run()?;
+    log::info!(
+        "done: {} final={:.4} best={:.4} mean_tau={:.1} wall={:.1}s",
+        summary.name,
+        summary.final_val_loss(),
+        summary.best_val_loss(),
+        summary.staleness.mean(),
+        summary.wall_secs
+    );
+    Ok(summary)
+}
+
+/// A quick pure-rust config for tests (no artifacts, small everything).
+pub fn fast_test_config(policy: Policy) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.policy = policy;
+    cfg.grad_engine = GradEngineKind::RustMlp;
+    cfg.mlp_hidden = 16;
+    cfg.clients = 4;
+    cfg.batch = 4;
+    cfg.iters = 300;
+    // FASGD divides by the (often ≪1) gradient-std track, so its stable α
+    // is ~10x smaller — exactly what the paper's LR sweep found (0.005 vs
+    // 0.04 for SASGD).
+    cfg.alpha = if policy == Policy::Fasgd { 0.005 } else { 0.05 };
+    cfg.eval_every = 100;
+    cfg.dataset.train = 512;
+    cfg.dataset.val = 256;
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pure_rust_pipeline_trains() {
+        let mut cfg = fast_test_config(Policy::Fasgd);
+        cfg.iters = 600;
+        let summary = run_experiment(&cfg).unwrap();
+        let first = summary.history.evals.first().unwrap().val_loss;
+        let last = summary.final_val_loss();
+        assert!(last < first, "no learning: {first} -> {last}");
+        assert_eq!(summary.server_updates, 600);
+        assert!(summary.staleness.mean() > 0.0); // async ⇒ staleness exists
+    }
+
+    #[test]
+    fn all_policies_run_pure_rust() {
+        for policy in [
+            Policy::Sync,
+            Policy::Asgd,
+            Policy::Sasgd,
+            Policy::Exponential,
+            Policy::Fasgd,
+        ] {
+            let cfg = fast_test_config(policy);
+            let summary = run_experiment(&cfg).unwrap();
+            assert!(summary.final_val_loss().is_finite(), "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn sync_has_zero_staleness() {
+        let cfg = fast_test_config(Policy::Sync);
+        let s = run_experiment(&cfg).unwrap();
+        assert_eq!(s.staleness.mean(), 0.0);
+        // λ iterations per server update
+        assert_eq!(s.server_updates, cfg.iters / cfg.clients as u64);
+    }
+}

@@ -1,0 +1,100 @@
+//! Figure 1: FASGD vs SASGD validation-cost curves across (µ, λ) combos
+//! with µλ = 128 held constant.
+//!
+//! Paper parameters: (µ,λ) ∈ {(1,128), (4,32), (8,16), (32,4)}, FASGD
+//! α=0.005, SASGD α=0.04 (each the winner of a 16-rate sweep — see
+//! `lr_sweep`), 100k iterations. The claim to reproduce: FASGD converges
+//! faster and to a lower cost in *every* panel.
+
+use anyhow::Result;
+
+use crate::config::{ExperimentConfig, Policy};
+use crate::metrics::writer;
+use crate::metrics::RunSummary;
+
+/// The paper's four (µ, λ) panels.
+pub const PANELS: [(usize, usize); 4] = [(1, 128), (4, 32), (8, 16), (32, 4)];
+/// Best learning rates from the paper's sweep.
+pub const FASGD_LR: f32 = 0.005;
+pub const SASGD_LR: f32 = 0.04;
+
+/// Per-panel result pair.
+#[derive(Debug, Clone)]
+pub struct PanelResult {
+    pub mu: usize,
+    pub lambda: usize,
+    pub fasgd: RunSummary,
+    pub sasgd: RunSummary,
+}
+
+impl PanelResult {
+    /// The figure's qualitative claim for this panel.
+    pub fn fasgd_wins(&self) -> bool {
+        self.fasgd.history.tail_mean(3) < self.sasgd.history.tail_mean(3)
+    }
+}
+
+/// Build the config for one (panel, policy) run.
+pub fn panel_config(
+    base: &ExperimentConfig,
+    mu: usize,
+    lambda: usize,
+    policy: Policy,
+) -> ExperimentConfig {
+    let mut cfg = base.clone();
+    cfg.policy = policy;
+    cfg.batch = mu;
+    cfg.clients = lambda;
+    cfg.alpha = match policy {
+        Policy::Fasgd => FASGD_LR,
+        _ => SASGD_LR,
+    };
+    cfg.name = format!("fig1-mu{mu}-lam{lambda}-{}", policy.name());
+    cfg
+}
+
+/// Run the full figure. `base.iters` scales the runtime (paper: 100_000).
+pub fn run(base: &ExperimentConfig) -> Result<Vec<PanelResult>> {
+    let mut out = Vec::new();
+    for (mu, lambda) in PANELS {
+        let fasgd = crate::experiments::common::run_experiment(
+            &panel_config(base, mu, lambda, Policy::Fasgd),
+        )?;
+        let sasgd = crate::experiments::common::run_experiment(
+            &panel_config(base, mu, lambda, Policy::Sasgd),
+        )?;
+        out.push(PanelResult { mu, lambda, fasgd, sasgd });
+    }
+    Ok(out)
+}
+
+/// Print the figure's rows and write CSV/JSON artifacts.
+pub fn report(results: &[PanelResult], out_dir: &std::path::Path) -> Result<()> {
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|r| {
+            vec![
+                format!("({}, {})", r.mu, r.lambda),
+                format!("{:.4}", r.fasgd.history.tail_mean(3)),
+                format!("{:.4}", r.sasgd.history.tail_mean(3)),
+                format!("{:.2}", r.fasgd.staleness.mean()),
+                if r.fasgd_wins() { "FASGD".into() } else { "SASGD".into() },
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        writer::render_table(
+            &["(mu, lambda)", "FASGD cost", "SASGD cost", "mean tau", "winner"],
+            &rows
+        )
+    );
+    let mut all = Vec::new();
+    for r in results {
+        all.push(r.fasgd.clone());
+        all.push(r.sasgd.clone());
+    }
+    writer::write_curves_csv(&out_dir.join("fig1_curves.csv"), &all)?;
+    writer::write_summaries_json(&out_dir.join("fig1_summary.json"), &all)?;
+    Ok(())
+}

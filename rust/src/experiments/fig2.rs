@@ -1,0 +1,100 @@
+//! Figure 2: λ-scaling — FASGD vs SASGD at λ ∈ {250, 500, 1000, 10000},
+//! µ = 128, same learning rates as Figure 1.
+//!
+//! The claim to reproduce: FASGD wins at every λ and its relative advantage
+//! *grows* with λ (staleness grows with λ, and FASGD exploits gradient
+//! statistics precisely where staleness dominates).
+
+use anyhow::Result;
+
+use crate::config::{ExperimentConfig, Policy};
+use crate::experiments::fig1::{FASGD_LR, SASGD_LR};
+use crate::metrics::{writer, RunSummary};
+
+/// The paper's λ values.
+pub const LAMBDAS: [usize; 4] = [250, 500, 1000, 10_000];
+pub const MU: usize = 128;
+
+#[derive(Debug, Clone)]
+pub struct LambdaResult {
+    pub lambda: usize,
+    pub fasgd: RunSummary,
+    pub sasgd: RunSummary,
+}
+
+impl LambdaResult {
+    pub fn fasgd_wins(&self) -> bool {
+        self.fasgd.history.tail_mean(3) < self.sasgd.history.tail_mean(3)
+    }
+
+    /// SASGD cost − FASGD cost (positive = FASGD better).
+    pub fn gap(&self) -> f64 {
+        self.sasgd.history.tail_mean(3) - self.fasgd.history.tail_mean(3)
+    }
+}
+
+pub fn lambda_config(
+    base: &ExperimentConfig,
+    lambda: usize,
+    policy: Policy,
+) -> ExperimentConfig {
+    let mut cfg = base.clone();
+    cfg.policy = policy;
+    cfg.batch = MU;
+    cfg.clients = lambda;
+    cfg.alpha = match policy {
+        Policy::Fasgd => FASGD_LR,
+        _ => SASGD_LR,
+    };
+    cfg.name = format!("fig2-lam{lambda}-{}", policy.name());
+    cfg
+}
+
+/// Run the sweep. Iterations should be ≥ a few × λ for the largest λ to be
+/// meaningful; the harness scales automatically when `base.iters` is small.
+pub fn run(base: &ExperimentConfig, lambdas: &[usize]) -> Result<Vec<LambdaResult>> {
+    let mut out = Vec::new();
+    for &lambda in lambdas {
+        let mut b = base.clone();
+        // Ensure every client pushes a handful of times at minimum.
+        b.iters = b.iters.max(lambda as u64 * 3);
+        let fasgd = crate::experiments::common::run_experiment(
+            &lambda_config(&b, lambda, Policy::Fasgd),
+        )?;
+        let sasgd = crate::experiments::common::run_experiment(
+            &lambda_config(&b, lambda, Policy::Sasgd),
+        )?;
+        out.push(LambdaResult { lambda, fasgd, sasgd });
+    }
+    Ok(out)
+}
+
+pub fn report(results: &[LambdaResult], out_dir: &std::path::Path) -> Result<()> {
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|r| {
+            vec![
+                r.lambda.to_string(),
+                format!("{:.4}", r.fasgd.history.tail_mean(3)),
+                format!("{:.4}", r.sasgd.history.tail_mean(3)),
+                format!("{:.4}", r.gap()),
+                format!("{:.1}", r.fasgd.staleness.mean()),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        writer::render_table(
+            &["lambda", "FASGD cost", "SASGD cost", "gap", "mean tau"],
+            &rows
+        )
+    );
+    let mut all = Vec::new();
+    for r in results {
+        all.push(r.fasgd.clone());
+        all.push(r.sasgd.clone());
+    }
+    writer::write_curves_csv(&out_dir.join("fig2_curves.csv"), &all)?;
+    writer::write_summaries_json(&out_dir.join("fig2_summary.json"), &all)?;
+    Ok(())
+}

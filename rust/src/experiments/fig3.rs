@@ -1,0 +1,110 @@
+//! Figure 3: B-FASGD bandwidth/convergence trade-off.
+//!
+//! Top row of the paper's figure: sweep `c_fetch` with `c_push = 0`;
+//! bottom row: sweep `c_push` with `c_fetch = 0`; always against the plain
+//! FASGD baseline. Claims to reproduce: (a) fetch traffic can be cut ~10×
+//! (≈5× total bandwidth) with little convergence impact, (b) even small
+//! push cuts hurt badly, (c) copies-vs-potential-copies bends downward over
+//! training (the "negative second derivative" — gating tightens as v
+//! decays).
+
+use anyhow::Result;
+
+use crate::config::{BandwidthMode, ExperimentConfig, Policy};
+use crate::metrics::{writer, RunSummary};
+
+/// c-values swept for each direction (0 = baseline FASGD, gate off).
+pub const C_VALUES: [f64; 4] = [0.0, 0.05, 0.2, 1.0];
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SweepDir {
+    Fetch,
+    Push,
+}
+
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub dir: SweepDir,
+    pub c: f64,
+    pub run: RunSummary,
+}
+
+impl SweepPoint {
+    /// Copies / potential-copies for the gated direction.
+    pub fn gated_ratio(&self) -> f64 {
+        match self.dir {
+            SweepDir::Fetch => self.run.bandwidth.fetch_ratio(),
+            SweepDir::Push => self.run.bandwidth.push_ratio(),
+        }
+    }
+}
+
+pub fn sweep_config(
+    base: &ExperimentConfig,
+    dir: SweepDir,
+    c: f64,
+) -> ExperimentConfig {
+    let mut cfg = base.clone();
+    cfg.policy = Policy::Fasgd;
+    cfg.alpha = crate::experiments::fig1::FASGD_LR;
+    cfg.bandwidth = if c == 0.0 {
+        BandwidthMode::Always
+    } else {
+        match dir {
+            SweepDir::Fetch => BandwidthMode::Probabilistic {
+                c_push: 0.0,
+                c_fetch: c,
+                eps: 1e-8,
+            },
+            SweepDir::Push => BandwidthMode::Probabilistic {
+                c_push: c,
+                c_fetch: 0.0,
+                eps: 1e-8,
+            },
+        }
+    };
+    let d = match dir {
+        SweepDir::Fetch => "fetch",
+        SweepDir::Push => "push",
+    };
+    cfg.name = format!("fig3-{d}-c{c}");
+    cfg
+}
+
+pub fn run(base: &ExperimentConfig, cs: &[f64]) -> Result<Vec<SweepPoint>> {
+    let mut out = Vec::new();
+    for dir in [SweepDir::Fetch, SweepDir::Push] {
+        for &c in cs {
+            let cfg = sweep_config(base, dir, c);
+            let run = crate::experiments::common::run_experiment(&cfg)?;
+            out.push(SweepPoint { dir, c, run });
+        }
+    }
+    Ok(out)
+}
+
+pub fn report(points: &[SweepPoint], out_dir: &std::path::Path) -> Result<()> {
+    let rows: Vec<Vec<String>> = points
+        .iter()
+        .map(|p| {
+            vec![
+                format!("{:?}", p.dir),
+                format!("{}", p.c),
+                format!("{:.4}", p.run.history.tail_mean(3)),
+                format!("{:.3}", p.gated_ratio()),
+                format!("{:.2}x", p.run.bandwidth.reduction_factor()),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        writer::render_table(
+            &["dir", "c", "final cost", "copies/potential", "total reduction"],
+            &rows
+        )
+    );
+    let all: Vec<RunSummary> = points.iter().map(|p| p.run.clone()).collect();
+    writer::write_curves_csv(&out_dir.join("fig3_curves.csv"), &all)?;
+    writer::write_summaries_json(&out_dir.join("fig3_summary.json"), &all)?;
+    Ok(())
+}

@@ -1,0 +1,99 @@
+//! The paper's learning-rate selection protocol: "we separately choose the
+//! best learning rate (across the set of 4 combinations) for each of FASGD
+//! and SASGD from a pool of 16 candidate learning rates".
+
+use anyhow::Result;
+
+use crate::config::{ExperimentConfig, Policy};
+use crate::metrics::writer;
+
+/// 16 candidates, log-spaced over [1e-3, 0.32] (covering both winners the
+/// paper reports: 0.005 for FASGD, 0.04 for SASGD).
+pub fn candidate_rates() -> Vec<f32> {
+    (0..16)
+        .map(|i| (1e-3f32) * (1.45f32).powi(i))
+        .collect()
+}
+
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    pub policy: Policy,
+    pub rates: Vec<f32>,
+    /// Mean tail validation cost across the panel set, per rate
+    /// (NaN = diverged).
+    pub scores: Vec<f64>,
+}
+
+impl SweepResult {
+    pub fn best(&self) -> (f32, f64) {
+        let mut best = (self.rates[0], f64::INFINITY);
+        for (&r, &s) in self.rates.iter().zip(&self.scores) {
+            if s.is_finite() && s < best.1 {
+                best = (r, s);
+            }
+        }
+        best
+    }
+}
+
+/// Score one (policy, rate) over the paper's 4 panels; non-finite losses
+/// count as divergence.
+fn score(base: &ExperimentConfig, policy: Policy, rate: f32) -> Result<f64> {
+    let mut total = 0.0;
+    let mut count = 0usize;
+    for (mu, lambda) in crate::experiments::fig1::PANELS {
+        let mut cfg =
+            crate::experiments::fig1::panel_config(base, mu, lambda, policy);
+        cfg.alpha = rate;
+        cfg.name = format!("lr-{}-{rate}-mu{mu}", policy.name());
+        let run = crate::experiments::common::run_experiment(&cfg)?;
+        let tail = run.history.tail_mean(3);
+        if !tail.is_finite() {
+            return Ok(f64::NAN);
+        }
+        total += tail;
+        count += 1;
+    }
+    Ok(total / count as f64)
+}
+
+/// Run the full sweep for both algorithms.
+pub fn run(base: &ExperimentConfig) -> Result<Vec<SweepResult>> {
+    let rates = candidate_rates();
+    let mut out = Vec::new();
+    for policy in [Policy::Fasgd, Policy::Sasgd] {
+        let mut scores = Vec::new();
+        for &r in &rates {
+            scores.push(score(base, policy, r)?);
+        }
+        out.push(SweepResult { policy, rates: rates.clone(), scores });
+    }
+    Ok(out)
+}
+
+pub fn report(results: &[SweepResult]) {
+    for res in results {
+        let rows: Vec<Vec<String>> = res
+            .rates
+            .iter()
+            .zip(&res.scores)
+            .map(|(r, s)| vec![format!("{r:.5}"), format!("{s:.4}")])
+            .collect();
+        println!("policy = {}", res.policy.name());
+        println!("{}", writer::render_table(&["lr", "mean cost"], &rows));
+        let (r, s) = res.best();
+        println!("best: lr={r:.5} cost={s:.4}\n");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn candidates_cover_paper_winners() {
+        let rates = super::candidate_rates();
+        assert_eq!(rates.len(), 16);
+        // 0.005 and 0.04 must both be inside the swept range.
+        assert!(rates.first().unwrap() < &0.005);
+        assert!(rates.last().unwrap() > &0.04);
+    }
+}

@@ -1,0 +1,10 @@
+//! Experiment harnesses: one module per paper figure plus the shared
+//! launcher ([`common`]) and the learning-rate selection protocol
+//! ([`lr_sweep`]). Each harness returns the same rows/series the paper
+//! reports and is callable from the CLI, the benches, and the examples.
+
+pub mod common;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod lr_sweep;

@@ -1,0 +1,49 @@
+//! Gradient engines (S7): how a simulated client turns (θ, minibatch) into
+//! (loss, ∇θ).
+//!
+//! [`XlaGradEngine`] is the production path — it executes the AOT-lowered
+//! JAX graph (which contains the Layer-1 Pallas dense kernel in both its
+//! forward and backward directions) through PJRT. [`rust_mlp::RustMlpEngine`]
+//! is a dependency-free MLP forward/backward used by fast tests and as an
+//! independent numerical cross-check of the whole AOT pipeline
+//! (rust/tests/runtime_roundtrip.rs).
+
+pub mod rust_mlp;
+pub mod xla;
+
+pub use rust_mlp::RustMlpEngine;
+pub use xla::{XlaEvalEngine, XlaGradEngine, XlaUpdateEngine};
+
+use anyhow::Result;
+
+/// One client minibatch, matching the exported graph signatures.
+#[derive(Debug, Clone, Copy)]
+pub enum Batch<'a> {
+    /// Classification: `x` is `f32[mu*dim]` row-major, `y` is `i32[mu]`.
+    Classif { x: &'a [f32], y: &'a [i32] },
+    /// Language modelling: `i32[b*seq]` row-major token / target windows.
+    Lm { tokens: &'a [i32], targets: &'a [i32] },
+}
+
+/// Computes stochastic gradients for a fixed minibatch size.
+pub trait GradientEngine {
+    /// Flat parameter count P.
+    fn param_count(&self) -> usize;
+
+    /// Compute `(loss, ∇θ)`; the gradient is written into `grad_out`
+    /// (length P, reused across calls to keep the hot loop allocation-free).
+    fn grad(
+        &mut self,
+        theta: &[f32],
+        batch: &Batch<'_>,
+        grad_out: &mut [f32],
+    ) -> Result<f32>;
+}
+
+/// Evaluates validation cost/accuracy for a fixed eval batch size.
+pub trait EvalEngine {
+    fn batch_size(&self) -> usize;
+
+    /// Returns `(mean_nll, accuracy)` over one eval batch.
+    fn eval(&mut self, theta: &[f32], batch: &Batch<'_>) -> Result<(f32, f32)>;
+}

@@ -1,0 +1,385 @@
+//! Pure-rust MLP forward/backward (S7's fast substrate).
+//!
+//! Implements exactly the architecture and flat-parameter layout of
+//! `python/compile/model.py` (`[w1 | b1 | w2 | b2 ]`, row-major), so a
+//! parameter vector is interchangeable between this engine and the AOT
+//! graph. Used by fast tests and as the independent numerical oracle for
+//! the AOT pipeline; also implements the same softmax/NLL formulation so
+//! losses agree to f32 tolerance.
+
+use anyhow::{bail, Result};
+
+use crate::grad::{Batch, EvalEngine, GradientEngine};
+
+/// MLP layer sizes (input, hidden..., classes).
+#[derive(Debug, Clone)]
+pub struct RustMlpEngine {
+    sizes: Vec<usize>,
+    mu: usize,
+    // scratch (reused across calls)
+    h: Vec<Vec<f32>>,     // activations per layer, batch-major
+    delta: Vec<Vec<f32>>, // backprop deltas
+}
+
+impl RustMlpEngine {
+    /// The paper's architecture: 784-200-10.
+    pub fn paper(mu: usize) -> Self {
+        Self::new(vec![784, 200, 10], mu)
+    }
+
+    pub fn new(sizes: Vec<usize>, mu: usize) -> Self {
+        assert!(sizes.len() >= 2 && mu > 0);
+        let h = sizes.iter().map(|&d| vec![0.0; mu * d]).collect();
+        let delta = sizes.iter().map(|&d| vec![0.0; mu * d]).collect();
+        Self { sizes, mu, h, delta }
+    }
+
+    pub fn flat_param_count(sizes: &[usize]) -> usize {
+        sizes
+            .windows(2)
+            .map(|w| w[0] * w[1] + w[1])
+            .sum()
+    }
+
+    fn layer_offsets(&self) -> Vec<(usize, usize, usize, usize)> {
+        // (w_offset, b_offset, fan_in, fan_out) per layer
+        let mut out = Vec::new();
+        let mut off = 0;
+        for w in self.sizes.windows(2) {
+            let (fi, fo) = (w[0], w[1]);
+            out.push((off, off + fi * fo, fi, fo));
+            off += fi * fo + fo;
+        }
+        out
+    }
+
+    /// Forward pass; fills `self.h`; returns mean NLL and writes softmax
+    /// probabilities into `self.delta.last()` (reused by backward).
+    fn forward(&mut self, theta: &[f32], x: &[f32], y: &[i32]) -> Result<f32> {
+        let mu = self.mu;
+        if x.len() != mu * self.sizes[0] || y.len() != mu {
+            bail!(
+                "batch shape mismatch: x={} y={} expected x={} y={mu}",
+                x.len(),
+                y.len(),
+                mu * self.sizes[0]
+            );
+        }
+        self.h[0].copy_from_slice(x);
+        let offsets = self.layer_offsets();
+        let n_layers = offsets.len();
+        for (li, &(wo, bo, fi, fo)) in offsets.iter().enumerate() {
+            let w = &theta[wo..wo + fi * fo];
+            let b = &theta[bo..bo + fo];
+            let last = li == n_layers - 1;
+            // split scratch to appease the borrow checker
+            let (head, tail) = self.h.split_at_mut(li + 1);
+            let input = &head[li];
+            let out = &mut tail[0];
+            for r in 0..mu {
+                let xrow = &input[r * fi..(r + 1) * fi];
+                let orow = &mut out[r * fo..(r + 1) * fo];
+                orow.copy_from_slice(b);
+                for (k, &xv) in xrow.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let wrow = &w[k * fo..(k + 1) * fo];
+                    for (o, wv) in orow.iter_mut().zip(wrow) {
+                        *o += xv * *wv;
+                    }
+                }
+                if !last {
+                    for o in orow.iter_mut() {
+                        *o = o.max(0.0);
+                    }
+                }
+            }
+        }
+        // softmax + NLL on the last layer
+        let classes = *self.sizes.last().unwrap();
+        let logits = self.h.last().unwrap();
+        let probs = self.delta.last_mut().unwrap();
+        let mut loss = 0.0f64;
+        for r in 0..mu {
+            let row = &logits[r * classes..(r + 1) * classes];
+            let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0.0f64;
+            for &l in row {
+                z += ((l - m) as f64).exp();
+            }
+            let logz = z.ln() + m as f64;
+            let target = y[r] as usize;
+            if target >= classes {
+                bail!("label {target} out of range {classes}");
+            }
+            loss -= row[target] as f64 - logz;
+            let prow = &mut probs[r * classes..(r + 1) * classes];
+            for (p, &l) in prow.iter_mut().zip(row) {
+                *p = ((l as f64 - logz).exp()) as f32;
+            }
+        }
+        Ok((loss / mu as f64) as f32)
+    }
+}
+
+impl GradientEngine for RustMlpEngine {
+    fn param_count(&self) -> usize {
+        Self::flat_param_count(&self.sizes)
+    }
+
+    fn grad(
+        &mut self,
+        theta: &[f32],
+        batch: &Batch<'_>,
+        grad_out: &mut [f32],
+    ) -> Result<f32> {
+        let Batch::Classif { x, y } = batch else {
+            bail!("RustMlpEngine only supports classification batches");
+        };
+        if theta.len() != self.param_count()
+            || grad_out.len() != self.param_count()
+        {
+            bail!("param length mismatch");
+        }
+        let loss = self.forward(theta, x, y)?;
+        let mu = self.mu;
+        let classes = *self.sizes.last().unwrap();
+
+        // delta_last = (softmax - onehot) / mu, already holds softmax.
+        {
+            let probs = self.delta.last_mut().unwrap();
+            for r in 0..mu {
+                let prow = &mut probs[r * classes..(r + 1) * classes];
+                prow[y[r] as usize] -= 1.0;
+                for p in prow.iter_mut() {
+                    *p /= mu as f32;
+                }
+            }
+        }
+
+        grad_out.fill(0.0);
+        let offsets = self.layer_offsets();
+        for li in (0..offsets.len()).rev() {
+            let (wo, bo, fi, fo) = offsets[li];
+            // dW = h[li]^T @ delta[li+1]; db = sum_rows(delta[li+1])
+            {
+                let input = &self.h[li];
+                let d = &self.delta[li + 1];
+                let gw = &mut grad_out[wo..wo + fi * fo];
+                for r in 0..mu {
+                    let xrow = &input[r * fi..(r + 1) * fi];
+                    let drow = &d[r * fo..(r + 1) * fo];
+                    for (k, &xv) in xrow.iter().enumerate() {
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let grow = &mut gw[k * fo..(k + 1) * fo];
+                        for (gq, &dv) in grow.iter_mut().zip(drow) {
+                            *gq += xv * dv;
+                        }
+                    }
+                }
+            }
+            {
+                let d = &self.delta[li + 1];
+                let gb = &mut grad_out[bo..bo + fo];
+                for r in 0..mu {
+                    let drow = &d[r * fo..(r + 1) * fo];
+                    for (g, &dv) in gb.iter_mut().zip(drow) {
+                        *g += dv;
+                    }
+                }
+            }
+            if li > 0 {
+                // delta[li] = (delta[li+1] @ W^T) ∘ relu'(h[li])
+                let w = &theta[wo..wo + fi * fo];
+                let (dhead, dtail) = self.delta.split_at_mut(li + 1);
+                let dnext = &dtail[0];
+                let dcur = &mut dhead[li];
+                let hcur = &self.h[li];
+                for r in 0..mu {
+                    let drow = &dnext[r * fo..(r + 1) * fo];
+                    let crow = &mut dcur[r * fi..(r + 1) * fi];
+                    let hrow = &hcur[r * fi..(r + 1) * fi];
+                    for k in 0..fi {
+                        if hrow[k] <= 0.0 {
+                            crow[k] = 0.0;
+                            continue;
+                        }
+                        let wrow = &w[k * fo..(k + 1) * fo];
+                        let mut acc = 0.0f32;
+                        for (wv, dv) in wrow.iter().zip(drow) {
+                            acc += *wv * *dv;
+                        }
+                        crow[k] = acc;
+                    }
+                }
+            }
+        }
+        Ok(loss)
+    }
+}
+
+impl EvalEngine for RustMlpEngine {
+    fn batch_size(&self) -> usize {
+        self.mu
+    }
+
+    fn eval(&mut self, theta: &[f32], batch: &Batch<'_>) -> Result<(f32, f32)> {
+        let Batch::Classif { x, y } = batch else {
+            bail!("RustMlpEngine only supports classification batches");
+        };
+        let loss = self.forward(theta, x, y)?;
+        let classes = *self.sizes.last().unwrap();
+        let logits = self.h.last().unwrap();
+        let mut correct = 0usize;
+        for r in 0..self.mu {
+            let row = &logits[r * classes..(r + 1) * classes];
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            if argmax == y[r] as usize {
+                correct += 1;
+            }
+        }
+        Ok((loss, correct as f32 / self.mu as f32))
+    }
+}
+
+/// Deterministic Glorot init identical to `model.init_params` *in structure*
+/// (not bitwise — numpy and rust RNGs differ; tests that need bitwise parity
+/// load `mlp_init.bin` instead).
+pub fn init_params(seed: u64, sizes: &[usize]) -> Vec<f32> {
+    let mut rng = crate::rng::stream(seed, "mlp-init", 0);
+    let mut out = Vec::with_capacity(RustMlpEngine::flat_param_count(sizes));
+    for w in sizes.windows(2) {
+        let (fi, fo) = (w[0], w[1]);
+        let limit = (6.0 / (fi + fo) as f64).sqrt();
+        for _ in 0..fi * fo {
+            out.push(((rng.f64() * 2.0 - 1.0) * limit) as f32);
+        }
+        for _ in 0..fo {
+            out.push(0.0);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fd_check(sizes: Vec<usize>, mu: usize) {
+        let mut eng = RustMlpEngine::new(sizes.clone(), mu);
+        let p = eng.param_count();
+        let mut theta = init_params(3, &sizes);
+        // nonzero biases to exercise those partials too
+        for t in theta.iter_mut().skip(p - 5) {
+            *t = 0.05;
+        }
+        let mut rng = crate::rng::stream(7, "fd", 0);
+        let x: Vec<f32> =
+            (0..mu * sizes[0]).map(|_| rng.f32()).collect();
+        let y: Vec<i32> = (0..mu)
+            .map(|_| rng.below(*sizes.last().unwrap() as u64) as i32)
+            .collect();
+        let batch = Batch::Classif { x: &x, y: &y };
+        let mut grad = vec![0.0f32; p];
+        eng.grad(&theta, &batch, &mut grad).unwrap();
+
+        let eps = 1e-3f32;
+        for probe in 0..10 {
+            let i = (probe * 977) % p;
+            let orig = theta[i];
+            theta[i] = orig + eps;
+            let lp = eng.forward(&theta, &x, &y).unwrap();
+            theta[i] = orig - eps;
+            let lm = eng.forward(&theta, &x, &y).unwrap();
+            theta[i] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - grad[i]).abs() < 5e-3,
+                "param {i}: fd={fd} analytic={}",
+                grad[i]
+            );
+        }
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences_small() {
+        fd_check(vec![6, 5, 3], 4);
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences_deep() {
+        fd_check(vec![8, 7, 6, 4], 2);
+    }
+
+    #[test]
+    fn param_count_matches_paper() {
+        assert_eq!(
+            RustMlpEngine::flat_param_count(&[784, 200, 10]),
+            159010
+        );
+    }
+
+    #[test]
+    fn training_reduces_loss() {
+        let sizes = vec![10, 16, 4];
+        let mut eng = RustMlpEngine::new(sizes.clone(), 16);
+        let mut theta = init_params(0, &sizes);
+        let mut rng = crate::rng::stream(1, "train", 0);
+        let x: Vec<f32> = (0..16 * 10).map(|_| rng.f32()).collect();
+        let y: Vec<i32> = (0..16).map(|_| rng.below(4) as i32).collect();
+        let batch = Batch::Classif { x: &x, y: &y };
+        let mut grad = vec![0.0f32; eng.param_count()];
+        let first = eng.grad(&theta, &batch, &mut grad).unwrap();
+        for _ in 0..50 {
+            eng.grad(&theta, &batch, &mut grad).unwrap();
+            crate::tensor::axpy(&mut theta, -0.5, &grad);
+        }
+        let last = eng.grad(&theta, &batch, &mut grad).unwrap();
+        assert!(last < first * 0.5, "{first} -> {last}");
+    }
+
+    #[test]
+    fn eval_accuracy_sane() {
+        let mut eng = RustMlpEngine::new(vec![4, 8, 2], 32);
+        let theta = init_params(2, &[4, 8, 2]);
+        let mut rng = crate::rng::stream(2, "eval", 0);
+        let x: Vec<f32> = (0..32 * 4).map(|_| rng.f32()).collect();
+        let y: Vec<i32> = (0..32).map(|_| rng.below(2) as i32).collect();
+        let (loss, acc) = eng
+            .eval(&theta, &Batch::Classif { x: &x, y: &y })
+            .unwrap();
+        assert!(loss > 0.0);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn rejects_lm_batches() {
+        let mut eng = RustMlpEngine::new(vec![4, 2], 1);
+        let t = vec![0.0f32; eng.param_count()];
+        let mut g = vec![0.0f32; eng.param_count()];
+        let toks = [0i32];
+        assert!(eng
+            .grad(&t, &Batch::Lm { tokens: &toks, targets: &toks }, &mut g)
+            .is_err());
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let mut eng = RustMlpEngine::new(vec![4, 2], 2);
+        let t = vec![0.0f32; eng.param_count()];
+        let mut g = vec![0.0f32; eng.param_count()];
+        let x = vec![0.0f32; 3]; // wrong
+        let y = vec![0i32; 2];
+        assert!(eng
+            .grad(&t, &Batch::Classif { x: &x, y: &y }, &mut g)
+            .is_err());
+    }
+}

@@ -1,0 +1,182 @@
+//! PJRT-backed engines: grad, eval, and the server-side FASGD update.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::grad::{Batch, EvalEngine, GradientEngine};
+use crate::runtime::{Arg, Engine, LoadedGraph};
+use crate::tensor::FasgdHparams;
+
+fn batch_args<'a>(theta: &'a [f32], batch: &Batch<'a>) -> [Arg<'a>; 3] {
+    match batch {
+        Batch::Classif { x, y } => {
+            [Arg::F32(theta), Arg::F32(x), Arg::I32(y)]
+        }
+        Batch::Lm { tokens, targets } => {
+            [Arg::F32(theta), Arg::I32(tokens), Arg::I32(targets)]
+        }
+    }
+}
+
+/// Client gradient computation through the AOT grad graph.
+pub struct XlaGradEngine {
+    graph: Arc<LoadedGraph>,
+}
+
+impl XlaGradEngine {
+    /// Load the grad graph for `(model, mu)` from the registry.
+    pub fn new(engine: &Engine, model: &str, mu: usize) -> Result<Self> {
+        let meta = engine.registry().find_grad(model, mu)?.clone();
+        let graph = engine.load(&meta.name)?;
+        Ok(Self { graph })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.graph.meta.batch.unwrap_or(0)
+    }
+}
+
+impl GradientEngine for XlaGradEngine {
+    fn param_count(&self) -> usize {
+        self.graph.meta.param_count
+    }
+
+    fn grad(
+        &mut self,
+        theta: &[f32],
+        batch: &Batch<'_>,
+        grad_out: &mut [f32],
+    ) -> Result<f32> {
+        let outs = self.graph.run(&batch_args(theta, batch))?;
+        let loss = *outs[0].first().context("empty loss output")?;
+        if outs[1].len() != grad_out.len() {
+            bail!(
+                "grad length {} != buffer {}",
+                outs[1].len(),
+                grad_out.len()
+            );
+        }
+        grad_out.copy_from_slice(&outs[1]);
+        Ok(loss)
+    }
+}
+
+/// Validation evaluation through the AOT eval graph.
+pub struct XlaEvalEngine {
+    graph: Arc<LoadedGraph>,
+}
+
+impl XlaEvalEngine {
+    pub fn new(engine: &Engine, model: &str) -> Result<Self> {
+        let meta = engine.registry().find_eval(model)?.clone();
+        let graph = engine.load(&meta.name)?;
+        Ok(Self { graph })
+    }
+}
+
+impl EvalEngine for XlaEvalEngine {
+    fn batch_size(&self) -> usize {
+        self.graph.meta.batch.unwrap_or(0)
+    }
+
+    fn eval(&mut self, theta: &[f32], batch: &Batch<'_>) -> Result<(f32, f32)> {
+        let outs = self.graph.run(&batch_args(theta, batch))?;
+        Ok((
+            *outs[0].first().context("empty loss")?,
+            *outs[1].first().context("empty acc")?,
+        ))
+    }
+}
+
+/// Server-side FASGD update through the AOT Pallas kernel artifact
+/// (`--update-engine xla`). Functionally identical to
+/// [`crate::tensor::fasgd_update_fused`]; benchmarked against it in §Perf.
+pub struct XlaUpdateEngine {
+    graph: Arc<LoadedGraph>,
+}
+
+impl XlaUpdateEngine {
+    pub fn new(engine: &Engine, param_count: usize, hp: &FasgdHparams)
+               -> Result<Self> {
+        let variant = if hp.inverse_variant { "inverse" } else { "std" };
+        let meta = engine
+            .registry()
+            .find_fasgd_update(param_count, variant)?
+            .clone();
+        let graph = engine.load(&meta.name)?;
+        Ok(Self { graph })
+    }
+
+    /// Apply eqs. 4-8 in place; returns mean(v) for the bandwidth gate.
+    pub fn apply(
+        &self,
+        theta: &mut [f32],
+        n: &mut [f32],
+        b: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        alpha_over_tau: f32,
+    ) -> Result<f64> {
+        let aot = [alpha_over_tau];
+        let outs = self.graph.run(&[
+            Arg::F32(theta),
+            Arg::F32(n),
+            Arg::F32(b),
+            Arg::F32(v),
+            Arg::F32(g),
+            Arg::F32(&aot),
+        ])?;
+        theta.copy_from_slice(&outs[0]);
+        n.copy_from_slice(&outs[1]);
+        b.copy_from_slice(&outs[2]);
+        v.copy_from_slice(&outs[3]);
+        Ok(crate::tensor::mean(v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<Engine> {
+        let dir = crate::util::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Engine::open(&dir).unwrap())
+    }
+
+    #[test]
+    fn grad_runs_and_has_signal() {
+        let Some(eng) = engine() else { return };
+        let mut ge = XlaGradEngine::new(&eng, "mlp", 8).unwrap();
+        let reg = eng.registry();
+        let theta = reg.load_init("mlp").unwrap();
+        let split = crate::data::synthetic::generate(0, 64, 0, 0.35);
+        let (x, y) = split.train.gather(&(0..8).collect::<Vec<_>>());
+        let mut g = vec![0.0f32; ge.param_count()];
+        let loss = ge
+            .grad(&theta, &Batch::Classif { x: &x, y: &y }, &mut g)
+            .unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert!(crate::tensor::l2_norm(&g) > 0.0);
+    }
+
+    #[test]
+    fn eval_runs() {
+        let Some(eng) = engine() else { return };
+        let mut ev = XlaEvalEngine::new(&eng, "mlp").unwrap();
+        let b = ev.batch_size();
+        let theta = eng.registry().load_init("mlp").unwrap();
+        let split = crate::data::synthetic::generate(0, b, 0, 0.35);
+        let (x, y) = split.train.gather(&(0..b).collect::<Vec<_>>());
+        let (loss, acc) = ev
+            .eval(&theta, &Batch::Classif { x: &x, y: &y })
+            .unwrap();
+        assert!(loss.is_finite());
+        assert!((0.0..=1.0).contains(&acc));
+        // Untrained 10-class model: loss near ln(10).
+        assert!((loss - 10f32.ln()).abs() < 0.5, "{loss}");
+    }
+}

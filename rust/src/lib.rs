@@ -1,0 +1,37 @@
+//! # fasgd — Faster Asynchronous SGD (Odena, 2016)
+//!
+//! A three-layer reproduction of the paper:
+//!
+//! * **Layer 3 (this crate)** — the coordination contribution: a
+//!   deterministic distributed-training simulator ([`sim`], the paper's
+//!   "FRED"), parameter-server policies ([`server`]: ASGD, SASGD,
+//!   exponential-penalty, FASGD), probabilistic bandwidth gating
+//!   ([`bandwidth`], the paper's B-FASGD), and a threaded live mode
+//!   ([`live`]).
+//! * **Layer 2** — JAX models (MLP, transformer) AOT-lowered to HLO text at
+//!   `make artifacts` time and executed from rust through PJRT ([`runtime`],
+//!   [`grad`]).
+//! * **Layer 1** — Pallas kernels (fused dense layer, fused FASGD update)
+//!   inside those lowered graphs.
+//!
+//! Python is never on the request path: once `artifacts/` exists the binary
+//! is self-contained.
+
+pub mod bandwidth;
+pub mod bench_util;
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod experiments;
+pub mod grad;
+pub mod live;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result alias (anyhow-backed, like the rest of the rust stack).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,183 @@
+//! Live threaded mode (S15): real client threads against a mutexed
+//! parameter server — the paper's lock protocol ("only one client can
+//! communicate with the server at a time") with actual concurrency,
+//! used to measure coordination throughput and lock contention.
+//!
+//! tokio is unavailable offline (DESIGN.md §5); client threads are
+//! `std::thread` workers. Gradients are computed with the pure-rust MLP
+//! engine — PJRT wrappers in the published `xla` crate are not `Send`, and
+//! what this mode measures is the *coordinator* (lock hold time, applies
+//! per second), which is engine-independent.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::data;
+use crate::data::sampler::BatchSampler;
+use crate::grad::{Batch, GradientEngine, RustMlpEngine};
+use crate::server::Server;
+
+/// Shared server state behind the paper's single lock.
+struct Shared {
+    server: Mutex<Box<dyn Server + Send>>,
+    applied: AtomicU64,
+    lock_ns: AtomicU64,
+}
+
+/// Result of a live run.
+#[derive(Debug, Clone)]
+pub struct LiveReport {
+    pub iterations: u64,
+    pub server_updates: u64,
+    pub wall_secs: f64,
+    /// Server updates per wall-clock second (the coordination throughput).
+    pub updates_per_sec: f64,
+    /// Mean lock-held time per update, nanoseconds.
+    pub mean_lock_ns: f64,
+    pub final_train_loss: f64,
+}
+
+// Server impls hold only owned Vec<f32> state (+ the rust update engine),
+// so the boxed trait object is Send for the policies live mode builds.
+
+/// Run `cfg.iters` total iterations across `cfg.clients` OS threads.
+pub fn run_live(cfg: &ExperimentConfig) -> Result<LiveReport> {
+    let mut cfg = cfg.clone();
+    cfg.grad_engine = crate::config::GradEngineKind::RustMlp;
+    cfg.validate()?;
+    let sizes = vec![784, cfg.mlp_hidden, 10];
+    let init = crate::grad::rust_mlp::init_params(cfg.seed, &sizes);
+
+    // build_server returns Box<dyn Server>; rebuild as Send boxes here.
+    let server: Box<dyn Server + Send> = match cfg.policy {
+        crate::config::Policy::Sync => {
+            // A barrier needs scheduler cooperation; live mode covers the
+            // async policies (the paper's focus).
+            anyhow::bail!("live mode supports async policies only")
+        }
+        crate::config::Policy::Asgd => {
+            Box::new(crate::server::Asgd::new(init.clone(), cfg.alpha))
+        }
+        crate::config::Policy::Sasgd => {
+            Box::new(crate::server::Sasgd::new(init.clone(), cfg.alpha))
+        }
+        crate::config::Policy::Exponential => {
+            Box::new(crate::server::ExponentialPenalty::new(
+                init.clone(),
+                cfg.alpha,
+                cfg.rho,
+            ))
+        }
+        crate::config::Policy::Fasgd => Box::new(
+            crate::server::Fasgd::new_rust(init.clone(), cfg.alpha, cfg.fasgd),
+        ),
+    };
+    let split = data::load_classification(&cfg.dataset, cfg.seed)?;
+    let split = Arc::new(split);
+    let shared = Arc::new(Shared {
+        server: Mutex::new(server),
+        applied: AtomicU64::new(0),
+        lock_ns: AtomicU64::new(0),
+    });
+
+    let per_client = cfg.iters / cfg.clients as u64;
+    let start = Instant::now();
+    let mut handles = Vec::new();
+    let loss_sum = Arc::new(Mutex::new((0.0f64, 0u64)));
+    for c in 0..cfg.clients {
+        let shared = shared.clone();
+        let split = split.clone();
+        let loss_sum = loss_sum.clone();
+        let sizes = sizes.clone();
+        let cfg = cfg.clone();
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            crate::util::enable_ftz();
+            let mut engine = RustMlpEngine::new(sizes, cfg.batch);
+            let p = engine.param_count();
+            let mut sampler = BatchSampler::new(
+                cfg.seed,
+                c as u64,
+                split.train.len(),
+                cfg.batch,
+            );
+            // Initial fetch.
+            let (mut theta, mut ts) = {
+                let s = shared.server.lock().unwrap();
+                (s.params().to_vec(), s.timestamp())
+            };
+            let mut grad = vec![0.0f32; p];
+            let (mut x, mut y) = (Vec::new(), Vec::new());
+            let mut local_loss = 0.0f64;
+            for _ in 0..per_client {
+                sampler.next_batch(&split.train, &mut x, &mut y);
+                let loss = engine.grad(
+                    &theta,
+                    &Batch::Classif { x: &x, y: &y },
+                    &mut grad,
+                )?;
+                local_loss = loss as f64;
+                // Paper protocol: take the lock; push, update, fetch —
+                // atomically, then release.
+                let t0 = Instant::now();
+                {
+                    let mut s = shared.server.lock().unwrap();
+                    s.apply_update(&grad, ts, c)?;
+                    theta.copy_from_slice(s.params());
+                    ts = s.timestamp();
+                }
+                shared
+                    .lock_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                shared.applied.fetch_add(1, Ordering::Relaxed);
+            }
+            let mut ls = loss_sum.lock().unwrap();
+            ls.0 += local_loss;
+            ls.1 += 1;
+            Ok(())
+        }));
+    }
+    for h in handles {
+        h.join().expect("client thread panicked")?;
+    }
+    let wall = start.elapsed().as_secs_f64();
+    let applied = shared.applied.load(Ordering::Relaxed);
+    let lock_ns = shared.lock_ns.load(Ordering::Relaxed);
+    let (lsum, lcount) = *loss_sum.lock().unwrap();
+    Ok(LiveReport {
+        iterations: per_client * cfg.clients as u64,
+        server_updates: applied,
+        wall_secs: wall,
+        updates_per_sec: applied as f64 / wall.max(1e-9),
+        mean_lock_ns: lock_ns as f64 / applied.max(1) as f64,
+        final_train_loss: lsum / lcount.max(1) as f64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Policy;
+
+    #[test]
+    fn live_fasgd_runs_and_learns() {
+        let mut cfg = crate::experiments::common::fast_test_config(Policy::Fasgd);
+        cfg.clients = 3;
+        cfg.iters = 1_200;
+        let rep = run_live(&cfg).unwrap();
+        assert_eq!(rep.server_updates, 1_200);
+        assert!(rep.updates_per_sec > 0.0);
+        assert!(rep.final_train_loss.is_finite());
+        // ln(10) ≈ 2.303 is the untrained floor; require real learning.
+        assert!(rep.final_train_loss < 2.0, "{}", rep.final_train_loss);
+    }
+
+    #[test]
+    fn live_rejects_sync() {
+        let cfg = crate::experiments::common::fast_test_config(Policy::Sync);
+        assert!(run_live(&cfg).is_err());
+    }
+}

@@ -1,0 +1,180 @@
+//! `repro` — the FASGD launcher.
+//!
+//! Subcommands:
+//! * `train`    — run one experiment (every config knob is a `--flag`)
+//! * `fig1`     — reproduce Figure 1 (FASGD vs SASGD, 4 (µ,λ) panels)
+//! * `fig2`     — reproduce Figure 2 (λ-scaling)
+//! * `fig3`     — reproduce Figure 3 (B-FASGD bandwidth sweeps)
+//! * `sweep-lr` — the 16-candidate learning-rate selection protocol
+//! * `live`     — threaded live mode (coordination throughput)
+//! * `info`     — artifact inventory + platform
+//!
+//! Examples:
+//! ```text
+//! repro train --policy fasgd --lambda 32 --mu 4 --iters 20000
+//! repro fig1 --iters 100000 --out results/
+//! repro fig3 --iters 8000 --cs 0,0.1,0.5
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use fasgd::cli::Args;
+use fasgd::config::ExperimentConfig;
+use fasgd::experiments::{fig1, fig2, fig3, lr_sweep};
+use fasgd::util::logging;
+
+fn main() {
+    logging::init();
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("fig1") => cmd_fig1(&args),
+        Some("fig2") => cmd_fig2(&args),
+        Some("fig3") => cmd_fig3(&args),
+        Some("sweep-lr") => cmd_sweep_lr(&args),
+        Some("live") => cmd_live(&args),
+        Some("info") => cmd_info(),
+        Some(other) => bail!("unknown subcommand {other:?}; try `repro help`"),
+        None => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+/// Keys the harness commands consume themselves (not config knobs).
+const HARNESS_KEYS: &[&str] = &["out", "config", "cs", "lambdas"];
+
+/// defaults + optional --config file + remaining --key value overrides.
+fn config_from(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => {
+            ExperimentConfig::from_toml_file(std::path::Path::new(path))?
+        }
+        None => ExperimentConfig::default(),
+    };
+    for (k, v) in args.remaining_options(HARNESS_KEYS) {
+        cfg.set(k, v).with_context(|| format!("--{k}"))?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn out_dir(args: &Args) -> std::path::PathBuf {
+    std::path::PathBuf::from(args.get("out").unwrap_or("results"))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let summary = fasgd::experiments::common::run_experiment(&cfg)?;
+    println!("{}", summary.to_json().to_string_pretty());
+    let dir = out_dir(args);
+    fasgd::metrics::writer::write_curves_csv(
+        &dir.join(format!("{}_curve.csv", cfg.name)),
+        std::slice::from_ref(&summary),
+    )?;
+    Ok(())
+}
+
+fn cmd_fig1(args: &Args) -> Result<()> {
+    let mut cfg = config_from(args)?;
+    if args.get("iters").is_none() {
+        cfg.iters = 20_000; // reduced default; paper value: 100_000
+        log::info!("fig1: using reduced iters={} (pass --iters 100000 for the paper's budget)", cfg.iters);
+    }
+    let results = fig1::run(&cfg)?;
+    fig1::report(&results, &out_dir(args))?;
+    Ok(())
+}
+
+fn cmd_fig2(args: &Args) -> Result<()> {
+    let mut cfg = config_from(args)?;
+    if args.get("iters").is_none() {
+        cfg.iters = 6_000;
+        log::info!("fig2: using reduced iters={} (paper: 100000)", cfg.iters);
+    }
+    let lambdas: Vec<usize> = match args.get("lambdas") {
+        Some(s) => s
+            .split(',')
+            .map(|x| x.trim().parse().context("--lambdas"))
+            .collect::<Result<_>>()?,
+        None => fig2::LAMBDAS.to_vec(),
+    };
+    let results = fig2::run(&cfg, &lambdas)?;
+    fig2::report(&results, &out_dir(args))?;
+    Ok(())
+}
+
+fn cmd_fig3(args: &Args) -> Result<()> {
+    let mut cfg = config_from(args)?;
+    if args.get("iters").is_none() {
+        cfg.iters = 10_000;
+        log::info!("fig3: using reduced iters={} (paper: 100000)", cfg.iters);
+    }
+    let cs: Vec<f64> = match args.get("cs") {
+        Some(s) => s
+            .split(',')
+            .map(|x| x.trim().parse().context("--cs"))
+            .collect::<Result<_>>()?,
+        None => fig3::C_VALUES.to_vec(),
+    };
+    let results = fig3::run(&cfg, &cs)?;
+    fig3::report(&results, &out_dir(args))?;
+    Ok(())
+}
+
+fn cmd_sweep_lr(args: &Args) -> Result<()> {
+    let mut cfg = config_from(args)?;
+    if args.get("iters").is_none() {
+        cfg.iters = 3_000; // 16 rates x 4 panels x 2 algorithms is 128 runs
+    }
+    let results = lr_sweep::run(&cfg)?;
+    lr_sweep::report(&results);
+    Ok(())
+}
+
+fn cmd_live(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let rep = fasgd::live::run_live(&cfg)?;
+    println!(
+        "live: {} updates in {:.2}s = {:.0} updates/s, mean lock {:.1} us, final train loss {:.4}",
+        rep.server_updates,
+        rep.wall_secs,
+        rep.updates_per_sec,
+        rep.mean_lock_ns / 1e3,
+        rep.final_train_loss
+    );
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let engine = fasgd::experiments::common::shared_engine()?;
+    println!("platform: {}", engine.platform());
+    println!("artifacts ({:?}):", engine.registry().dir);
+    for name in engine.registry().names() {
+        let meta = engine.registry().get(name)?;
+        println!(
+            "  {:<36} kind={:<13} model={:<17} P={}",
+            meta.name, meta.kind, meta.model, meta.param_count
+        );
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "repro — Faster Asynchronous SGD (Odena 2016) reproduction\n\n\
+         usage: repro <train|fig1|fig2|fig3|sweep-lr|live|info> [--key value ...]\n\n\
+         common flags: --policy <sync|asgd|sasgd|exponential|fasgd>\n\
+         \x20                --lambda N --mu N --iters N --alpha F --seed N\n\
+         \x20                --config file.toml --out dir/\n\
+         see README.md for the full knob list"
+    );
+}

@@ -1,0 +1,117 @@
+//! Loss-curve recording.
+
+/// One validation evaluation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalPoint {
+    /// Client gradient computations so far (the paper's x-axis).
+    pub iter: u64,
+    /// Server timestamp T at evaluation time.
+    pub server_ts: u64,
+    /// Mean validation NLL ("validation cost" in the figures).
+    pub val_loss: f64,
+    /// Validation accuracy.
+    pub val_acc: f64,
+}
+
+/// The full per-run history: evaluations plus running train-loss EMA.
+#[derive(Debug, Clone, Default)]
+pub struct History {
+    pub evals: Vec<EvalPoint>,
+    /// (iter, smoothed train loss) sampled at eval cadence.
+    pub train_curve: Vec<(u64, f64)>,
+    ema: Option<f64>,
+}
+
+impl History {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a client's training loss (EMA-smoothed, factor 0.99).
+    pub fn record_train_loss(&mut self, loss: f64) {
+        self.ema = Some(match self.ema {
+            None => loss,
+            Some(e) => 0.99 * e + 0.01 * loss,
+        });
+    }
+
+    pub fn train_ema(&self) -> Option<f64> {
+        self.ema
+    }
+
+    pub fn record_eval(&mut self, point: EvalPoint) {
+        if let Some(e) = self.ema {
+            self.train_curve.push((point.iter, e));
+        }
+        self.evals.push(point);
+    }
+
+    pub fn final_val_loss(&self) -> f64 {
+        self.evals.last().map(|p| p.val_loss).unwrap_or(f64::NAN)
+    }
+
+    pub fn best_val_loss(&self) -> f64 {
+        self.evals
+            .iter()
+            .map(|p| p.val_loss)
+            .fold(f64::NAN, |a, b| if a.is_nan() || b < a { b } else { a })
+    }
+
+    /// First iteration at which validation loss reached `threshold`.
+    pub fn iters_to_reach(&self, threshold: f64) -> Option<u64> {
+        self.evals
+            .iter()
+            .find(|p| p.val_loss <= threshold)
+            .map(|p| p.iter)
+    }
+
+    /// Mean val loss over the last `k` evals (tail noise smoothing).
+    pub fn tail_mean(&self, k: usize) -> f64 {
+        if self.evals.is_empty() {
+            return f64::NAN;
+        }
+        let start = self.evals.len().saturating_sub(k.max(1));
+        let tail = &self.evals[start..];
+        tail.iter().map(|p| p.val_loss).sum::<f64>() / tail.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(iter: u64, loss: f64) -> EvalPoint {
+        EvalPoint { iter, server_ts: iter, val_loss: loss, val_acc: 0.5 }
+    }
+
+    #[test]
+    fn best_and_final() {
+        let mut h = History::new();
+        h.record_eval(pt(100, 2.0));
+        h.record_eval(pt(200, 1.0));
+        h.record_eval(pt(300, 1.5));
+        assert_eq!(h.final_val_loss(), 1.5);
+        assert_eq!(h.best_val_loss(), 1.0);
+        assert_eq!(h.iters_to_reach(1.2), Some(200));
+        assert_eq!(h.iters_to_reach(0.5), None);
+        assert!((h.tail_mean(2) - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ema_smooths() {
+        let mut h = History::new();
+        h.record_train_loss(1.0);
+        for _ in 0..100 {
+            h.record_train_loss(0.0);
+        }
+        let e = h.train_ema().unwrap();
+        assert!(e < 0.5 && e > 0.0);
+    }
+
+    #[test]
+    fn empty_history_nan() {
+        let h = History::new();
+        assert!(h.final_val_loss().is_nan());
+        assert!(h.tail_mean(3).is_nan());
+    }
+}

@@ -1,0 +1,9 @@
+//! Run metrics (S14): loss-curve history, staleness histogram, bandwidth
+//! accounting rollups, and CSV/JSON writers for the figure harnesses.
+
+pub mod history;
+pub mod summary;
+pub mod writer;
+
+pub use history::{EvalPoint, History};
+pub use summary::{RunSummary, StalenessHistogram};

@@ -1,0 +1,127 @@
+//! Per-run rollups: staleness histogram + the final summary record.
+
+use crate::bandwidth::accounting::BandwidthReport;
+use crate::metrics::History;
+use crate::util::json::{obj, Json};
+
+/// Histogram of step-staleness τ observed at apply time.
+#[derive(Debug, Clone, Default)]
+pub struct StalenessHistogram {
+    /// counts[τ] for τ < counts.len(); overflow bucket beyond.
+    counts: Vec<u64>,
+    overflow: u64,
+    total: u64,
+    sum: u128,
+    max: u64,
+}
+
+impl StalenessHistogram {
+    pub fn new(buckets: usize) -> Self {
+        Self { counts: vec![0; buckets], ..Default::default() }
+    }
+
+    pub fn record(&mut self, tau: u64) {
+        if (tau as usize) < self.counts.len() {
+            self.counts[tau as usize] += 1;
+        } else {
+            self.overflow += 1;
+        }
+        self.total += 1;
+        self.sum += tau as u128;
+        self.max = self.max.max(tau);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn count_at(&self, tau: usize) -> u64 {
+        self.counts.get(tau).copied().unwrap_or(0)
+    }
+
+    pub fn overflow(&self) -> u64 {
+        self.overflow
+    }
+}
+
+/// Everything a figure harness needs from one finished run.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub name: String,
+    pub policy: String,
+    pub clients: usize,
+    pub batch: usize,
+    pub iters: u64,
+    pub history: History,
+    pub staleness: StalenessHistogram,
+    pub bandwidth: BandwidthReport,
+    pub wall_secs: f64,
+    pub server_updates: u64,
+    /// B-Staleness probe log (empty unless the probe was enabled).
+    pub probes: crate::sim::probe::ProbeLog,
+}
+
+impl RunSummary {
+    pub fn final_val_loss(&self) -> f64 {
+        self.history.final_val_loss()
+    }
+
+    pub fn best_val_loss(&self) -> f64 {
+        self.history.best_val_loss()
+    }
+
+    /// JSON record (one row of a figure's results file).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", self.name.as_str().into()),
+            ("policy", self.policy.as_str().into()),
+            ("clients", self.clients.into()),
+            ("batch", self.batch.into()),
+            ("iters", self.iters.into()),
+            ("final_val_loss", self.final_val_loss().into()),
+            ("best_val_loss", self.best_val_loss().into()),
+            ("tail_val_loss", self.history.tail_mean(5).into()),
+            ("final_val_acc",
+             self.history.evals.last().map(|p| p.val_acc).unwrap_or(f64::NAN)
+                 .into()),
+            ("mean_staleness", self.staleness.mean().into()),
+            ("max_staleness", self.staleness.max().into()),
+            ("server_updates", self.server_updates.into()),
+            ("push_copies", self.bandwidth.push_copies.into()),
+            ("push_potential", self.bandwidth.push_potential.into()),
+            ("fetch_copies", self.bandwidth.fetch_copies.into()),
+            ("fetch_potential", self.bandwidth.fetch_potential.into()),
+            ("wall_secs", self.wall_secs.into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_basics() {
+        let mut h = StalenessHistogram::new(4);
+        for tau in [0, 1, 1, 2, 10] {
+            h.record(tau);
+        }
+        assert_eq!(h.total(), 5);
+        assert_eq!(h.count_at(1), 2);
+        assert_eq!(h.overflow(), 1);
+        assert_eq!(h.max(), 10);
+        assert!((h.mean() - 14.0 / 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,136 @@
+//! CSV / JSON output for figure harnesses.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::metrics::RunSummary;
+use crate::util::json::Json;
+
+/// Write loss curves of several runs as tidy CSV:
+/// `run,policy,iter,server_ts,val_loss,val_acc`.
+pub fn write_curves_csv(path: &Path, runs: &[RunSummary]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {path:?}"))?;
+    writeln!(f, "run,policy,iter,server_ts,val_loss,val_acc")?;
+    for run in runs {
+        for p in &run.history.evals {
+            writeln!(
+                f,
+                "{},{},{},{},{:.6},{:.4}",
+                run.name, run.policy, p.iter, p.server_ts, p.val_loss,
+                p.val_acc
+            )?;
+        }
+    }
+    Ok(())
+}
+
+/// Write per-run summary rows as a JSON array.
+pub fn write_summaries_json(path: &Path, runs: &[RunSummary]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let arr = Json::Arr(runs.iter().map(|r| r.to_json()).collect());
+    std::fs::write(path, arr.to_string_pretty())
+        .with_context(|| format!("writing {path:?}"))?;
+    Ok(())
+}
+
+/// Render an aligned text table (for terminal summaries).
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: Vec<String>, widths: &[usize]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    out.push_str(&fmt_row(
+        headers.iter().map(|s| s.to_string()).collect(),
+        &widths,
+    ));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row.clone(), &widths));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandwidth::accounting::BandwidthReport;
+    use crate::metrics::{EvalPoint, History, StalenessHistogram};
+
+    fn dummy_run(name: &str) -> RunSummary {
+        let mut h = History::new();
+        h.record_train_loss(1.0);
+        h.record_eval(EvalPoint {
+            iter: 10,
+            server_ts: 10,
+            val_loss: 0.7,
+            val_acc: 0.8,
+        });
+        RunSummary {
+            name: name.into(),
+            policy: "fasgd".into(),
+            clients: 4,
+            batch: 8,
+            iters: 10,
+            history: h,
+            staleness: StalenessHistogram::new(8),
+            bandwidth: BandwidthReport::default(),
+            wall_secs: 0.1,
+            server_updates: 10,
+            probes: Default::default(),
+        }
+    }
+
+    #[test]
+    fn csv_and_json_outputs() {
+        let dir = std::env::temp_dir().join("fasgd_writer_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let runs = vec![dummy_run("a"), dummy_run("b")];
+        let csv = dir.join("curves.csv");
+        write_curves_csv(&csv, &runs).unwrap();
+        let text = std::fs::read_to_string(&csv).unwrap();
+        assert!(text.starts_with("run,policy,iter"));
+        assert_eq!(text.lines().count(), 3);
+
+        let js = dir.join("summary.json");
+        write_summaries_json(&js, &runs).unwrap();
+        let parsed =
+            Json::parse(&std::fs::read_to_string(&js).unwrap()).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn table_alignment() {
+        let t = render_table(
+            &["a", "bb"],
+            &[vec!["1".into(), "2".into()],
+              vec!["10".into(), "200".into()]],
+        );
+        assert!(t.contains("bb"));
+        assert!(t.lines().count() >= 4);
+    }
+}

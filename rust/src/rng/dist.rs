@@ -1,0 +1,149 @@
+//! Distributions over [`Xoshiro256pp`]: Normal (Box–Muller) and Categorical
+//! (alias-free linear scan / cumulative search — client counts are the only
+//! consumer and λ ≤ ~10⁴ keeps the scan cheap and branch-predictable).
+
+use super::Xoshiro256pp;
+
+/// Gaussian sampler (Box–Muller with caching of the second variate).
+#[derive(Debug, Clone)]
+pub struct Normal {
+    mean: f64,
+    std: f64,
+    cached: Option<f64>,
+}
+
+impl Normal {
+    pub fn new(mean: f64, std: f64) -> Self {
+        assert!(std >= 0.0);
+        Self { mean, std, cached: None }
+    }
+
+    pub fn sample(&mut self, rng: &mut Xoshiro256pp) -> f64 {
+        let z = if let Some(z) = self.cached.take() {
+            z
+        } else {
+            // Box–Muller; u1 in (0,1] to avoid ln(0).
+            let u1 = 1.0 - rng.f64();
+            let u2 = rng.f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            self.cached = Some(r * s);
+            r * c
+        };
+        self.mean + self.std * z
+    }
+}
+
+/// Categorical distribution with O(n) sampling and O(1) weight updates —
+/// the dispatcher mutates weights (cooldown selection rule) every step.
+#[derive(Debug, Clone)]
+pub struct Categorical {
+    weights: Vec<f64>,
+    total: f64,
+}
+
+impl Categorical {
+    pub fn new(weights: Vec<f64>) -> Self {
+        assert!(!weights.is_empty());
+        assert!(weights.iter().all(|w| *w >= 0.0 && w.is_finite()));
+        let total = weights.iter().sum();
+        Self { weights, total }
+    }
+
+    pub fn uniform(n: usize) -> Self {
+        Self::new(vec![1.0; n])
+    }
+
+    pub fn len(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.weights.is_empty()
+    }
+
+    pub fn weight(&self, i: usize) -> f64 {
+        self.weights[i]
+    }
+
+    pub fn set_weight(&mut self, i: usize, w: f64) {
+        assert!(w >= 0.0 && w.is_finite());
+        self.total += w - self.weights[i];
+        self.weights[i] = w;
+    }
+
+    /// Multiply a weight (the cooldown rule's primitive).
+    pub fn scale_weight(&mut self, i: usize, factor: f64) {
+        self.set_weight(i, self.weights[i] * factor);
+    }
+
+    pub fn sample(&self, rng: &mut Xoshiro256pp) -> usize {
+        assert!(self.total > 0.0, "all-zero categorical");
+        let mut u = rng.f64() * self.total;
+        for (i, w) in self.weights.iter().enumerate() {
+            u -= w;
+            if u < 0.0 {
+                return i;
+            }
+        }
+        // Float slop: return the last nonzero weight.
+        self.weights
+            .iter()
+            .rposition(|w| *w > 0.0)
+            .expect("nonzero total implies a nonzero weight")
+    }
+
+    /// Recompute the cached total (guards against drift after many updates).
+    pub fn renormalize(&mut self) {
+        self.total = self.weights.iter().sum();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Xoshiro256pp::new(0);
+        let mut n = Normal::new(2.0, 3.0);
+        let samples: Vec<f64> = (0..200_000).map(|_| n.sample(&mut rng)).collect();
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / samples.len() as f64;
+        assert!((mean - 2.0).abs() < 0.05, "mean {mean}");
+        assert!((var - 9.0).abs() < 0.2, "var {var}");
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut rng = Xoshiro256pp::new(1);
+        let c = Categorical::new(vec![1.0, 0.0, 3.0]);
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[c.sample(&mut rng)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "{ratio}");
+    }
+
+    #[test]
+    fn categorical_update_and_renormalize() {
+        let mut c = Categorical::new(vec![1.0, 1.0]);
+        c.scale_weight(0, 0.5);
+        assert!((c.weight(0) - 0.5).abs() < 1e-12);
+        c.set_weight(1, 0.0);
+        c.renormalize();
+        let mut rng = Xoshiro256pp::new(2);
+        for _ in 0..100 {
+            assert_eq!(c.sample(&mut rng), 0);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn categorical_rejects_negative() {
+        Categorical::new(vec![1.0, -1.0]);
+    }
+}

@@ -1,0 +1,271 @@
+//! Artifact registry: parse `manifest.json` + `*.meta.json` sidecars.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One tensor in a graph signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// `"f32"` or `"s32"`.
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            name: j.req("name")?.as_str().context("name")?.to_string(),
+            shape: j
+                .req("shape")?
+                .as_arr()
+                .context("shape")?
+                .iter()
+                .map(|v| v.as_usize().context("dim"))
+                .collect::<Result<_>>()?,
+            dtype: j.req("dtype")?.as_str().context("dtype")?.to_string(),
+        })
+    }
+}
+
+/// Parsed `*.meta.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// `grad` | `eval` | `fasgd_update` | `init`.
+    pub kind: String,
+    pub model: String,
+    pub param_count: usize,
+    pub batch: Option<usize>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// File name of the HLO text (graphs) or the f32 bin (init).
+    pub file: String,
+    /// FASGD variant for update artifacts (`std`/`inverse`).
+    pub variant: Option<String>,
+    /// Transformer config, when present.
+    pub seq_len: Option<usize>,
+    pub vocab: Option<usize>,
+}
+
+impl ArtifactMeta {
+    fn from_json(j: &Json) -> Result<Self> {
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            match j.get(key) {
+                None => Ok(vec![]),
+                Some(arr) => arr
+                    .as_arr()
+                    .context(key.to_string())?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect(),
+            }
+        };
+        let file = j
+            .get("hlo")
+            .or_else(|| j.get("bin"))
+            .and_then(Json::as_str)
+            .context("artifact missing hlo/bin file name")?
+            .to_string();
+        let cfg = j.get("config");
+        Ok(Self {
+            name: j.req("name")?.as_str().context("name")?.to_string(),
+            kind: j.req("kind")?.as_str().context("kind")?.to_string(),
+            model: j.req("model")?.as_str().context("model")?.to_string(),
+            param_count: j
+                .req("param_count")?
+                .as_usize()
+                .context("param_count")?,
+            batch: j.get("batch").and_then(Json::as_usize),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+            file,
+            variant: j
+                .get("variant")
+                .and_then(Json::as_str)
+                .map(str::to_string),
+            seq_len: cfg.and_then(|c| c.get("seq_len")).and_then(Json::as_usize),
+            vocab: cfg.and_then(|c| c.get("vocab")).and_then(Json::as_usize),
+        })
+    }
+}
+
+/// Index over an artifacts directory.
+#[derive(Debug)]
+pub struct Registry {
+    pub dir: PathBuf,
+    by_name: HashMap<String, ArtifactMeta>,
+}
+
+impl Registry {
+    /// Open a directory produced by `make artifacts`.
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!("{manifest_path:?} — run `make artifacts` first")
+        })?;
+        let manifest = Json::parse(&text)?;
+        let mut by_name = HashMap::new();
+        for entry in manifest.req("artifacts")?.as_arr().context("artifacts")? {
+            let meta = ArtifactMeta::from_json(entry)
+                .with_context(|| format!("parsing manifest entry"))?;
+            by_name.insert(meta.name.clone(), meta);
+        }
+        Ok(Self { dir: dir.to_path_buf(), by_name })
+    }
+
+    /// Open the default location (`$FASGD_ARTIFACTS` or `./artifacts`).
+    pub fn open_default() -> Result<Self> {
+        Self::open(&crate::util::artifacts_dir())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.by_name.get(name).with_context(|| {
+            format!(
+                "artifact {name:?} not in manifest (have: {:?})",
+                self.names()
+            )
+        })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> =
+            self.by_name.keys().map(String::as_str).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Find by structured key, e.g. the grad graph for (model, batch).
+    pub fn find_grad(&self, model: &str, batch: usize) -> Result<&ArtifactMeta> {
+        self.find(|m| {
+            m.kind == "grad" && m.model == model && m.batch == Some(batch)
+        })
+        .with_context(|| format!("no grad artifact for {model} mu={batch}"))
+    }
+
+    pub fn find_eval(&self, model: &str) -> Result<&ArtifactMeta> {
+        self.find(|m| m.kind == "eval" && m.model == model)
+            .with_context(|| format!("no eval artifact for {model}"))
+    }
+
+    pub fn find_init(&self, model: &str) -> Result<&ArtifactMeta> {
+        self.find(|m| m.kind == "init" && m.model == model)
+            .with_context(|| format!("no init artifact for {model}"))
+    }
+
+    pub fn find_fasgd_update(
+        &self,
+        param_count: usize,
+        variant: &str,
+    ) -> Result<&ArtifactMeta> {
+        self.find(|m| {
+            m.kind == "fasgd_update"
+                && m.param_count == param_count
+                && m.variant.as_deref() == Some(variant)
+        })
+        .with_context(|| {
+            format!("no fasgd_update artifact for P={param_count} {variant}")
+        })
+    }
+
+    fn find(&self, pred: impl Fn(&ArtifactMeta) -> bool) -> Option<&ArtifactMeta> {
+        let mut hits: Vec<&ArtifactMeta> =
+            self.by_name.values().filter(|m| pred(m)).collect();
+        hits.sort_by(|a, b| a.name.cmp(&b.name));
+        hits.into_iter().next()
+    }
+
+    pub fn path_of(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    /// Load an `init` artifact's f32 vector.
+    pub fn load_init(&self, model: &str) -> Result<Vec<f32>> {
+        let meta = self.find_init(model)?;
+        let bytes = std::fs::read(self.path_of(meta))?;
+        if bytes.len() != meta.param_count * 4 {
+            bail!(
+                "{}: expected {} f32, got {} bytes",
+                meta.name,
+                meta.param_count,
+                bytes.len()
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        let manifest = r#"{"artifacts": [
+          {"name": "mlp_grad_mu8", "kind": "grad", "model": "mlp",
+           "param_count": 10, "batch": 8, "hlo": "mlp_grad_mu8.hlo.txt",
+           "inputs": [{"name": "theta", "shape": [10], "dtype": "f32"}],
+           "outputs": [{"name": "loss", "shape": [], "dtype": "f32"}]},
+          {"name": "mlp_init", "kind": "init", "model": "mlp",
+           "param_count": 3, "bin": "mlp_init.bin"},
+          {"name": "fasgd_update_p10_std", "kind": "fasgd_update",
+           "model": "mlp", "param_count": 10, "variant": "std",
+           "hlo": "f.hlo.txt"}
+        ]}"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let floats: Vec<u8> = [1f32, 2.0, 3.0]
+            .iter()
+            .flat_map(|f| f.to_le_bytes())
+            .collect();
+        std::fs::write(dir.join("mlp_init.bin"), floats).unwrap();
+    }
+
+    #[test]
+    fn registry_lookup_and_init() {
+        let dir = std::env::temp_dir().join("fasgd_registry_test");
+        write_fixture(&dir);
+        let reg = Registry::open(&dir).unwrap();
+        let g = reg.find_grad("mlp", 8).unwrap();
+        assert_eq!(g.inputs[0].name, "theta");
+        assert_eq!(g.inputs[0].elements(), 10);
+        assert!(reg.find_grad("mlp", 99).is_err());
+        let init = reg.load_init("mlp").unwrap();
+        assert_eq!(init, vec![1.0, 2.0, 3.0]);
+        let up = reg.find_fasgd_update(10, "std").unwrap();
+        assert_eq!(up.variant.as_deref(), Some("std"));
+        assert!(reg.find_fasgd_update(10, "inverse").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_actionable() {
+        let err = Registry::open(Path::new("/nonexistent-dir-xyz"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn real_artifacts_parse_if_present() {
+        let dir = crate::util::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this checkout
+        }
+        let reg = Registry::open(&dir).unwrap();
+        let g = reg.find_grad("mlp", 8).unwrap();
+        assert_eq!(g.param_count, 159010);
+        let init = reg.load_init("mlp").unwrap();
+        assert_eq!(init.len(), 159010);
+    }
+}

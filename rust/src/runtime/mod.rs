@@ -1,0 +1,13 @@
+//! PJRT runtime (S6): load AOT artifacts, compile once, execute many.
+//!
+//! The request-path contract (DESIGN.md §3): `artifacts/*.hlo.txt` (HLO
+//! *text* — see aot.py for why not serialized protos) plus `*.meta.json`
+//! sidecars describing the exact I/O signature. [`artifacts::Registry`]
+//! indexes the directory; [`pjrt::Engine`] compiles and runs graphs with
+//! flat-buffer marshalling.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactMeta, Registry, TensorSpec};
+pub use pjrt::{Arg, Engine, LoadedGraph};

@@ -1,0 +1,262 @@
+//! PJRT engine: compile HLO-text artifacts once, execute from the hot path.
+//!
+//! Wraps the published `xla` crate (xla_extension 0.5.1, CPU PJRT). One
+//! process-wide CPU client is shared by every graph; compiled executables
+//! are cached per artifact name.
+//!
+//! Thread-safety: the PJRT C API is thread-safe for compilation and
+//! execution (XLA's CPU client serializes internally where needed), but the
+//! `xla` crate's wrappers are raw pointers without `Send`/`Sync` markers.
+//! [`Engine`] is therefore used from one thread at a time in the simulator;
+//! the threaded live mode gives each worker its own input staging and routes
+//! execution through a mutex (see `live/`).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::artifacts::{ArtifactMeta, Registry, TensorSpec};
+
+/// A host-side tensor argument for graph execution.
+#[derive(Debug, Clone, Copy)]
+pub enum Arg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl<'a> Arg<'a> {
+    fn len(&self) -> usize {
+        match self {
+            Arg::F32(s) => s.len(),
+            Arg::I32(s) => s.len(),
+        }
+    }
+
+    fn dtype(&self) -> &'static str {
+        match self {
+            Arg::F32(_) => "f32",
+            Arg::I32(_) => "s32",
+        }
+    }
+}
+
+/// A compiled graph plus its validated signature.
+pub struct LoadedGraph {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedGraph {
+    /// Execute with host slices; returns the flattened f32 outputs in
+    /// signature order (all exported graphs return f32 tensors).
+    ///
+    /// Inputs go through `buffer_from_host_buffer` + `execute_b` — one
+    /// host→device copy per argument instead of the literal-construct +
+    /// reshape + transfer chain (measured ~35% off the per-dispatch fixed
+    /// cost; EXPERIMENTS.md §Perf).
+    pub fn run(&self, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
+        self.check_args(args)?;
+        let client = self.exe.client();
+        let bufs: Vec<xla::PjRtBuffer> = args
+            .iter()
+            .zip(&self.meta.inputs)
+            .map(|(a, spec)| -> Result<xla::PjRtBuffer> {
+                let buf = match a {
+                    Arg::F32(s) => {
+                        client.buffer_from_host_buffer(s, &spec.shape, None)
+                    }
+                    Arg::I32(s) => {
+                        client.buffer_from_host_buffer(s, &spec.shape, None)
+                    }
+                }?;
+                Ok(buf)
+            })
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute_b(&bufs)?;
+        let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
+        if tuple.len() != self.meta.outputs.len() {
+            bail!(
+                "{}: graph returned {} outputs, meta says {}",
+                self.meta.name,
+                tuple.len(),
+                self.meta.outputs.len()
+            );
+        }
+        tuple
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+
+    fn check_args(&self, args: &[Arg<'_>]) -> Result<()> {
+        if args.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: got {} args, signature has {}",
+                self.meta.name,
+                args.len(),
+                self.meta.inputs.len()
+            );
+        }
+        for (a, spec) in args.iter().zip(&self.meta.inputs) {
+            if a.len() != spec.elements() {
+                bail!(
+                    "{}: input {} has {} elements, expected {} {:?}",
+                    self.meta.name,
+                    spec.name,
+                    a.len(),
+                    spec.elements(),
+                    spec.shape
+                );
+            }
+            if a.dtype() != spec.dtype {
+                bail!(
+                    "{}: input {} is {}, expected {}",
+                    self.meta.name,
+                    spec.name,
+                    a.dtype(),
+                    spec.dtype
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Process-wide PJRT engine with an executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    registry: Registry,
+    cache: Mutex<HashMap<String, std::sync::Arc<LoadedGraph>>>,
+}
+
+// The cache map itself is Mutex-guarded; LoadedGraph is only handed out as
+// Arc and executed behind the caller's threading discipline (module docs).
+impl Engine {
+    /// Open the default artifacts directory and a CPU PJRT client.
+    pub fn open_default() -> Result<Self> {
+        Self::open(&crate::util::artifacts_dir())
+    }
+
+    pub fn open(dir: &Path) -> Result<Self> {
+        // Before client creation: the CPU client's pool threads inherit this
+        // thread's MXCSR, so denormal flushing propagates into XLA execution.
+        crate::util::enable_ftz();
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let registry = Registry::open(dir)?;
+        Ok(Self { client, registry, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Compile (or fetch cached) a graph artifact by name.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<LoadedGraph>> {
+        if let Some(g) = self.cache.lock().unwrap().get(name) {
+            return Ok(g.clone());
+        }
+        let meta = self.registry.get(name)?.clone();
+        let path = self.registry.path_of(&meta);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let graph = std::sync::Arc::new(LoadedGraph { meta, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), graph.clone());
+        Ok(graph)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<Engine> {
+        let dir = crate::util::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return None; // artifacts not built; skip
+        }
+        Some(Engine::open(&dir).expect("engine"))
+    }
+
+    #[test]
+    fn loads_and_runs_fasgd_update() {
+        let Some(eng) = engine() else { return };
+        let name = "fasgd_update_p159010_std";
+        let g = eng.load(name).unwrap();
+        let p = g.meta.param_count;
+        let theta = vec![1.0f32; p];
+        let zeros = vec![0.0f32; p];
+        let grad = vec![0.5f32; p];
+        let aot = [0.1f32];
+        let out = g
+            .run(&[
+                Arg::F32(&theta),
+                Arg::F32(&zeros),
+                Arg::F32(&zeros),
+                Arg::F32(&zeros),
+                Arg::F32(&grad),
+                Arg::F32(&aot),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[0].len(), p);
+        // Cross-check one element against the rust fused loop.
+        let hp = crate::tensor::FasgdHparams::default();
+        let mut t2 = theta.clone();
+        let mut n2 = zeros.clone();
+        let mut b2 = zeros.clone();
+        let mut v2 = zeros.clone();
+        crate::tensor::fasgd_update_fused(
+            &mut t2, &mut n2, &mut b2, &mut v2, &grad, 0.1, &hp,
+        );
+        assert!(
+            crate::tensor::allclose(&out[0], &t2, 1e-4, 1e-5),
+            "theta mismatch: xla={} rust={}",
+            out[0][0],
+            t2[0]
+        );
+        assert!(crate::tensor::allclose(&out[3], &v2, 1e-4, 1e-5));
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let Some(eng) = engine() else { return };
+        let a = eng.load("mlp_eval_b512").unwrap();
+        let b = eng.load("mlp_eval_b512").unwrap();
+        assert!(std::sync::Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn arg_validation_errors() {
+        let Some(eng) = engine() else { return };
+        let g = eng.load("mlp_grad_mu8").unwrap();
+        // wrong arity
+        assert!(g.run(&[]).is_err());
+        // wrong length
+        let theta = vec![0.0f32; 3];
+        let x = vec![0.0f32; 8 * 784];
+        let y = vec![0i32; 8];
+        assert!(g
+            .run(&[Arg::F32(&theta), Arg::F32(&x), Arg::I32(&y)])
+            .is_err());
+        // wrong dtype for y
+        let theta = vec![0.0f32; g.meta.param_count];
+        let yf = vec![0.0f32; 8];
+        assert!(g
+            .run(&[Arg::F32(&theta), Arg::F32(&x), Arg::F32(&yf)])
+            .is_err());
+    }
+}

@@ -1,0 +1,64 @@
+//! Plain asynchronous SGD (paper §2.1 "Async SGD Protocol").
+
+use anyhow::Result;
+
+use crate::server::{Server, UpdateOutcome};
+use crate::tensor::axpy;
+
+/// `θ ← θ − α·g` on every incoming gradient, staleness ignored.
+pub struct Asgd {
+    params: Vec<f32>,
+    alpha: f32,
+    ts: u64,
+}
+
+impl Asgd {
+    pub fn new(params: Vec<f32>, alpha: f32) -> Self {
+        Self { params, alpha, ts: 0 }
+    }
+}
+
+impl Server for Asgd {
+    fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    fn timestamp(&self) -> u64 {
+        self.ts
+    }
+
+    fn apply_update(
+        &mut self,
+        grad: &[f32],
+        grad_timestamp: u64,
+        _client: usize,
+    ) -> Result<UpdateOutcome> {
+        let tau = super::staleness(self.ts, grad_timestamp);
+        axpy(&mut self.params, -self.alpha, grad);
+        self.ts += 1;
+        Ok(UpdateOutcome { applied: true, staleness: Some(tau), unblock_all: false })
+    }
+
+    fn name(&self) -> &'static str {
+        "asgd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn applies_every_gradient() {
+        let mut s = Asgd::new(vec![1.0, 1.0], 0.5);
+        let out = s.apply_update(&[1.0, -1.0], 0, 0).unwrap();
+        assert!(out.applied);
+        assert_eq!(out.staleness, Some(0));
+        assert_eq!(s.params(), &[0.5, 1.5]);
+        assert_eq!(s.timestamp(), 1);
+        // stale gradient: same step size (ASGD ignores τ)
+        let out = s.apply_update(&[1.0, 0.0], 0, 3).unwrap();
+        assert_eq!(out.staleness, Some(1));
+        assert_eq!(s.params(), &[0.0, 1.5]);
+    }
+}

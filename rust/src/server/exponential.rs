@@ -1,0 +1,76 @@
+//! Exponential staleness penalty (Chan & Lane 2014).
+//!
+//! The paper cites this as the pre-SASGD approach and argues it "will
+//! reduce the learning rate too far when staleness values are large" —
+//! implemented here so that claim is reproducible (benches/ablate.rs).
+
+use anyhow::Result;
+
+use crate::server::{Server, UpdateOutcome};
+use crate::tensor::axpy;
+
+/// `θ ← θ − α·exp(−ρτ)·g`.
+pub struct ExponentialPenalty {
+    params: Vec<f32>,
+    alpha: f32,
+    rho: f32,
+    ts: u64,
+}
+
+impl ExponentialPenalty {
+    pub fn new(params: Vec<f32>, alpha: f32, rho: f32) -> Self {
+        Self { params, alpha, rho, ts: 0 }
+    }
+}
+
+impl Server for ExponentialPenalty {
+    fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    fn timestamp(&self) -> u64 {
+        self.ts
+    }
+
+    fn apply_update(
+        &mut self,
+        grad: &[f32],
+        grad_timestamp: u64,
+        _client: usize,
+    ) -> Result<UpdateOutcome> {
+        let tau = super::staleness(self.ts, grad_timestamp);
+        let lr = self.alpha * (-self.rho * tau as f32).exp();
+        axpy(&mut self.params, -lr, grad);
+        self.ts += 1;
+        Ok(UpdateOutcome { applied: true, staleness: Some(tau), unblock_all: false })
+    }
+
+    fn name(&self) -> &'static str {
+        "exponential"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn penalty_decays_exponentially() {
+        let mut s = ExponentialPenalty::new(vec![0.0], 1.0, 0.5);
+        s.apply_update(&[1.0], 0, 0).unwrap(); // τ=0: full step
+        assert!((s.params()[0] + 1.0).abs() < 1e-6);
+        let mut s = ExponentialPenalty::new(vec![0.0], 1.0, 0.5);
+        s.ts = 10;
+        s.apply_update(&[1.0], 0, 0).unwrap(); // τ=10: e^-5
+        assert!((s.params()[0] + (-5.0f32).exp()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn vanishes_for_huge_staleness() {
+        // The paper's criticism: large τ ⇒ negligible learning.
+        let mut s = ExponentialPenalty::new(vec![0.0], 1.0, 0.5);
+        s.ts = 1000;
+        s.apply_update(&[1.0], 0, 0).unwrap();
+        assert!(s.params()[0].abs() < 1e-10);
+    }
+}

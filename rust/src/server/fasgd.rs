@@ -1,0 +1,266 @@
+//! FASGD — the paper's contribution (eqs. 4–8).
+//!
+//! Maintains per-parameter moving averages `n` (second moment), `b` (first
+//! moment) and `v` (std track), and modulates the per-parameter learning
+//! rate by both `v` and the step-staleness τ:
+//!
+//! `θ ← θ − α / (max(v,floor) · max(τ,1)) ⊙ g`
+//!
+//! The update runs through an [`UpdateBackend`]: the fused native loop
+//! ([`crate::tensor::fasgd_update_fused`], `Send`, the default) or the AOT
+//! Pallas artifact via PJRT ([`crate::grad::XlaUpdateEngine`], thread-bound
+//! like all PJRT wrappers). Both are cross-validated in rust/tests; see
+//! EXPERIMENTS.md §Perf for the engine comparison.
+
+use anyhow::Result;
+
+use crate::grad::XlaUpdateEngine;
+use crate::server::{Server, UpdateOutcome};
+use crate::tensor::{fasgd_update_fused, FasgdHparams};
+
+/// Which implementation applies eqs. 4–8 (the configuration carrier).
+pub enum UpdateEngine {
+    Rust,
+    Xla(XlaUpdateEngine),
+}
+
+/// The actual update implementation a [`FasgdServer`] is instantiated with.
+pub trait UpdateBackend {
+    fn apply(
+        &self,
+        theta: &mut [f32],
+        n: &mut [f32],
+        b: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        alpha_over_tau: f32,
+        hp: &FasgdHparams,
+    ) -> Result<f64>;
+}
+
+/// Fused native loop — `Send`, used by live mode and as the default.
+pub struct RustBackend;
+
+impl UpdateBackend for RustBackend {
+    fn apply(
+        &self,
+        theta: &mut [f32],
+        n: &mut [f32],
+        b: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        alpha_over_tau: f32,
+        hp: &FasgdHparams,
+    ) -> Result<f64> {
+        Ok(fasgd_update_fused(theta, n, b, v, g, alpha_over_tau, hp))
+    }
+}
+
+/// The AOT Pallas kernel through PJRT.
+pub struct XlaBackend(pub XlaUpdateEngine);
+
+impl UpdateBackend for XlaBackend {
+    fn apply(
+        &self,
+        theta: &mut [f32],
+        n: &mut [f32],
+        b: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        alpha_over_tau: f32,
+        _hp: &FasgdHparams,
+    ) -> Result<f64> {
+        // hparams are baked into the artifact at AOT time (aot.py).
+        self.0.apply(theta, n, b, v, g, alpha_over_tau)
+    }
+}
+
+/// The FASGD parameter server, generic over the update backend.
+pub struct FasgdServer<U: UpdateBackend> {
+    params: Vec<f32>,
+    n: Vec<f32>,
+    b: Vec<f32>,
+    v: Vec<f32>,
+    alpha: f32,
+    hp: FasgdHparams,
+    ts: u64,
+    /// `None` until the first update: the B-FASGD gate must transmit while
+    /// no statistics exist, else a gated cluster deadlocks (v=0 reads as
+    /// "converged, drop everything" and no update can ever establish v).
+    v_mean: Option<f64>,
+    backend: U,
+}
+
+/// The common (rust-backend) instantiation.
+pub type Fasgd = FasgdServer<RustBackend>;
+
+impl Fasgd {
+    pub fn new_rust(params: Vec<f32>, alpha: f32, hp: FasgdHparams) -> Self {
+        FasgdServer::with_backend(params, alpha, hp, RustBackend)
+    }
+
+    /// Build the configured variant as a boxed trait object.
+    pub fn new(
+        params: Vec<f32>,
+        alpha: f32,
+        hp: FasgdHparams,
+        engine: UpdateEngine,
+    ) -> Box<dyn Server> {
+        match engine {
+            UpdateEngine::Rust => {
+                Box::new(FasgdServer::with_backend(params, alpha, hp, RustBackend))
+            }
+            UpdateEngine::Xla(x) => Box::new(FasgdServer::with_backend(
+                params,
+                alpha,
+                hp,
+                XlaBackend(x),
+            )),
+        }
+    }
+}
+
+impl<U: UpdateBackend> FasgdServer<U> {
+    pub fn with_backend(
+        params: Vec<f32>,
+        alpha: f32,
+        hp: FasgdHparams,
+        backend: U,
+    ) -> Self {
+        let p = params.len();
+        Self {
+            params,
+            n: vec![0.0; p],
+            b: vec![0.0; p],
+            v: vec![0.0; p],
+            alpha,
+            hp,
+            ts: 0,
+            v_mean: None,
+            backend,
+        }
+    }
+
+    pub fn hparams(&self) -> &FasgdHparams {
+        &self.hp
+    }
+
+    /// The `v` track (exposed for tests / per-tensor extensions).
+    pub fn v(&self) -> &[f32] {
+        &self.v
+    }
+}
+
+impl<U: UpdateBackend> Server for FasgdServer<U> {
+    fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    fn timestamp(&self) -> u64 {
+        self.ts
+    }
+
+    fn apply_update(
+        &mut self,
+        grad: &[f32],
+        grad_timestamp: u64,
+        _client: usize,
+    ) -> Result<UpdateOutcome> {
+        let tau = super::staleness(self.ts, grad_timestamp);
+        let aot =
+            self.alpha / super::staleness_divisor(self.ts, grad_timestamp);
+        self.v_mean = Some(self.backend.apply(
+            &mut self.params,
+            &mut self.n,
+            &mut self.b,
+            &mut self.v,
+            grad,
+            aot,
+            &self.hp,
+        )?);
+        self.ts += 1;
+        Ok(UpdateOutcome {
+            applied: true,
+            staleness: Some(tau),
+            unblock_all: false,
+        })
+    }
+
+    fn v_mean(&self) -> Option<f64> {
+        self.v_mean
+    }
+
+    fn name(&self) -> &'static str {
+        "fasgd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn server(p: usize) -> Fasgd {
+        Fasgd::new_rust(vec![0.0; p], 0.1, FasgdHparams::default())
+    }
+
+    #[test]
+    fn update_moves_against_gradient_and_tracks_v() {
+        let mut s = server(8);
+        let g = vec![1.0f32; 8];
+        let out = s.apply_update(&g, 0, 0).unwrap();
+        assert!(out.applied);
+        assert!(s.params().iter().all(|&t| t < 0.0));
+        assert!(s.v_mean().unwrap() > 0.0);
+        assert_eq!(s.timestamp(), 1);
+    }
+
+    #[test]
+    fn staleness_shrinks_step() {
+        let mut fresh = server(4);
+        let mut stale = server(4);
+        stale.ts = 10;
+        let g = vec![1.0f32; 4];
+        fresh.apply_update(&g, 0, 0).unwrap(); // τ=0
+        stale.apply_update(&g, 0, 0).unwrap(); // τ=10
+        let ratio = fresh.params()[0].abs() / stale.params()[0].abs();
+        assert!((ratio - 10.0).abs() < 1e-3, "{ratio}");
+    }
+
+    #[test]
+    fn noisy_gradients_raise_v() {
+        // Alternating-sign gradients (cancellation) must drive v higher
+        // than a constant gradient of the same magnitude — the paper's
+        // §2.2 intuition for why dividing by v handles cancellation.
+        let mut steady = server(1);
+        let mut noisy = server(1);
+        for i in 0..200 {
+            let ts = steady.timestamp();
+            steady.apply_update(&[1.0], ts, 0).unwrap();
+            let ts = noisy.timestamp();
+            let g = if i % 2 == 0 { 1.0 } else { -1.0 };
+            noisy.apply_update(&[g], ts, 0).unwrap();
+        }
+        assert!(
+            noisy.v()[0] > steady.v()[0] * 5.0,
+            "noisy v {} steady v {}",
+            noisy.v()[0],
+            steady.v()[0]
+        );
+    }
+
+    #[test]
+    fn v_mean_matches_direct_mean() {
+        let mut s = server(16);
+        let g: Vec<f32> = (0..16).map(|i| (i as f32).sin()).collect();
+        s.apply_update(&g, 0, 0).unwrap();
+        let direct = crate::tensor::mean(s.v());
+        // v_mean accumulates per-chunk in f32: f32-level agreement.
+        assert!((s.v_mean().unwrap() - direct).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rust_backend_server_is_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<Fasgd>();
+    }
+}

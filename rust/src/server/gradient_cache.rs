@@ -1,0 +1,79 @@
+//! Server-side gradient cache (S5) for B-FASGD push drops.
+//!
+//! The paper §2.3: when a client's push is dropped, the server "re-applies
+//! the most recent gradient from that client", which "necessitates
+//! maintaining a gradient cache on the server, which could be prohibitive
+//! for large values of λ or large models". The cache tracks its own memory
+//! footprint so that cost is measurable (reported per run).
+
+/// Most-recent gradient (+ its parameter timestamp) per client.
+pub struct GradientCache {
+    slots: Vec<Option<(Vec<f32>, u64)>>,
+    bytes: usize,
+}
+
+impl GradientCache {
+    pub fn new(lambda: usize) -> Self {
+        Self { slots: (0..lambda).map(|_| None).collect(), bytes: 0 }
+    }
+
+    /// Store client `c`'s latest transmitted gradient.
+    pub fn store(&mut self, c: usize, grad: &[f32], grad_ts: u64) {
+        match &mut self.slots[c] {
+            Some((buf, ts)) => {
+                debug_assert_eq!(buf.len(), grad.len());
+                buf.copy_from_slice(grad);
+                *ts = grad_ts;
+            }
+            slot @ None => {
+                self.bytes += grad.len() * std::mem::size_of::<f32>();
+                *slot = Some((grad.to_vec(), grad_ts));
+            }
+        }
+    }
+
+    /// The most recent gradient from client `c`, if any.
+    pub fn get(&self, c: usize) -> Option<(&[f32], u64)> {
+        self.slots[c].as_ref().map(|(g, ts)| (g.as_slice(), *ts))
+    }
+
+    /// Resident bytes (the paper's "prohibitive for large λ" cost).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn populated(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_get_overwrite() {
+        let mut c = GradientCache::new(2);
+        assert!(c.get(0).is_none());
+        c.store(0, &[1.0, 2.0], 5);
+        let (g, ts) = c.get(0).unwrap();
+        assert_eq!(g, &[1.0, 2.0]);
+        assert_eq!(ts, 5);
+        c.store(0, &[3.0, 4.0], 9);
+        let (g, ts) = c.get(0).unwrap();
+        assert_eq!(g, &[3.0, 4.0]);
+        assert_eq!(ts, 9);
+        assert_eq!(c.populated(), 1);
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let mut c = GradientCache::new(3);
+        c.store(0, &[0.0; 100], 0);
+        assert_eq!(c.bytes(), 400);
+        c.store(0, &[1.0; 100], 1); // overwrite: no growth
+        assert_eq!(c.bytes(), 400);
+        c.store(2, &[0.0; 100], 0);
+        assert_eq!(c.bytes(), 800);
+    }
+}

@@ -1,0 +1,129 @@
+//! Parameter-server policies (S2/S3) — the paper's algorithmic core.
+//!
+//! Every policy implements [`Server`], whose `apply_update` mirrors the
+//! FRED `Server.apply_update(grads, timestamp, client)` interface from the
+//! paper §3. The server owns the canonical flat parameter vector and the
+//! scalar timestamp `T` (incremented once per weight update, paper §2.1).
+//!
+//! Policies:
+//! * [`sync::SyncSgd`] — barrier over all λ clients, mean gradient.
+//! * [`asgd::Asgd`] — plain async SGD.
+//! * [`sasgd::Sasgd`] — Zhang et al. 2015: divide α by step-staleness τ.
+//! * [`exponential::ExponentialPenalty`] — Chan & Lane 2014: α·exp(−ρτ).
+//! * [`fasgd::Fasgd`] — the paper's contribution (eqs. 4–8).
+
+pub mod asgd;
+pub mod exponential;
+pub mod fasgd;
+pub mod gradient_cache;
+pub mod sasgd;
+pub mod sync;
+
+pub use asgd::Asgd;
+pub use exponential::ExponentialPenalty;
+pub use fasgd::{Fasgd, FasgdServer, RustBackend, UpdateEngine, XlaBackend};
+pub use gradient_cache::GradientCache;
+pub use sasgd::Sasgd;
+pub use sync::SyncSgd;
+
+use anyhow::Result;
+
+use crate::config::{ExperimentConfig, Policy};
+
+/// What happened when a gradient was handed to the server.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UpdateOutcome {
+    /// Did the canonical parameters change?
+    pub applied: bool,
+    /// Step-staleness τ of the gradient that was applied (clamped ≥ 0;
+    /// `None` when nothing was applied, e.g. a sync barrier still filling).
+    pub staleness: Option<u64>,
+    /// Sync only: every client should fetch after this update.
+    pub unblock_all: bool,
+}
+
+/// A parameter-server policy. One instance owns the canonical parameters.
+pub trait Server {
+    /// Canonical parameters θ_T.
+    fn params(&self) -> &[f32];
+
+    /// Scalar timestamp T (number of weight updates so far).
+    fn timestamp(&self) -> u64;
+
+    /// FRED's apply-update: gradient + the timestamp of the parameters the
+    /// client used + the client id.
+    fn apply_update(
+        &mut self,
+        grad: &[f32],
+        grad_timestamp: u64,
+        client: usize,
+    ) -> Result<UpdateOutcome>;
+
+    /// Mean of the per-parameter moving-average std `v` (FASGD only) —
+    /// consumed every opportunity by the B-FASGD bandwidth gate.
+    fn v_mean(&self) -> Option<f64> {
+        None
+    }
+
+    /// Policy name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Step-staleness τ = T − j, clamped ≥ 1 where it divides a learning rate
+/// (DESIGN.md §5: matches SASGD semantics, avoids τ=0 division).
+#[inline]
+pub fn staleness(server_ts: u64, grad_ts: u64) -> u64 {
+    server_ts.saturating_sub(grad_ts)
+}
+
+#[inline]
+pub fn staleness_divisor(server_ts: u64, grad_ts: u64) -> f32 {
+    staleness(server_ts, grad_ts).max(1) as f32
+}
+
+/// Build the configured policy around an initial parameter vector.
+pub fn build_server(
+    cfg: &ExperimentConfig,
+    init: Vec<f32>,
+    update_engine: UpdateEngine,
+) -> Box<dyn Server> {
+    match cfg.policy {
+        Policy::Sync => Box::new(SyncSgd::new(init, cfg.alpha, cfg.clients)),
+        Policy::Asgd => Box::new(Asgd::new(init, cfg.alpha)),
+        Policy::Sasgd => Box::new(Sasgd::new(init, cfg.alpha)),
+        Policy::Exponential => {
+            Box::new(ExponentialPenalty::new(init, cfg.alpha, cfg.rho))
+        }
+        Policy::Fasgd => Fasgd::new(init, cfg.alpha, cfg.fasgd, update_engine),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn staleness_clamps() {
+        assert_eq!(staleness(10, 7), 3);
+        assert_eq!(staleness(5, 9), 0); // defensive: never negative
+        assert_eq!(staleness_divisor(10, 10), 1.0);
+        assert_eq!(staleness_divisor(10, 4), 6.0);
+    }
+
+    #[test]
+    fn build_all_policies() {
+        let mut cfg = ExperimentConfig::default();
+        for p in [
+            Policy::Sync,
+            Policy::Asgd,
+            Policy::Sasgd,
+            Policy::Exponential,
+            Policy::Fasgd,
+        ] {
+            cfg.policy = p;
+            let s = build_server(&cfg, vec![0.0; 4], UpdateEngine::Rust);
+            assert_eq!(s.params().len(), 4);
+            assert_eq!(s.timestamp(), 0);
+        }
+    }
+}

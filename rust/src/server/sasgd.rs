@@ -1,0 +1,73 @@
+//! Staleness-aware async SGD (Zhang et al. 2015) — the paper's main
+//! baseline: divide the learning rate by the step-staleness (eqs. 1–2).
+
+use anyhow::Result;
+
+use crate::server::{Server, UpdateOutcome};
+use crate::tensor::sasgd_apply;
+
+/// `θ ← θ − (α/max(τ,1))·g`.
+pub struct Sasgd {
+    params: Vec<f32>,
+    alpha: f32,
+    ts: u64,
+}
+
+impl Sasgd {
+    pub fn new(params: Vec<f32>, alpha: f32) -> Self {
+        Self { params, alpha, ts: 0 }
+    }
+}
+
+impl Server for Sasgd {
+    fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    fn timestamp(&self) -> u64 {
+        self.ts
+    }
+
+    fn apply_update(
+        &mut self,
+        grad: &[f32],
+        grad_timestamp: u64,
+        _client: usize,
+    ) -> Result<UpdateOutcome> {
+        let tau = super::staleness(self.ts, grad_timestamp);
+        let divisor = super::staleness_divisor(self.ts, grad_timestamp);
+        sasgd_apply(&mut self.params, grad, self.alpha / divisor);
+        self.ts += 1;
+        Ok(UpdateOutcome { applied: true, staleness: Some(tau), unblock_all: false })
+    }
+
+    fn name(&self) -> &'static str {
+        "sasgd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn divides_by_staleness() {
+        let mut s = Sasgd::new(vec![0.0], 1.0);
+        s.apply_update(&[1.0], 0, 0).unwrap(); // τ=0 → divisor 1
+        assert_eq!(s.params(), &[-1.0]);
+        s.apply_update(&[1.0], 0, 0).unwrap(); // τ=1
+        assert_eq!(s.params(), &[-2.0]);
+        s.apply_update(&[1.0], 0, 0).unwrap(); // τ=2 → half step
+        assert_eq!(s.params(), &[-2.5]);
+    }
+
+    #[test]
+    fn fresh_gradients_full_step() {
+        let mut s = Sasgd::new(vec![0.0], 0.1);
+        for i in 0..5 {
+            // client always fetched latest: τ ≤ 1 → full α
+            s.apply_update(&[1.0], i, 0).unwrap();
+        }
+        assert!((s.params()[0] + 0.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,130 @@
+//! Synchronous SGD: the barrier baseline (and the port of the FRED
+//! `apply_update` listing in paper §3).
+
+use anyhow::{bail, Result};
+
+use crate::server::{Server, UpdateOutcome};
+
+/// Buffers one gradient per client; when all λ have reported, applies the
+/// mean with the master rate and advances T by one.
+pub struct SyncSgd {
+    params: Vec<f32>,
+    alpha: f32,
+    ts: u64,
+    lambda: usize,
+    pending: Vec<Option<Vec<f32>>>,
+    pending_count: usize,
+}
+
+impl SyncSgd {
+    pub fn new(params: Vec<f32>, alpha: f32, lambda: usize) -> Self {
+        Self {
+            params,
+            alpha,
+            ts: 0,
+            lambda,
+            pending: vec![None; lambda],
+            pending_count: 0,
+        }
+    }
+
+    /// Clients with a gradient parked at the barrier (they must not be
+    /// scheduled again until `unblock_all`).
+    pub fn pending_count(&self) -> usize {
+        self.pending_count
+    }
+}
+
+impl Server for SyncSgd {
+    fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    fn timestamp(&self) -> u64 {
+        self.ts
+    }
+
+    fn apply_update(
+        &mut self,
+        grad: &[f32],
+        _grad_timestamp: u64,
+        client: usize,
+    ) -> Result<UpdateOutcome> {
+        if client >= self.lambda {
+            bail!("client {client} out of range (λ={})", self.lambda);
+        }
+        if self.pending[client].is_some() {
+            bail!("client {client} pushed twice within one barrier");
+        }
+        self.pending[client] = Some(grad.to_vec());
+        self.pending_count += 1;
+        if self.pending_count < self.lambda {
+            return Ok(UpdateOutcome {
+                applied: false,
+                staleness: None,
+                unblock_all: false,
+            });
+        }
+        // Barrier complete: θ ← θ − α · mean(grads)  (mod = g/λ in FRED).
+        let scale = self.alpha / self.lambda as f32;
+        for slot in self.pending.iter_mut() {
+            let g = slot.take().expect("barrier slot");
+            crate::tensor::axpy(&mut self.params, -scale, &g);
+        }
+        self.pending_count = 0;
+        self.ts += 1; // "weights have changed"
+        Ok(UpdateOutcome {
+            applied: true,
+            staleness: Some(0),
+            unblock_all: true,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "sync"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn barrier_semantics() {
+        let mut s = SyncSgd::new(vec![0.0, 0.0], 1.0, 3);
+        assert!(!s.apply_update(&[3.0, 0.0], 0, 0).unwrap().applied);
+        assert!(!s.apply_update(&[3.0, 0.0], 0, 1).unwrap().applied);
+        assert_eq!(s.timestamp(), 0);
+        let out = s.apply_update(&[3.0, 3.0], 0, 2).unwrap();
+        assert!(out.applied && out.unblock_all);
+        assert_eq!(s.timestamp(), 1);
+        // mean = (3+3+3)/3 = 3 on dim0, (0+0+3)/3 = 1 on dim1
+        assert_eq!(s.params(), &[-3.0, -1.0]);
+    }
+
+    #[test]
+    fn double_push_is_protocol_violation() {
+        let mut s = SyncSgd::new(vec![0.0], 1.0, 2);
+        s.apply_update(&[1.0], 0, 0).unwrap();
+        assert!(s.apply_update(&[1.0], 0, 0).is_err());
+    }
+
+    #[test]
+    fn sync_equals_bigbatch_sgd() {
+        // sync over λ clients with per-client mean gradients g_i equals one
+        // vanilla step with the mean over the union batch (paper §3's
+        // equivalence, up to f32 association).
+        let grads = [[1.0f32, -2.0], [0.5, 0.5], [-0.5, 1.0], [2.0, 0.0]];
+        let mut s = SyncSgd::new(vec![0.0, 0.0], 0.4, 4);
+        for (c, g) in grads.iter().enumerate() {
+            s.apply_update(g, 0, c).unwrap();
+        }
+        let mean = [
+            grads.iter().map(|g| g[0]).sum::<f32>() / 4.0,
+            grads.iter().map(|g| g[1]).sum::<f32>() / 4.0,
+        ];
+        let want = [-0.4 * mean[0], -0.4 * mean[1]];
+        assert!((s.params()[0] - want[0]).abs() < 1e-6);
+        assert!((s.params()[1] - want[1]).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,89 @@
+//! Simulated client state.
+
+use crate::data::sampler::{BatchSampler, WindowSampler};
+
+/// The gradient accumulator for the `PushDropMode::Accumulate` variant
+/// (paper §2.3: "averaging unsent gradients on the clients until
+/// transmission time").
+#[derive(Debug, Clone)]
+pub struct Accumulator {
+    pub sum: Vec<f32>,
+    pub count: u32,
+    /// Timestamp of the *newest* accumulated gradient (used when flushing).
+    pub newest_ts: u64,
+}
+
+impl Accumulator {
+    pub fn new(p: usize) -> Self {
+        Self { sum: vec![0.0; p], count: 0, newest_ts: 0 }
+    }
+
+    pub fn add(&mut self, grad: &[f32], ts: u64) {
+        crate::tensor::add_assign(&mut self.sum, grad);
+        self.count += 1;
+        self.newest_ts = self.newest_ts.max(ts);
+    }
+
+    /// Fold the current gradient in and drain to `(mean_grad, ts)`.
+    pub fn flush_with(&mut self, grad: &[f32], ts: u64) -> (Vec<f32>, u64) {
+        self.add(grad, ts);
+        let mut mean = std::mem::replace(
+            &mut self.sum,
+            vec![0.0; grad.len()],
+        );
+        crate::tensor::scale(&mut mean, 1.0 / self.count as f32);
+        let newest = self.newest_ts;
+        self.count = 0;
+        self.newest_ts = 0;
+        (mean, newest)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+}
+
+/// Per-client minibatch source.
+pub enum SamplerKind {
+    Classif(BatchSampler),
+    Lm(WindowSampler),
+}
+
+/// One simulated client (model replica).
+pub struct ClientState {
+    /// The client's parameter copy θ_j.
+    pub theta: Vec<f32>,
+    /// Timestamp j of that copy.
+    pub ts: u64,
+    pub sampler: SamplerKind,
+    /// Present only in `Accumulate` push-drop mode.
+    pub accum: Option<Accumulator>,
+    /// Iterations this client has run (diagnostics).
+    pub steps: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulator_mean_and_timestamp() {
+        let mut a = Accumulator::new(2);
+        assert!(a.is_empty());
+        a.add(&[1.0, 0.0], 3);
+        a.add(&[3.0, 2.0], 5);
+        let (mean, ts) = a.flush_with(&[2.0, 4.0], 4);
+        assert_eq!(mean, vec![2.0, 2.0]);
+        assert_eq!(ts, 5); // newest of {3,5,4}
+        assert!(a.is_empty());
+        assert_eq!(a.sum, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn flush_single_gradient_is_identity() {
+        let mut a = Accumulator::new(2);
+        let (mean, ts) = a.flush_with(&[4.0, -2.0], 9);
+        assert_eq!(mean, vec![4.0, -2.0]);
+        assert_eq!(ts, 9);
+    }
+}

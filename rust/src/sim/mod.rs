@@ -1,0 +1,23 @@
+//! FRED-rs (S1): the paper's deterministic single-node simulator of
+//! distributed training, reimplemented as the rust coordinator core.
+//!
+//! A [`dispatcher::Simulator`] owns the server policy, the λ simulated
+//! clients, the client-selection rule, the bandwidth gate, and the metrics
+//! sinks, and advances one *iteration* (one client gradient computation —
+//! the paper's x-axis unit) per [`dispatcher::Simulator::step`].
+//!
+//! Determinism: all randomness flows from named [`crate::rng`] streams of
+//! the master seed; gradient engines and the data generators are
+//! deterministic; therefore same config ⇒ bitwise-identical loss curves
+//! (rust/tests/determinism.rs).
+
+pub mod client;
+pub mod dispatcher;
+pub mod probe;
+pub mod selection;
+pub mod trace;
+
+pub use dispatcher::Simulator;
+pub use probe::{ProbeLog, ProbeRecord};
+pub use selection::Selector;
+pub use trace::{Event, Trace};

@@ -1,0 +1,136 @@
+//! B-Staleness probe: direct measurement of the paper's eq. 3.
+//!
+//! The paper's central hypothesis is that the *B-Staleness*
+//! Γ(θ_i, Δθ^l) = ‖Δθ^l − Δθ_i‖ — the actual gradient drift caused by
+//! staleness — is what matters, and that the moving-average std `v` (and
+//! only much more loosely the step-staleness τ) tracks it. FRED's
+//! determinism makes Γ *measurable*: at probe time the simulator recomputes
+//! the gradient of the **same minibatch** at the current server parameters
+//! and takes the l2 distance to the client's stale gradient.
+//!
+//! The probe is pure instrumentation: it never touches the training state
+//! (server parameters, moving averages, RNG streams are all unaffected).
+
+/// One Γ measurement.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProbeRecord {
+    pub iter: u64,
+    /// Step-staleness τ of the probed gradient.
+    pub tau: u64,
+    /// Γ — eq. 3, measured exactly.
+    pub b_staleness: f64,
+    /// ‖Δθ^l‖, for scale-free comparisons.
+    pub grad_norm: f64,
+    /// The FASGD server's mean(v) at probe time (None for other policies).
+    pub v_mean: Option<f64>,
+}
+
+/// Probe log with summary statistics.
+#[derive(Debug, Clone, Default)]
+pub struct ProbeLog {
+    pub records: Vec<ProbeRecord>,
+}
+
+impl ProbeLog {
+    pub fn push(&mut self, r: ProbeRecord) {
+        self.records.push(r);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Pearson correlation between two extracted series.
+    fn correlation(
+        &self,
+        fx: impl Fn(&ProbeRecord) -> Option<f64>,
+        fy: impl Fn(&ProbeRecord) -> Option<f64>,
+    ) -> Option<f64> {
+        let pairs: Vec<(f64, f64)> = self
+            .records
+            .iter()
+            .filter_map(|r| Some((fx(r)?, fy(r)?)))
+            .collect();
+        if pairs.len() < 3 {
+            return None;
+        }
+        let n = pairs.len() as f64;
+        let mx = pairs.iter().map(|p| p.0).sum::<f64>() / n;
+        let my = pairs.iter().map(|p| p.1).sum::<f64>() / n;
+        let mut cov = 0.0;
+        let mut vx = 0.0;
+        let mut vy = 0.0;
+        for (x, y) in &pairs {
+            cov += (x - mx) * (y - my);
+            vx += (x - mx).powi(2);
+            vy += (y - my).powi(2);
+        }
+        if vx <= 0.0 || vy <= 0.0 {
+            return None;
+        }
+        Some(cov / (vx.sqrt() * vy.sqrt()))
+    }
+
+    /// corr(τ, Γ): how well step-staleness predicts true staleness.
+    pub fn tau_gamma_correlation(&self) -> Option<f64> {
+        self.correlation(|r| Some(r.tau as f64), |r| Some(r.b_staleness))
+    }
+
+    /// corr(v̄, Γ): how well FASGD's statistic predicts true staleness.
+    pub fn v_gamma_correlation(&self) -> Option<f64> {
+        self.correlation(|r| r.v_mean, |r| Some(r.b_staleness))
+    }
+
+    pub fn mean_gamma(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.b_staleness).sum::<f64>()
+            / self.records.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(tau: u64, g: f64, v: f64) -> ProbeRecord {
+        ProbeRecord {
+            iter: 0,
+            tau,
+            b_staleness: g,
+            grad_norm: 1.0,
+            v_mean: Some(v),
+        }
+    }
+
+    #[test]
+    fn correlations() {
+        let mut log = ProbeLog::default();
+        for i in 1..=10u64 {
+            // Γ rises with τ and with v.
+            log.push(rec(i, i as f64 * 2.0, i as f64 * 0.1));
+        }
+        assert!(log.tau_gamma_correlation().unwrap() > 0.99);
+        assert!(log.v_gamma_correlation().unwrap() > 0.99);
+        assert!((log.mean_gamma() - 11.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn anticorrelation_detectable() {
+        let mut log = ProbeLog::default();
+        for i in 1..=10u64 {
+            log.push(rec(i, -(i as f64), 0.5));
+        }
+        assert!(log.tau_gamma_correlation().unwrap() < -0.99);
+        // constant v ⇒ undefined correlation
+        assert!(log.v_gamma_correlation().is_none());
+    }
+
+    #[test]
+    fn too_few_points_is_none() {
+        let mut log = ProbeLog::default();
+        log.push(rec(1, 1.0, 0.1));
+        assert!(log.tau_gamma_correlation().is_none());
+    }
+}

@@ -1,0 +1,197 @@
+//! Client-selection rules (FRED §3: "a rule determining each client's
+//! probability of being selected and how that probability will change upon
+//! that client having been selected").
+
+use crate::config::SelectionRule;
+use crate::rng::{Categorical, Normal, Xoshiro256pp};
+
+/// Stateful selector over λ clients, with blocking support (sync barriers).
+pub struct Selector {
+    rule: SelectionRule,
+    weights: Option<Categorical>,
+    lambda: usize,
+    rng: Xoshiro256pp,
+}
+
+impl Selector {
+    pub fn new(rule: SelectionRule, lambda: usize, mut rng: Xoshiro256pp) -> Self {
+        assert!(lambda > 0);
+        let weights = match &rule {
+            SelectionRule::Uniform => None,
+            SelectionRule::Heterogeneous { sigma } => {
+                // Log-normal speeds: some machines persistently faster.
+                let mut normal = Normal::new(0.0, *sigma);
+                let w: Vec<f64> = (0..lambda)
+                    .map(|_| normal.sample(&mut rng).exp())
+                    .collect();
+                Some(Categorical::new(w))
+            }
+            SelectionRule::Cooldown { .. } => {
+                Some(Categorical::uniform(lambda))
+            }
+        };
+        Self { rule, weights, lambda, rng }
+    }
+
+    /// Pick the next client; `blocked[i]` clients are never selected.
+    /// Panics if every client is blocked (a protocol bug by construction).
+    pub fn pick(&mut self, blocked: &[bool]) -> usize {
+        debug_assert_eq!(blocked.len(), self.lambda);
+        let any_blocked = blocked.iter().any(|&b| b);
+        match (&self.weights, any_blocked) {
+            (None, false) => self.rng.below(self.lambda as u64) as usize,
+            (None, true) => {
+                let free = blocked.iter().filter(|&&b| !b).count();
+                assert!(free > 0, "all clients blocked");
+                let k = self.rng.below(free as u64) as usize;
+                blocked
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &b)| !b)
+                    .nth(k)
+                    .map(|(i, _)| i)
+                    .unwrap()
+            }
+            (Some(cat), _) => {
+                // Weighted pick with rejection of blocked clients; bounded
+                // retries then masked scan for pathological weight mass.
+                for _ in 0..64 {
+                    let i = cat.sample(&mut self.rng);
+                    if !blocked[i] {
+                        return i;
+                    }
+                }
+                let mut masked = cat.clone();
+                for (i, &b) in blocked.iter().enumerate() {
+                    if b {
+                        masked.set_weight(i, 0.0);
+                    }
+                }
+                masked.renormalize();
+                masked.sample(&mut self.rng)
+            }
+        }
+    }
+
+    /// Apply the post-selection weight change (cooldown rule).
+    pub fn on_selected(&mut self, i: usize) {
+        if let SelectionRule::Cooldown { factor, .. } = self.rule {
+            if let Some(cat) = &mut self.weights {
+                cat.scale_weight(i, factor);
+            }
+        }
+    }
+
+    /// Per-step recovery toward uniform (cooldown rule).
+    pub fn step_recover(&mut self) {
+        if let SelectionRule::Cooldown { recovery, .. } = self.rule {
+            if let Some(cat) = &mut self.weights {
+                for i in 0..cat.len() {
+                    // Floor keeps deeply-cooled clients representable; cap
+                    // at 1.0 so recovery cannot run away. Renormalize kills
+                    // incremental-total float drift.
+                    let w = (cat.weight(i) * recovery).clamp(1e-9, 1.0);
+                    cat.set_weight(i, w);
+                }
+                cat.renormalize();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng;
+
+    #[test]
+    fn uniform_covers_all_clients() {
+        let mut s =
+            Selector::new(SelectionRule::Uniform, 8, rng::stream(0, "s", 0));
+        let blocked = vec![false; 8];
+        let mut seen = [false; 8];
+        for _ in 0..500 {
+            seen[s.pick(&blocked)] = true;
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn blocking_respected_uniform_and_weighted() {
+        for rule in [
+            SelectionRule::Uniform,
+            SelectionRule::Heterogeneous { sigma: 1.0 },
+            SelectionRule::Cooldown { factor: 0.5, recovery: 1.1 },
+        ] {
+            let mut s = Selector::new(rule, 4, rng::stream(1, "s", 0));
+            let blocked = vec![false, true, true, false];
+            for _ in 0..200 {
+                let i = s.pick(&blocked);
+                assert!(i == 0 || i == 3);
+            }
+        }
+    }
+
+    #[test]
+    fn heterogeneous_is_skewed() {
+        let mut s = Selector::new(
+            SelectionRule::Heterogeneous { sigma: 1.5 },
+            16,
+            rng::stream(2, "s", 0),
+        );
+        let blocked = vec![false; 16];
+        let mut counts = [0usize; 16];
+        for _ in 0..20_000 {
+            counts[s.pick(&blocked)] += 1;
+        }
+        let max = *counts.iter().max().unwrap() as f64;
+        let min = *counts.iter().min().unwrap().max(&1) as f64;
+        assert!(max / min > 3.0, "expected skew, got {max}/{min}");
+    }
+
+    #[test]
+    fn cooldown_reduces_repeat_selection() {
+        // For the suppression to persist a full rotation, recovery^λ must
+        // beat 1/factor (else every client ends up cooled and relative
+        // weights compress): 3.2^4 ≈ 105 ≥ 1/0.01.
+        let mut s = Selector::new(
+            SelectionRule::Cooldown { factor: 0.01, recovery: 3.2 },
+            4,
+            rng::stream(3, "s", 0),
+        );
+        let blocked = vec![false; 4];
+        let mut repeats = 0;
+        let mut last = usize::MAX;
+        for _ in 0..2000 {
+            let i = s.pick(&blocked);
+            s.on_selected(i);
+            s.step_recover();
+            if i == last {
+                repeats += 1;
+            }
+            last = i;
+        }
+        // uniform would repeat ~25%; strong cooldown should be well below
+        assert!(repeats < 200, "repeats {repeats}");
+    }
+
+    #[test]
+    fn deterministic_given_stream() {
+        let mk = || {
+            Selector::new(SelectionRule::Uniform, 10, rng::stream(7, "s", 0))
+        };
+        let blocked = vec![false; 10];
+        let (mut a, mut b) = (mk(), mk());
+        for _ in 0..100 {
+            assert_eq!(a.pick(&blocked), b.pick(&blocked));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "all clients blocked")]
+    fn all_blocked_panics() {
+        let mut s =
+            Selector::new(SelectionRule::Uniform, 2, rng::stream(0, "s", 0));
+        s.pick(&[true, true]);
+    }
+}

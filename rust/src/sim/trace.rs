@@ -1,0 +1,84 @@
+//! Bounded event trace for protocol debugging and protocol-level tests.
+
+/// One simulator event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Event {
+    Selected { iter: u64, client: usize },
+    Push { iter: u64, client: usize, transmitted: bool },
+    Applied { iter: u64, client: usize, tau: u64, reapplied: bool },
+    Fetch { iter: u64, client: usize, transmitted: bool },
+    BarrierRelease { iter: u64, server_ts: u64 },
+    Eval { iter: u64, server_ts: u64 },
+}
+
+/// Ring-buffer trace; capacity 0 disables recording entirely (the default
+/// for long runs — recording is branch-cheap but memory-real).
+#[derive(Debug, Clone)]
+pub struct Trace {
+    buf: Vec<Event>,
+    cap: usize,
+    head: usize,
+    recorded: u64,
+}
+
+impl Trace {
+    pub fn new(cap: usize) -> Self {
+        Self { buf: Vec::with_capacity(cap.min(1 << 20)), cap, head: 0, recorded: 0 }
+    }
+
+    pub fn disabled() -> Self {
+        Self::new(0)
+    }
+
+    #[inline]
+    pub fn record(&mut self, e: Event) {
+        if self.cap == 0 {
+            return;
+        }
+        if self.buf.len() < self.cap {
+            self.buf.push(e);
+        } else {
+            self.buf[self.head] = e;
+            self.head = (self.head + 1) % self.cap;
+        }
+        self.recorded += 1;
+    }
+
+    /// Events oldest→newest.
+    pub fn events(&self) -> Vec<Event> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        out
+    }
+
+    pub fn recorded(&self) -> u64 {
+        self.recorded
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_semantics() {
+        let mut t = Trace::new(3);
+        for i in 0..5 {
+            t.record(Event::Selected { iter: i, client: 0 });
+        }
+        let evs = t.events();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0], Event::Selected { iter: 2, client: 0 });
+        assert_eq!(evs[2], Event::Selected { iter: 4, client: 0 });
+        assert_eq!(t.recorded(), 5);
+    }
+
+    #[test]
+    fn disabled_records_nothing() {
+        let mut t = Trace::disabled();
+        t.record(Event::Eval { iter: 0, server_ts: 0 });
+        assert!(t.events().is_empty());
+        assert_eq!(t.recorded(), 0);
+    }
+}

@@ -1,0 +1,14 @@
+//! Flat `f32` vector math for the server hot path.
+//!
+//! Everything a parameter-server policy does is elementwise over the flat
+//! parameter vector (DESIGN.md §3), so this module is deliberately just
+//! slices + tight loops shaped for LLVM auto-vectorization. The fused FASGD
+//! update in [`ops::fasgd_update_fused`] is the single hottest L3 function
+//! (it touches 5×P floats per server update) and is benchmarked and tuned in
+//! EXPERIMENTS.md §Perf against the AOT Pallas artifact for the same math.
+
+pub mod ops;
+pub mod stats;
+
+pub use ops::*;
+pub use stats::*;

@@ -1,0 +1,315 @@
+//! Elementwise kernels over flat `f32` slices.
+
+/// `y += a * x` (the plain-SGD apply).
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * *xi;
+    }
+}
+
+/// `y = x` (vector copy through a reusable buffer).
+pub fn copy(y: &mut [f32], x: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    y.copy_from_slice(x);
+}
+
+/// `acc += x` (gradient accumulation for sync SGD / client-side caching).
+pub fn add_assign(acc: &mut [f32], x: &[f32]) {
+    assert_eq!(acc.len(), x.len());
+    for (a, b) in acc.iter_mut().zip(x) {
+        *a += *b;
+    }
+}
+
+/// `x *= s`.
+pub fn scale(x: &mut [f32], s: f32) {
+    for v in x.iter_mut() {
+        *v *= s;
+    }
+}
+
+/// Dot product with f64 accumulation (used by tests/metrics, not hot).
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum()
+}
+
+/// L2 norm with f64 accumulation.
+pub fn l2_norm(x: &[f32]) -> f64 {
+    x.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt()
+}
+
+/// The B-Staleness measure Γ(θ_i, Δθ^l) = ‖Δθ^l − Δθ_i‖ (paper eq. 3).
+pub fn b_staleness(grad_stale: &[f32], grad_fresh: &[f32]) -> f64 {
+    assert_eq!(grad_stale.len(), grad_fresh.len());
+    grad_stale
+        .iter()
+        .zip(grad_fresh)
+        .map(|(a, b)| {
+            let d = (*a - *b) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Hyper-parameters for the fused FASGD update (paper eqs. 4–8).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FasgdHparams {
+    /// γ — moving-average factor for the first/second gradient moments.
+    pub gamma: f32,
+    /// β — moving-average factor for the std track `v`.
+    pub beta: f32,
+    /// ε — numerical-stability constant inside the sqrt.
+    pub eps: f32,
+    /// Elementwise floor on `v` where it divides the step (DESIGN.md §5).
+    pub v_floor: f32,
+    /// `false` ⇒ `v` tracks the std (default); `true` ⇒ eq. 6 as printed
+    /// (EMA of 1/std).
+    pub inverse_variant: bool,
+}
+
+impl Default for FasgdHparams {
+    fn default() -> Self {
+        // Graves'13 RMSProp-style defaults; must match python/compile/aot.py
+        // so the rust and XLA update engines agree bitwise-ish.
+        Self {
+            gamma: 0.95,
+            beta: 0.9,
+            eps: 1e-8,
+            v_floor: 1e-6,
+            inverse_variant: false,
+        }
+    }
+}
+
+/// Fused FASGD server update: one pass over (θ, n, b, v) given gradient `g`.
+///
+/// ```text
+/// n ← γn + (1−γ)g²
+/// b ← γb + (1−γ)g
+/// s = √(max(n−b², 0) + ε)
+/// v ← βv + (1−β)·s            (or (1−β)/s for the literal eq. 6 variant)
+/// θ ← θ − (α/τ) / max(v, floor) · g
+/// ```
+///
+/// `alpha_over_tau` is the master learning rate already divided by the
+/// clamped step-staleness. Returns the mean of the updated `v` (needed every
+/// step by the B-FASGD bandwidth gate, and free to compute in this pass).
+pub fn fasgd_update_fused(
+    theta: &mut [f32],
+    n: &mut [f32],
+    b: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    alpha_over_tau: f32,
+    hp: &FasgdHparams,
+) -> f64 {
+    let len = theta.len();
+    assert!(
+        n.len() == len && b.len() == len && v.len() == len && g.len() == len,
+        "state length mismatch"
+    );
+    // The elementwise loop carries NO reduction (a strict-FP running sum —
+    // f32 or f64 — is a loop-carried dependency that defeats LLVM's
+    // vectorizer); mean(v) is a separate multi-accumulator pass. The
+    // variant branch is hoisted by monomorphizing the inner loop.
+    if hp.inverse_variant {
+        fasgd_loop::<true>(theta, n, b, v, g, alpha_over_tau, hp);
+    } else {
+        fasgd_loop::<false>(theta, n, b, v, g, alpha_over_tau, hp);
+    }
+    mean_fast(v)
+}
+
+#[inline(always)]
+fn fasgd_loop<const INVERSE: bool>(
+    theta: &mut [f32],
+    n: &mut [f32],
+    b: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    alpha_over_tau: f32,
+    hp: &FasgdHparams,
+) {
+    let gamma = hp.gamma;
+    let one_m_gamma = 1.0 - hp.gamma;
+    let beta = hp.beta;
+    let one_m_beta = 1.0 - hp.beta;
+    for i in 0..theta.len() {
+        let gi = g[i];
+        let ni = gamma * n[i] + one_m_gamma * gi * gi;
+        let bi = gamma * b[i] + one_m_gamma * gi;
+        let var = (ni - bi * bi).max(0.0) + hp.eps;
+        let s = var.sqrt();
+        let vi = if INVERSE {
+            beta * v[i] + one_m_beta / s
+        } else {
+            beta * v[i] + one_m_beta * s
+        };
+        n[i] = ni;
+        b[i] = bi;
+        v[i] = vi;
+        theta[i] -= alpha_over_tau / vi.max(hp.v_floor) * gi;
+    }
+}
+
+/// Vectorizable mean: 8 parallel f32 lane accumulators, folded into f64
+/// every 4096 elements (bounds error growth; deterministic).
+pub fn mean_fast(x: &[f32]) -> f64 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    let mut total = 0.0f64;
+    for chunk in x.chunks(4096) {
+        let mut acc = [0.0f32; 8];
+        let mut iter = chunk.chunks_exact(8);
+        for oct in &mut iter {
+            for (a, &val) in acc.iter_mut().zip(oct) {
+                *a += val;
+            }
+        }
+        let mut partial: f32 = acc.iter().sum();
+        partial += iter.remainder().iter().sum::<f32>();
+        total += partial as f64;
+    }
+    total / x.len() as f64
+}
+
+/// The SASGD apply (Zhang et al. 2015): `θ ← θ − (α/τ)·g`.
+pub fn sasgd_apply(theta: &mut [f32], g: &[f32], alpha_over_tau: f32) {
+    axpy(theta, -alpha_over_tau, g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() <= tol, "{a} vs {b}");
+    }
+
+    #[test]
+    fn axpy_basic() {
+        let mut y = vec![1.0, 2.0, 3.0];
+        axpy(&mut y, -0.5, &[2.0, 2.0, 2.0]);
+        assert_eq!(y, vec![0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn b_staleness_zero_for_identical() {
+        let g = vec![0.5f32; 100];
+        assert_eq!(b_staleness(&g, &g), 0.0);
+        let mut g2 = g.clone();
+        g2[0] += 3.0;
+        approx(b_staleness(&g, &g2), 3.0, 1e-6);
+    }
+
+    #[test]
+    fn fasgd_matches_scalar_reference() {
+        // Independent scalar recomputation of eqs. 4-8.
+        let hp = FasgdHparams::default();
+        let p = 257;
+        let mut rng = crate::rng::Xoshiro256pp::new(9);
+        let mut theta: Vec<f32> = (0..p).map(|_| rng.f32() - 0.5).collect();
+        let mut n: Vec<f32> = (0..p).map(|_| rng.f32()).collect();
+        let mut b: Vec<f32> = (0..p).map(|_| rng.f32() * 0.1).collect();
+        let mut v: Vec<f32> = (0..p).map(|_| rng.f32() + 0.05).collect();
+        let g: Vec<f32> = (0..p).map(|_| rng.f32() - 0.5).collect();
+        let (t0, n0, b0, v0) =
+            (theta.clone(), n.clone(), b.clone(), v.clone());
+
+        let vbar =
+            fasgd_update_fused(&mut theta, &mut n, &mut b, &mut v, &g, 0.01, &hp);
+
+        let mut vsum = 0.0f64;
+        for i in 0..p {
+            let gi = g[i];
+            let ni = hp.gamma * n0[i] + (1.0 - hp.gamma) * gi * gi;
+            let bi = hp.gamma * b0[i] + (1.0 - hp.gamma) * gi;
+            let s = ((ni - bi * bi).max(0.0) + hp.eps).sqrt();
+            let vi = hp.beta * v0[i] + (1.0 - hp.beta) * s;
+            vsum += vi as f64;
+            assert_eq!(n[i], ni);
+            assert_eq!(b[i], bi);
+            assert_eq!(v[i], vi);
+            let want = t0[i] - 0.01 / vi.max(hp.v_floor) * gi;
+            assert_eq!(theta[i], want);
+        }
+        // vbar accumulates per-chunk in f32; compare at f32 precision.
+        approx(vbar, vsum / p as f64, 1e-5);
+    }
+
+    #[test]
+    fn fasgd_inverse_variant_diverges_from_std() {
+        let mut hp = FasgdHparams::default();
+        let p = 64;
+        let g: Vec<f32> = (0..p).map(|i| (i as f32 * 0.13).sin()).collect();
+        let mut state_a: Vec<Vec<f32>> =
+            (0..4).map(|_| vec![0.5f32; p]).collect();
+        let mut state_b = state_a.clone();
+        let (a0, a1) = state_a.split_at_mut(1);
+        let (a1, a2) = a1.split_at_mut(1);
+        let (a2, a3) = a2.split_at_mut(1);
+        fasgd_update_fused(
+            &mut a0[0], &mut a1[0], &mut a2[0], &mut a3[0], &g, 0.01, &hp,
+        );
+        hp.inverse_variant = true;
+        let (b0, b1) = state_b.split_at_mut(1);
+        let (b1, b2) = b1.split_at_mut(1);
+        let (b2, b3) = b2.split_at_mut(1);
+        fasgd_update_fused(
+            &mut b0[0], &mut b1[0], &mut b2[0], &mut b3[0], &g, 0.01, &hp,
+        );
+        assert_ne!(state_a[3], state_b[3]);
+    }
+
+    #[test]
+    fn fasgd_v_floor_engages() {
+        let hp = FasgdHparams {
+            v_floor: 0.5,
+            ..Default::default()
+        };
+        let p = 4;
+        let mut theta = vec![0.0f32; p];
+        let mut n = vec![0.0f32; p];
+        let mut b = vec![0.0f32; p];
+        let mut v = vec![0.0f32; p];
+        let g = vec![1.0f32; p];
+        fasgd_update_fused(&mut theta, &mut n, &mut b, &mut v, &g, 0.1, &hp);
+        // v after one step is far below the 0.5 floor, so step = 0.1/0.5.
+        for t in theta {
+            approx(t as f64, -0.2, 1e-5);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "state length mismatch")]
+    fn fasgd_rejects_mismatched_lengths() {
+        let mut a = vec![0.0f32; 3];
+        let mut n = vec![0.0f32; 3];
+        let mut b = vec![0.0f32; 3];
+        let mut v = vec![0.0f32; 2];
+        fasgd_update_fused(
+            &mut a,
+            &mut n,
+            &mut b,
+            &mut v,
+            &[0.0; 3],
+            0.1,
+            &FasgdHparams::default(),
+        );
+    }
+
+    #[test]
+    fn empty_vectors_are_fine() {
+        let hp = FasgdHparams::default();
+        let mut e: Vec<f32> = vec![];
+        let mut n = vec![];
+        let mut b = vec![];
+        let mut v = vec![];
+        let vbar = fasgd_update_fused(&mut e, &mut n, &mut b, &mut v, &[], 0.1, &hp);
+        assert_eq!(vbar, 0.0);
+    }
+}

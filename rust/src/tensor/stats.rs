@@ -1,0 +1,71 @@
+//! Summary statistics over slices (metrics + tests).
+
+/// Mean with f64 accumulation.
+pub fn mean(x: &[f32]) -> f64 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    x.iter().map(|v| *v as f64).sum::<f64>() / x.len() as f64
+}
+
+/// Population variance with f64 accumulation.
+pub fn variance(x: &[f32]) -> f64 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    let m = mean(x);
+    x.iter().map(|v| (*v as f64 - m).powi(2)).sum::<f64>() / x.len() as f64
+}
+
+/// Max absolute difference between two slices.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+/// `allclose` in the numpy sense: `|a-b| <= atol + rtol*|b|` elementwise.
+pub fn allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> bool {
+    a.len() == b.len()
+        && a.iter()
+            .zip(b)
+            .all(|(x, y)| (x - y).abs() <= atol + rtol * y.abs())
+}
+
+/// Quantile of a pre-sorted f64 slice (nearest-rank).
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_variance() {
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&x), 2.5);
+        assert_eq!(variance(&x), 1.25);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn allclose_behaviour() {
+        assert!(allclose(&[1.0], &[1.0 + 1e-7], 1e-5, 1e-6));
+        assert!(!allclose(&[1.0], &[1.1], 1e-5, 1e-6));
+        assert!(!allclose(&[1.0], &[1.0, 2.0], 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs: Vec<f64> = (0..101).map(|i| i as f64).collect();
+        assert_eq!(quantile_sorted(&xs, 0.0), 0.0);
+        assert_eq!(quantile_sorted(&xs, 0.5), 50.0);
+        assert_eq!(quantile_sorted(&xs, 1.0), 100.0);
+    }
+}

@@ -1,0 +1,71 @@
+//! Tiny `log`-facade backend: leveled, timestamped stderr logging.
+//!
+//! `RUST_LOG`-style filtering by level only (`error|warn|info|debug|trace`),
+//! default `info`. Kept deliberately small — the crate's structured output
+//! goes through [`crate::metrics`], not the logger.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+use once_cell::sync::Lazy;
+
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = START.elapsed();
+        eprintln!(
+            "[{:>9.3}s {:>5} {}] {}",
+            t.as_secs_f64(),
+            record.level(),
+            record.target().split("::").last().unwrap_or(""),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: StderrLogger = StderrLogger;
+
+/// Install the logger (idempotent). Level comes from `RUST_LOG` or `info`.
+/// Also flips FTZ/DAZ on (every entrypoint calls init first; see
+/// `util::enable_ftz`).
+pub fn init() {
+    crate::util::enable_ftz();
+    if INSTALLED.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let level = match std::env::var("RUST_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        _ => LevelFilter::Info,
+    };
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(level);
+    let _ = Lazy::force(&START);
+    let _ = Level::Info; // silence unused import on some cfgs
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke test");
+    }
+}

@@ -1,0 +1,56 @@
+//! Small in-tree substrates: JSON, logging, paths.
+//!
+//! This build is fully offline (DESIGN.md §5): `serde`/`serde_json` are not
+//! in the vendor tree, so [`json`] implements the minimal JSON surface the
+//! system needs (parsing artifact metadata, writing metrics reports).
+
+pub mod json;
+pub mod logging;
+
+use std::path::PathBuf;
+
+/// Enable flush-to-zero + denormals-are-zero on this thread's SSE state.
+///
+/// Near convergence the MLP's gradients underflow into denormals, which
+/// cost ~100 cycles/op on x86 and were measured to slow the whole hot path
+/// (rust fused update *and* XLA execution) ~3x (EXPERIMENTS.md §Perf).
+/// Threads inherit MXCSR from their creator, so calling this before the
+/// PJRT client (and any worker threads) are created covers the pool too.
+pub fn enable_ftz() {
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        use std::arch::x86_64::{_mm_getcsr, _mm_setcsr};
+        _mm_setcsr(_mm_getcsr() | 0x8040); // FTZ (bit 15) | DAZ (bit 6)
+    }
+}
+
+/// Resolve the artifacts directory: `$FASGD_ARTIFACTS` or `./artifacts`,
+/// searching upward from the current directory so tests and benches work
+/// from any workspace subdirectory.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("FASGD_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifacts_dir_env_override() {
+        std::env::set_var("FASGD_ARTIFACTS", "/tmp/somewhere");
+        assert_eq!(artifacts_dir(), PathBuf::from("/tmp/somewhere"));
+        std::env::remove_var("FASGD_ARTIFACTS");
+    }
+}

@@ -1,0 +1,142 @@
+//! B-FASGD protocol integration: gating semantics, accounting invariants,
+//! gradient-cache reapply, and the adaptive-bandwidth shape of Figure 3.
+
+use fasgd::config::{BandwidthMode, Policy, PushDropMode};
+use fasgd::experiments::common::{fast_test_config, run_experiment};
+
+fn gated(c_push: f64, c_fetch: f64, drop: PushDropMode)
+         -> fasgd::metrics::RunSummary {
+    let mut cfg = fast_test_config(Policy::Fasgd);
+    cfg.iters = 1_000;
+    cfg.bandwidth = BandwidthMode::Probabilistic { c_push, c_fetch, eps: 1e-8 };
+    cfg.push_drop = drop;
+    run_experiment(&cfg).unwrap()
+}
+
+#[test]
+fn accounting_invariants() {
+    let s = gated(0.3, 0.6, PushDropMode::ReapplyCached);
+    let b = s.bandwidth;
+    assert!(b.push_copies <= b.push_potential);
+    assert!(b.fetch_copies <= b.fetch_potential);
+    assert_eq!(b.push_potential, 1_000); // one opportunity per iteration
+    assert_eq!(b.fetch_potential, 1_000);
+    assert!(b.push_ratio() <= 1.0 && b.push_ratio() >= 0.0);
+    assert!(b.reduction_factor() >= 1.0);
+}
+
+#[test]
+fn c_zero_transmits_everything() {
+    let s = gated(0.0, 0.0, PushDropMode::ReapplyCached);
+    assert_eq!(s.bandwidth.push_copies, s.bandwidth.push_potential);
+    assert_eq!(s.bandwidth.fetch_copies, s.bandwidth.fetch_potential);
+}
+
+#[test]
+fn fetch_gating_reduces_fetch_traffic_only() {
+    let s = gated(0.0, 5.0, PushDropMode::ReapplyCached);
+    assert_eq!(s.bandwidth.push_ratio(), 1.0);
+    assert!(
+        s.bandwidth.fetch_ratio() < 0.9,
+        "fetch ratio {}",
+        s.bandwidth.fetch_ratio()
+    );
+}
+
+#[test]
+fn reapply_keeps_server_updating_on_push_drops() {
+    // With the paper's gradient-cache reapply, a dropped push still turns
+    // into a server update (the cached gradient is re-applied), so T keeps
+    // advancing ~1/iteration after the cache warms.
+    let s = gated(2.0, 0.0, PushDropMode::ReapplyCached);
+    assert!(s.bandwidth.push_ratio() < 0.9, "{}", s.bandwidth.push_ratio());
+    // Drops that hit a cold cache (before a client's first transmitted
+    // push) are lost, so the floor is a little below 1 per iteration.
+    assert!(
+        s.server_updates as f64 >= 0.85 * s.iters as f64,
+        "updates {} of {} iters",
+        s.server_updates,
+        s.iters
+    );
+}
+
+#[test]
+fn skip_mode_loses_updates() {
+    let s = gated(2.0, 0.0, PushDropMode::Skip);
+    assert!(
+        (s.server_updates as f64) < 0.9 * s.iters as f64,
+        "skip should lose updates: {} of {}",
+        s.server_updates,
+        s.iters
+    );
+}
+
+#[test]
+fn accumulate_mode_folds_dropped_gradients() {
+    let s = gated(2.0, 0.0, PushDropMode::Accumulate);
+    // Updates only happen on transmitted pushes.
+    assert_eq!(s.server_updates, s.bandwidth.push_copies);
+    // NOTE: with strong push gating, accumulate-mode destabilizes FASGD —
+    // client-side averaging shrinks the gradient std the server observes,
+    // v decays, the effective rate α/v grows, and the loop diverges (see
+    // EXPERIMENTS.md §Ablations; the paper speculated this variant "would
+    // work better" — our reproduction finds the opposite for FASGD). The
+    // protocol contract tested here is only that the fold is wired
+    // correctly and the run completes.
+    assert!(s.final_val_loss().is_finite());
+}
+
+#[test]
+fn accumulate_mode_stable_under_mild_gating() {
+    // At a mild push gate the accumulate variant does learn.
+    let s = gated(0.2, 0.0, PushDropMode::Accumulate);
+    assert!(s.final_val_loss() < 2.3, "{}", s.final_val_loss());
+}
+
+#[test]
+fn fixed_period_baseline_exact_ratios() {
+    let mut cfg = fast_test_config(Policy::Fasgd);
+    cfg.iters = 1_200;
+    cfg.bandwidth = BandwidthMode::Fixed { k_push: 1, k_fetch: 4 };
+    let s = run_experiment(&cfg).unwrap();
+    assert_eq!(s.bandwidth.push_ratio(), 1.0);
+    // Every client fetches exactly every 4th opportunity.
+    assert!((s.bandwidth.fetch_ratio() - 0.25).abs() < 0.01,
+            "{}", s.bandwidth.fetch_ratio());
+}
+
+#[test]
+fn adaptive_gate_tightens_over_training() {
+    // The paper's "negative second derivative": as v decays with training,
+    // eq. 9 transmits less. Compare early-half vs late-half fetch traffic.
+    let mut cfg = fast_test_config(Policy::Fasgd);
+    cfg.iters = 1_500;
+    cfg.alpha = 0.02; // learn fast so v visibly decays
+    cfg.bandwidth = BandwidthMode::Probabilistic {
+        c_push: 0.0,
+        c_fetch: 0.05,
+        eps: 1e-8,
+    };
+    // Run two prefixes: traffic in the first 500 vs total in 1500.
+    let mut early_cfg = cfg.clone();
+    early_cfg.iters = 500;
+    let early = run_experiment(&early_cfg).unwrap();
+    let full = run_experiment(&cfg).unwrap();
+    let early_rate =
+        early.bandwidth.fetch_copies as f64 / early.bandwidth.fetch_potential as f64;
+    let late_copies = full.bandwidth.fetch_copies - early.bandwidth.fetch_copies;
+    let late_pot =
+        full.bandwidth.fetch_potential - early.bandwidth.fetch_potential;
+    let late_rate = late_copies as f64 / late_pot as f64;
+    assert!(
+        late_rate < early_rate,
+        "late {late_rate:.3} should transmit less than early {early_rate:.3}"
+    );
+}
+
+#[test]
+fn stronger_gating_cuts_more() {
+    let weak = gated(0.0, 0.05, PushDropMode::ReapplyCached);
+    let strong = gated(0.0, 1.0, PushDropMode::ReapplyCached);
+    assert!(strong.bandwidth.fetch_ratio() < weak.bandwidth.fetch_ratio());
+}

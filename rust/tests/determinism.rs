@@ -1,0 +1,86 @@
+//! FRED's headline property (paper §3): simulations are deterministic —
+//! "runs which should be bitwise equivalent are bitwise equivalent".
+
+use fasgd::config::{BandwidthMode, Policy, PushDropMode, SelectionRule};
+use fasgd::experiments::common::{fast_test_config, run_experiment};
+
+fn curve(cfg: &fasgd::config::ExperimentConfig) -> Vec<(u64, f64, f64)> {
+    let s = run_experiment(cfg).unwrap();
+    s.history
+        .evals
+        .iter()
+        .map(|p| (p.iter, p.val_loss, p.val_acc))
+        .collect()
+}
+
+#[test]
+fn same_seed_bitwise_equal_all_policies() {
+    for policy in [
+        Policy::Sync,
+        Policy::Asgd,
+        Policy::Sasgd,
+        Policy::Exponential,
+        Policy::Fasgd,
+    ] {
+        let cfg = fast_test_config(policy);
+        let a = curve(&cfg);
+        let b = curve(&cfg);
+        assert_eq!(a, b, "{policy:?} not deterministic");
+    }
+}
+
+#[test]
+fn different_seed_differs() {
+    let mut cfg = fast_test_config(Policy::Fasgd);
+    let a = curve(&cfg);
+    cfg.seed = 43;
+    let b = curve(&cfg);
+    assert_ne!(a, b);
+}
+
+#[test]
+fn deterministic_under_bandwidth_gating() {
+    for push_drop in [
+        PushDropMode::ReapplyCached,
+        PushDropMode::Accumulate,
+        PushDropMode::Skip,
+    ] {
+        let mut cfg = fast_test_config(Policy::Fasgd);
+        cfg.bandwidth = BandwidthMode::Probabilistic {
+            c_push: 0.2,
+            c_fetch: 0.4,
+            eps: 1e-8,
+        };
+        cfg.push_drop = push_drop;
+        let a = curve(&cfg);
+        let b = curve(&cfg);
+        assert_eq!(a, b, "{push_drop:?} not deterministic");
+    }
+}
+
+#[test]
+fn deterministic_under_selection_rules() {
+    for rule in [
+        SelectionRule::Heterogeneous { sigma: 1.0 },
+        SelectionRule::Cooldown { factor: 0.3, recovery: 1.5 },
+    ] {
+        let mut cfg = fast_test_config(Policy::Sasgd);
+        cfg.selection = rule.clone();
+        let a = curve(&cfg);
+        let b = curve(&cfg);
+        assert_eq!(a, b, "{rule:?} not deterministic");
+    }
+}
+
+#[test]
+fn bandwidth_report_deterministic() {
+    let mut cfg = fast_test_config(Policy::Fasgd);
+    cfg.bandwidth = BandwidthMode::Probabilistic {
+        c_push: 0.0,
+        c_fetch: 0.5,
+        eps: 1e-8,
+    };
+    let a = run_experiment(&cfg).unwrap().bandwidth;
+    let b = run_experiment(&cfg).unwrap().bandwidth;
+    assert_eq!(a, b);
+}

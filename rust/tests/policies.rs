@@ -1,0 +1,179 @@
+//! Policy-level integration through the full simulator: staleness
+//! semantics, FASGD vs baselines, failure injection.
+
+use anyhow::bail;
+use fasgd::config::Policy;
+use fasgd::experiments::common::{build_sim, fast_test_config, run_experiment};
+use fasgd::grad::{Batch, GradientEngine, RustMlpEngine};
+use fasgd::sim::dispatcher::{DataSource, SimParts, Simulator};
+
+#[test]
+fn single_client_has_minimal_staleness() {
+    // λ=1 with always-on fetch: every gradient is computed at the latest
+    // parameters, so τ ≤ ... = 0 after each fetch.
+    let mut cfg = fast_test_config(Policy::Sasgd);
+    cfg.clients = 1;
+    cfg.iters = 200;
+    let s = run_experiment(&cfg).unwrap();
+    assert_eq!(s.staleness.mean(), 0.0);
+    assert_eq!(s.staleness.max(), 0);
+}
+
+#[test]
+fn staleness_grows_with_lambda() {
+    let mean_tau = |lambda: usize| {
+        let mut cfg = fast_test_config(Policy::Asgd);
+        cfg.clients = lambda;
+        cfg.iters = 2_000;
+        run_experiment(&cfg).unwrap().staleness.mean()
+    };
+    let t4 = mean_tau(4);
+    let t16 = mean_tau(16);
+    let t64 = mean_tau(64);
+    assert!(t4 < t16 && t16 < t64, "{t4} {t16} {t64}");
+    // Uniform selection ⇒ mean staleness ≈ λ-1.
+    assert!((t64 - 63.0).abs() < 8.0, "{t64}");
+}
+
+#[test]
+fn all_async_policies_learn_at_their_rates() {
+    for (policy, ok_threshold) in [
+        (Policy::Asgd, 1.0),
+        (Policy::Sasgd, 1.0),
+        (Policy::Exponential, 1.5),
+        (Policy::Fasgd, 1.0),
+    ] {
+        let mut cfg = fast_test_config(policy);
+        cfg.iters = 1_500;
+        let s = run_experiment(&cfg).unwrap();
+        assert!(
+            s.final_val_loss() < ok_threshold,
+            "{policy:?}: {}",
+            s.final_val_loss()
+        );
+    }
+}
+
+#[test]
+fn fasgd_beats_sasgd_under_heavy_staleness_pure_rust() {
+    // A smaller-scale version of the paper's core claim on the pure-rust
+    // path (the XLA path is exercised by runtime_roundtrip + examples).
+    let run = |policy: Policy, alpha: f32| {
+        let mut cfg = fast_test_config(policy);
+        cfg.clients = 32;
+        cfg.batch = 2;
+        cfg.iters = 4_000;
+        cfg.alpha = alpha;
+        cfg.eval_every = 1_000;
+        run_experiment(&cfg).unwrap().history.tail_mean(3)
+    };
+    let fasgd = run(Policy::Fasgd, 0.005);
+    let sasgd = run(Policy::Sasgd, 0.04);
+    assert!(
+        fasgd < sasgd + 0.05,
+        "FASGD {fasgd:.4} should not lose clearly to SASGD {sasgd:.4}"
+    );
+}
+
+#[test]
+fn exponential_penalty_lags_sasgd_at_high_staleness() {
+    // The paper's criticism of Chan & Lane: the exponential penalty
+    // "will reduce the learning rate too far when staleness values are
+    // large". At λ=64 (mean τ≈63) it doesn't fully freeze — the low-τ tail
+    // of the staleness distribution still learns — but it must trail
+    // SASGD's gentler 1/τ under identical conditions.
+    let run = |policy: Policy, rho: f32| {
+        let mut cfg = fast_test_config(policy);
+        cfg.clients = 64;
+        cfg.rho = rho;
+        cfg.iters = 2_000;
+        cfg.eval_every = 500;
+        run_experiment(&cfg).unwrap().final_val_loss()
+    };
+    let exp = run(Policy::Exponential, 0.5);
+    let sasgd = run(Policy::Sasgd, 0.0);
+    assert!(
+        exp > sasgd * 1.5,
+        "exponential ({exp:.4}) should clearly trail SASGD ({sasgd:.4})"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// failure injection
+// ---------------------------------------------------------------------------
+
+/// Engine that fails deterministically after `ok_calls` gradients.
+struct FailingEngine {
+    inner: RustMlpEngine,
+    calls: usize,
+    ok_calls: usize,
+}
+
+impl GradientEngine for FailingEngine {
+    fn param_count(&self) -> usize {
+        self.inner.param_count()
+    }
+
+    fn grad(
+        &mut self,
+        theta: &[f32],
+        batch: &Batch<'_>,
+        grad_out: &mut [f32],
+    ) -> anyhow::Result<f32> {
+        self.calls += 1;
+        if self.calls > self.ok_calls {
+            bail!("injected gradient failure at call {}", self.calls);
+        }
+        self.inner.grad(theta, batch, grad_out)
+    }
+}
+
+#[test]
+fn grad_failure_surfaces_and_state_stays_consistent() {
+    let mut cfg = fast_test_config(Policy::Fasgd);
+    cfg.iters = 100;
+    let sizes = vec![784, cfg.mlp_hidden, 10];
+    let init = fasgd::grad::rust_mlp::init_params(cfg.seed, &sizes);
+    let split = fasgd::data::synthetic::generate(
+        cfg.seed, cfg.dataset.train, cfg.dataset.val, cfg.dataset.noise);
+    let server = fasgd::server::build_server(
+        &cfg, init, fasgd::server::UpdateEngine::Rust);
+    let parts = SimParts {
+        server,
+        grad: Box::new(FailingEngine {
+            inner: RustMlpEngine::new(sizes.clone(), cfg.batch),
+            calls: 0,
+            ok_calls: 10,
+        }),
+        eval: Box::new(RustMlpEngine::new(sizes, 64)),
+        data: DataSource::Classif(split),
+    };
+    let mut sim = Simulator::new(cfg, parts).unwrap();
+    let mut errors = 0;
+    for _ in 0..12 {
+        if sim.step().is_err() {
+            errors += 1;
+        }
+    }
+    assert!(errors > 0, "failure should surface");
+    // Server timestamp must match the number of successful pushes (10).
+    assert_eq!(sim.server().timestamp(), 10);
+}
+
+#[test]
+fn mismatched_engine_and_server_rejected() {
+    let cfg = fast_test_config(Policy::Fasgd);
+    let sizes = vec![784, cfg.mlp_hidden, 10];
+    let split = fasgd::data::synthetic::generate(1, 64, 32, 0.3);
+    let parts = SimParts {
+        server: fasgd::server::build_server(
+            &cfg,
+            vec![0.0; 7], // wrong P
+            fasgd::server::UpdateEngine::Rust,
+        ),
+        grad: Box::new(RustMlpEngine::new(sizes.clone(), cfg.batch)),
+        eval: Box::new(RustMlpEngine::new(sizes, 32)),
+        data: DataSource::Classif(split),
+    };
+    assert!(Simulator::new(cfg, parts).is_err());
+}

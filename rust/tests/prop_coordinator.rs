@@ -1,0 +1,153 @@
+//! Property tests over the coordinator (S17): random configurations must
+//! uphold the protocol invariants. proptest is unavailable offline, so this
+//! uses an in-tree mini-harness: seeded random case generation + first
+//! failing case reported with its generating seed (re-run reproducibly).
+
+use fasgd::config::{BandwidthMode, ExperimentConfig, Policy, PushDropMode,
+                    SelectionRule};
+use fasgd::experiments::common::{fast_test_config, run_experiment};
+use fasgd::rng::Xoshiro256pp;
+
+const CASES: u64 = 24;
+
+/// Generate a random (but valid) async experiment config.
+fn arb_config(rng: &mut Xoshiro256pp) -> ExperimentConfig {
+    let policy = match rng.below(4) {
+        0 => Policy::Asgd,
+        1 => Policy::Sasgd,
+        2 => Policy::Exponential,
+        _ => Policy::Fasgd,
+    };
+    let mut cfg = fast_test_config(policy);
+    cfg.seed = rng.next_u64_fast();
+    cfg.clients = 1 + rng.below(24) as usize;
+    cfg.batch = 1 + rng.below(8) as usize;
+    cfg.iters = 100 + rng.below(400);
+    cfg.eval_every = 50 + rng.below(200);
+    cfg.selection = match rng.below(3) {
+        0 => SelectionRule::Uniform,
+        1 => SelectionRule::Heterogeneous { sigma: 0.2 + rng.f64() * 1.5 },
+        _ => SelectionRule::Cooldown {
+            factor: 0.05 + rng.f64() * 0.9,
+            recovery: 1.01 + rng.f64(),
+        },
+    };
+    cfg.bandwidth = match rng.below(3) {
+        0 => BandwidthMode::Always,
+        1 => BandwidthMode::Fixed {
+            k_push: 1 + rng.below(4) as u32,
+            k_fetch: 1 + rng.below(4) as u32,
+        },
+        _ => BandwidthMode::Probabilistic {
+            c_push: rng.f64() * 0.5,
+            c_fetch: rng.f64() * 2.0,
+            eps: 1e-8,
+        },
+    };
+    cfg.push_drop = match rng.below(3) {
+        0 => PushDropMode::ReapplyCached,
+        1 => PushDropMode::Accumulate,
+        _ => PushDropMode::Skip,
+    };
+    cfg.fasgd.inverse_variant = rng.below(2) == 1;
+    cfg
+}
+
+fn for_all_cases(check: impl Fn(&ExperimentConfig, &fasgd::metrics::RunSummary)) {
+    let mut rng = Xoshiro256pp::new(0xFA56D);
+    for case in 0..CASES {
+        let cfg = arb_config(&mut rng);
+        let summary = run_experiment(&cfg).unwrap_or_else(|e| {
+            panic!("case {case} (cfg {cfg:?}) failed to run: {e:#}")
+        });
+        check(&cfg, &summary);
+    }
+}
+
+#[test]
+fn prop_timestamp_and_update_accounting() {
+    for_all_cases(|cfg, s| {
+        // The server timestamp advances once per applied update.
+        assert_eq!(s.server_updates, s.staleness.total(), "cfg {cfg:?}");
+        // Without reapply, updates can't exceed transmitted pushes; with
+        // reapply they can't exceed opportunities.
+        match cfg.push_drop {
+            PushDropMode::ReapplyCached => {
+                assert!(s.server_updates <= s.bandwidth.push_potential)
+            }
+            _ => assert!(s.server_updates <= s.bandwidth.push_copies),
+        }
+    });
+}
+
+#[test]
+fn prop_bandwidth_bounds() {
+    for_all_cases(|cfg, s| {
+        let b = &s.bandwidth;
+        assert!(b.push_copies <= b.push_potential, "cfg {cfg:?}");
+        assert!(b.fetch_copies <= b.fetch_potential, "cfg {cfg:?}");
+        assert_eq!(b.push_potential, cfg.iters, "one push chance per iter");
+        assert_eq!(b.fetch_potential, cfg.iters);
+        if cfg.bandwidth == BandwidthMode::Always {
+            assert_eq!(b.push_copies, b.push_potential);
+            assert_eq!(b.fetch_copies, b.fetch_potential);
+        }
+        if let BandwidthMode::Fixed { k_push, k_fetch } = cfg.bandwidth {
+            // Per-client ceil/floor slack only.
+            let lo = b.push_potential / k_push as u64;
+            assert!(
+                b.push_copies >= lo && b.push_copies <= lo + cfg.clients as u64,
+                "push {} not in [{lo}, {}] cfg {cfg:?}",
+                b.push_copies,
+                lo + cfg.clients as u64
+            );
+            let lo = b.fetch_potential / k_fetch as u64;
+            assert!(
+                b.fetch_copies >= lo
+                    && b.fetch_copies <= lo + cfg.clients as u64
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_staleness_bounded_by_timestamp() {
+    for_all_cases(|cfg, s| {
+        assert!(
+            (s.staleness.max() as u64) < s.server_updates.max(1),
+            "tau_max {} vs T {} cfg {cfg:?}",
+            s.staleness.max(),
+            s.server_updates
+        );
+        assert!(s.staleness.mean() >= 0.0);
+    });
+}
+
+#[test]
+fn prop_losses_finite_and_curves_recorded() {
+    for_all_cases(|cfg, s| {
+        assert!(s.history.evals.len() >= 2, "initial + final eval");
+        for p in &s.history.evals {
+            assert!(p.val_loss.is_finite(), "cfg {cfg:?}");
+            assert!((0.0..=1.0).contains(&p.val_acc));
+            assert!(p.iter <= cfg.iters);
+        }
+    });
+}
+
+#[test]
+fn prop_determinism_spot_checks() {
+    // Re-run a subset of random configs and demand bitwise equality.
+    let mut rng = Xoshiro256pp::new(0xFA56D);
+    for case in 0..6 {
+        let cfg = arb_config(&mut rng);
+        let a = run_experiment(&cfg).unwrap();
+        let b = run_experiment(&cfg).unwrap();
+        let ka: Vec<(u64, f64)> =
+            a.history.evals.iter().map(|p| (p.iter, p.val_loss)).collect();
+        let kb: Vec<(u64, f64)> =
+            b.history.evals.iter().map(|p| (p.iter, p.val_loss)).collect();
+        assert_eq!(ka, kb, "case {case} not deterministic: {cfg:?}");
+        assert_eq!(a.bandwidth, b.bandwidth);
+    }
+}

@@ -1,0 +1,107 @@
+//! The paper's §3 correctness check, done exactly: the sync server's first
+//! barrier must produce bitwise the same parameters as a hand-rolled
+//! big-batch SGD step over the union of the λ clients' minibatches
+//! (gradient averaging order matched to the server's).
+
+use fasgd::config::Policy;
+use fasgd::data::sampler::BatchSampler;
+use fasgd::data::synthetic;
+use fasgd::experiments::common::{build_sim, fast_test_config};
+use fasgd::grad::{rust_mlp, Batch, GradientEngine, RustMlpEngine};
+
+#[test]
+fn first_barrier_matches_manual_bigbatch_step() {
+    let mut cfg = fast_test_config(Policy::Sync);
+    cfg.clients = 4;
+    cfg.batch = 4;
+    cfg.iters = 4; // exactly one barrier
+    cfg.eval_every = 1_000_000;
+
+    // --- run the simulator for one barrier ---
+    let mut sim = build_sim(&cfg).unwrap();
+    for _ in 0..4 {
+        sim.step().unwrap();
+    }
+    assert_eq!(sim.server().timestamp(), 1, "one barrier must have fired");
+    let sim_params = sim.server().params().to_vec();
+
+    // --- reproduce by hand with the same deterministic streams ---
+    let sizes = vec![784, cfg.mlp_hidden, 10];
+    let theta0 = rust_mlp::init_params(cfg.seed, &sizes);
+    let split = synthetic::generate(cfg.seed, cfg.dataset.train,
+                                    cfg.dataset.val, cfg.dataset.noise);
+    let mut engine = RustMlpEngine::new(sizes, cfg.batch);
+    let p = engine.param_count();
+    let mut mean_updates = vec![0.0f32; p];
+    for c in 0..cfg.clients {
+        let mut sampler = BatchSampler::new(
+            cfg.seed, c as u64, split.train.len(), cfg.batch);
+        let (mut x, mut y) = (Vec::new(), Vec::new());
+        sampler.next_batch(&split.train, &mut x, &mut y);
+        let mut grad = vec![0.0f32; p];
+        engine
+            .grad(&theta0, &Batch::Classif { x: &x, y: &y }, &mut grad)
+            .unwrap();
+        // server applies each client's g/λ sequentially (FRED listing)
+        for (m, gval) in mean_updates.iter_mut().zip(&grad) {
+            *m += gval / cfg.clients as f32;
+        }
+    }
+    // NOTE: the server applies per-client axpy in client order; replicate
+    // that exact association for the bitwise comparison.
+    let mut manual = theta0.clone();
+    for c in 0..cfg.clients {
+        let mut sampler = BatchSampler::new(
+            cfg.seed, c as u64, split.train.len(), cfg.batch);
+        let (mut x, mut y) = (Vec::new(), Vec::new());
+        sampler.next_batch(&split.train, &mut x, &mut y);
+        let mut grad = vec![0.0f32; p];
+        engine
+            .grad(&theta0, &Batch::Classif { x: &x, y: &y }, &mut grad)
+            .unwrap();
+        let scale = cfg.alpha / cfg.clients as f32;
+        for (t, gval) in manual.iter_mut().zip(&grad) {
+            *t -= scale * gval;
+        }
+    }
+    assert_eq!(sim_params, manual, "sync barrier != manual big-batch step");
+}
+
+#[test]
+fn sync_iterates_lambda_per_update() {
+    let mut cfg = fast_test_config(Policy::Sync);
+    cfg.clients = 5;
+    cfg.iters = 35;
+    let s = fasgd::experiments::common::run_experiment(&cfg).unwrap();
+    assert_eq!(s.server_updates, 7);
+    assert_eq!(s.staleness.mean(), 0.0);
+}
+
+#[test]
+fn sync_every_client_contributes_each_barrier() {
+    let mut cfg = fast_test_config(Policy::Sync);
+    cfg.clients = 3;
+    cfg.iters = 9;
+    cfg.eval_every = 1_000_000;
+    let mut sim = build_sim(&cfg).unwrap();
+    sim.enable_trace(64);
+    for _ in 0..9 {
+        sim.step().unwrap();
+    }
+    // Between consecutive barrier releases, each client pushes exactly once.
+    let mut pushes_since_release = Vec::new();
+    for ev in sim.trace().events() {
+        match ev {
+            fasgd::sim::Event::Push { client, .. } => {
+                pushes_since_release.push(client);
+            }
+            fasgd::sim::Event::BarrierRelease { .. } => {
+                let mut sorted = pushes_since_release.clone();
+                sorted.sort_unstable();
+                assert_eq!(sorted, vec![0, 1, 2]);
+                pushes_since_release.clear();
+            }
+            _ => {}
+        }
+    }
+}
