@@ -85,5 +85,60 @@ fn main() -> anyhow::Result<()> {
         sim.step().unwrap();
     });
 
+    // --- serial vs parallel dispatcher throughput ---------------------------
+    // The paper-size MLP workload at λ=8: gradient-step throughput of the
+    // serial dispatcher vs the worker pool (acceptance bar: ≥ 2x with 4
+    // workers).
+    let mk_cfg = || {
+        let mut cfg =
+            fasgd::experiments::common::fast_test_config(Policy::Asgd);
+        cfg.clients = 8;
+        cfg.batch = 8;
+        cfg.mlp_hidden = 200; // the paper's 784-200-10
+        cfg.alpha = 0.01;
+        cfg.dataset.train = 4_096;
+        cfg.dataset.val = 512;
+        cfg.iters = u64::MAX >> 1; // advanced manually via step/run_until
+        cfg.eval_every = u64::MAX >> 2;
+        cfg
+    };
+    let iters = fasgd::bench_util::bench_iters(2_000);
+    let warmup = iters / 4;
+
+    let cfg = mk_cfg();
+    let mut serial = fasgd::experiments::common::build_sim(&cfg)?;
+    for _ in 0..warmup {
+        serial.step()?;
+    }
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        serial.step()?;
+    }
+    let serial_sps = iters as f64 / t0.elapsed().as_secs_f64();
+    println!(
+        "dispatcher serial   (mlp lambda=8 mu=8)          {serial_sps:>10.0} steps/s"
+    );
+
+    let mut speedup_at_4 = 0.0;
+    for workers in [2usize, 4, 8] {
+        let mut par =
+            fasgd::experiments::common::build_parallel_sim(&cfg, workers)?;
+        par.run_until(warmup)?;
+        let t0 = std::time::Instant::now();
+        par.run_until(warmup + iters)?;
+        let sps = iters as f64 / t0.elapsed().as_secs_f64();
+        let speedup = sps / serial_sps;
+        if workers == 4 {
+            speedup_at_4 = speedup;
+        }
+        println!(
+            "dispatcher parallel (mlp lambda=8 mu=8, {workers} workers) {sps:>10.0} steps/s  ({speedup:.2}x)"
+        );
+    }
+    println!(
+        "parallel speedup at 4 workers: {speedup_at_4:.2}x {}",
+        if speedup_at_4 >= 2.0 { "(>= 2x target met)" } else { "(below 2x target)" }
+    );
+
     Ok(())
 }

@@ -150,4 +150,21 @@ mod tests {
         let rest = a.remaining_options(&["iters"]);
         assert_eq!(rest, vec![("policy", "asgd")]);
     }
+
+    #[test]
+    fn workers_flag_reaches_config() {
+        // `--workers N` / `--lookahead K` are plain config knobs: they ride
+        // the remaining_options → ExperimentConfig::set path like any other.
+        let a = Args::parse(vec![
+            "train", "--workers", "4", "--lookahead=16", "--lambda", "8",
+        ])
+        .unwrap();
+        let mut cfg = crate::config::ExperimentConfig::default();
+        for (k, v) in a.remaining_options(&[]) {
+            cfg.set(k, v).unwrap();
+        }
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.lookahead, 16);
+        assert_eq!(cfg.clients, 8);
+    }
 }

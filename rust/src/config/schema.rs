@@ -260,6 +260,15 @@ pub struct ExperimentConfig {
     /// Measure true B-Staleness (eq. 3) every this many iterations
     /// (0 = off; costs one extra gradient per probe).
     pub probe_every: u64,
+    /// Gradient worker threads: 1 = the serial dispatcher, N > 1 = the
+    /// parallel deterministic dispatcher with N workers, 0 = one worker
+    /// per available core. Results are bitwise identical across all
+    /// settings (rust/tests/parallel_equivalence.rs).
+    pub workers: usize,
+    /// Parallel mode only: max iterations per pre-drawn schedule window
+    /// (the window also cuts at client repeats / sync barriers to stay
+    /// deterministic; this bounds speculation and buffer footprint).
+    pub lookahead: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -285,6 +294,8 @@ impl Default for ExperimentConfig {
             eval_every: 500,
             log_every: 0,
             probe_every: 0,
+            workers: 1,
+            lookahead: 32,
         }
     }
 }
@@ -321,6 +332,8 @@ impl ExperimentConfig {
             "eval_every" => self.eval_every = value.parse()?,
             "log_every" => self.log_every = value.parse()?,
             "probe_every" => self.probe_every = value.parse()?,
+            "workers" | "jobs" => self.workers = value.parse()?,
+            "lookahead" | "window" => self.lookahead = value.parse()?,
             "push_drop" => self.push_drop = value.parse()?,
             "fasgd.gamma" => self.fasgd.gamma = value.parse()?,
             "fasgd.beta" => self.fasgd.beta = value.parse()?,
@@ -465,10 +478,24 @@ impl ExperimentConfig {
             bail!("AOT artifacts are built with hidden=200; mlp.hidden only applies to grad_engine=rust");
         }
         if self.policy == Policy::Sync && self.bandwidth != BandwidthMode::Always {
-            bail!("bandwidth gating is undefined for synchronous SGD");
+            bail!(
+                "bandwidth gating cannot be combined with policy=sync: a \
+                 dropped push would park the client at the barrier with no \
+                 future unblock and deadlock the scheduler (use \
+                 bandwidth.mode = always, or an async policy)"
+            );
         }
         if self.mlp_hidden == 0 {
             bail!("mlp.hidden must be >= 1");
+        }
+        if self.lookahead == 0 {
+            bail!("lookahead must be >= 1 (it caps the parallel window)");
+        }
+        if self.model == ModelKind::Mlp
+            && self.dataset.val == 0
+            && self.dataset.mnist_dir.is_none()
+        {
+            bail!("dataset.val must be >= 1 (evaluation needs examples)");
         }
         Ok(())
     }
@@ -542,6 +569,51 @@ mod tests {
         c.model = ModelKind::TransformerTiny;
         c.grad_engine = GradEngineKind::RustMlp;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn workers_and_lookahead_knobs() {
+        let mut c = ExperimentConfig::default();
+        assert_eq!(c.workers, 1);
+        c.set("workers", "4").unwrap();
+        c.set("lookahead", "16").unwrap();
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.lookahead, 16);
+        c.validate().unwrap();
+        c.set("jobs", "0").unwrap(); // 0 = auto (one per core)
+        c.validate().unwrap();
+        c.set("lookahead", "0").unwrap();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn sync_with_gating_rejected() {
+        // Regression: policy=sync + a gating bandwidth mode used to reach
+        // the dispatcher, where the first dropped push parked a client at
+        // the barrier forever and eventually panicked the selector with
+        // "all clients blocked".
+        for bandwidth in [
+            BandwidthMode::Fixed { k_push: 2, k_fetch: 1 },
+            BandwidthMode::Probabilistic {
+                c_push: 0.5,
+                c_fetch: 0.0,
+                eps: 1e-8,
+            },
+        ] {
+            let mut c = ExperimentConfig::default();
+            c.policy = Policy::Sync;
+            c.bandwidth = bandwidth;
+            let err = c.validate().unwrap_err();
+            assert!(
+                format!("{err}").contains("deadlock"),
+                "error should explain the deadlock: {err}"
+            );
+        }
+        // sync + always stays valid.
+        let mut c = ExperimentConfig::default();
+        c.policy = Policy::Sync;
+        c.bandwidth = BandwidthMode::Always;
+        c.validate().unwrap();
     }
 
     #[test]

@@ -2,18 +2,20 @@
 
 use std::cell::RefCell;
 use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::config::{ExperimentConfig, GradEngineKind, ModelKind, Policy,
                     UpdateEngineKind};
 use crate::data::{self, corpus};
-use crate::grad::{RustMlpEngine, XlaEvalEngine, XlaGradEngine,
-                  XlaUpdateEngine};
+use crate::grad::{EngineFactory, GradientEngine, RustMlpEngine,
+                  XlaEvalEngine, XlaGradEngine, XlaUpdateEngine};
 use crate::metrics::RunSummary;
 use crate::runtime::Engine;
 use crate::server::{build_server, UpdateEngine};
 use crate::sim::dispatcher::{DataSource, SimParts, Simulator};
+use crate::sim::ParallelSimulator;
 
 thread_local! {
     static ENGINE: RefCell<Option<Rc<Engine>>> = const { RefCell::new(None) };
@@ -52,8 +54,9 @@ fn transformer_model_name(model: ModelKind) -> &'static str {
     }
 }
 
-/// Build the simulator for a config (loading AOT artifacts as needed).
-pub fn build_sim(cfg: &ExperimentConfig) -> Result<Simulator> {
+/// Assemble the engines + data for a config (loading AOT artifacts as
+/// needed). Shared by the serial and parallel launchers.
+pub fn build_parts(cfg: &ExperimentConfig) -> Result<SimParts> {
     cfg.validate()?;
     let parts = match (cfg.model, cfg.grad_engine) {
         (ModelKind::Mlp, GradEngineKind::Xla) => {
@@ -129,14 +132,83 @@ pub fn build_sim(cfg: &ExperimentConfig) -> Result<Simulator> {
         }
         _ => unreachable!("validate() rejects transformer+rust"),
     };
-    Simulator::new(cfg.clone(), parts)
+    Ok(parts)
 }
 
-/// Build and run one experiment end-to-end.
+/// Build the serial simulator for a config.
+pub fn build_sim(cfg: &ExperimentConfig) -> Result<Simulator> {
+    Simulator::new(cfg.clone(), build_parts(cfg)?)
+}
+
+/// Per-worker gradient-engine factory for the parallel dispatcher. The
+/// closure runs inside each worker thread: the pure-rust engine is built
+/// directly; the XLA path opens that thread's own PJRT client via the
+/// thread-local [`shared_engine`] (the published `xla` crate's wrappers
+/// are thread-bound, so engines must never cross threads).
+pub fn engine_factory(cfg: &ExperimentConfig) -> Result<EngineFactory> {
+    cfg.validate()?;
+    let batch = cfg.batch;
+    let factory: EngineFactory = match (cfg.model, cfg.grad_engine) {
+        (ModelKind::Mlp, GradEngineKind::RustMlp) => {
+            let sizes = vec![784, cfg.mlp_hidden, 10];
+            Arc::new(move || {
+                Ok(Box::new(RustMlpEngine::new(sizes.clone(), batch))
+                    as Box<dyn GradientEngine>)
+            })
+        }
+        (model, GradEngineKind::Xla) => {
+            let name = match model {
+                ModelKind::Mlp => "mlp",
+                m => transformer_model_name(m),
+            };
+            Arc::new(move || {
+                let engine = shared_engine()?;
+                let grad = XlaGradEngine::new(&engine, name, batch)
+                    .context("loading grad artifact in worker thread")?;
+                Ok(Box::new(grad) as Box<dyn GradientEngine>)
+            })
+        }
+        _ => unreachable!("validate() rejects transformer+rust"),
+    };
+    Ok(factory)
+}
+
+/// Build the parallel deterministic simulator with `workers` gradient
+/// threads. Bitwise identical to [`build_sim`] + run on the same config.
+pub fn build_parallel_sim(
+    cfg: &ExperimentConfig,
+    workers: usize,
+) -> Result<ParallelSimulator> {
+    let parts = build_parts(cfg)?;
+    let factory = engine_factory(cfg)?;
+    ParallelSimulator::new(cfg.clone(), parts, factory, workers)
+}
+
+/// Resolve `cfg.workers`: 0 = one worker per available core.
+pub fn effective_workers(cfg: &ExperimentConfig) -> usize {
+    match cfg.workers {
+        0 => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+        n => n,
+    }
+}
+
+/// Build and run one experiment end-to-end, choosing the execution mode
+/// from `cfg.workers` (serial for 1, worker pool otherwise — same result
+/// either way).
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunSummary> {
     log::info!("run: {}", cfg.summary());
-    let sim = build_sim(cfg)?;
-    let summary = sim.run()?;
+    let workers = effective_workers(cfg);
+    let summary = if workers > 1 {
+        log::info!(
+            "parallel dispatcher: {workers} workers, lookahead {}",
+            cfg.lookahead
+        );
+        build_parallel_sim(cfg, workers)?.run()?
+    } else {
+        build_sim(cfg)?.run()?
+    };
     log::info!(
         "done: {} final={:.4} best={:.4} mean_tau={:.1} wall={:.1}s",
         summary.name,
@@ -196,6 +268,18 @@ mod tests {
             let summary = run_experiment(&cfg).unwrap();
             assert!(summary.final_val_loss().is_finite(), "{policy:?}");
         }
+    }
+
+    #[test]
+    fn parallel_mode_smoke_matches_serial() {
+        let mut cfg = fast_test_config(Policy::Fasgd);
+        cfg.iters = 400;
+        let serial = run_experiment(&cfg).unwrap();
+        cfg.workers = 4;
+        cfg.lookahead = 8;
+        let parallel = run_experiment(&cfg).unwrap();
+        assert_eq!(serial.history.evals, parallel.history.evals);
+        assert_eq!(serial.server_updates, parallel.server_updates);
     }
 
     #[test]

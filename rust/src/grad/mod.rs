@@ -8,9 +8,11 @@
 //! independent numerical cross-check of the whole AOT pipeline
 //! (rust/tests/runtime_roundtrip.rs).
 
+pub mod pool;
 pub mod rust_mlp;
 pub mod xla;
 
+pub use pool::{EngineFactory, EnginePool, GradResult, GradTask};
 pub use rust_mlp::RustMlpEngine;
 pub use xla::{XlaEvalEngine, XlaGradEngine, XlaUpdateEngine};
 
@@ -23,6 +25,26 @@ pub enum Batch<'a> {
     Classif { x: &'a [f32], y: &'a [i32] },
     /// Language modelling: `i32[b*seq]` row-major token / target windows.
     Lm { tokens: &'a [i32], targets: &'a [i32] },
+}
+
+/// An owned minibatch, for handing work across threads (the parallel
+/// dispatcher draws batches on the coordinator and ships them to gradient
+/// workers). Borrow as a [`Batch`] to run an engine on it.
+#[derive(Debug, Clone)]
+pub enum OwnedBatch {
+    Classif { x: Vec<f32>, y: Vec<i32> },
+    Lm { tokens: Vec<i32>, targets: Vec<i32> },
+}
+
+impl OwnedBatch {
+    pub fn as_batch(&self) -> Batch<'_> {
+        match self {
+            OwnedBatch::Classif { x, y } => Batch::Classif { x, y },
+            OwnedBatch::Lm { tokens, targets } => {
+                Batch::Lm { tokens, targets }
+            }
+        }
+    }
 }
 
 /// Computes stochastic gradients for a fixed minibatch size.

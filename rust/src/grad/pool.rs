@@ -1,0 +1,234 @@
+//! A pool of per-thread gradient engines for the parallel dispatcher.
+//!
+//! Engines are built *inside* each worker thread by an [`EngineFactory`]
+//! closure, so engine types never need to be `Send` — only the factory
+//! does. That matters for the PJRT path: the published `xla` crate's
+//! wrappers are thread-bound raw pointers, but each worker can open its own
+//! thread-local PJRT client (see `experiments::common::shared_engine`).
+//! The pure-rust MLP engine is trivially constructible per thread.
+//!
+//! The pool is a plain fan-out: submit [`GradTask`]s, receive
+//! [`GradResult`]s in completion order (the caller reorders with
+//! [`crate::server::ApplyQueue`] — sequencing is protocol logic, not pool
+//! logic). Channels are unbounded, so neither side ever blocks on the
+//! other mid-window.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::grad::{GradientEngine, OwnedBatch};
+
+/// Builds one gradient engine; called once per worker thread, in that
+/// thread.
+pub type EngineFactory =
+    Arc<dyn Fn() -> Result<Box<dyn GradientEngine>> + Send + Sync>;
+
+/// One speculated iteration: compute the gradient of `batch` at `theta`.
+pub struct GradTask {
+    /// Global iteration sequence number (apply order).
+    pub seq: u64,
+    pub client: usize,
+    /// Snapshot of the client's parameters at schedule time.
+    pub theta: Arc<Vec<f32>>,
+    pub batch: OwnedBatch,
+    /// Recycled gradient buffer (resized by the worker as needed).
+    pub grad_buf: Vec<f32>,
+}
+
+/// A finished task: loss + gradient, plus the batch handed back for the
+/// B-Staleness probe and the buffer for recycling.
+pub struct GradResult {
+    pub seq: u64,
+    pub client: usize,
+    pub loss: f32,
+    pub grad: Vec<f32>,
+    pub batch: OwnedBatch,
+}
+
+pub struct EnginePool {
+    task_tx: Option<Sender<GradTask>>,
+    result_rx: Receiver<Result<GradResult>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl EnginePool {
+    /// Spawn `workers` threads, each lazily building its engine via
+    /// `factory` on its first task.
+    pub fn spawn(workers: usize, factory: EngineFactory) -> Self {
+        let workers = workers.max(1);
+        let (task_tx, task_rx) = channel::<GradTask>();
+        let task_rx = Arc::new(Mutex::new(task_rx));
+        let (result_tx, result_rx) = channel::<Result<GradResult>>();
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let task_rx = Arc::clone(&task_rx);
+            let result_tx = result_tx.clone();
+            let factory = Arc::clone(&factory);
+            let handle = std::thread::Builder::new()
+                .name(format!("grad-worker-{w}"))
+                .spawn(move || worker_loop(task_rx, result_tx, factory))
+                .expect("spawning gradient worker thread");
+            handles.push(handle);
+        }
+        Self { task_tx: Some(task_tx), result_rx, workers: handles }
+    }
+
+    /// Queue one task (never blocks).
+    pub fn submit(&self, task: GradTask) -> Result<()> {
+        self.task_tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(task)
+            .map_err(|_| anyhow!("gradient worker pool is gone"))
+    }
+
+    /// Receive the next finished task (blocks; completion order, not
+    /// submission order).
+    pub fn recv(&self) -> Result<GradResult> {
+        match self.result_rx.recv() {
+            Ok(res) => res,
+            Err(_) => Err(anyhow!(
+                "gradient worker pool disconnected (all workers exited)"
+            )),
+        }
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for EnginePool {
+    fn drop(&mut self) {
+        // Closing the task channel ends every worker's recv loop.
+        self.task_tx.take();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    task_rx: Arc<Mutex<Receiver<GradTask>>>,
+    result_tx: Sender<Result<GradResult>>,
+    factory: EngineFactory,
+) {
+    // Note: no enable_ftz() here. Workers inherit MXCSR from the spawning
+    // (coordinator) thread, so their float semantics match whatever the
+    // serial dispatcher would use on that thread — flipping FTZ only in
+    // workers would break serial/parallel bitwise equality on threads that
+    // never called `util::enable_ftz`.
+    let mut engine: Option<Box<dyn GradientEngine>> = None;
+    loop {
+        // Hold the lock only for the dequeue; `recv` returns immediately
+        // whenever tasks are queued, so the mutex just serializes wakeups.
+        let task = match task_rx.lock() {
+            Ok(rx) => rx.recv(),
+            Err(_) => return, // a sibling worker panicked mid-recv
+        };
+        let Ok(mut task) = task else {
+            return; // pool dropped: no more tasks
+        };
+        if engine.is_none() {
+            match (*factory)() {
+                Ok(e) => engine = Some(e),
+                Err(e) => {
+                    let _ = result_tx.send(Err(
+                        e.context("building worker gradient engine"),
+                    ));
+                    continue;
+                }
+            }
+        }
+        let eng = engine.as_mut().expect("engine just built");
+        task.grad_buf.resize(eng.param_count(), 0.0);
+        let mut grad = std::mem::take(&mut task.grad_buf);
+        let outcome =
+            eng.grad(&task.theta, &task.batch.as_batch(), &mut grad);
+        let msg = match outcome {
+            Ok(loss) => Ok(GradResult {
+                seq: task.seq,
+                client: task.client,
+                loss,
+                grad,
+                batch: task.batch,
+            }),
+            Err(e) => Err(e),
+        };
+        if result_tx.send(msg).is_err() {
+            return; // coordinator is gone
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grad::rust_mlp::{init_params, RustMlpEngine};
+
+    fn mlp_factory(sizes: Vec<usize>, mu: usize) -> EngineFactory {
+        Arc::new(move || {
+            Ok(Box::new(RustMlpEngine::new(sizes.clone(), mu))
+                as Box<dyn GradientEngine>)
+        })
+    }
+
+    #[test]
+    fn pool_matches_inline_engine() {
+        let sizes = vec![6, 5, 3];
+        let mu = 2;
+        let theta = Arc::new(init_params(3, &sizes));
+        let mut rng = crate::rng::stream(9, "pool", 0);
+        let pool = EnginePool::spawn(3, mlp_factory(sizes.clone(), mu));
+        let mut inline = RustMlpEngine::new(sizes.clone(), mu);
+        let p = inline.param_count();
+
+        let mut batches = Vec::new();
+        for _ in 0..8 {
+            let x: Vec<f32> = (0..mu * sizes[0]).map(|_| rng.f32()).collect();
+            let y: Vec<i32> =
+                (0..mu).map(|_| rng.below(3) as i32).collect();
+            batches.push(OwnedBatch::Classif { x, y });
+        }
+        for (i, b) in batches.iter().enumerate() {
+            pool.submit(GradTask {
+                seq: i as u64,
+                client: i,
+                theta: Arc::clone(&theta),
+                batch: b.clone(),
+                grad_buf: Vec::new(),
+            })
+            .unwrap();
+        }
+        let mut results: Vec<GradResult> =
+            (0..batches.len()).map(|_| pool.recv().unwrap()).collect();
+        results.sort_by_key(|r| r.seq);
+        for (r, b) in results.iter().zip(&batches) {
+            let mut want = vec![0.0f32; p];
+            let want_loss =
+                inline.grad(&theta, &b.as_batch(), &mut want).unwrap();
+            assert_eq!(r.loss, want_loss, "seq {}", r.seq);
+            assert_eq!(r.grad, want, "seq {}", r.seq);
+        }
+    }
+
+    #[test]
+    fn factory_errors_surface() {
+        let factory: EngineFactory =
+            Arc::new(|| anyhow::bail!("no engine for you"));
+        let pool = EnginePool::spawn(2, factory);
+        pool.submit(GradTask {
+            seq: 0,
+            client: 0,
+            theta: Arc::new(vec![0.0]),
+            batch: OwnedBatch::Classif { x: vec![], y: vec![] },
+            grad_buf: Vec::new(),
+        })
+        .unwrap();
+        let err = pool.recv().unwrap_err();
+        assert!(format!("{err:#}").contains("no engine for you"));
+    }
+}

@@ -12,9 +12,15 @@
 //! Examples:
 //! ```text
 //! repro train --policy fasgd --lambda 32 --mu 4 --iters 20000
+//! repro train --policy asgd --lambda 8 --workers 4   # parallel dispatcher
 //! repro fig1 --iters 100000 --out results/
 //! repro fig3 --iters 8000 --cs 0,0.1,0.5
 //! ```
+//!
+//! `--workers N` (N > 1, or 0 for one per core) runs the parallel
+//! deterministic dispatcher: gradients for a pre-drawn lookahead window
+//! (`--lookahead K`) are computed on N threads and applied in schedule
+//! order, so results are bitwise identical to `--workers 1`.
 
 use anyhow::{bail, Context, Result};
 
@@ -174,6 +180,7 @@ fn print_help() {
          usage: repro <train|fig1|fig2|fig3|sweep-lr|live|info> [--key value ...]\n\n\
          common flags: --policy <sync|asgd|sasgd|exponential|fasgd>\n\
          \x20                --lambda N --mu N --iters N --alpha F --seed N\n\
+         \x20                --workers N --lookahead K (parallel dispatcher)\n\
          \x20                --config file.toml --out dir/\n\
          see README.md for the full knob list"
     );

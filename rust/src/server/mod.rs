@@ -26,6 +26,9 @@ pub use gradient_cache::GradientCache;
 pub use sasgd::Sasgd;
 pub use sync::SyncSgd;
 
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
 use anyhow::Result;
 
 use crate::config::{ExperimentConfig, Policy};
@@ -81,6 +84,81 @@ pub fn staleness_divisor(server_ts: u64, grad_ts: u64) -> f32 {
     staleness(server_ts, grad_ts).max(1) as f32
 }
 
+/// Reorder buffer in front of the server: accepts `(seq, item)` pairs in
+/// any order and releases items strictly in sequence, so concurrently
+/// computed gradients are applied exactly as the serial schedule would —
+/// the invariant the parallel dispatcher's bitwise-equality guarantee
+/// rests on.
+pub struct ApplyQueue<T> {
+    next_seq: u64,
+    pending: BinaryHeap<SeqEntry<T>>,
+}
+
+struct SeqEntry<T> {
+    seq: u64,
+    item: T,
+}
+
+impl<T> PartialEq for SeqEntry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+
+impl<T> Eq for SeqEntry<T> {}
+
+impl<T> PartialOrd for SeqEntry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for SeqEntry<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want the smallest seq on
+        // top.
+        other.seq.cmp(&self.seq)
+    }
+}
+
+impl<T> ApplyQueue<T> {
+    /// Start at sequence number `first_seq`.
+    pub fn new(first_seq: u64) -> Self {
+        Self { next_seq: first_seq, pending: BinaryHeap::new() }
+    }
+
+    pub fn push(&mut self, seq: u64, item: T) {
+        debug_assert!(seq >= self.next_seq, "seq {seq} already released");
+        self.pending.push(SeqEntry { seq, item });
+    }
+
+    /// The next in-sequence item, if it has arrived.
+    pub fn pop_ready(&mut self) -> Option<T> {
+        if self.pending.peek().map(|e| e.seq) == Some(self.next_seq) {
+            self.next_seq += 1;
+            Some(self.pending.pop().expect("peeked entry").item)
+        } else {
+            None
+        }
+    }
+
+    /// Items buffered out of order.
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// The sequence number the next released item must carry.
+    pub fn next_seq(&self) -> u64 {
+        self.next_seq
+    }
+}
+
+impl<T> Default for ApplyQueue<T> {
+    fn default() -> Self {
+        Self::new(0)
+    }
+}
+
 /// Build the configured policy around an initial parameter vector.
 pub fn build_server(
     cfg: &ExperimentConfig,
@@ -108,6 +186,26 @@ mod tests {
         assert_eq!(staleness(5, 9), 0); // defensive: never negative
         assert_eq!(staleness_divisor(10, 10), 1.0);
         assert_eq!(staleness_divisor(10, 4), 6.0);
+    }
+
+    #[test]
+    fn apply_queue_releases_in_sequence() {
+        let mut q = ApplyQueue::new(10);
+        q.push(12, "c");
+        q.push(14, "e");
+        assert!(q.pop_ready().is_none());
+        q.push(10, "a");
+        assert_eq!(q.pop_ready(), Some("a"));
+        assert!(q.pop_ready().is_none());
+        q.push(11, "b");
+        assert_eq!(q.pop_ready(), Some("b"));
+        assert_eq!(q.pop_ready(), Some("c"));
+        assert!(q.pop_ready().is_none());
+        q.push(13, "d");
+        assert_eq!(q.pop_ready(), Some("d"));
+        assert_eq!(q.pop_ready(), Some("e"));
+        assert_eq!(q.pending_len(), 0);
+        assert_eq!(q.next_seq(), 15);
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! Simulated client state.
 
+use std::sync::Arc;
+
 use crate::data::sampler::{BatchSampler, WindowSampler};
 
 /// The gradient accumulator for the `PushDropMode::Accumulate` variant
@@ -51,8 +53,11 @@ pub enum SamplerKind {
 
 /// One simulated client (model replica).
 pub struct ClientState {
-    /// The client's parameter copy θ_j.
-    pub theta: Vec<f32>,
+    /// The client's parameter copy θ_j. Behind an `Arc` so the parallel
+    /// dispatcher can hand a snapshot to a gradient worker without copying
+    /// P floats per task (a fetch replaces the whole Arc; a barrier
+    /// release shares one snapshot across all λ clients).
+    pub theta: Arc<Vec<f32>>,
     /// Timestamp j of that copy.
     pub ts: u64,
     pub sampler: SamplerKind,

@@ -1,463 +1,9 @@
-//! The simulator dispatcher: one iteration = select → grad → push-gate →
-//! server apply → fetch-gate → metrics (paper §2.1 protocol + §2.3 gating).
+//! Compatibility shim: the dispatcher was split into
+//! [`crate::sim::protocol`] (shared protocol core),
+//! [`crate::sim::serial`] (the original one-iteration-at-a-time driver)
+//! and [`crate::sim::parallel`] (the worker-pool driver). Existing imports
+//! of `sim::dispatcher::{DataSource, SimParts, Simulator}` keep working.
 
-use std::time::Instant;
-
-use anyhow::{bail, Result};
-
-use crate::bandwidth::{BandwidthAccounting, BandwidthPolicy, Direction};
-use crate::config::{BandwidthMode, ExperimentConfig, Policy, PushDropMode};
-use crate::data::{corpus::Corpus, sampler::{BatchSampler, WindowSampler},
-                  Split};
-use crate::grad::{Batch, EvalEngine, GradientEngine};
-use crate::metrics::{EvalPoint, History, RunSummary, StalenessHistogram};
-use crate::rng;
-use crate::server::{GradientCache, Server};
-use crate::sim::client::{Accumulator, ClientState, SamplerKind};
-use crate::sim::probe::{ProbeLog, ProbeRecord};
-use crate::sim::selection::Selector;
-use crate::sim::trace::{Event, Trace};
-
-/// The data a run trains/evaluates on.
-pub enum DataSource {
-    Classif(Split),
-    Lm { corpus: Corpus, seq: usize },
-}
-
-/// Engines assembled by the launcher (experiments::common) so the simulator
-/// itself never touches PJRT directly — pure-rust test runs need no
-/// artifacts at all.
-pub struct SimParts {
-    pub server: Box<dyn Server>,
-    pub grad: Box<dyn GradientEngine>,
-    pub eval: Box<dyn EvalEngine>,
-    pub data: DataSource,
-}
-
-/// FRED-rs: the deterministic training-cluster simulator.
-pub struct Simulator {
-    cfg: ExperimentConfig,
-    server: Box<dyn Server>,
-    grad_engine: Box<dyn GradientEngine>,
-    eval_engine: Box<dyn EvalEngine>,
-    data: DataSource,
-    clients: Vec<ClientState>,
-    blocked: Vec<bool>,
-    selector: Selector,
-    bw: BandwidthPolicy,
-    acc: BandwidthAccounting,
-    cache: Option<GradientCache>,
-    history: History,
-    staleness: StalenessHistogram,
-    trace: Trace,
-    iter: u64,
-    server_updates: u64,
-    next_eval_ts: u64,
-    /// Every N iterations, measure the true B-Staleness Γ (eq. 3) by
-    /// re-running the probed minibatch at the server parameters. 0 = off.
-    probe_every: u64,
-    probes: ProbeLog,
-    // reusable buffers (hot loop stays allocation-free)
-    grad_buf: Vec<f32>,
-    probe_buf: Vec<f32>,
-    x_buf: Vec<f32>,
-    y_buf: Vec<i32>,
-}
-
-impl Simulator {
-    /// Assemble a simulator from config + engines.
-    pub fn new(cfg: ExperimentConfig, parts: SimParts) -> Result<Self> {
-        cfg.validate()?;
-        let p = parts.grad.param_count();
-        if parts.server.params().len() != p {
-            bail!(
-                "server P={} but grad engine P={p}",
-                parts.server.params().len()
-            );
-        }
-        let lambda = cfg.clients;
-        let init = parts.server.params().to_vec();
-        let accumulate = cfg.push_drop == PushDropMode::Accumulate
-            && cfg.bandwidth != BandwidthMode::Always;
-        let mut clients = Vec::with_capacity(lambda);
-        for c in 0..lambda {
-            let sampler = match &parts.data {
-                DataSource::Classif(split) => SamplerKind::Classif(
-                    BatchSampler::new(cfg.seed, c as u64, split.train.len(),
-                                      cfg.batch),
-                ),
-                DataSource::Lm { corpus, seq } => SamplerKind::Lm(
-                    WindowSampler::new(cfg.seed, c as u64, corpus, *seq,
-                                       cfg.batch),
-                ),
-            };
-            clients.push(ClientState {
-                theta: init.clone(),
-                ts: 0,
-                sampler,
-                accum: accumulate.then(|| Accumulator::new(p)),
-                steps: 0,
-            });
-        }
-        // The paper's gradient cache exists only when pushes can be dropped
-        // and the policy is re-apply (its memory cost is part of the story).
-        let cache = (cfg.bandwidth != BandwidthMode::Always
-            && cfg.push_drop == PushDropMode::ReapplyCached)
-            .then(|| GradientCache::new(lambda));
-        let selector = Selector::new(
-            cfg.selection.clone(),
-            lambda,
-            rng::stream(cfg.seed, "dispatcher", 0),
-        );
-        let bw = BandwidthPolicy::new(
-            cfg.bandwidth.clone(),
-            lambda,
-            rng::stream(cfg.seed, "bandwidth", 0),
-        );
-        let acc = BandwidthAccounting::new(p as u64 * 4);
-        Ok(Self {
-            blocked: vec![false; lambda],
-            selector,
-            bw,
-            acc,
-            cache,
-            history: History::new(),
-            staleness: StalenessHistogram::new(256),
-            trace: Trace::disabled(),
-            iter: 0,
-            server_updates: 0,
-            next_eval_ts: cfg.eval_every,
-            probe_every: cfg.probe_every,
-            probes: ProbeLog::default(),
-            grad_buf: vec![0.0; p],
-            probe_buf: Vec::new(),
-            x_buf: Vec::new(),
-            y_buf: Vec::new(),
-            server: parts.server,
-            grad_engine: parts.grad,
-            eval_engine: parts.eval,
-            data: parts.data,
-            clients,
-            cfg,
-        })
-    }
-
-    /// Enable the protocol trace (ring buffer of `cap` events).
-    pub fn enable_trace(&mut self, cap: usize) {
-        self.trace = Trace::new(cap);
-    }
-
-    /// Enable the B-Staleness probe every `every` iterations.
-    pub fn enable_probe(&mut self, every: u64) {
-        self.probe_every = every;
-    }
-
-    pub fn probes(&self) -> &ProbeLog {
-        &self.probes
-    }
-
-    pub fn trace(&self) -> &Trace {
-        &self.trace
-    }
-
-    pub fn server(&self) -> &dyn Server {
-        self.server.as_ref()
-    }
-
-    pub fn iterations(&self) -> u64 {
-        self.iter
-    }
-
-    /// One iteration: one client computes one stochastic gradient.
-    pub fn step(&mut self) -> Result<()> {
-        let l = self.selector.pick(&self.blocked);
-        self.selector.on_selected(l);
-        self.selector.step_recover();
-        self.trace.record(Event::Selected { iter: self.iter, client: l });
-
-        // 1. Client computes its gradient at its (possibly stale) θ_j.
-        let loss = {
-            let client = &mut self.clients[l];
-            client.steps += 1;
-            match (&mut client.sampler, &self.data) {
-                (SamplerKind::Classif(s), DataSource::Classif(split)) => {
-                    s.next_batch(&split.train, &mut self.x_buf, &mut self.y_buf);
-                    let batch =
-                        Batch::Classif { x: &self.x_buf, y: &self.y_buf };
-                    self.grad_engine.grad(&client.theta, &batch,
-                                          &mut self.grad_buf)?
-                }
-                (SamplerKind::Lm(s), DataSource::Lm { corpus, .. }) => {
-                    let mut tokens = std::mem::take(&mut self.y_buf);
-                    // reuse y_buf for tokens; targets in a scratch vec
-                    let mut targets = Vec::new();
-                    s.next_batch(corpus, &mut tokens, &mut targets);
-                    let batch = Batch::Lm {
-                        tokens: &tokens,
-                        targets: &targets,
-                    };
-                    let loss = self.grad_engine.grad(
-                        &client.theta, &batch, &mut self.grad_buf)?;
-                    self.y_buf = tokens;
-                    loss
-                }
-                _ => bail!("sampler/data kind mismatch"),
-            }
-        };
-        self.history.record_train_loss(loss as f64);
-        self.iter += 1;
-        let client_ts = self.clients[l].ts;
-
-        // B-Staleness probe (eq. 3): recompute the same minibatch at the
-        // server's θ_T and measure Γ = ‖Δθ^l − Δθ_T‖. Instrumentation only;
-        // classification batches (the x/y buffers are still live here).
-        if self.probe_every > 0
-            && self.iter % self.probe_every == 0
-            && matches!(self.data, DataSource::Classif(_))
-        {
-            if self.probe_buf.len() != self.grad_buf.len() {
-                self.probe_buf = vec![0.0; self.grad_buf.len()];
-            }
-            let batch = Batch::Classif { x: &self.x_buf, y: &self.y_buf };
-            self.grad_engine.grad(
-                self.server.params(),
-                &batch,
-                &mut self.probe_buf,
-            )?;
-            self.probes.push(ProbeRecord {
-                iter: self.iter,
-                tau: crate::server::staleness(
-                    self.server.timestamp(),
-                    client_ts,
-                ),
-                b_staleness: crate::tensor::b_staleness(
-                    &self.grad_buf,
-                    &self.probe_buf,
-                ),
-                grad_norm: crate::tensor::l2_norm(&self.grad_buf),
-                v_mean: self.server.v_mean(),
-            });
-        }
-
-        // 2. Push opportunity (paper §2.3 gate; Always mode always fires).
-        let v_mean = self.server.v_mean();
-        let push = self.bw.decide(Direction::Push, l, v_mean);
-        self.acc.record_push(push);
-        self.trace.record(Event::Push {
-            iter: self.iter,
-            client: l,
-            transmitted: push,
-        });
-
-        let mut outcome = None;
-        if push {
-            // Accumulate mode folds any unsent gradients into this push.
-            let acc_state = self.clients[l].accum.as_mut();
-            if let Some(a) = acc_state.filter(|a| !a.is_empty()) {
-                let (mean, ts) = a.flush_with(&self.grad_buf, client_ts);
-                outcome = Some(self.server.apply_update(&mean, ts, l)?);
-                if let Some(cache) = &mut self.cache {
-                    cache.store(l, &mean, ts);
-                }
-            } else {
-                outcome =
-                    Some(self.server.apply_update(&self.grad_buf, client_ts, l)?);
-                if let Some(cache) = &mut self.cache {
-                    cache.store(l, &self.grad_buf, client_ts);
-                }
-            }
-        } else {
-            match self.cfg.push_drop {
-                PushDropMode::ReapplyCached => {
-                    // Paper's choice: re-apply this client's last gradient.
-                    let cached = self
-                        .cache
-                        .as_ref()
-                        .and_then(|c| c.get(l))
-                        .map(|(g, ts)| (g.to_vec(), ts));
-                    if let Some((g, ts)) = cached {
-                        let out = self.server.apply_update(&g, ts, l)?;
-                        self.trace.record(Event::Applied {
-                            iter: self.iter,
-                            client: l,
-                            tau: out.staleness.unwrap_or(0),
-                            reapplied: true,
-                        });
-                        outcome = Some(out);
-                    }
-                }
-                PushDropMode::Accumulate => {
-                    if let Some(a) = self.clients[l].accum.as_mut() {
-                        a.add(&self.grad_buf, client_ts);
-                    }
-                }
-                PushDropMode::Skip => {}
-            }
-        }
-
-        if let Some(out) = outcome {
-            if out.applied {
-                self.server_updates += 1;
-            }
-            if let Some(tau) = out.staleness {
-                self.staleness.record(tau);
-                if push {
-                    self.trace.record(Event::Applied {
-                        iter: self.iter,
-                        client: l,
-                        tau,
-                        reapplied: false,
-                    });
-                }
-            }
-            // 3a. Sync barrier release: everyone fetches θ_{T}.
-            if out.unblock_all {
-                let params = self.server.params().to_vec();
-                let ts = self.server.timestamp();
-                for (c, b) in
-                    self.clients.iter_mut().zip(self.blocked.iter_mut())
-                {
-                    c.theta.copy_from_slice(&params);
-                    c.ts = ts;
-                    *b = false; // barrier over: everyone schedulable again
-                }
-                self.trace.record(Event::BarrierRelease {
-                    iter: self.iter,
-                    server_ts: ts,
-                });
-            }
-        }
-
-        if self.cfg.policy == Policy::Sync {
-            // Parked until the barrier releases (unless it just did).
-            if outcome.map_or(true, |o| !o.unblock_all) {
-                self.blocked[l] = true;
-            }
-        } else {
-            // 3b. Fetch opportunity.
-            let fetch = self.bw.decide(Direction::Fetch, l, self.server.v_mean());
-            self.acc.record_fetch(fetch);
-            self.trace.record(Event::Fetch {
-                iter: self.iter,
-                client: l,
-                transmitted: fetch,
-            });
-            if fetch {
-                let client = &mut self.clients[l];
-                client.theta.copy_from_slice(self.server.params());
-                client.ts = self.server.timestamp();
-            }
-        }
-
-        // 4. Validation cadence (in server updates, like the paper's plots).
-        if self.server.timestamp() >= self.next_eval_ts {
-            self.run_eval()?;
-            while self.next_eval_ts <= self.server.timestamp() {
-                self.next_eval_ts += self.cfg.eval_every;
-            }
-        }
-
-        if self.cfg.log_every > 0 && self.iter % self.cfg.log_every == 0 {
-            log::info!(
-                "{}: iter {}/{} T={} train_ema={:.4}",
-                self.cfg.name,
-                self.iter,
-                self.cfg.iters,
-                self.server.timestamp(),
-                self.history.train_ema().unwrap_or(f64::NAN)
-            );
-        }
-        Ok(())
-    }
-
-    /// Evaluate validation cost on the whole val set (chunked).
-    fn run_eval(&mut self) -> Result<()> {
-        let (loss, acc) = match &self.data {
-            DataSource::Classif(split) => {
-                let b = self.eval_engine.batch_size();
-                let chunks = (split.val.len() / b).max(1);
-                let mut tot_loss = 0.0f64;
-                let mut tot_acc = 0.0f64;
-                for ch in 0..chunks {
-                    let idx: Vec<usize> = (ch * b
-                        ..((ch + 1) * b).min(split.val.len()))
-                        .collect();
-                    if idx.len() < b {
-                        break;
-                    }
-                    let (x, y) = split.val.gather(&idx);
-                    let (l, a) = self.eval_engine.eval(
-                        self.server.params(),
-                        &Batch::Classif { x: &x, y: &y },
-                    )?;
-                    tot_loss += l as f64;
-                    tot_acc += a as f64;
-                }
-                (tot_loss / chunks as f64, tot_acc / chunks as f64)
-            }
-            DataSource::Lm { corpus, seq } => {
-                // Deterministic strided eval windows.
-                let b = self.eval_engine.batch_size();
-                let rounds = 4usize;
-                let need = b * rounds;
-                let stride = (corpus.windows(*seq) / need.max(1)).max(1);
-                let mut tot_loss = 0.0f64;
-                let mut tot_acc = 0.0f64;
-                let mut done = 0usize;
-                for r in 0..rounds {
-                    let mut tokens = Vec::with_capacity(b * seq);
-                    let mut targets = Vec::with_capacity(b * seq);
-                    for k in 0..b {
-                        let start =
-                            ((r * b + k) * stride) % corpus.windows(*seq);
-                        let (t, g) = corpus.window(start, *seq);
-                        tokens.extend_from_slice(t);
-                        targets.extend_from_slice(g);
-                    }
-                    let (l, a) = self.eval_engine.eval(
-                        self.server.params(),
-                        &Batch::Lm { tokens: &tokens, targets: &targets },
-                    )?;
-                    tot_loss += l as f64;
-                    tot_acc += a as f64;
-                    done += 1;
-                }
-                (tot_loss / done as f64, tot_acc / done as f64)
-            }
-        };
-        self.history.record_eval(EvalPoint {
-            iter: self.iter,
-            server_ts: self.server.timestamp(),
-            val_loss: loss,
-            val_acc: acc,
-        });
-        self.trace.record(Event::Eval {
-            iter: self.iter,
-            server_ts: self.server.timestamp(),
-        });
-        Ok(())
-    }
-
-    /// Run to `cfg.iters`, with an initial and a final evaluation.
-    pub fn run(mut self) -> Result<RunSummary> {
-        let start = Instant::now();
-        self.run_eval()?; // the t=0 point every curve in the paper has
-        while self.iter < self.cfg.iters {
-            self.step()?;
-        }
-        self.run_eval()?;
-        Ok(RunSummary {
-            name: self.cfg.name.clone(),
-            policy: self.server.name().to_string(),
-            clients: self.cfg.clients,
-            batch: self.cfg.batch,
-            iters: self.iter,
-            history: self.history,
-            staleness: self.staleness,
-            bandwidth: self.acc.report(),
-            wall_secs: start.elapsed().as_secs_f64(),
-            server_updates: self.server_updates,
-            probes: self.probes,
-        })
-    }
-}
+pub use crate::sim::parallel::ParallelSimulator;
+pub use crate::sim::protocol::{DataSource, SimParts};
+pub use crate::sim::serial::Simulator;

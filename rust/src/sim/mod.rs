@@ -1,23 +1,40 @@
 //! FRED-rs (S1): the paper's deterministic single-node simulator of
 //! distributed training, reimplemented as the rust coordinator core.
 //!
-//! A [`dispatcher::Simulator`] owns the server policy, the λ simulated
-//! clients, the client-selection rule, the bandwidth gate, and the metrics
-//! sinks, and advances one *iteration* (one client gradient computation —
-//! the paper's x-axis unit) per [`dispatcher::Simulator::step`].
+//! The simulator is split into a shared protocol core and two execution
+//! drivers over it:
+//!
+//! * [`protocol`] — everything one iteration does after its gradient
+//!   exists (push-gate → server apply → barrier/fetch → metrics → eval
+//!   cadence), plus run assembly;
+//! * [`serial`] — [`Simulator`]: one client gradient per
+//!   [`Simulator::step`] on the calling thread (the paper's x-axis unit);
+//! * [`parallel`] — [`ParallelSimulator`]: pre-draws a deterministic
+//!   selection window ([`selection::SchedulePlanner`]), computes the
+//!   window's gradients concurrently on a
+//!   [`crate::grad::EnginePool`], and applies them strictly in schedule
+//!   order ([`crate::server::ApplyQueue`]).
 //!
 //! Determinism: all randomness flows from named [`crate::rng`] streams of
 //! the master seed; gradient engines and the data generators are
 //! deterministic; therefore same config ⇒ bitwise-identical loss curves
-//! (rust/tests/determinism.rs).
+//! (rust/tests/determinism.rs) — and the parallel driver makes every
+//! protocol decision in serial schedule order, so serial and parallel
+//! runs of one config are bitwise identical too
+//! (rust/tests/parallel_equivalence.rs).
 
 pub mod client;
 pub mod dispatcher;
+pub mod parallel;
 pub mod probe;
+pub mod protocol;
 pub mod selection;
+pub mod serial;
 pub mod trace;
 
-pub use dispatcher::Simulator;
+pub use parallel::ParallelSimulator;
 pub use probe::{ProbeLog, ProbeRecord};
-pub use selection::Selector;
+pub use protocol::{DataSource, SimParts};
+pub use selection::{SchedulePlanner, Selector};
+pub use serial::Simulator;
 pub use trace::{Event, Trace};

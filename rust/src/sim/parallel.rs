@@ -1,0 +1,197 @@
+//! The parallel deterministic dispatcher.
+//!
+//! Execution model: a [`SchedulePlanner`] pre-draws the selection schedule
+//! for a lookahead window of up to `cfg.lookahead` iterations (cut so that
+//! no client's θ_j can change inside the window — see the planner docs),
+//! the coordinator snapshots each scheduled client's parameters and
+//! minibatch, an [`EnginePool`] computes the window's gradients
+//! concurrently on per-thread engines, and an [`ApplyQueue`] releases the
+//! results strictly in schedule order into the shared
+//! [`ProtocolCore`](crate::sim::protocol) — the same code the serial
+//! dispatcher runs. Every protocol decision (bandwidth RNG draws, server
+//! applies, eval cadence) therefore happens in the identical order, and a
+//! parallel run is bitwise identical to a serial run of the same config
+//! (rust/tests/parallel_equivalence.rs).
+//!
+//! Only the embarrassingly parallel part — gradient computation, the hot
+//! path that scales with λ — leaves the coordinator thread.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::{ExperimentConfig, Policy};
+use crate::grad::{EngineFactory, EnginePool, GradResult, GradTask,
+                  GradientEngine, OwnedBatch};
+use crate::metrics::RunSummary;
+use crate::rng;
+use crate::server::{ApplyQueue, Server};
+use crate::sim::probe::ProbeLog;
+use crate::sim::protocol::{ProtocolCore, SimParts};
+use crate::sim::selection::{SchedulePlanner, Selector};
+use crate::sim::trace::Trace;
+
+/// FRED-rs in worker-pool mode: bitwise identical to the serial
+/// [`crate::sim::Simulator`], `--workers` times wider on the gradient path.
+pub struct ParallelSimulator {
+    core: ProtocolCore,
+    planner: SchedulePlanner,
+    pool: EnginePool,
+    /// Coordinator-side engine (from `SimParts`); used for the B-Staleness
+    /// probe's recomputation at server parameters.
+    probe_engine: Box<dyn GradientEngine>,
+    queue: ApplyQueue<GradResult>,
+    /// Recycled gradient / batch buffers (bounded by the in-flight window
+    /// size) — the steady-state fan-out loop allocates nothing.
+    grad_free: Vec<Vec<f32>>,
+    batch_free: Vec<OwnedBatch>,
+    lookahead: usize,
+    next_seq: u64,
+}
+
+impl ParallelSimulator {
+    /// Assemble from config + engines + a per-worker engine factory.
+    /// `workers` is the worker thread count (≥ 1; the coordinator itself
+    /// only sequences and applies).
+    pub fn new(
+        cfg: ExperimentConfig,
+        parts: SimParts,
+        factory: EngineFactory,
+        workers: usize,
+    ) -> Result<Self> {
+        let selector = Selector::new(
+            cfg.selection.clone(),
+            cfg.clients,
+            rng::stream(cfg.seed, "dispatcher", 0),
+        );
+        let planner = SchedulePlanner::new(
+            selector,
+            cfg.clients,
+            cfg.policy == Policy::Sync,
+        );
+        let lookahead = cfg.lookahead;
+        let (core, probe_engine) = ProtocolCore::new(cfg, parts)?;
+        Ok(Self {
+            core,
+            planner,
+            pool: EnginePool::spawn(workers, factory),
+            probe_engine,
+            queue: ApplyQueue::new(0),
+            grad_free: Vec::new(),
+            batch_free: Vec::new(),
+            lookahead,
+            next_seq: 0,
+        })
+    }
+
+    /// Enable the protocol trace (ring buffer of `cap` events).
+    pub fn enable_trace(&mut self, cap: usize) {
+        self.core.trace = Trace::new(cap);
+    }
+
+    /// Enable the B-Staleness probe every `every` iterations.
+    pub fn enable_probe(&mut self, every: u64) {
+        self.core.probe_every = every;
+    }
+
+    pub fn probes(&self) -> &ProbeLog {
+        &self.core.probes
+    }
+
+    pub fn trace(&self) -> &Trace {
+        &self.core.trace
+    }
+
+    pub fn server(&self) -> &dyn Server {
+        self.core.server.as_ref()
+    }
+
+    pub fn iterations(&self) -> u64 {
+        self.core.iter
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.pool.worker_count()
+    }
+
+    /// Plan one window, compute its gradients concurrently, apply its
+    /// iterations in schedule order. Advances `iter` by the window length
+    /// (≥ 1, ≤ min(lookahead, remaining-to-target)).
+    fn run_window(&mut self, target_iter: u64) -> Result<()> {
+        let remaining = target_iter.saturating_sub(self.core.iter);
+        let max_len = (self.lookahead as u64).min(remaining).max(1) as usize;
+        let window = self.planner.next_window(max_len);
+
+        // Fan out: per-iteration parameter + minibatch snapshots. Distinct
+        // clients per window ⇒ each θ snapshot is exactly the θ_j the
+        // serial dispatcher would see at that iteration.
+        for &l in &window {
+            let recycled = self.batch_free.pop();
+            let batch = self.core.draw_batch(l, recycled)?;
+            let theta = Arc::clone(&self.core.clients[l].theta);
+            let grad_buf = self.grad_free.pop().unwrap_or_default();
+            self.pool.submit(GradTask {
+                seq: self.next_seq,
+                client: l,
+                theta,
+                batch,
+                grad_buf,
+            })?;
+            self.next_seq += 1;
+        }
+
+        // Fan in: complete iterations strictly in schedule order as their
+        // gradients land.
+        for _ in 0..window.len() {
+            let res = self.pool.recv()?;
+            self.queue.push(res.seq, res);
+            while let Some(r) = self.queue.pop_ready() {
+                self.apply_result(r)?;
+            }
+        }
+        debug_assert_eq!(self.queue.pending_len(), 0);
+        Ok(())
+    }
+
+    fn apply_result(&mut self, r: GradResult) -> Result<()> {
+        let probe_xy = match &r.batch {
+            OwnedBatch::Classif { x, y } => {
+                Some((x.as_slice(), y.as_slice()))
+            }
+            OwnedBatch::Lm { .. } => None,
+        };
+        self.core.complete_iteration(
+            r.client,
+            r.loss,
+            &r.grad,
+            probe_xy,
+            self.probe_engine.as_mut(),
+        )?;
+        self.grad_free.push(r.grad);
+        self.batch_free.push(r.batch);
+        Ok(())
+    }
+
+    /// Advance to exactly `target_iter` iterations (clamped to
+    /// `cfg.iters`), window by window. Exposed so tests and benches can
+    /// compare intermediate state against a stepped serial simulator.
+    pub fn run_until(&mut self, target_iter: u64) -> Result<()> {
+        let target = target_iter.min(self.core.cfg.iters);
+        while self.core.iter < target {
+            self.run_window(target)?;
+        }
+        Ok(())
+    }
+
+    /// Run to `cfg.iters`, with an initial and a final evaluation.
+    pub fn run(mut self) -> Result<RunSummary> {
+        let start = Instant::now();
+        self.core.run_eval()?; // the t=0 point every curve in the paper has
+        while self.core.iter < self.core.cfg.iters {
+            self.run_window(self.core.cfg.iters)?;
+        }
+        self.core.run_eval()?;
+        Ok(self.core.into_summary(start.elapsed().as_secs_f64()))
+    }
+}

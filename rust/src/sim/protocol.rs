@@ -1,0 +1,468 @@
+//! The shared protocol core of the simulator: everything that happens to
+//! one iteration *after* its gradient exists (push-gate → server apply →
+//! barrier/fetch → metrics → eval cadence), plus validation evaluation.
+//!
+//! Both execution modes drive this core:
+//! * [`crate::sim::serial::Simulator`] — one iteration at a time, gradient
+//!   computed inline (the original single-core path);
+//! * [`crate::sim::parallel::ParallelSimulator`] — gradients for a
+//!   pre-drawn window of iterations computed concurrently on an
+//!   [`crate::grad::EnginePool`], then completed here strictly in schedule
+//!   order.
+//!
+//! Because every protocol decision (bandwidth gate draws, server applies,
+//! eval cadence) happens inside [`ProtocolCore::complete_iteration`] in
+//! schedule order, the two modes are bitwise identical
+//! (rust/tests/parallel_equivalence.rs).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::bandwidth::{BandwidthAccounting, BandwidthPolicy, Direction};
+use crate::config::{BandwidthMode, ExperimentConfig, Policy, PushDropMode};
+use crate::data::{corpus::Corpus, sampler::{BatchSampler, WindowSampler},
+                  Split};
+use crate::grad::{Batch, EvalEngine, GradientEngine, OwnedBatch};
+use crate::metrics::{EvalPoint, History, RunSummary, StalenessHistogram};
+use crate::server::{GradientCache, Server};
+use crate::sim::client::{Accumulator, ClientState, SamplerKind};
+use crate::sim::probe::{ProbeLog, ProbeRecord};
+use crate::sim::trace::{Event, Trace};
+
+/// The data a run trains/evaluates on.
+pub enum DataSource {
+    Classif(Split),
+    Lm { corpus: Corpus, seq: usize },
+}
+
+/// Engines assembled by the launcher (experiments::common) so the simulator
+/// itself never touches PJRT directly — pure-rust test runs need no
+/// artifacts at all.
+pub struct SimParts {
+    pub server: Box<dyn Server>,
+    pub grad: Box<dyn GradientEngine>,
+    pub eval: Box<dyn EvalEngine>,
+    pub data: DataSource,
+}
+
+/// All simulator state except the gradient engine(s) and the selection
+/// machinery, which differ between the serial and parallel drivers.
+pub(crate) struct ProtocolCore {
+    pub(crate) cfg: ExperimentConfig,
+    pub(crate) server: Box<dyn Server>,
+    pub(crate) eval_engine: Box<dyn EvalEngine>,
+    pub(crate) data: DataSource,
+    pub(crate) clients: Vec<ClientState>,
+    pub(crate) blocked: Vec<bool>,
+    pub(crate) bw: BandwidthPolicy,
+    pub(crate) acc: BandwidthAccounting,
+    pub(crate) cache: Option<GradientCache>,
+    pub(crate) history: History,
+    pub(crate) staleness: StalenessHistogram,
+    pub(crate) trace: Trace,
+    pub(crate) iter: u64,
+    pub(crate) server_updates: u64,
+    pub(crate) next_eval_ts: u64,
+    /// Every N iterations, measure the true B-Staleness Γ (eq. 3) by
+    /// re-running the probed minibatch at the server parameters. 0 = off.
+    pub(crate) probe_every: u64,
+    pub(crate) probes: ProbeLog,
+    pub(crate) probe_buf: Vec<f32>,
+}
+
+impl ProtocolCore {
+    /// Assemble the core; returns it together with the gradient engine the
+    /// launcher supplied (the serial driver's engine / the parallel
+    /// driver's probe engine).
+    pub(crate) fn new(
+        cfg: ExperimentConfig,
+        parts: SimParts,
+    ) -> Result<(Self, Box<dyn GradientEngine>)> {
+        cfg.validate()?;
+        let p = parts.grad.param_count();
+        if parts.server.params().len() != p {
+            bail!(
+                "server P={} but grad engine P={p}",
+                parts.server.params().len()
+            );
+        }
+        let lambda = cfg.clients;
+        let init = Arc::new(parts.server.params().to_vec());
+        let accumulate = cfg.push_drop == PushDropMode::Accumulate
+            && cfg.bandwidth != BandwidthMode::Always;
+        let mut clients = Vec::with_capacity(lambda);
+        for c in 0..lambda {
+            let sampler = match &parts.data {
+                DataSource::Classif(split) => SamplerKind::Classif(
+                    BatchSampler::new(cfg.seed, c as u64, split.train.len(),
+                                      cfg.batch),
+                ),
+                DataSource::Lm { corpus, seq } => SamplerKind::Lm(
+                    WindowSampler::new(cfg.seed, c as u64, corpus, *seq,
+                                       cfg.batch),
+                ),
+            };
+            clients.push(ClientState {
+                theta: init.clone(),
+                ts: 0,
+                sampler,
+                accum: accumulate.then(|| Accumulator::new(p)),
+                steps: 0,
+            });
+        }
+        // The paper's gradient cache exists only when pushes can be dropped
+        // and the policy is re-apply (its memory cost is part of the story).
+        let cache = (cfg.bandwidth != BandwidthMode::Always
+            && cfg.push_drop == PushDropMode::ReapplyCached)
+            .then(|| GradientCache::new(lambda));
+        let bw = BandwidthPolicy::new(
+            cfg.bandwidth.clone(),
+            lambda,
+            crate::rng::stream(cfg.seed, "bandwidth", 0),
+        );
+        let acc = BandwidthAccounting::new(p as u64 * 4);
+        let core = Self {
+            blocked: vec![false; lambda],
+            bw,
+            acc,
+            cache,
+            history: History::new(),
+            staleness: StalenessHistogram::new(256),
+            trace: Trace::disabled(),
+            iter: 0,
+            server_updates: 0,
+            next_eval_ts: cfg.eval_every,
+            probe_every: cfg.probe_every,
+            probes: ProbeLog::default(),
+            probe_buf: Vec::new(),
+            server: parts.server,
+            eval_engine: parts.eval,
+            data: parts.data,
+            clients,
+            cfg,
+        };
+        Ok((core, parts.grad))
+    }
+
+    /// Draw client `l`'s next minibatch into owned buffers (the parallel
+    /// driver's form; the serial driver reuses flat scratch instead).
+    /// `recycled` hands back a spent batch whose allocations are reused
+    /// (the samplers clear before filling), keeping the fan-out loop
+    /// allocation-free at steady state. Sampler streams are per-client, so
+    /// draw order across clients does not matter — only the per-client
+    /// sequence, which both drivers advance in schedule order.
+    pub(crate) fn draw_batch(
+        &mut self,
+        l: usize,
+        recycled: Option<OwnedBatch>,
+    ) -> Result<OwnedBatch> {
+        let client = &mut self.clients[l];
+        client.steps += 1;
+        match (&mut client.sampler, &self.data) {
+            (SamplerKind::Classif(s), DataSource::Classif(split)) => {
+                let (mut x, mut y) = match recycled {
+                    Some(OwnedBatch::Classif { x, y }) => (x, y),
+                    _ => (Vec::new(), Vec::new()),
+                };
+                s.next_batch(&split.train, &mut x, &mut y);
+                Ok(OwnedBatch::Classif { x, y })
+            }
+            (SamplerKind::Lm(s), DataSource::Lm { corpus, .. }) => {
+                let (mut tokens, mut targets) = match recycled {
+                    Some(OwnedBatch::Lm { tokens, targets }) => {
+                        (tokens, targets)
+                    }
+                    _ => (Vec::new(), Vec::new()),
+                };
+                s.next_batch(corpus, &mut tokens, &mut targets);
+                Ok(OwnedBatch::Lm { tokens, targets })
+            }
+            _ => bail!("sampler/data kind mismatch"),
+        }
+    }
+
+    /// Everything after the gradient: the paper §2.1 protocol with §2.3
+    /// gating, in schedule order. `probe_xy` carries the minibatch for the
+    /// B-Staleness probe (classification only); `probe_engine` recomputes
+    /// it at the server parameters when the probe cadence fires.
+    pub(crate) fn complete_iteration(
+        &mut self,
+        l: usize,
+        loss: f32,
+        grad: &[f32],
+        probe_xy: Option<(&[f32], &[i32])>,
+        probe_engine: &mut dyn GradientEngine,
+    ) -> Result<()> {
+        self.trace.record(Event::Selected { iter: self.iter, client: l });
+        self.history.record_train_loss(loss as f64);
+        self.iter += 1;
+        let client_ts = self.clients[l].ts;
+
+        // B-Staleness probe (eq. 3): recompute the same minibatch at the
+        // server's θ_T and measure Γ = ‖Δθ^l − Δθ_T‖. Instrumentation only;
+        // classification batches.
+        if self.probe_every > 0 && self.iter % self.probe_every == 0 {
+            if let Some((x, y)) = probe_xy {
+                if self.probe_buf.len() != grad.len() {
+                    self.probe_buf = vec![0.0; grad.len()];
+                }
+                let batch = Batch::Classif { x, y };
+                probe_engine.grad(
+                    self.server.params(),
+                    &batch,
+                    &mut self.probe_buf,
+                )?;
+                self.probes.push(ProbeRecord {
+                    iter: self.iter,
+                    tau: crate::server::staleness(
+                        self.server.timestamp(),
+                        client_ts,
+                    ),
+                    b_staleness: crate::tensor::b_staleness(
+                        grad,
+                        &self.probe_buf,
+                    ),
+                    grad_norm: crate::tensor::l2_norm(grad),
+                    v_mean: self.server.v_mean(),
+                });
+            }
+        }
+
+        // 2. Push opportunity (paper §2.3 gate; Always mode always fires).
+        // Sync policy force-transmits: a dropped push would park the client
+        // at the barrier with no future unblock and deadlock the scheduler
+        // (the config combination is also rejected up front by
+        // `ExperimentConfig::validate`; this is defense in depth for
+        // hand-assembled simulators).
+        let push = if self.cfg.policy == Policy::Sync {
+            true
+        } else {
+            let v_mean = self.server.v_mean();
+            self.bw.decide(Direction::Push, l, v_mean)
+        };
+        self.acc.record_push(push);
+        self.trace.record(Event::Push {
+            iter: self.iter,
+            client: l,
+            transmitted: push,
+        });
+
+        let mut outcome = None;
+        if push {
+            // Accumulate mode folds any unsent gradients into this push.
+            let acc_state = self.clients[l].accum.as_mut();
+            if let Some(a) = acc_state.filter(|a| !a.is_empty()) {
+                let (mean, ts) = a.flush_with(grad, client_ts);
+                outcome = Some(self.server.apply_update(&mean, ts, l)?);
+                if let Some(cache) = &mut self.cache {
+                    cache.store(l, &mean, ts);
+                }
+            } else {
+                outcome =
+                    Some(self.server.apply_update(grad, client_ts, l)?);
+                if let Some(cache) = &mut self.cache {
+                    cache.store(l, grad, client_ts);
+                }
+            }
+        } else {
+            match self.cfg.push_drop {
+                PushDropMode::ReapplyCached => {
+                    // Paper's choice: re-apply this client's last gradient.
+                    let cached = self
+                        .cache
+                        .as_ref()
+                        .and_then(|c| c.get(l))
+                        .map(|(g, ts)| (g.to_vec(), ts));
+                    if let Some((g, ts)) = cached {
+                        let out = self.server.apply_update(&g, ts, l)?;
+                        self.trace.record(Event::Applied {
+                            iter: self.iter,
+                            client: l,
+                            tau: out.staleness.unwrap_or(0),
+                            reapplied: true,
+                        });
+                        outcome = Some(out);
+                    }
+                }
+                PushDropMode::Accumulate => {
+                    if let Some(a) = self.clients[l].accum.as_mut() {
+                        a.add(grad, client_ts);
+                    }
+                }
+                PushDropMode::Skip => {}
+            }
+        }
+
+        if let Some(out) = outcome {
+            if out.applied {
+                self.server_updates += 1;
+            }
+            if let Some(tau) = out.staleness {
+                self.staleness.record(tau);
+                if push {
+                    self.trace.record(Event::Applied {
+                        iter: self.iter,
+                        client: l,
+                        tau,
+                        reapplied: false,
+                    });
+                }
+            }
+            // 3a. Sync barrier release: everyone fetches θ_{T}.
+            if out.unblock_all {
+                let params = Arc::new(self.server.params().to_vec());
+                let ts = self.server.timestamp();
+                for (c, b) in
+                    self.clients.iter_mut().zip(self.blocked.iter_mut())
+                {
+                    c.theta = params.clone();
+                    c.ts = ts;
+                    *b = false; // barrier over: everyone schedulable again
+                }
+                self.trace.record(Event::BarrierRelease {
+                    iter: self.iter,
+                    server_ts: ts,
+                });
+            }
+        }
+
+        if self.cfg.policy == Policy::Sync {
+            // Parked until the barrier releases (unless it just did).
+            if outcome.map_or(true, |o| !o.unblock_all) {
+                self.blocked[l] = true;
+            }
+        } else {
+            // 3b. Fetch opportunity.
+            let fetch =
+                self.bw.decide(Direction::Fetch, l, self.server.v_mean());
+            self.acc.record_fetch(fetch);
+            self.trace.record(Event::Fetch {
+                iter: self.iter,
+                client: l,
+                transmitted: fetch,
+            });
+            if fetch {
+                let client = &mut self.clients[l];
+                client.theta = Arc::new(self.server.params().to_vec());
+                client.ts = self.server.timestamp();
+            }
+        }
+
+        // 4. Validation cadence (in server updates, like the paper's plots).
+        if self.server.timestamp() >= self.next_eval_ts {
+            self.run_eval()?;
+            while self.next_eval_ts <= self.server.timestamp() {
+                self.next_eval_ts += self.cfg.eval_every;
+            }
+        }
+
+        if self.cfg.log_every > 0 && self.iter % self.cfg.log_every == 0 {
+            log::info!(
+                "{}: iter {}/{} T={} train_ema={:.4}",
+                self.cfg.name,
+                self.iter,
+                self.cfg.iters,
+                self.server.timestamp(),
+                self.history.train_ema().unwrap_or(f64::NAN)
+            );
+        }
+        Ok(())
+    }
+
+    /// Evaluate validation cost on the whole val set (chunked).
+    pub(crate) fn run_eval(&mut self) -> Result<()> {
+        let (loss, acc) = match &self.data {
+            DataSource::Classif(split) => {
+                let b = self.eval_engine.batch_size();
+                let n = split.val.len();
+                if n == 0 {
+                    bail!(
+                        "validation set is empty; evaluation is impossible \
+                         (set dataset.val >= 1)"
+                    );
+                }
+                // Full chunks only; when the val set is smaller than one
+                // eval batch, wrap indices modulo n so exactly one full
+                // batch runs (the engine's batch size is fixed). The mean
+                // is over batches actually evaluated — dividing by the
+                // planned chunk count after an early break skewed val
+                // metrics toward zero whenever n < b.
+                let chunks = (n / b).max(1);
+                let mut tot_loss = 0.0f64;
+                let mut tot_acc = 0.0f64;
+                let mut done = 0usize;
+                for ch in 0..chunks {
+                    let idx: Vec<usize> =
+                        (ch * b..(ch + 1) * b).map(|i| i % n).collect();
+                    let (x, y) = split.val.gather(&idx);
+                    let (l, a) = self.eval_engine.eval(
+                        self.server.params(),
+                        &Batch::Classif { x: &x, y: &y },
+                    )?;
+                    tot_loss += l as f64;
+                    tot_acc += a as f64;
+                    done += 1;
+                }
+                (tot_loss / done as f64, tot_acc / done as f64)
+            }
+            DataSource::Lm { corpus, seq } => {
+                // Deterministic strided eval windows.
+                let b = self.eval_engine.batch_size();
+                let rounds = 4usize;
+                let need = b * rounds;
+                let stride = (corpus.windows(*seq) / need.max(1)).max(1);
+                let mut tot_loss = 0.0f64;
+                let mut tot_acc = 0.0f64;
+                let mut done = 0usize;
+                for r in 0..rounds {
+                    let mut tokens = Vec::with_capacity(b * seq);
+                    let mut targets = Vec::with_capacity(b * seq);
+                    for k in 0..b {
+                        let start =
+                            ((r * b + k) * stride) % corpus.windows(*seq);
+                        let (t, g) = corpus.window(start, *seq);
+                        tokens.extend_from_slice(t);
+                        targets.extend_from_slice(g);
+                    }
+                    let (l, a) = self.eval_engine.eval(
+                        self.server.params(),
+                        &Batch::Lm { tokens: &tokens, targets: &targets },
+                    )?;
+                    tot_loss += l as f64;
+                    tot_acc += a as f64;
+                    done += 1;
+                }
+                (tot_loss / done as f64, tot_acc / done as f64)
+            }
+        };
+        self.history.record_eval(EvalPoint {
+            iter: self.iter,
+            server_ts: self.server.timestamp(),
+            val_loss: loss,
+            val_acc: acc,
+        });
+        self.trace.record(Event::Eval {
+            iter: self.iter,
+            server_ts: self.server.timestamp(),
+        });
+        Ok(())
+    }
+
+    /// Fold the finished run into its summary record.
+    pub(crate) fn into_summary(self, wall_secs: f64) -> RunSummary {
+        RunSummary {
+            name: self.cfg.name.clone(),
+            policy: self.server.name().to_string(),
+            clients: self.cfg.clients,
+            batch: self.cfg.batch,
+            iters: self.iter,
+            history: self.history,
+            staleness: self.staleness,
+            bandwidth: self.acc.report(),
+            wall_secs,
+            server_updates: self.server_updates,
+            probes: self.probes,
+        }
+    }
+}

@@ -99,6 +99,100 @@ impl Selector {
     }
 }
 
+/// Pre-draws the deterministic selection schedule for the parallel
+/// dispatcher, one *window* at a time.
+///
+/// A window is a run of consecutive iterations whose gradients can all be
+/// computed concurrently from parameter snapshots taken at the window
+/// start, because no client's θ_j can change inside it:
+///
+/// * **async policies** — a client's θ_j changes only at its own fetch, so
+///   the window ends just before the first *repeated* client (the repeat
+///   is buffered and opens the next window);
+/// * **sync policy** — every θ_j refreshes at a barrier release, so the
+///   window ends at the pick that completes the barrier. Barrier blocking
+///   evolves deterministically from the pick sequence alone (each selected
+///   client parks; all release when λ have parked — pushes always transmit
+///   under sync, see `ExperimentConfig::validate`), so the planner
+///   replays it without touching protocol state.
+///
+/// The planner draws picks in exactly the order the serial dispatcher
+/// would (`pick` → `on_selected` → `step_recover` per iteration), so the
+/// RNG stream advances identically and schedules are bitwise equal.
+pub struct SchedulePlanner {
+    selector: Selector,
+    /// Simulated blocked state (sync barrier replay; all-false for async).
+    blocked: Vec<bool>,
+    /// `Some(parked_count)` when replaying sync barriers.
+    parked: Option<usize>,
+    /// A drawn pick that closed the previous window by repeating.
+    pending: Option<usize>,
+    /// Window membership per client, generation-stamped to avoid clears.
+    in_window: Vec<u64>,
+    generation: u64,
+}
+
+impl SchedulePlanner {
+    pub fn new(selector: Selector, lambda: usize, sync_barrier: bool) -> Self {
+        Self {
+            selector,
+            blocked: vec![false; lambda],
+            parked: sync_barrier.then_some(0),
+            pending: None,
+            in_window: vec![0; lambda],
+            generation: 0,
+        }
+    }
+
+    /// Draw the next window of at most `max_len` picks (≥ 1). Within the
+    /// returned window every client appears at most once and, under sync,
+    /// the window never crosses a barrier release.
+    pub fn next_window(&mut self, max_len: usize) -> Vec<usize> {
+        let max_len = max_len.max(1);
+        self.generation += 1;
+        let mut window = Vec::with_capacity(max_len);
+        while window.len() < max_len {
+            let (l, released) = match self.pending.take() {
+                // A buffered repeat never completes a barrier: repeats
+                // cannot occur while sync blocking is active.
+                Some(l) => (l, false),
+                None => self.draw(),
+            };
+            if self.in_window[l] == self.generation {
+                self.pending = Some(l);
+                break;
+            }
+            self.in_window[l] = self.generation;
+            window.push(l);
+            if released {
+                break;
+            }
+        }
+        window
+    }
+
+    /// One serial-order pick, replaying sync barrier blocking. Returns
+    /// `(client, barrier_released_after_this_iteration)`.
+    fn draw(&mut self) -> (usize, bool) {
+        let l = self.selector.pick(&self.blocked);
+        self.selector.on_selected(l);
+        self.selector.step_recover();
+        let mut released = false;
+        if let Some(parked) = &mut self.parked {
+            self.blocked[l] = true;
+            *parked += 1;
+            if *parked == self.blocked.len() {
+                *parked = 0;
+                released = true;
+                for b in self.blocked.iter_mut() {
+                    *b = false;
+                }
+            }
+        }
+        (l, released)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -193,5 +287,95 @@ mod tests {
         let mut s =
             Selector::new(SelectionRule::Uniform, 2, rng::stream(0, "s", 0));
         s.pick(&[true, true]);
+    }
+
+    fn planner(rule: SelectionRule, lambda: usize, sync: bool)
+               -> SchedulePlanner {
+        SchedulePlanner::new(
+            Selector::new(rule, lambda, rng::stream(12, "s", 0)),
+            lambda,
+            sync,
+        )
+    }
+
+    #[test]
+    fn planner_replays_serial_pick_order() {
+        // Concatenated windows must equal the serial pick sequence drawn
+        // from an identical stream, for every rule.
+        for rule in [
+            SelectionRule::Uniform,
+            SelectionRule::Heterogeneous { sigma: 1.0 },
+            SelectionRule::Cooldown { factor: 0.5, recovery: 1.1 },
+        ] {
+            let mut serial = Selector::new(
+                rule.clone(), 6, rng::stream(12, "s", 0));
+            let blocked = vec![false; 6];
+            let mut want = Vec::new();
+            for _ in 0..200 {
+                let l = serial.pick(&blocked);
+                serial.on_selected(l);
+                serial.step_recover();
+                want.push(l);
+            }
+            let mut p = planner(rule, 6, false);
+            let mut got = Vec::new();
+            while got.len() < 200 {
+                let w = p.next_window(7);
+                assert!(!w.is_empty());
+                got.extend_from_slice(&w);
+            }
+            got.truncate(200);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn planner_windows_have_distinct_clients() {
+        let mut p = planner(SelectionRule::Uniform, 5, false);
+        for _ in 0..100 {
+            let w = p.next_window(16);
+            let mut sorted = w.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), w.len(), "repeat within window {w:?}");
+        }
+    }
+
+    #[test]
+    fn planner_respects_max_len() {
+        let mut p = planner(SelectionRule::Uniform, 32, false);
+        for _ in 0..50 {
+            assert!(p.next_window(4).len() <= 4);
+        }
+    }
+
+    #[test]
+    fn sync_windows_are_barrier_cycles() {
+        // With a barrier over λ clients, each full-length window is one
+        // complete cycle: all λ clients exactly once.
+        let lambda = 4;
+        let mut p = planner(SelectionRule::Uniform, lambda, true);
+        for _ in 0..25 {
+            let w = p.next_window(64);
+            let mut sorted = w.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..lambda).collect::<Vec<_>>(), "{w:?}");
+        }
+    }
+
+    #[test]
+    fn sync_windows_split_by_max_len_still_cycle() {
+        // Cutting a cycle short must resume it, not restart it.
+        let lambda = 5;
+        let mut p = planner(SelectionRule::Uniform, lambda, true);
+        let mut picks = Vec::new();
+        while picks.len() < 3 * lambda {
+            picks.extend(p.next_window(2));
+        }
+        for cycle in picks.chunks(lambda).take(3) {
+            let mut sorted = cycle.to_vec();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..lambda).collect::<Vec<_>>());
+        }
     }
 }

@@ -1,0 +1,140 @@
+//! The serial dispatcher: one iteration = select → grad → protocol core
+//! (push-gate → server apply → fetch-gate → metrics). This is the original
+//! single-core execution mode; the hot loop stays allocation-free by
+//! reusing flat scratch buffers.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::config::ExperimentConfig;
+use crate::grad::{Batch, GradientEngine};
+use crate::metrics::RunSummary;
+use crate::rng;
+use crate::server::Server;
+use crate::sim::client::SamplerKind;
+use crate::sim::probe::ProbeLog;
+use crate::sim::protocol::{DataSource, ProtocolCore, SimParts};
+use crate::sim::selection::Selector;
+use crate::sim::trace::Trace;
+
+/// FRED-rs: the deterministic training-cluster simulator (serial mode).
+pub struct Simulator {
+    core: ProtocolCore,
+    grad_engine: Box<dyn GradientEngine>,
+    selector: Selector,
+    // reusable buffers (hot loop stays allocation-free)
+    grad_buf: Vec<f32>,
+    x_buf: Vec<f32>,
+    y_buf: Vec<i32>,
+}
+
+impl Simulator {
+    /// Assemble a simulator from config + engines.
+    pub fn new(cfg: ExperimentConfig, parts: SimParts) -> Result<Self> {
+        let selector = Selector::new(
+            cfg.selection.clone(),
+            cfg.clients,
+            rng::stream(cfg.seed, "dispatcher", 0),
+        );
+        let (core, grad_engine) = ProtocolCore::new(cfg, parts)?;
+        let p = grad_engine.param_count();
+        Ok(Self {
+            core,
+            grad_engine,
+            selector,
+            grad_buf: vec![0.0; p],
+            x_buf: Vec::new(),
+            y_buf: Vec::new(),
+        })
+    }
+
+    /// Enable the protocol trace (ring buffer of `cap` events).
+    pub fn enable_trace(&mut self, cap: usize) {
+        self.core.trace = Trace::new(cap);
+    }
+
+    /// Enable the B-Staleness probe every `every` iterations.
+    pub fn enable_probe(&mut self, every: u64) {
+        self.core.probe_every = every;
+    }
+
+    pub fn probes(&self) -> &ProbeLog {
+        &self.core.probes
+    }
+
+    pub fn trace(&self) -> &Trace {
+        &self.core.trace
+    }
+
+    pub fn server(&self) -> &dyn Server {
+        self.core.server.as_ref()
+    }
+
+    pub fn iterations(&self) -> u64 {
+        self.core.iter
+    }
+
+    /// One iteration: one client computes one stochastic gradient.
+    pub fn step(&mut self) -> Result<()> {
+        let l = self.selector.pick(&self.core.blocked);
+        self.selector.on_selected(l);
+        self.selector.step_recover();
+
+        // 1. Client computes its gradient at its (possibly stale) θ_j.
+        let (loss, classif) = {
+            let client = &mut self.core.clients[l];
+            client.steps += 1;
+            match (&mut client.sampler, &self.core.data) {
+                (SamplerKind::Classif(s), DataSource::Classif(split)) => {
+                    s.next_batch(&split.train, &mut self.x_buf, &mut self.y_buf);
+                    let batch =
+                        Batch::Classif { x: &self.x_buf, y: &self.y_buf };
+                    let loss = self.grad_engine.grad(&client.theta, &batch,
+                                                     &mut self.grad_buf)?;
+                    (loss, true)
+                }
+                (SamplerKind::Lm(s), DataSource::Lm { corpus, .. }) => {
+                    let mut tokens = std::mem::take(&mut self.y_buf);
+                    // reuse y_buf for tokens; targets in a scratch vec
+                    let mut targets = Vec::new();
+                    s.next_batch(corpus, &mut tokens, &mut targets);
+                    let batch = Batch::Lm {
+                        tokens: &tokens,
+                        targets: &targets,
+                    };
+                    let loss = self.grad_engine.grad(
+                        &client.theta, &batch, &mut self.grad_buf)?;
+                    self.y_buf = tokens;
+                    (loss, false)
+                }
+                _ => bail!("sampler/data kind mismatch"),
+            }
+        };
+
+        // 2..4. Push gate → apply → barrier/fetch → eval cadence.
+        let probe_xy = if classif {
+            Some((self.x_buf.as_slice(), self.y_buf.as_slice()))
+        } else {
+            None
+        };
+        self.core.complete_iteration(
+            l,
+            loss,
+            &self.grad_buf,
+            probe_xy,
+            self.grad_engine.as_mut(),
+        )
+    }
+
+    /// Run to `cfg.iters`, with an initial and a final evaluation.
+    pub fn run(mut self) -> Result<RunSummary> {
+        let start = Instant::now();
+        self.core.run_eval()?; // the t=0 point every curve in the paper has
+        while self.core.iter < self.core.cfg.iters {
+            self.step()?;
+        }
+        self.core.run_eval()?;
+        Ok(self.core.into_summary(start.elapsed().as_secs_f64()))
+    }
+}

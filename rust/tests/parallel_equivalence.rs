@@ -1,0 +1,158 @@
+//! The parallel dispatcher's contract: a worker-pool run is **bitwise
+//! identical** to a serial run of the same config — every eval point,
+//! every staleness count, every bandwidth decision, and the final
+//! parameter vector.
+
+use fasgd::config::{BandwidthMode, ExperimentConfig, Policy, SelectionRule};
+use fasgd::experiments::common::{build_parallel_sim, build_sim,
+                                 fast_test_config};
+use fasgd::metrics::RunSummary;
+
+fn small_cfg(policy: Policy, seed: u64) -> ExperimentConfig {
+    let mut cfg = fast_test_config(policy);
+    cfg.seed = seed;
+    cfg.clients = 5;
+    cfg.iters = 300;
+    cfg.eval_every = 40;
+    cfg
+}
+
+/// Everything in a summary that must match bitwise (wall time excluded).
+fn fingerprint(s: &RunSummary) -> String {
+    let mut out = String::new();
+    for p in &s.history.evals {
+        out.push_str(&format!(
+            "eval {} {} {:?} {:?}\n",
+            p.iter,
+            p.server_ts,
+            p.val_loss.to_bits(),
+            p.val_acc.to_bits()
+        ));
+    }
+    for (i, e) in &s.history.train_curve {
+        out.push_str(&format!("train {} {:?}\n", i, e.to_bits()));
+    }
+    out.push_str(&format!(
+        "updates {} staleness {} {} {} bw {} {} {} {}\n",
+        s.server_updates,
+        s.staleness.total(),
+        s.staleness.max(),
+        s.staleness.mean().to_bits(),
+        s.bandwidth.push_copies,
+        s.bandwidth.push_potential,
+        s.bandwidth.fetch_copies,
+        s.bandwidth.fetch_potential
+    ));
+    out
+}
+
+fn assert_equivalent(cfg: &ExperimentConfig, workers: usize) {
+    let serial = build_sim(cfg).unwrap().run().unwrap();
+    let parallel =
+        build_parallel_sim(cfg, workers).unwrap().run().unwrap();
+    assert_eq!(
+        fingerprint(&serial),
+        fingerprint(&parallel),
+        "serial != parallel for {} (policy {:?}, seed {}, bw {:?})",
+        cfg.name,
+        cfg.policy,
+        cfg.seed,
+        cfg.bandwidth
+    );
+}
+
+#[test]
+fn bitwise_equal_across_seeds_policies_and_gating() {
+    // ≥ 3 seeds × {fasgd, asgd, sasgd} × {always, gated}.
+    for seed in [7u64, 21, 1234] {
+        for policy in [Policy::Fasgd, Policy::Asgd, Policy::Sasgd] {
+            for bandwidth in [
+                BandwidthMode::Always,
+                BandwidthMode::Probabilistic {
+                    c_push: 0.3,
+                    c_fetch: 0.6,
+                    eps: 1e-8,
+                },
+            ] {
+                let mut cfg = small_cfg(policy, seed);
+                cfg.bandwidth = bandwidth;
+                assert_equivalent(&cfg, 3);
+            }
+        }
+    }
+}
+
+#[test]
+fn bitwise_equal_fixed_period_gating() {
+    let mut cfg = small_cfg(Policy::Fasgd, 5);
+    cfg.bandwidth = BandwidthMode::Fixed { k_push: 2, k_fetch: 3 };
+    assert_equivalent(&cfg, 4);
+}
+
+#[test]
+fn bitwise_equal_sync_policy() {
+    // Sync exercises the barrier replay in the schedule planner.
+    let mut cfg = small_cfg(Policy::Sync, 11);
+    cfg.clients = 4;
+    cfg.iters = 240;
+    assert_equivalent(&cfg, 4);
+    // Lookahead smaller than λ forces windows to split barrier cycles.
+    cfg.lookahead = 2;
+    assert_equivalent(&cfg, 2);
+}
+
+#[test]
+fn bitwise_equal_under_selection_rules() {
+    for rule in [
+        SelectionRule::Heterogeneous { sigma: 1.0 },
+        SelectionRule::Cooldown { factor: 0.3, recovery: 1.5 },
+    ] {
+        let mut cfg = small_cfg(Policy::Asgd, 3);
+        cfg.selection = rule;
+        assert_equivalent(&cfg, 3);
+    }
+}
+
+#[test]
+fn bitwise_equal_with_probe_enabled() {
+    let mut cfg = small_cfg(Policy::Fasgd, 2);
+    cfg.probe_every = 25;
+    let serial = build_sim(&cfg).unwrap().run().unwrap();
+    let parallel = build_parallel_sim(&cfg, 3).unwrap().run().unwrap();
+    assert_eq!(serial.probes.records, parallel.probes.records);
+    assert_eq!(fingerprint(&serial), fingerprint(&parallel));
+}
+
+#[test]
+fn final_parameters_bitwise_equal() {
+    // Mid-run comparison through run_until: the parameter vectors
+    // themselves must match, not just the metric curves.
+    let cfg = small_cfg(Policy::Fasgd, 99);
+    let mut serial = build_sim(&cfg).unwrap();
+    for _ in 0..257 {
+        serial.step().unwrap();
+    }
+    let mut parallel = build_parallel_sim(&cfg, 4).unwrap();
+    parallel.run_until(257).unwrap();
+    assert_eq!(parallel.iterations(), 257);
+    assert_eq!(serial.server().params(), parallel.server().params());
+    assert_eq!(serial.server().timestamp(), parallel.server().timestamp());
+}
+
+#[test]
+fn lookahead_and_worker_count_do_not_change_results() {
+    let base = {
+        let cfg = small_cfg(Policy::Asgd, 31);
+        build_sim(&cfg).unwrap().run().unwrap()
+    };
+    for (workers, lookahead) in [(2, 1), (2, 64), (6, 4), (8, 32)] {
+        let mut cfg = small_cfg(Policy::Asgd, 31);
+        cfg.lookahead = lookahead;
+        let s = build_parallel_sim(&cfg, workers).unwrap().run().unwrap();
+        assert_eq!(
+            fingerprint(&base),
+            fingerprint(&s),
+            "workers={workers} lookahead={lookahead}"
+        );
+    }
+}

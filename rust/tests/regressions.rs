@@ -1,0 +1,81 @@
+//! Regression tests for dispatcher protocol bugs fixed in PR 1.
+
+use fasgd::config::{BandwidthMode, ExperimentConfig, Policy};
+use fasgd::data::synthetic;
+use fasgd::experiments::common::{build_sim, fast_test_config};
+use fasgd::grad::rust_mlp::{init_params, RustMlpEngine};
+use fasgd::server::{build_server, UpdateEngine};
+use fasgd::sim::dispatcher::{DataSource, SimParts, Simulator};
+
+fn mlp_parts(cfg: &ExperimentConfig, val: usize, eval_mu: usize) -> SimParts {
+    let sizes = vec![784, cfg.mlp_hidden, 10];
+    let init = init_params(cfg.seed, &sizes);
+    let split = synthetic::generate(cfg.seed, 64, val, 0.3);
+    SimParts {
+        server: build_server(cfg, init, UpdateEngine::Rust),
+        grad: Box::new(RustMlpEngine::new(sizes.clone(), cfg.batch)),
+        eval: Box::new(RustMlpEngine::new(sizes, eval_mu)),
+        data: DataSource::Classif(split),
+    }
+}
+
+#[test]
+fn short_val_set_eval_is_not_zeroed() {
+    // Regression: with a validation set smaller than the eval engine's
+    // batch, the chunk loop broke out before evaluating anything but still
+    // divided by the planned chunk count — reporting val_loss = 0.0 and
+    // val_acc = 0.0 (a fake converged curve). The eval must wrap indices
+    // and report a real, finite loss (≈ ln 10 for an untrained model).
+    let mut cfg = fast_test_config(Policy::Asgd);
+    cfg.iters = 0; // run() evaluates at t=0 and at the end
+    let parts = mlp_parts(&cfg, 5, 8); // val=5 < eval batch=8
+    let summary = Simulator::new(cfg, parts).unwrap().run().unwrap();
+    let p = summary.history.evals.first().unwrap();
+    assert!(
+        p.val_loss > 0.5 && p.val_loss.is_finite(),
+        "short val set must produce a real loss, got {}",
+        p.val_loss
+    );
+    assert!((0.0..=1.0).contains(&p.val_acc));
+}
+
+#[test]
+fn non_divisible_val_set_uses_full_chunks() {
+    // val=20 with batch 8: two full chunks (16 examples), mean over the
+    // chunks actually evaluated — same answer the seed code produced when
+    // it worked, now guaranteed by construction.
+    let mut cfg = fast_test_config(Policy::Asgd);
+    cfg.iters = 0;
+    let parts = mlp_parts(&cfg, 20, 8);
+    let summary = Simulator::new(cfg, parts).unwrap().run().unwrap();
+    let p = summary.history.evals.first().unwrap();
+    assert!(p.val_loss > 0.5 && p.val_loss.is_finite(), "{}", p.val_loss);
+}
+
+#[test]
+fn sync_with_gating_rejected_at_build() {
+    // Regression: policy=sync + a gating bandwidth mode deadlocks the
+    // scheduler (a dropped push parks the client at the barrier forever);
+    // the config must be rejected before a simulator exists.
+    let mut cfg = fast_test_config(Policy::Sync);
+    cfg.bandwidth = BandwidthMode::Fixed { k_push: 2, k_fetch: 1 };
+    let err = build_sim(&cfg).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("deadlock"),
+        "error should explain the deadlock: {err:#}"
+    );
+}
+
+#[test]
+fn sync_with_gating_rejected_for_hand_assembled_sims() {
+    // The same guard holds when a simulator is assembled from parts,
+    // bypassing the experiment launcher.
+    let mut cfg = fast_test_config(Policy::Sync);
+    cfg.bandwidth = BandwidthMode::Probabilistic {
+        c_push: 1.0,
+        c_fetch: 0.0,
+        eps: 1e-8,
+    };
+    let parts = mlp_parts(&cfg, 32, 8);
+    assert!(Simulator::new(cfg, parts).is_err());
+}

@@ -1,0 +1,151 @@
+//! Minimal offline substrate for the `byteorder` surface this workspace
+//! uses: [`BigEndian`], [`LittleEndian`], [`ReadBytesExt`],
+//! [`WriteBytesExt`].
+
+use std::io;
+
+/// Byte-order strategy.
+pub trait ByteOrder {
+    fn read_u16(buf: [u8; 2]) -> u16;
+    fn read_u32(buf: [u8; 4]) -> u32;
+    fn read_u64(buf: [u8; 8]) -> u64;
+    fn write_u16(n: u16) -> [u8; 2];
+    fn write_u32(n: u32) -> [u8; 4];
+    fn write_u64(n: u64) -> [u8; 8];
+}
+
+/// Network / IDX-file byte order.
+pub enum BigEndian {}
+
+impl ByteOrder for BigEndian {
+    fn read_u16(buf: [u8; 2]) -> u16 {
+        u16::from_be_bytes(buf)
+    }
+
+    fn read_u32(buf: [u8; 4]) -> u32 {
+        u32::from_be_bytes(buf)
+    }
+
+    fn read_u64(buf: [u8; 8]) -> u64 {
+        u64::from_be_bytes(buf)
+    }
+
+    fn write_u16(n: u16) -> [u8; 2] {
+        n.to_be_bytes()
+    }
+
+    fn write_u32(n: u32) -> [u8; 4] {
+        n.to_be_bytes()
+    }
+
+    fn write_u64(n: u64) -> [u8; 8] {
+        n.to_be_bytes()
+    }
+}
+
+/// x86-native byte order.
+pub enum LittleEndian {}
+
+impl ByteOrder for LittleEndian {
+    fn read_u16(buf: [u8; 2]) -> u16 {
+        u16::from_le_bytes(buf)
+    }
+
+    fn read_u32(buf: [u8; 4]) -> u32 {
+        u32::from_le_bytes(buf)
+    }
+
+    fn read_u64(buf: [u8; 8]) -> u64 {
+        u64::from_le_bytes(buf)
+    }
+
+    fn write_u16(n: u16) -> [u8; 2] {
+        n.to_le_bytes()
+    }
+
+    fn write_u32(n: u32) -> [u8; 4] {
+        n.to_le_bytes()
+    }
+
+    fn write_u64(n: u64) -> [u8; 8] {
+        n.to_le_bytes()
+    }
+}
+
+/// Typed big/little-endian reads over any `io::Read`.
+pub trait ReadBytesExt: io::Read {
+    fn read_u8(&mut self) -> io::Result<u8> {
+        let mut b = [0u8; 1];
+        self.read_exact(&mut b)?;
+        Ok(b[0])
+    }
+
+    fn read_u16<B: ByteOrder>(&mut self) -> io::Result<u16> {
+        let mut b = [0u8; 2];
+        self.read_exact(&mut b)?;
+        Ok(B::read_u16(b))
+    }
+
+    fn read_u32<B: ByteOrder>(&mut self) -> io::Result<u32> {
+        let mut b = [0u8; 4];
+        self.read_exact(&mut b)?;
+        Ok(B::read_u32(b))
+    }
+
+    fn read_u64<B: ByteOrder>(&mut self) -> io::Result<u64> {
+        let mut b = [0u8; 8];
+        self.read_exact(&mut b)?;
+        Ok(B::read_u64(b))
+    }
+}
+
+impl<R: io::Read + ?Sized> ReadBytesExt for R {}
+
+/// Typed big/little-endian writes over any `io::Write`.
+pub trait WriteBytesExt: io::Write {
+    fn write_u8(&mut self, n: u8) -> io::Result<()> {
+        self.write_all(&[n])
+    }
+
+    fn write_u16<B: ByteOrder>(&mut self, n: u16) -> io::Result<()> {
+        self.write_all(&B::write_u16(n))
+    }
+
+    fn write_u32<B: ByteOrder>(&mut self, n: u32) -> io::Result<()> {
+        self.write_all(&B::write_u32(n))
+    }
+
+    fn write_u64<B: ByteOrder>(&mut self, n: u64) -> io::Result<()> {
+        self.write_all(&B::write_u64(n))
+    }
+}
+
+impl<W: io::Write + ?Sized> WriteBytesExt for W {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_big_endian() {
+        let mut buf = Vec::new();
+        buf.write_u32::<BigEndian>(0x0000_0803).unwrap();
+        buf.write_u16::<BigEndian>(0xBEEF).unwrap();
+        assert_eq!(buf, vec![0x00, 0x00, 0x08, 0x03, 0xBE, 0xEF]);
+        let mut r = &buf[..];
+        assert_eq!(r.read_u32::<BigEndian>().unwrap(), 0x0000_0803);
+        assert_eq!(r.read_u16::<BigEndian>().unwrap(), 0xBEEF);
+    }
+
+    #[test]
+    fn little_endian_differs() {
+        assert_eq!(LittleEndian::write_u32(1), [1, 0, 0, 0]);
+        assert_eq!(BigEndian::write_u32(1), [0, 0, 0, 1]);
+    }
+
+    #[test]
+    fn truncated_read_errors() {
+        let short = [0u8; 2];
+        assert!((&short[..]).read_u32::<BigEndian>().is_err());
+    }
+}

@@ -1,0 +1,281 @@
+//! Minimal offline substrate for the `flate2` gzip surface this workspace
+//! uses: `read::GzDecoder` and `write::GzEncoder`.
+//!
+//! The encoder emits standard-conformant gzip members whose DEFLATE payload
+//! is *stored* (uncompressed) blocks — legal output any inflater accepts.
+//! The decoder handles the gzip container plus stored DEFLATE blocks, which
+//! covers everything this tree writes; Huffman-compressed members from
+//! external tools are rejected with a clear error rather than mis-parsed.
+
+use std::io::{self, Read, Write};
+
+/// Compression level selector (accepted for API compatibility; the stored-
+/// block encoder has a single level).
+#[derive(Debug, Clone, Copy)]
+pub struct Compression(pub u32);
+
+impl Compression {
+    pub fn fast() -> Self {
+        Compression(1)
+    }
+
+    pub fn best() -> Self {
+        Compression(9)
+    }
+
+    pub fn none() -> Self {
+        Compression(0)
+    }
+}
+
+/// CRC-32 (IEEE 802.3), bitwise implementation — gzip's integrity check.
+fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+pub mod write {
+    use super::*;
+
+    /// Gzip encoder over any `Write`: buffers payload, emits the gzip
+    /// member (header + stored DEFLATE blocks + CRC32/ISIZE trailer) on
+    /// [`GzEncoder::finish`].
+    pub struct GzEncoder<W: Write> {
+        inner: W,
+        buf: Vec<u8>,
+        _level: Compression,
+    }
+
+    impl<W: Write> GzEncoder<W> {
+        pub fn new(inner: W, level: Compression) -> Self {
+            Self { inner, buf: Vec::new(), _level: level }
+        }
+
+        /// Write the complete gzip member and return the inner writer.
+        pub fn finish(mut self) -> io::Result<W> {
+            // Header: magic, CM=deflate, no flags, mtime 0, XFL 0, OS unknown.
+            self.inner.write_all(&[
+                0x1f, 0x8b, 0x08, 0x00, 0, 0, 0, 0, 0x00, 0xff,
+            ])?;
+            // Stored DEFLATE blocks of at most 65535 bytes each.
+            let mut chunks = self.buf.chunks(0xFFFF).peekable();
+            if chunks.peek().is_none() {
+                // Empty payload: one final empty stored block.
+                self.inner.write_all(&[0x01, 0x00, 0x00, 0xFF, 0xFF])?;
+            }
+            while let Some(chunk) = chunks.next() {
+                let bfinal = if chunks.peek().is_none() { 0x01 } else { 0x00 };
+                let len = chunk.len() as u16;
+                self.inner.write_all(&[bfinal])?;
+                self.inner.write_all(&len.to_le_bytes())?;
+                self.inner.write_all(&(!len).to_le_bytes())?;
+                self.inner.write_all(chunk)?;
+            }
+            // Trailer: CRC32 + ISIZE (mod 2^32), little-endian.
+            self.inner.write_all(&crc32(&self.buf).to_le_bytes())?;
+            self.inner
+                .write_all(&(self.buf.len() as u32).to_le_bytes())?;
+            self.inner.flush()?;
+            Ok(self.inner)
+        }
+    }
+
+    impl<W: Write> Write for GzEncoder<W> {
+        fn write(&mut self, data: &[u8]) -> io::Result<usize> {
+            self.buf.extend_from_slice(data);
+            Ok(data.len())
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+}
+
+pub mod read {
+    use super::*;
+
+    fn bad(msg: &str) -> io::Error {
+        io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
+    }
+
+    /// Gzip decoder over any `Read`: decodes the whole member on first
+    /// read, then serves the plaintext.
+    pub struct GzDecoder<R: Read> {
+        inner: R,
+        out: Vec<u8>,
+        pos: usize,
+        decoded: bool,
+    }
+
+    impl<R: Read> GzDecoder<R> {
+        pub fn new(inner: R) -> Self {
+            Self { inner, out: Vec::new(), pos: 0, decoded: false }
+        }
+
+        fn decode_all(&mut self) -> io::Result<()> {
+            let mut raw = Vec::new();
+            self.inner.read_to_end(&mut raw)?;
+            let mut p = 0usize;
+            let take = |p: &mut usize, n: usize| -> io::Result<usize> {
+                let start = *p;
+                *p = start
+                    .checked_add(n)
+                    .ok_or_else(|| bad("gzip: length overflow"))?;
+                if *p > raw.len() {
+                    return Err(bad("gzip: truncated stream"));
+                }
+                Ok(start)
+            };
+
+            // --- member header ---
+            let h = take(&mut p, 10)?;
+            if raw[h] != 0x1f || raw[h + 1] != 0x8b {
+                return Err(bad("gzip: bad magic"));
+            }
+            if raw[h + 2] != 0x08 {
+                return Err(bad("gzip: unknown compression method"));
+            }
+            let flg = raw[h + 3];
+            if flg & 0x04 != 0 {
+                // FEXTRA
+                let x = take(&mut p, 2)?;
+                let xlen =
+                    u16::from_le_bytes([raw[x], raw[x + 1]]) as usize;
+                take(&mut p, xlen)?;
+            }
+            for flag in [0x08u8, 0x10] {
+                // FNAME, FCOMMENT: zero-terminated strings
+                if flg & flag != 0 {
+                    loop {
+                        let c = take(&mut p, 1)?;
+                        if raw[c] == 0 {
+                            break;
+                        }
+                    }
+                }
+            }
+            if flg & 0x02 != 0 {
+                // FHCRC
+                take(&mut p, 2)?;
+            }
+
+            // --- DEFLATE payload: stored blocks only ---
+            loop {
+                let hb = take(&mut p, 1)?;
+                let header = raw[hb];
+                let bfinal = header & 0x01;
+                let btype = (header >> 1) & 0x03;
+                if btype != 0 {
+                    return Err(bad(
+                        "gzip: Huffman-compressed DEFLATE is not supported \
+                         by the offline flate2 substrate (stored blocks \
+                         only); decompress externally first",
+                    ));
+                }
+                let l = take(&mut p, 4)?;
+                let len = u16::from_le_bytes([raw[l], raw[l + 1]]);
+                let nlen = u16::from_le_bytes([raw[l + 2], raw[l + 3]]);
+                if len != !nlen {
+                    return Err(bad("gzip: stored block LEN/NLEN mismatch"));
+                }
+                let d = take(&mut p, len as usize)?;
+                self.out.extend_from_slice(&raw[d..d + len as usize]);
+                if bfinal == 1 {
+                    break;
+                }
+            }
+
+            // --- trailer ---
+            let t = take(&mut p, 8)?;
+            let want_crc = u32::from_le_bytes([
+                raw[t], raw[t + 1], raw[t + 2], raw[t + 3],
+            ]);
+            let want_len = u32::from_le_bytes([
+                raw[t + 4], raw[t + 5], raw[t + 6], raw[t + 7],
+            ]);
+            if crc32(&self.out) != want_crc {
+                return Err(bad("gzip: CRC mismatch"));
+            }
+            if self.out.len() as u32 != want_len {
+                return Err(bad("gzip: ISIZE mismatch"));
+            }
+            Ok(())
+        }
+    }
+
+    impl<R: Read> Read for GzDecoder<R> {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            if !self.decoded {
+                self.decoded = true;
+                self.decode_all()?;
+            }
+            let n = buf.len().min(self.out.len() - self.pos);
+            buf[..n].copy_from_slice(&self.out[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::read::GzDecoder;
+    use super::write::GzEncoder;
+    use super::*;
+
+    fn roundtrip(data: &[u8]) -> Vec<u8> {
+        let mut enc = GzEncoder::new(Vec::new(), Compression::fast());
+        enc.write_all(data).unwrap();
+        let gz = enc.finish().unwrap();
+        let mut out = Vec::new();
+        GzDecoder::new(&gz[..]).read_to_end(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn roundtrips() {
+        for data in [
+            b"".to_vec(),
+            b"hello gzip".to_vec(),
+            (0..200_000u32).map(|i| (i % 251) as u8).collect::<Vec<_>>(),
+        ] {
+            assert_eq!(roundtrip(&data), data);
+        }
+    }
+
+    #[test]
+    fn crc_detects_corruption() {
+        let mut enc = GzEncoder::new(Vec::new(), Compression::best());
+        enc.write_all(b"payload").unwrap();
+        let mut gz = enc.finish().unwrap();
+        let n = gz.len();
+        gz[n - 10] ^= 0xFF; // flip a payload byte, keep trailer
+        let mut out = Vec::new();
+        assert!(GzDecoder::new(&gz[..]).read_to_end(&mut out).is_err());
+    }
+
+    #[test]
+    fn known_crc_vector() {
+        // Standard check value for "123456789".
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn rejects_compressed_blocks() {
+        // A fixed-Huffman block header (BFINAL=1, BTYPE=01).
+        let mut gz = vec![0x1f, 0x8b, 0x08, 0x00, 0, 0, 0, 0, 0, 0xff];
+        gz.push(0x03);
+        gz.extend_from_slice(&[0u8; 8]);
+        let mut out = Vec::new();
+        let err = GzDecoder::new(&gz[..]).read_to_end(&mut out).unwrap_err();
+        assert!(err.to_string().contains("stored blocks only"));
+    }
+}

@@ -1,0 +1,46 @@
+//! Minimal offline substrate for `once_cell::sync::Lazy`, built on
+//! `std::sync::OnceLock`.
+
+pub mod sync {
+    use std::ops::Deref;
+    use std::sync::OnceLock;
+
+    /// A value initialized on first access.
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceLock<T>,
+        init: F,
+    }
+
+    impl<T, F: Fn() -> T> Lazy<T, F> {
+        pub const fn new(init: F) -> Self {
+            Self { cell: OnceLock::new(), init }
+        }
+
+        pub fn force(this: &Self) -> &T {
+            this.cell.get_or_init(|| (this.init)())
+        }
+    }
+
+    impl<T, F: Fn() -> T> Deref for Lazy<T, F> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            Lazy::force(self)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::Lazy;
+
+    static N: Lazy<u64> = Lazy::new(|| 41 + 1);
+
+    #[test]
+    fn lazily_initializes_once() {
+        assert_eq!(*N, 42);
+        assert_eq!(*Lazy::force(&N), 42);
+        let local: Lazy<String> = Lazy::new(|| "x".repeat(3));
+        assert_eq!(local.len(), 3);
+    }
+}
