@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
         let mut taus = Vec::new();
         for (policy, alpha) in [(Policy::Fasgd, 0.005f32), (Policy::Sasgd, 0.04)] {
             let mut cfg = base.clone();
-            cfg.policy = policy;
+            cfg.policy = policy.clone();
             cfg.alpha = alpha;
             cfg.selection = rule.clone();
             cfg.name = format!("hetero-{label}-{}", policy.name());

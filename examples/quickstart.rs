@@ -1,5 +1,6 @@
-//! Quickstart: train the paper's MNIST MLP with FASGD and SASGD on a small
-//! async cluster and compare validation-cost curves.
+//! Quickstart: train the paper's MNIST MLP with FASGD, SASGD, and the
+//! gap-aware policy on a small async cluster and compare validation-cost
+//! curves — through the public [`Simulation`] builder API.
 //!
 //! ```text
 //! make artifacts && cargo run --release --example quickstart
@@ -7,10 +8,22 @@
 //!
 //! Everything here goes through the full three-layer stack: the gradient is
 //! the AOT-lowered JAX graph (with the Pallas dense kernel inside) executed
-//! via PJRT from the rust coordinator.
+//! via PJRT from the rust coordinator. Policies are resolved by name
+//! through the open policy registry, and the eval table prints *live*
+//! through a [`RunObserver`] instead of being dumped post-hoc.
 
 use fasgd::config::{ExperimentConfig, Policy};
-use fasgd::experiments::common::run_experiment;
+use fasgd::metrics::{EvalPoint, RunSummary};
+use fasgd::sim::{RunObserver, Simulation};
+
+/// Streams each validation point as the run records it.
+struct LiveTable;
+
+impl RunObserver for LiveTable {
+    fn on_eval(&mut self, p: &EvalPoint) {
+        println!("{:>6}    {:>8.4}   {:>6.3}", p.iter, p.val_loss, p.val_acc);
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     fasgd::util::logging::init();
@@ -21,19 +34,23 @@ fn main() -> anyhow::Result<()> {
     base.iters = 4_000;
     base.eval_every = 250;
 
-    let mut rows = Vec::new();
-    for (policy, alpha) in [(Policy::Fasgd, 0.005f32), (Policy::Sasgd, 0.04)] {
+    let mut rows: Vec<(Policy, RunSummary)> = Vec::new();
+    for (policy, alpha) in [
+        (Policy::Fasgd, 0.005f32),
+        (Policy::Sasgd, 0.04),
+        (Policy::GapAware, 0.04),
+    ] {
         let mut cfg = base.clone();
-        cfg.policy = policy;
+        cfg.policy = policy.clone();
         cfg.alpha = alpha;
         cfg.name = format!("quickstart-{}", policy.name());
-        let summary = run_experiment(&cfg)?;
 
         println!("\n== {} (alpha={alpha}) ==", policy.name());
         println!("iter      val_cost   val_acc");
-        for p in &summary.history.evals {
-            println!("{:>6}    {:>8.4}   {:>6.3}", p.iter, p.val_loss, p.val_acc);
-        }
+        let summary = Simulation::builder(cfg)
+            .observer(LiveTable)
+            .build()?
+            .run()?;
         rows.push((policy, summary));
     }
 
@@ -47,7 +64,12 @@ fn main() -> anyhow::Result<()> {
             "SASGD wins — unexpected at these settings"
         }
     );
-    println!("mean step-staleness: FASGD {:.2}, SASGD {:.2}",
-        f.staleness.mean(), s.staleness.mean());
+    let ga = &rows[2].1;
+    println!(
+        "gap_aware (Barkai et al. 2019, via the open policy registry): {:.4}",
+        ga.history.tail_mean(3)
+    );
+    println!("mean step-staleness: FASGD {:.2}, SASGD {:.2}, gap_aware {:.2}",
+        f.staleness.mean(), s.staleness.mean(), ga.staleness.mean());
     Ok(())
 }

@@ -81,7 +81,7 @@ fn main() -> anyhow::Result<()> {
         (Policy::Fasgd, 0.005, 0.0),
     ] {
         let mut cfg = base.clone();
-        cfg.policy = policy;
+        cfg.policy = policy.clone();
         cfg.alpha = alpha;
         cfg.rho = rho;
         cfg.clients = 64;

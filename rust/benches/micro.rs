@@ -1,19 +1,36 @@
 //! Micro-benchmarks for the L3 hot paths (EXPERIMENTS.md §Perf):
 //! the fused FASGD server update, the SASGD axpy, the PJRT dispatch cost of
-//! the grad/eval/update graphs, pure-rust grad, and the dispatcher's
-//! per-step overhead with gradient cost excluded.
+//! the grad/eval/update graphs, pure-rust grad, the dispatcher's per-step
+//! overhead with gradient cost excluded, per-policy dispatcher throughput,
+//! and the serial-vs-parallel speedup.
+//!
+//! `cargo bench --bench micro -- --json BENCH_pr2.json` additionally
+//! writes the throughput snapshot as JSON (the per-PR perf trajectory).
 
 use std::time::Duration;
 
 use fasgd::bench_util::Bench;
 use fasgd::config::Policy;
 use fasgd::grad::{Batch, GradientEngine, RustMlpEngine, XlaGradEngine};
+use fasgd::sim::Simulation;
 use fasgd::tensor::{fasgd_update_fused, FasgdHparams};
+use fasgd::util::json::{obj, Json};
 
 const P: usize = 159_010; // the paper MLP's flat parameter count
 
 fn main() -> anyhow::Result<()> {
     fasgd::util::logging::init();
+    let argv: Vec<String> = std::env::args().collect();
+    let json_path = match argv.iter().position(|a| a == "--json") {
+        Some(i) => match argv.get(i + 1) {
+            Some(p) if !p.starts_with("--") => Some(p.clone()),
+            _ => anyhow::bail!(
+                "--json requires a path argument, e.g. \
+                 `cargo bench --bench micro -- --json BENCH_pr2.json`"
+            ),
+        },
+        None => None,
+    };
     let bench = Bench::with_budget(Duration::from_millis(600));
 
     // --- server update engines over P=159010 --------------------------------
@@ -120,6 +137,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     let mut speedup_at_4 = 0.0;
+    let mut parallel_rows: Vec<Json> = Vec::new();
     for workers in [2usize, 4, 8] {
         let mut par =
             fasgd::experiments::common::build_parallel_sim(&cfg, workers)?;
@@ -134,11 +152,54 @@ fn main() -> anyhow::Result<()> {
         println!(
             "dispatcher parallel (mlp lambda=8 mu=8, {workers} workers) {sps:>10.0} steps/s  ({speedup:.2}x)"
         );
+        parallel_rows.push(obj(vec![
+            ("workers", workers.into()),
+            ("steps_per_sec", sps.into()),
+            ("speedup_vs_serial", speedup.into()),
+        ]));
     }
     println!(
         "parallel speedup at 4 workers: {speedup_at_4:.2}x {}",
         if speedup_at_4 >= 2.0 { "(>= 2x target met)" } else { "(below 2x target)" }
     );
+
+    // --- per-policy dispatcher throughput (serial, via the builder) ---------
+    // Coordination + policy apply_update cost per step at the paper MLP
+    // size; gap_aware pays an extra ||theta||_2 pass per update, fasgd the
+    // fused four-stream update — this table is where such costs show up.
+    let policy_iters = fasgd::bench_util::bench_iters(1_500);
+    let mut policy_rows: Vec<Json> = Vec::new();
+    for name in ["sync", "asgd", "sasgd", "exponential", "fasgd", "gap_aware"]
+    {
+        let mut cfg = mk_cfg();
+        cfg.policy = Policy::custom(name);
+        cfg.alpha = if name == "fasgd" { 0.005 } else { 0.01 };
+        let mut sim = Simulation::builder(cfg).build()?;
+        sim.run_until(policy_iters / 4)?; // warmup
+        let t0 = std::time::Instant::now();
+        sim.run_until(policy_iters / 4 + policy_iters)?;
+        let sps = policy_iters as f64 / t0.elapsed().as_secs_f64();
+        println!(
+            "dispatcher serial per-policy ({name:<11})        {sps:>10.0} steps/s"
+        );
+        policy_rows.push(obj(vec![
+            ("policy", name.into()),
+            ("steps_per_sec", sps.into()),
+        ]));
+    }
+
+    if let Some(path) = json_path {
+        let snapshot = obj(vec![
+            ("bench", "micro".into()),
+            ("workload", "mlp lambda=8 mu=8 hidden=200 (pure-rust grad)".into()),
+            ("serial_steps_per_sec", serial_sps.into()),
+            ("parallel", Json::Arr(parallel_rows)),
+            ("per_policy_serial", Json::Arr(policy_rows)),
+            ("speedup_at_4_workers", speedup_at_4.into()),
+        ]);
+        std::fs::write(&path, snapshot.to_string_pretty())?;
+        println!("wrote throughput snapshot to {path}");
+    }
 
     Ok(())
 }

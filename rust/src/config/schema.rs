@@ -7,45 +7,70 @@ use anyhow::{bail, Context, Result};
 
 use crate::tensor::FasgdHparams;
 
-/// Parameter-server policy (DESIGN.md §6).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Policy {
+/// Parameter-server policy *name* (DESIGN.md §6).
+///
+/// Policies are open: a `Policy` is a (lowercase) name resolved against
+/// [`crate::server::PolicyRegistry`] — the paper's five policies plus
+/// anything registered at runtime. The associated constants below are the
+/// well-known names, kept variant-shaped (`Policy::Fasgd`) because most of
+/// the codebase spells them that way; `Policy::custom("my_rule")` names a
+/// runtime-registered policy. Parsing (`FromStr`, so every config/CLI
+/// path) validates against the registry and enumerates the registered
+/// names on error.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Policy(std::borrow::Cow<'static, str>);
+
+#[allow(non_upper_case_globals)]
+impl Policy {
     /// Synchronous SGD: barrier across all λ clients, mean gradient.
-    Sync,
+    pub const Sync: Policy = Policy(std::borrow::Cow::Borrowed("sync"));
     /// Plain asynchronous SGD (Bengio'03 / Dean'12 style).
-    Asgd,
+    pub const Asgd: Policy = Policy(std::borrow::Cow::Borrowed("asgd"));
     /// Staleness-aware ASGD (Zhang et al. 2015): divide α by τ.
-    Sasgd,
+    pub const Sasgd: Policy = Policy(std::borrow::Cow::Borrowed("sasgd"));
     /// Exponential staleness penalty (Chan & Lane 2014): α·exp(−ρτ).
-    Exponential,
+    pub const Exponential: Policy =
+        Policy(std::borrow::Cow::Borrowed("exponential"));
     /// The paper's contribution: gradient-statistics-aware ASGD.
-    Fasgd,
+    pub const Fasgd: Policy = Policy(std::borrow::Cow::Borrowed("fasgd"));
+    /// Gap-Aware staleness mitigation (Barkai et al. 2019); registered by
+    /// `server/gap_aware.rs` — the one-file-policy proof.
+    pub const GapAware: Policy =
+        Policy(std::borrow::Cow::Borrowed("gap_aware"));
+
+    /// Name a policy that is (or will be) registered at runtime. The name
+    /// is normalized to lowercase; no registry check happens here — the
+    /// registry rejects unknown names at build time, `FromStr` at parse
+    /// time.
+    pub fn custom(name: impl AsRef<str>) -> Policy {
+        Policy(std::borrow::Cow::Owned(name.as_ref().to_ascii_lowercase()))
+    }
+
+    pub fn name(&self) -> &str {
+        &self.0
+    }
+
+    /// Does this policy park clients at a barrier (sync-style)? Resolved
+    /// through the registry's per-policy flag; the scheduler and the
+    /// bandwidth-gating validation both key off it.
+    pub fn is_barrier(&self) -> bool {
+        crate::server::policy_is_barrier(self.name())
+    }
 }
 
 impl FromStr for Policy {
     type Err = anyhow::Error;
 
+    /// Registry-backed parse: aliases resolve to canonical names, unknown
+    /// names fail with the full list of registered policies.
     fn from_str(s: &str) -> Result<Self> {
-        Ok(match s.to_ascii_lowercase().as_str() {
-            "sync" | "ssgd" => Policy::Sync,
-            "asgd" => Policy::Asgd,
-            "sasgd" => Policy::Sasgd,
-            "exponential" | "exp" => Policy::Exponential,
-            "fasgd" => Policy::Fasgd,
-            other => bail!("unknown policy {other:?}"),
-        })
+        crate::server::registry().parse_policy(s)
     }
 }
 
-impl Policy {
-    pub fn name(&self) -> &'static str {
-        match self {
-            Policy::Sync => "sync",
-            Policy::Asgd => "asgd",
-            Policy::Sasgd => "sasgd",
-            Policy::Exponential => "exponential",
-            Policy::Fasgd => "fasgd",
-        }
+impl std::fmt::Display for Policy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
     }
 }
 
@@ -477,12 +502,19 @@ impl ExperimentConfig {
         if self.grad_engine == GradEngineKind::Xla && self.mlp_hidden != 200 {
             bail!("AOT artifacts are built with hidden=200; mlp.hidden only applies to grad_engine=rust");
         }
-        if self.policy == Policy::Sync && self.bandwidth != BandwidthMode::Always {
+        // Fail fast on unknown policy names (the error enumerates the
+        // registered ones) — custom policies must register before their
+        // configs validate. The resolved entry also answers barrier-ness
+        // authoritatively, with no unregistered-name fallback.
+        let policy_entry =
+            crate::server::registry().resolve(self.policy.name())?;
+        if policy_entry.barrier && self.bandwidth != BandwidthMode::Always {
             bail!(
-                "bandwidth gating cannot be combined with policy=sync: a \
-                 dropped push would park the client at the barrier with no \
-                 future unblock and deadlock the scheduler (use \
-                 bandwidth.mode = always, or an async policy)"
+                "bandwidth gating cannot be combined with the barrier \
+                 policy {:?}: a dropped push would park the client at the \
+                 barrier with no future unblock and deadlock the scheduler \
+                 (use bandwidth.mode = always, or an async policy)",
+                self.policy.name()
             );
         }
         if self.mlp_hidden == 0 {

@@ -73,7 +73,7 @@ pub fn build_parts(cfg: &ExperimentConfig) -> Result<SimParts> {
                     XlaUpdateEngine::new(engine, init.len(), &cfg.fasgd)?,
                 ),
             };
-            let server = build_server(cfg, init, update);
+            let server = build_server(cfg, init, update)?;
             let split = data::load_classification(&cfg.dataset, cfg.seed)?;
             SimParts {
                 server,
@@ -92,7 +92,7 @@ pub fn build_parts(cfg: &ExperimentConfig) -> Result<SimParts> {
             if cfg.update_engine == UpdateEngineKind::Xla {
                 bail!("update_engine=xla requires grad_engine=xla (artifact P must match)");
             }
-            let server = build_server(cfg, init, UpdateEngine::Rust);
+            let server = build_server(cfg, init, UpdateEngine::Rust)?;
             SimParts {
                 server,
                 grad: Box::new(grad),
@@ -113,7 +113,7 @@ pub fn build_parts(cfg: &ExperimentConfig) -> Result<SimParts> {
                     XlaUpdateEngine::new(engine, init.len(), &cfg.fasgd)?,
                 ),
             };
-            let server = build_server(cfg, init, update);
+            let server = build_server(cfg, init, update)?;
             let (vocab, seq, len) = corpus_params(model);
             let meta = engine.registry().find_grad(name, cfg.batch)?;
             let seq = meta.seq_len.unwrap_or(seq);
@@ -194,30 +194,20 @@ pub fn effective_workers(cfg: &ExperimentConfig) -> usize {
     }
 }
 
-/// Build and run one experiment end-to-end, choosing the execution mode
-/// from `cfg.workers` (serial for 1, worker pool otherwise — same result
-/// either way).
+/// Build and run one experiment end-to-end through the
+/// [`crate::sim::SimulationBuilder`] facade, which picks the execution
+/// mode from `cfg.workers` (serial for 1, worker pool otherwise — same
+/// result either way). Progress (per-eval points + the completion line)
+/// goes through an attached [`crate::sim::EvalLogger`] observer — the
+/// fig1–fig3 harnesses and the tests all share this one launch path.
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunSummary> {
     log::info!("run: {}", cfg.summary());
-    let workers = effective_workers(cfg);
-    let summary = if workers > 1 {
-        log::info!(
-            "parallel dispatcher: {workers} workers, lookahead {}",
-            cfg.lookahead
-        );
-        build_parallel_sim(cfg, workers)?.run()?
-    } else {
-        build_sim(cfg)?.run()?
-    };
-    log::info!(
-        "done: {} final={:.4} best={:.4} mean_tau={:.1} wall={:.1}s",
-        summary.name,
-        summary.final_val_loss(),
-        summary.best_val_loss(),
-        summary.staleness.mean(),
-        summary.wall_secs
-    );
-    Ok(summary)
+    // Per-eval progress and the completion line both come from the
+    // EvalLogger observer (its on_finish logs final/best/mean_tau/wall).
+    crate::sim::Simulation::builder(cfg.clone())
+        .observer(crate::sim::EvalLogger::new(cfg.name.as_str()))
+        .build()?
+        .run()
 }
 
 /// A quick pure-rust config for tests (no artifacts, small everything).
@@ -232,7 +222,7 @@ pub fn fast_test_config(policy: Policy) -> ExperimentConfig {
     // FASGD divides by the (often ≪1) gradient-std track, so its stable α
     // is ~10x smaller — exactly what the paper's LR sweep found (0.005 vs
     // 0.04 for SASGD).
-    cfg.alpha = if policy == Policy::Fasgd { 0.005 } else { 0.05 };
+    cfg.alpha = if cfg.policy == Policy::Fasgd { 0.005 } else { 0.05 };
     cfg.eval_every = 100;
     cfg.dataset.train = 512;
     cfg.dataset.val = 256;
@@ -264,7 +254,7 @@ mod tests {
             Policy::Exponential,
             Policy::Fasgd,
         ] {
-            let cfg = fast_test_config(policy);
+            let cfg = fast_test_config(policy.clone());
             let summary = run_experiment(&cfg).unwrap();
             assert!(summary.final_val_loss().is_finite(), "{policy:?}");
         }

@@ -9,6 +9,7 @@
 use anyhow::Result;
 
 use crate::config::{ExperimentConfig, Policy};
+use crate::experiments::common::run_experiment;
 use crate::metrics::writer;
 use crate::metrics::RunSummary;
 
@@ -42,27 +43,24 @@ pub fn panel_config(
     policy: Policy,
 ) -> ExperimentConfig {
     let mut cfg = base.clone();
-    cfg.policy = policy;
     cfg.batch = mu;
     cfg.clients = lambda;
-    cfg.alpha = match policy {
-        Policy::Fasgd => FASGD_LR,
-        _ => SASGD_LR,
-    };
+    cfg.alpha = if policy == Policy::Fasgd { FASGD_LR } else { SASGD_LR };
     cfg.name = format!("fig1-mu{mu}-lam{lambda}-{}", policy.name());
+    cfg.policy = policy;
     cfg
 }
 
 /// Run the full figure. `base.iters` scales the runtime (paper: 100_000).
+/// Each run goes through the `SimulationBuilder` facade (with live eval
+/// logging) via [`run_experiment`].
 pub fn run(base: &ExperimentConfig) -> Result<Vec<PanelResult>> {
     let mut out = Vec::new();
     for (mu, lambda) in PANELS {
-        let fasgd = crate::experiments::common::run_experiment(
-            &panel_config(base, mu, lambda, Policy::Fasgd),
-        )?;
-        let sasgd = crate::experiments::common::run_experiment(
-            &panel_config(base, mu, lambda, Policy::Sasgd),
-        )?;
+        let fasgd =
+            run_experiment(&panel_config(base, mu, lambda, Policy::Fasgd))?;
+        let sasgd =
+            run_experiment(&panel_config(base, mu, lambda, Policy::Sasgd))?;
         out.push(PanelResult { mu, lambda, fasgd, sasgd });
     }
     Ok(out)

@@ -8,6 +8,7 @@
 use anyhow::Result;
 
 use crate::config::{ExperimentConfig, Policy};
+use crate::experiments::common::run_experiment;
 use crate::experiments::fig1::{FASGD_LR, SASGD_LR};
 use crate::metrics::{writer, RunSummary};
 
@@ -39,14 +40,11 @@ pub fn lambda_config(
     policy: Policy,
 ) -> ExperimentConfig {
     let mut cfg = base.clone();
-    cfg.policy = policy;
     cfg.batch = MU;
     cfg.clients = lambda;
-    cfg.alpha = match policy {
-        Policy::Fasgd => FASGD_LR,
-        _ => SASGD_LR,
-    };
+    cfg.alpha = if policy == Policy::Fasgd { FASGD_LR } else { SASGD_LR };
     cfg.name = format!("fig2-lam{lambda}-{}", policy.name());
+    cfg.policy = policy;
     cfg
 }
 
@@ -58,12 +56,8 @@ pub fn run(base: &ExperimentConfig, lambdas: &[usize]) -> Result<Vec<LambdaResul
         let mut b = base.clone();
         // Ensure every client pushes a handful of times at minimum.
         b.iters = b.iters.max(lambda as u64 * 3);
-        let fasgd = crate::experiments::common::run_experiment(
-            &lambda_config(&b, lambda, Policy::Fasgd),
-        )?;
-        let sasgd = crate::experiments::common::run_experiment(
-            &lambda_config(&b, lambda, Policy::Sasgd),
-        )?;
+        let fasgd = run_experiment(&lambda_config(&b, lambda, Policy::Fasgd))?;
+        let sasgd = run_experiment(&lambda_config(&b, lambda, Policy::Sasgd))?;
         out.push(LambdaResult { lambda, fasgd, sasgd });
     }
     Ok(out)

@@ -11,6 +11,7 @@
 use anyhow::Result;
 
 use crate::config::{BandwidthMode, ExperimentConfig, Policy};
+use crate::experiments::common::run_experiment;
 use crate::metrics::{writer, RunSummary};
 
 /// c-values swept for each direction (0 = baseline FASGD, gate off).
@@ -76,7 +77,7 @@ pub fn run(base: &ExperimentConfig, cs: &[f64]) -> Result<Vec<SweepPoint>> {
     for dir in [SweepDir::Fetch, SweepDir::Push] {
         for &c in cs {
             let cfg = sweep_config(base, dir, c);
-            let run = crate::experiments::common::run_experiment(&cfg)?;
+            let run = run_experiment(&cfg)?;
             out.push(SweepPoint { dir, c, run });
         }
     }

@@ -38,12 +38,13 @@ impl SweepResult {
 
 /// Score one (policy, rate) over the paper's 4 panels; non-finite losses
 /// count as divergence.
-fn score(base: &ExperimentConfig, policy: Policy, rate: f32) -> Result<f64> {
+fn score(base: &ExperimentConfig, policy: &Policy, rate: f32) -> Result<f64> {
     let mut total = 0.0;
     let mut count = 0usize;
     for (mu, lambda) in crate::experiments::fig1::PANELS {
-        let mut cfg =
-            crate::experiments::fig1::panel_config(base, mu, lambda, policy);
+        let mut cfg = crate::experiments::fig1::panel_config(
+            base, mu, lambda, policy.clone(),
+        );
         cfg.alpha = rate;
         cfg.name = format!("lr-{}-{rate}-mu{mu}", policy.name());
         let run = crate::experiments::common::run_experiment(&cfg)?;
@@ -64,7 +65,7 @@ pub fn run(base: &ExperimentConfig) -> Result<Vec<SweepResult>> {
     for policy in [Policy::Fasgd, Policy::Sasgd] {
         let mut scores = Vec::new();
         for &r in &rates {
-            scores.push(score(base, policy, r)?);
+            scores.push(score(base, &policy, r)?);
         }
         out.push(SweepResult { policy, rates: rates.clone(), scores });
     }

@@ -52,30 +52,19 @@ pub fn run_live(cfg: &ExperimentConfig) -> Result<LiveReport> {
     let sizes = vec![784, cfg.mlp_hidden, 10];
     let init = crate::grad::rust_mlp::init_params(cfg.seed, &sizes);
 
-    // build_server returns Box<dyn Server>; rebuild as Send boxes here.
-    let server: Box<dyn Server + Send> = match cfg.policy {
-        crate::config::Policy::Sync => {
-            // A barrier needs scheduler cooperation; live mode covers the
-            // async policies (the paper's focus).
-            anyhow::bail!("live mode supports async policies only")
-        }
-        crate::config::Policy::Asgd => {
-            Box::new(crate::server::Asgd::new(init.clone(), cfg.alpha))
-        }
-        crate::config::Policy::Sasgd => {
-            Box::new(crate::server::Sasgd::new(init.clone(), cfg.alpha))
-        }
-        crate::config::Policy::Exponential => {
-            Box::new(crate::server::ExponentialPenalty::new(
-                init.clone(),
-                cfg.alpha,
-                cfg.rho,
-            ))
-        }
-        crate::config::Policy::Fasgd => Box::new(
-            crate::server::Fasgd::new_rust(init.clone(), cfg.alpha, cfg.fasgd),
-        ),
-    };
+    // Live mode needs `Box<dyn Server + Send>`: built through the open
+    // policy registry's threaded factories (policies opt in via
+    // `PolicySpec::threaded`; barrier policies need scheduler
+    // cooperation and stay simulator-only).
+    if cfg.policy.is_barrier() {
+        anyhow::bail!(
+            "live mode supports async policies only (policy {:?} is a \
+             barrier policy)",
+            cfg.policy.name()
+        );
+    }
+    let server: Box<dyn Server + Send> =
+        crate::server::registry().build_threaded(&cfg, init.clone())?;
     let split = data::load_classification(&cfg.dataset, cfg.seed)?;
     let split = Arc::new(split);
     let shared = Arc::new(Shared {

@@ -81,9 +81,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     let cfg = config_from(args)?;
     let summary = fasgd::experiments::common::run_experiment(&cfg)?;
     println!("{}", summary.to_json().to_string_pretty());
-    let dir = out_dir(args);
+    // Written directly (not via CsvCurveWriter): a failed curve write must
+    // fail the command, and observer callbacks are infallible by design.
     fasgd::metrics::writer::write_curves_csv(
-        &dir.join(format!("{}_curve.csv", cfg.name)),
+        &out_dir(args).join(format!("{}_curve.csv", cfg.name)),
         std::slice::from_ref(&summary),
     )?;
     Ok(())
@@ -175,10 +176,12 @@ fn cmd_info() -> Result<()> {
 }
 
 fn print_help() {
+    // The policy list is live: runtime-registered policies show up here.
+    let policies = fasgd::server::registry().names().join("|");
     println!(
         "repro — Faster Asynchronous SGD (Odena 2016) reproduction\n\n\
          usage: repro <train|fig1|fig2|fig3|sweep-lr|live|info> [--key value ...]\n\n\
-         common flags: --policy <sync|asgd|sasgd|exponential|fasgd>\n\
+         common flags: --policy <{policies}>\n\
          \x20                --lambda N --mu N --iters N --alpha F --seed N\n\
          \x20                --workers N --lookahead K (parallel dispatcher)\n\
          \x20                --config file.toml --out dir/\n\

@@ -1,28 +1,48 @@
-//! Parameter-server policies (S2/S3) — the paper's algorithmic core.
+//! Parameter-server policies (S2/S3) — the paper's algorithmic core,
+//! behind an **open registry**.
 //!
 //! Every policy implements [`Server`], whose `apply_update` mirrors the
 //! FRED `Server.apply_update(grads, timestamp, client)` interface from the
 //! paper §3. The server owns the canonical flat parameter vector and the
 //! scalar timestamp `T` (incremented once per weight update, paper §2.1).
 //!
-//! Policies:
+//! Policies are *not* a closed set: [`registry`] maps string names to
+//! factory closures ([`PolicySpec`] → [`PolicyRegistry`]), and every
+//! consumer — config parsing, the CLI, [`build_server`], live mode —
+//! resolves through it. The built-ins:
+//!
 //! * [`sync::SyncSgd`] — barrier over all λ clients, mean gradient.
 //! * [`asgd::Asgd`] — plain async SGD.
 //! * [`sasgd::Sasgd`] — Zhang et al. 2015: divide α by step-staleness τ.
 //! * [`exponential::ExponentialPenalty`] — Chan & Lane 2014: α·exp(−ρτ).
 //! * [`fasgd::Fasgd`] — the paper's contribution (eqs. 4–8).
+//! * [`gap_aware::GapAware`] — Barkai et al. 2019, the one-file-plugin
+//!   proof: implement [`Server`] + register a [`PolicySpec`], done.
+//!
+//! Adding a policy (the one-file recipe): create `server/my_rule.rs` with
+//! the `Server` impl and a `register(reg)` hook, add its `mod` line here
+//! and one call in `registry.rs`'s builtin list — or skip the tree edit
+//! entirely and call `registry().register(...)` from your program or test
+//! before parsing the config.
 
 pub mod asgd;
 pub mod exponential;
 pub mod fasgd;
+pub mod gap_aware;
 pub mod gradient_cache;
+pub mod registry;
 pub mod sasgd;
 pub mod sync;
 
 pub use asgd::Asgd;
 pub use exponential::ExponentialPenalty;
 pub use fasgd::{Fasgd, FasgdServer, RustBackend, UpdateEngine, XlaBackend};
+pub use gap_aware::GapAware;
 pub use gradient_cache::GradientCache;
+pub use registry::{
+    policy_is_barrier, registry, PolicyArgs, PolicyEntry, PolicyFactory,
+    PolicyRegistry, PolicySpec, ThreadedPolicyFactory,
+};
 pub use sasgd::Sasgd;
 pub use sync::SyncSgd;
 
@@ -31,7 +51,7 @@ use std::collections::BinaryHeap;
 
 use anyhow::Result;
 
-use crate::config::{ExperimentConfig, Policy};
+use crate::config::ExperimentConfig;
 
 /// What happened when a gradient was handed to the server.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -159,21 +179,15 @@ impl<T> Default for ApplyQueue<T> {
     }
 }
 
-/// Build the configured policy around an initial parameter vector.
+/// Build the configured policy around an initial parameter vector, by name
+/// through the open [`registry`]. Unknown names fail with the list of
+/// registered policies.
 pub fn build_server(
     cfg: &ExperimentConfig,
     init: Vec<f32>,
     update_engine: UpdateEngine,
-) -> Box<dyn Server> {
-    match cfg.policy {
-        Policy::Sync => Box::new(SyncSgd::new(init, cfg.alpha, cfg.clients)),
-        Policy::Asgd => Box::new(Asgd::new(init, cfg.alpha)),
-        Policy::Sasgd => Box::new(Sasgd::new(init, cfg.alpha)),
-        Policy::Exponential => {
-            Box::new(ExponentialPenalty::new(init, cfg.alpha, cfg.rho))
-        }
-        Policy::Fasgd => Fasgd::new(init, cfg.alpha, cfg.fasgd, update_engine),
-    }
+) -> Result<Box<dyn Server>> {
+    registry().build(cfg, init, update_engine)
 }
 
 #[cfg(test)]
@@ -210,6 +224,7 @@ mod tests {
 
     #[test]
     fn build_all_policies() {
+        use crate::config::Policy;
         let mut cfg = ExperimentConfig::default();
         for p in [
             Policy::Sync,
@@ -217,11 +232,22 @@ mod tests {
             Policy::Sasgd,
             Policy::Exponential,
             Policy::Fasgd,
+            Policy::GapAware,
         ] {
-            cfg.policy = p;
-            let s = build_server(&cfg, vec![0.0; 4], UpdateEngine::Rust);
-            assert_eq!(s.params().len(), 4);
+            cfg.policy = p.clone();
+            let s = build_server(&cfg, vec![0.0; 4], UpdateEngine::Rust)
+                .unwrap();
+            assert_eq!(s.params().len(), 4, "{p}");
             assert_eq!(s.timestamp(), 0);
         }
+    }
+
+    #[test]
+    fn build_unknown_policy_fails_with_names() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.policy = crate::config::Policy::custom("nope");
+        let err = build_server(&cfg, vec![0.0; 4], UpdateEngine::Rust)
+            .unwrap_err();
+        assert!(format!("{err}").contains("registered policies"), "{err}");
     }
 }

@@ -1,0 +1,400 @@
+//! The open policy registry: string names → server factories.
+//!
+//! The paper's five policies used to be a closed enum dispatched in five
+//! layers (config, CLI, launcher, simulator, live mode). They are now
+//! entries in a global [`PolicyRegistry`]; adding a policy means writing
+//! one file that implements [`Server`] and registering a [`PolicySpec`] —
+//! no edits to `config/schema.rs`, `experiments/common.rs`, or
+//! `sim/protocol.rs`. See `server/gap_aware.rs` for the canonical one-file
+//! example and ROADMAP.md ("Public API") for the recipe.
+//!
+//! Resolution paths through the registry:
+//! * `Policy::from_str` (every config/TOML/CLI parse) — unknown names fail
+//!   listing the registered policies;
+//! * [`build_server`](crate::server::build_server) → [`PolicyRegistry::build`]
+//!   — constructs the configured server for the simulator;
+//! * [`PolicyRegistry::build_threaded`] — the `Send` construction live
+//!   mode's worker threads need (policies opt in via
+//!   [`PolicySpec::threaded`]);
+//! * the `barrier` flag — tells the scheduler (and config validation) that
+//!   a policy parks clients at a barrier, sync-style.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+use anyhow::{bail, Result};
+use once_cell::sync::Lazy;
+
+use crate::config::{ExperimentConfig, Policy};
+use crate::server::{Server, UpdateEngine};
+
+/// Everything a factory gets to build one server instance.
+pub struct PolicyArgs<'a> {
+    pub cfg: &'a ExperimentConfig,
+    /// Initial flat parameter vector (ownership passes to the server).
+    pub init: Vec<f32>,
+    /// The configured FASGD update backend; policies that don't run the
+    /// fused update simply drop it.
+    pub update: UpdateEngine,
+}
+
+/// Builds a server for the simulator (single-threaded coordinator).
+pub type PolicyFactory =
+    Arc<dyn Fn(PolicyArgs<'_>) -> Result<Box<dyn Server>> + Send + Sync>;
+
+/// Builds a `Send` server for live mode's mutexed, multi-thread setup.
+pub type ThreadedPolicyFactory = Arc<
+    dyn Fn(&ExperimentConfig, Vec<f32>) -> Result<Box<dyn Server + Send>>
+        + Send
+        + Sync,
+>;
+
+/// A registration request: name + metadata + factories.
+pub struct PolicySpec {
+    name: String,
+    about: String,
+    aliases: Vec<String>,
+    barrier: bool,
+    factory: PolicyFactory,
+    threaded: Option<ThreadedPolicyFactory>,
+}
+
+impl PolicySpec {
+    /// A new spec. `about` is the one-liner shown in `repro` help output.
+    pub fn new<F>(name: &str, about: &str, factory: F) -> Self
+    where
+        F: Fn(PolicyArgs<'_>) -> Result<Box<dyn Server>>
+            + Send
+            + Sync
+            + 'static,
+    {
+        Self {
+            name: name.to_ascii_lowercase(),
+            about: about.to_string(),
+            aliases: Vec::new(),
+            barrier: false,
+            factory: Arc::new(factory),
+            threaded: None,
+        }
+    }
+
+    /// Accept `alias` as another spelling of this policy's name.
+    pub fn alias(mut self, alias: &str) -> Self {
+        self.aliases.push(alias.to_ascii_lowercase());
+        self
+    }
+
+    /// Mark as a barrier policy: the scheduler parks selected clients
+    /// until the policy releases them (`UpdateOutcome::unblock_all`), and
+    /// bandwidth gating is rejected at validation (deadlock).
+    pub fn barrier(mut self) -> Self {
+        self.barrier = true;
+        self
+    }
+
+    /// Provide the `Send` construction live mode needs for its worker
+    /// threads (no update-engine choice there: live mode is pure-rust).
+    pub fn threaded<F>(mut self, f: F) -> Self
+    where
+        F: Fn(&ExperimentConfig, Vec<f32>) -> Result<Box<dyn Server + Send>>
+            + Send
+            + Sync
+            + 'static,
+    {
+        self.threaded = Some(Arc::new(f));
+        self
+    }
+}
+
+/// One registered policy.
+pub struct PolicyEntry {
+    pub name: String,
+    pub about: String,
+    pub barrier: bool,
+    factory: PolicyFactory,
+    threaded: Option<ThreadedPolicyFactory>,
+}
+
+struct Inner {
+    entries: BTreeMap<String, Arc<PolicyEntry>>,
+    /// alias → canonical name.
+    aliases: BTreeMap<String, String>,
+}
+
+/// Open name → factory map. One global instance ([`registry`]) backs all
+/// config parsing and server construction; re-registering a name replaces
+/// the previous entry (latest wins — keeps repeated test registration
+/// idempotent).
+pub struct PolicyRegistry {
+    inner: RwLock<Inner>,
+}
+
+impl PolicyRegistry {
+    fn empty() -> Self {
+        Self {
+            inner: RwLock::new(Inner {
+                entries: BTreeMap::new(),
+                aliases: BTreeMap::new(),
+            }),
+        }
+    }
+
+    pub fn register(&self, spec: PolicySpec) {
+        let entry = Arc::new(PolicyEntry {
+            name: spec.name.clone(),
+            about: spec.about,
+            barrier: spec.barrier,
+            factory: spec.factory,
+            threaded: spec.threaded,
+        });
+        let mut inner = self.inner.write().expect("policy registry poisoned");
+        // Latest wins: replacing a name also drops the replaced entry's
+        // aliases, so a dropped alias cannot keep resolving.
+        inner.aliases.retain(|_, canonical| canonical != &spec.name);
+        for a in &spec.aliases {
+            // An alias shadowing a registered policy's canonical name can
+            // never resolve (canonical wins in lookup) — refuse it loudly
+            // instead of registering dead weight.
+            if inner.entries.contains_key(a) && *a != spec.name {
+                log::warn!(
+                    "policy alias {a:?} for {:?} collides with a registered \
+                     policy name; alias ignored",
+                    spec.name
+                );
+                continue;
+            }
+            if let Some(prev) = inner.aliases.get(a) {
+                if prev != &spec.name {
+                    log::warn!(
+                        "policy alias {a:?} repointed from {prev:?} to {:?}",
+                        spec.name
+                    );
+                }
+            }
+            inner.aliases.insert(a.clone(), spec.name.clone());
+        }
+        inner.entries.insert(spec.name, entry);
+    }
+
+    /// Canonical registered names, sorted (aliases excluded).
+    pub fn names(&self) -> Vec<String> {
+        let inner = self.inner.read().expect("policy registry poisoned");
+        inner.entries.keys().cloned().collect()
+    }
+
+    /// Alias-aware, case-insensitive lookup. Canonical names take
+    /// precedence over aliases, so an alias can never shadow a registered
+    /// policy's own name.
+    pub fn lookup(&self, name: &str) -> Option<Arc<PolicyEntry>> {
+        let name = name.to_ascii_lowercase();
+        let inner = self.inner.read().expect("policy registry poisoned");
+        if let Some(e) = inner.entries.get(&name) {
+            return Some(e.clone());
+        }
+        let canonical = inner.aliases.get(&name)?;
+        inner.entries.get(canonical).cloned()
+    }
+
+    /// Lookup that fails by enumerating what *is* registered.
+    pub fn resolve(&self, name: &str) -> Result<Arc<PolicyEntry>> {
+        match self.lookup(name) {
+            Some(e) => Ok(e),
+            None => bail!(
+                "unknown policy {:?}; registered policies: {}",
+                name,
+                self.names().join(", ")
+            ),
+        }
+    }
+
+    /// Parse a policy name into its canonical [`Policy`] (the path behind
+    /// `Policy::from_str`, i.e. every `--policy` flag and TOML key).
+    pub fn parse_policy(&self, name: &str) -> Result<Policy> {
+        Ok(Policy::custom(&self.resolve(name)?.name))
+    }
+
+    /// Build the configured policy server around `init`.
+    pub fn build(
+        &self,
+        cfg: &ExperimentConfig,
+        init: Vec<f32>,
+        update: UpdateEngine,
+    ) -> Result<Box<dyn Server>> {
+        let entry = self.resolve(cfg.policy.name())?;
+        (*entry.factory)(PolicyArgs { cfg, init, update })
+    }
+
+    /// Build the `Send` variant for live mode; fails for policies that
+    /// did not register a threaded factory.
+    pub fn build_threaded(
+        &self,
+        cfg: &ExperimentConfig,
+        init: Vec<f32>,
+    ) -> Result<Box<dyn Server + Send>> {
+        let entry = self.resolve(cfg.policy.name())?;
+        match &entry.threaded {
+            Some(f) => (**f)(cfg, init),
+            None => bail!(
+                "policy {:?} does not provide a threaded (Send) factory; \
+                 live mode is unavailable for it",
+                entry.name
+            ),
+        }
+    }
+}
+
+/// The global registry, initialized with the paper's five policies plus
+/// `gap_aware`. Custom policies register here at runtime:
+///
+/// ```ignore
+/// fasgd::server::registry().register(
+///     PolicySpec::new("my_rule", "what it does", |a| {
+///         Ok(Box::new(MyRule::new(a.init, a.cfg.alpha)))
+///     }),
+/// );
+/// ```
+pub fn registry() -> &'static PolicyRegistry {
+    static GLOBAL: Lazy<PolicyRegistry> = Lazy::new(|| {
+        let reg = PolicyRegistry::empty();
+        register_builtins(&reg);
+        crate::server::gap_aware::register(&reg);
+        reg
+    });
+    &GLOBAL
+}
+
+/// Barrier-ness by name. Unregistered names read as non-barrier: if a
+/// custom *barrier* policy's config is validated before its registration,
+/// the bandwidth-gating rejection in `ExperimentConfig::validate` is
+/// skipped — the protocol core's force-transmit defense still prevents
+/// the deadlock, but register barrier policies before parsing configs.
+pub fn policy_is_barrier(name: &str) -> bool {
+    registry().lookup(name).map(|e| e.barrier).unwrap_or(false)
+}
+
+fn register_builtins(reg: &PolicyRegistry) {
+    use crate::server::{Asgd, ExponentialPenalty, Fasgd, Sasgd, SyncSgd};
+
+    reg.register(
+        PolicySpec::new(
+            "sync",
+            "synchronous SGD: barrier over all lambda clients, mean gradient",
+            |a| Ok(Box::new(SyncSgd::new(a.init, a.cfg.alpha, a.cfg.clients))),
+        )
+        .alias("ssgd")
+        .barrier(),
+    );
+    reg.register(
+        PolicySpec::new(
+            "asgd",
+            "plain asynchronous SGD (Bengio'03 / Dean'12)",
+            |a| Ok(Box::new(Asgd::new(a.init, a.cfg.alpha))),
+        )
+        .threaded(|cfg, init| Ok(Box::new(Asgd::new(init, cfg.alpha)))),
+    );
+    reg.register(
+        PolicySpec::new(
+            "sasgd",
+            "staleness-aware ASGD (Zhang et al. 2015): alpha / tau",
+            |a| Ok(Box::new(Sasgd::new(a.init, a.cfg.alpha))),
+        )
+        .threaded(|cfg, init| Ok(Box::new(Sasgd::new(init, cfg.alpha)))),
+    );
+    reg.register(
+        PolicySpec::new(
+            "exponential",
+            "exponential staleness penalty (Chan & Lane 2014): alpha*exp(-rho*tau)",
+            |a| {
+                Ok(Box::new(ExponentialPenalty::new(
+                    a.init, a.cfg.alpha, a.cfg.rho,
+                )))
+            },
+        )
+        .alias("exp")
+        .threaded(|cfg, init| {
+            Ok(Box::new(ExponentialPenalty::new(init, cfg.alpha, cfg.rho)))
+        }),
+    );
+    reg.register(
+        PolicySpec::new(
+            "fasgd",
+            "the paper's contribution: moving-average gradient statistics (eqs. 4-8)",
+            |a| Ok(Fasgd::new(a.init, a.cfg.alpha, a.cfg.fasgd, a.update)),
+        )
+        .threaded(|cfg, init| {
+            Ok(Box::new(Fasgd::new_rust(init, cfg.alpha, cfg.fasgd)))
+        }),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_are_registered() {
+        let names = registry().names();
+        for n in ["sync", "asgd", "sasgd", "exponential", "fasgd", "gap_aware"]
+        {
+            assert!(names.contains(&n.to_string()), "{n} missing: {names:?}");
+        }
+    }
+
+    #[test]
+    fn aliases_resolve_to_canonical() {
+        assert_eq!(registry().resolve("ssgd").unwrap().name, "sync");
+        assert_eq!(registry().resolve("EXP").unwrap().name, "exponential");
+        assert_eq!(registry().resolve("ga").unwrap().name, "gap_aware");
+    }
+
+    #[test]
+    fn unknown_name_lists_registered_policies() {
+        let err = registry().resolve("bogus").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("unknown policy \"bogus\""), "{msg}");
+        assert!(msg.contains("registered policies:"), "{msg}");
+        for n in ["sync", "asgd", "sasgd", "exponential", "fasgd"] {
+            assert!(msg.contains(n), "{msg} should list {n}");
+        }
+    }
+
+    #[test]
+    fn barrier_flags() {
+        assert!(policy_is_barrier("sync"));
+        assert!(policy_is_barrier("ssgd"));
+        assert!(!policy_is_barrier("fasgd"));
+        assert!(!policy_is_barrier("gap_aware"));
+        // unregistered name: conservative fallback
+        assert!(!policy_is_barrier("not_registered"));
+    }
+
+    #[test]
+    fn alias_cannot_shadow_canonical_and_stale_aliases_drop() {
+        use crate::server::Asgd;
+        let mk = || {
+            PolicySpec::new("alias_test", "test-only", |a| {
+                Ok(Box::new(Asgd::new(a.init, a.cfg.alpha)))
+            })
+        };
+        // An alias colliding with a built-in name must not hijack it:
+        // canonical entries win over aliases on lookup.
+        registry().register(mk().alias("asgd").alias("alias_test_alt"));
+        assert_eq!(registry().resolve("asgd").unwrap().name, "asgd");
+        assert_eq!(
+            registry().resolve("alias_test_alt").unwrap().name,
+            "alias_test"
+        );
+        // Latest-wins re-registration without the alias drops it.
+        registry().register(mk());
+        assert!(registry().resolve("alias_test_alt").is_err());
+        assert_eq!(registry().resolve("alias_test").unwrap().name, "alias_test");
+    }
+
+    #[test]
+    fn build_threaded_requires_opt_in() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.policy = Policy::Sync; // barrier policy has no threaded factory
+        let err = registry().build_threaded(&cfg, vec![0.0; 4]).unwrap_err();
+        assert!(format!("{err}").contains("threaded"), "{err}");
+    }
+}

@@ -1,0 +1,245 @@
+//! The `SimulationBuilder` facade: one entry point for assembling and
+//! running a simulation, whatever the execution mode.
+//!
+//! ```ignore
+//! use fasgd::sim::{Simulation, observers::EvalLogger};
+//!
+//! let summary = Simulation::builder(cfg)
+//!     .observer(EvalLogger::new("my-run"))
+//!     .build()?
+//!     .run()?;
+//! ```
+//!
+//! The builder:
+//! * assembles engines/data itself via [`crate::experiments::common`]
+//!   (or accepts hand-built [`SimParts`] / a worker [`EngineFactory`]);
+//! * selects serial vs. parallel execution from `cfg.workers` (or an
+//!   explicit [`SimulationBuilder::workers`] override) behind the single
+//!   [`Simulation`] handle — callers never branch on the mode, and the
+//!   two modes stay bitwise identical (rust/tests/parallel_equivalence.rs
+//!   runs through this facade);
+//! * attaches [`RunObserver`]s, the protocol trace, and the B-Staleness
+//!   probe.
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::grad::EngineFactory;
+use crate::metrics::{History, RunSummary};
+use crate::server::Server;
+use crate::sim::observers::RunObserver;
+use crate::sim::parallel::ParallelSimulator;
+use crate::sim::probe::ProbeLog;
+use crate::sim::protocol::{ProtocolCore, SimParts};
+use crate::sim::serial::Simulator;
+use crate::sim::trace::Trace;
+
+/// Staged configuration for one [`Simulation`].
+pub struct SimulationBuilder {
+    cfg: ExperimentConfig,
+    parts: Option<SimParts>,
+    factory: Option<EngineFactory>,
+    workers: Option<usize>,
+    observers: Vec<Box<dyn RunObserver>>,
+    trace_cap: usize,
+    probe_every: Option<u64>,
+}
+
+impl SimulationBuilder {
+    pub fn new(cfg: ExperimentConfig) -> Self {
+        Self {
+            cfg,
+            parts: None,
+            factory: None,
+            workers: None,
+            observers: Vec::new(),
+            trace_cap: 0,
+            probe_every: None,
+        }
+    }
+
+    /// Use pre-assembled engines + data instead of building them from the
+    /// config (hand-built servers, failure-injection engines, …).
+    pub fn parts(mut self, parts: SimParts) -> Self {
+        self.parts = Some(parts);
+        self
+    }
+
+    /// Per-worker gradient-engine factory for parallel execution; defaults
+    /// to [`crate::experiments::common::engine_factory`].
+    pub fn engine_factory(mut self, factory: EngineFactory) -> Self {
+        self.factory = Some(factory);
+        self
+    }
+
+    /// Override `cfg.workers` (1 = serial, N > 1 = worker pool, 0 = one
+    /// worker per core). Same results either way.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = Some(workers);
+        self
+    }
+
+    /// Attach an observer (builder-sugar over [`Self::boxed_observer`]).
+    pub fn observer(self, obs: impl RunObserver + 'static) -> Self {
+        self.boxed_observer(Box::new(obs))
+    }
+
+    pub fn boxed_observer(mut self, obs: Box<dyn RunObserver>) -> Self {
+        self.observers.push(obs);
+        self
+    }
+
+    /// Enable the protocol trace (ring buffer of `cap` events).
+    pub fn trace(mut self, cap: usize) -> Self {
+        self.trace_cap = cap;
+        self
+    }
+
+    /// Enable the B-Staleness probe every `every` iterations.
+    pub fn probe_every(mut self, every: u64) -> Self {
+        self.probe_every = Some(every);
+        self
+    }
+
+    /// Assemble the simulation (validates the config, builds any missing
+    /// engines, picks the execution mode).
+    pub fn build(mut self) -> Result<Simulation> {
+        if let Some(w) = self.workers {
+            self.cfg.workers = w;
+        }
+        // The builder owns up-front validation (earliest, clearest error);
+        // build_parts/engine_factory re-validate cheaply so they stay safe
+        // as standalone entry points.
+        self.cfg.validate()?;
+        let workers = crate::experiments::common::effective_workers(&self.cfg);
+        let had_parts = self.parts.is_some();
+        let parts = match self.parts.take() {
+            Some(p) => p,
+            None => crate::experiments::common::build_parts(&self.cfg)?,
+        };
+        let mut exec = if workers > 1 {
+            let factory = match self.factory.take() {
+                Some(f) => f,
+                None if had_parts => anyhow::bail!(
+                    "parallel execution ({workers} workers) computes \
+                     gradients on per-worker engines from an \
+                     EngineFactory; hand-built SimParts only supply the \
+                     coordinator/probe engine. Pass .engine_factory(...) \
+                     alongside .parts(...), or force serial mode with \
+                     .workers(1) — otherwise the injected gradient engine \
+                     would be silently ignored"
+                ),
+                None => crate::experiments::common::engine_factory(&self.cfg)?,
+            };
+            log::info!(
+                "parallel dispatcher: {workers} workers, lookahead {}",
+                self.cfg.lookahead
+            );
+            Exec::Parallel(ParallelSimulator::new(
+                self.cfg, parts, factory, workers,
+            )?)
+        } else {
+            Exec::Serial(Simulator::new(self.cfg, parts)?)
+        };
+        if self.trace_cap > 0 {
+            match &mut exec {
+                Exec::Serial(s) => s.enable_trace(self.trace_cap),
+                Exec::Parallel(p) => p.enable_trace(self.trace_cap),
+            }
+        }
+        if let Some(every) = self.probe_every {
+            match &mut exec {
+                Exec::Serial(s) => s.enable_probe(every),
+                Exec::Parallel(p) => p.enable_probe(every),
+            }
+        }
+        for obs in self.observers {
+            match &mut exec {
+                Exec::Serial(s) => s.add_observer(obs),
+                Exec::Parallel(p) => p.add_observer(obs),
+            }
+        }
+        Ok(Simulation { exec })
+    }
+}
+
+enum Exec {
+    Serial(Simulator),
+    Parallel(ParallelSimulator),
+}
+
+/// One simulation, serial or parallel behind the same handle.
+pub struct Simulation {
+    exec: Exec,
+}
+
+impl Simulation {
+    pub fn builder(cfg: ExperimentConfig) -> SimulationBuilder {
+        SimulationBuilder::new(cfg)
+    }
+
+    /// Run to `cfg.iters` with initial + final evaluations; consumes the
+    /// simulation and returns its summary (observers get `on_finish`).
+    pub fn run(self) -> Result<RunSummary> {
+        match self.exec {
+            Exec::Serial(s) => s.run(),
+            Exec::Parallel(p) => p.run(),
+        }
+    }
+
+    /// Advance by one iteration (serial) or to the next iteration boundary
+    /// through the window machinery (parallel). Mode-independent contract:
+    /// a no-op once `cfg.iters` is reached (for uncapped manual stepping,
+    /// use the raw [`Simulator`] with `iters = u64::MAX`).
+    pub fn step(&mut self) -> Result<()> {
+        let next = self.iterations() + 1;
+        self.run_until(next)
+    }
+
+    /// Advance to exactly `target_iter` iterations (clamped to
+    /// `cfg.iters`).
+    pub fn run_until(&mut self, target_iter: u64) -> Result<()> {
+        match &mut self.exec {
+            Exec::Serial(s) => s.run_until(target_iter),
+            Exec::Parallel(p) => p.run_until(target_iter),
+        }
+    }
+
+    /// The shared protocol core — both drivers expose the same state, so
+    /// every read accessor below is mode-independent by construction.
+    fn core(&self) -> &ProtocolCore {
+        match &self.exec {
+            Exec::Serial(s) => s.core(),
+            Exec::Parallel(p) => p.core(),
+        }
+    }
+
+    /// The history recorded so far (eval points + train-loss curve).
+    pub fn history(&self) -> &History {
+        &self.core().history
+    }
+
+    pub fn server(&self) -> &dyn Server {
+        self.core().server.as_ref()
+    }
+
+    pub fn iterations(&self) -> u64 {
+        self.core().iter
+    }
+
+    pub fn trace(&self) -> &Trace {
+        &self.core().trace
+    }
+
+    pub fn probes(&self) -> &ProbeLog {
+        &self.core().probes
+    }
+
+    /// Gradient worker threads actually running (1 = serial mode).
+    pub fn worker_count(&self) -> usize {
+        match &self.exec {
+            Exec::Serial(_) => 1,
+            Exec::Parallel(p) => p.worker_count(),
+        }
+    }
+}

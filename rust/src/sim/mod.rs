@@ -1,6 +1,21 @@
 //! FRED-rs (S1): the paper's deterministic single-node simulator of
 //! distributed training, reimplemented as the rust coordinator core.
 //!
+//! # Public API
+//!
+//! The front door is [`Simulation::builder`] ([`builder`]): it assembles
+//! engines + data from an [`crate::config::ExperimentConfig`] (or accepts
+//! hand-built [`SimParts`]), selects serial vs. parallel execution behind
+//! one [`Simulation`] handle (`run()` / `step()` / `history()`), and
+//! attaches composable [`RunObserver`]s ([`observers`]) that see every
+//! protocol event, eval point, and the final summary — live plotting,
+//! metrics writers, and progress logging plug in as subscribers instead of
+//! being hardwired into the core. Server policies are resolved by name
+//! through the open [`crate::server::registry`], so a new policy plus the
+//! builder is everything a new scenario needs.
+//!
+//! # Execution modes
+//!
 //! The simulator is split into a shared protocol core and two execution
 //! drivers over it:
 //!
@@ -21,10 +36,13 @@
 //! (rust/tests/determinism.rs) — and the parallel driver makes every
 //! protocol decision in serial schedule order, so serial and parallel
 //! runs of one config are bitwise identical too
-//! (rust/tests/parallel_equivalence.rs).
+//! (rust/tests/parallel_equivalence.rs, including through the builder
+//! facade).
 
+pub mod builder;
 pub mod client;
 pub mod dispatcher;
+pub mod observers;
 pub mod parallel;
 pub mod probe;
 pub mod protocol;
@@ -32,6 +50,10 @@ pub mod selection;
 pub mod serial;
 pub mod trace;
 
+pub use builder::{Simulation, SimulationBuilder};
+pub use observers::{
+    CsvCurveWriter, EvalLogger, EventCounter, RunObserver,
+};
 pub use parallel::ParallelSimulator;
 pub use probe::{ProbeLog, ProbeRecord};
 pub use protocol::{DataSource, SimParts};

@@ -1,0 +1,142 @@
+//! The run-observer contract and a few stock observers.
+//!
+//! A [`RunObserver`] is a composable subscriber to one simulation run:
+//! it sees every protocol [`Event`] (selection, push/fetch gates, applies,
+//! barrier releases), every validation [`EvalPoint`] as it is recorded,
+//! and the final [`RunSummary`]. Live plotting, metrics writers, progress
+//! logging and the like attach through
+//! [`SimulationBuilder::observer`](crate::sim::SimulationBuilder::observer)
+//! instead of being hardwired into the protocol core — both execution
+//! drivers (serial and parallel) emit the identical callback stream,
+//! strictly in schedule order, so observers never see mode-dependent
+//! behavior.
+//!
+//! Observer callbacks are infallible by design (a plotting hiccup must not
+//! poison a deterministic training run); observers that do I/O should hold
+//! their error and surface it at `on_finish` time or via `log::warn!`.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::metrics::{EvalPoint, RunSummary};
+use crate::sim::trace::Event;
+
+/// A subscriber to one simulation run. All hooks default to no-ops so an
+/// observer implements only what it needs.
+pub trait RunObserver {
+    /// A validation evaluation was recorded (in schedule order).
+    fn on_eval(&mut self, _eval: &EvalPoint) {}
+
+    /// A protocol event fired (selection, gates, applies, barriers,
+    /// evals). High-frequency: several per iteration.
+    fn on_event(&mut self, _event: &Event) {}
+
+    /// The run completed and its summary was assembled.
+    fn on_finish(&mut self, _summary: &RunSummary) {}
+}
+
+/// Logs every eval point (and the final summary line) via `log::info!` —
+/// live progress for long figure runs.
+#[derive(Debug, Default)]
+pub struct EvalLogger {
+    name: String,
+}
+
+impl EvalLogger {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into() }
+    }
+}
+
+impl RunObserver for EvalLogger {
+    fn on_eval(&mut self, eval: &EvalPoint) {
+        log::info!(
+            "{}: iter {} T={} val_loss={:.4} val_acc={:.3}",
+            self.name,
+            eval.iter,
+            eval.server_ts,
+            eval.val_loss,
+            eval.val_acc
+        );
+    }
+
+    fn on_finish(&mut self, summary: &RunSummary) {
+        log::info!(
+            "{}: done — final={:.4} best={:.4} mean_tau={:.1} wall={:.1}s",
+            self.name,
+            summary.final_val_loss(),
+            summary.best_val_loss(),
+            summary.staleness.mean(),
+            summary.wall_secs
+        );
+    }
+}
+
+/// Writes the run's loss curve as tidy CSV when the run finishes
+/// (via [`crate::metrics::writer::write_curves_csv`]). Write failures are
+/// logged, not raised — see the module note on infallible callbacks.
+#[derive(Debug)]
+pub struct CsvCurveWriter {
+    path: PathBuf,
+}
+
+impl CsvCurveWriter {
+    pub fn new(path: impl Into<PathBuf>) -> Self {
+        Self { path: path.into() }
+    }
+}
+
+impl RunObserver for CsvCurveWriter {
+    fn on_finish(&mut self, summary: &RunSummary) {
+        if let Err(e) = crate::metrics::writer::write_curves_csv(
+            &self.path,
+            std::slice::from_ref(summary),
+        ) {
+            log::warn!("CsvCurveWriter: writing {:?} failed: {e:#}", self.path);
+        }
+    }
+}
+
+/// Shared counters behind [`EventCounter`] — the observer itself moves
+/// into the simulation, so readers keep a cloned handle.
+#[derive(Debug, Default)]
+pub struct EventCounts {
+    pub evals: AtomicU64,
+    pub events: AtomicU64,
+    pub applies: AtomicU64,
+    pub finishes: AtomicU64,
+}
+
+/// Counts callbacks by kind — a cheap smoke observer, also used by tests
+/// to assert the observer stream matches the recorded history.
+#[derive(Debug, Default, Clone)]
+pub struct EventCounter(pub Arc<EventCounts>);
+
+impl EventCounter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A handle for reading the counts after the observer was attached.
+    pub fn counts(&self) -> Arc<EventCounts> {
+        self.0.clone()
+    }
+}
+
+impl RunObserver for EventCounter {
+    fn on_eval(&mut self, _eval: &EvalPoint) {
+        self.0.evals.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn on_event(&mut self, event: &Event) {
+        self.0.events.fetch_add(1, Ordering::Relaxed);
+        if matches!(event, Event::Applied { .. }) {
+            self.0.applies.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn on_finish(&mut self, _summary: &RunSummary) {
+        self.0.finishes.fetch_add(1, Ordering::Relaxed);
+    }
+}

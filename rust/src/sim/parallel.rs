@@ -21,12 +21,13 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::config::{ExperimentConfig, Policy};
+use crate::config::ExperimentConfig;
 use crate::grad::{EngineFactory, EnginePool, GradResult, GradTask,
                   GradientEngine, OwnedBatch};
 use crate::metrics::RunSummary;
 use crate::rng;
 use crate::server::{ApplyQueue, Server};
+use crate::sim::observers::RunObserver;
 use crate::sim::probe::ProbeLog;
 use crate::sim::protocol::{ProtocolCore, SimParts};
 use crate::sim::selection::{SchedulePlanner, Selector};
@@ -68,7 +69,7 @@ impl ParallelSimulator {
         let planner = SchedulePlanner::new(
             selector,
             cfg.clients,
-            cfg.policy == Policy::Sync,
+            cfg.policy.is_barrier(),
         );
         let lookahead = cfg.lookahead;
         let (core, probe_engine) = ProtocolCore::new(cfg, parts)?;
@@ -93,6 +94,18 @@ impl ParallelSimulator {
     /// Enable the B-Staleness probe every `every` iterations.
     pub fn enable_probe(&mut self, every: u64) {
         self.core.probe_every = every;
+    }
+
+    /// Attach a [`RunObserver`] — the callback stream is identical to the
+    /// serial driver's (all protocol decisions happen in schedule order).
+    pub fn add_observer(&mut self, obs: Box<dyn RunObserver>) {
+        self.core.observers.push(obs);
+    }
+
+    /// Shared protocol state (for the [`crate::sim::Simulation`] facade's
+    /// mode-independent read accessors).
+    pub(crate) fn core(&self) -> &ProtocolCore {
+        &self.core
     }
 
     pub fn probes(&self) -> &ProbeLog {

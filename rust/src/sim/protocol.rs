@@ -20,13 +20,14 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::bandwidth::{BandwidthAccounting, BandwidthPolicy, Direction};
-use crate::config::{BandwidthMode, ExperimentConfig, Policy, PushDropMode};
+use crate::config::{BandwidthMode, ExperimentConfig, PushDropMode};
 use crate::data::{corpus::Corpus, sampler::{BatchSampler, WindowSampler},
                   Split};
 use crate::grad::{Batch, EvalEngine, GradientEngine, OwnedBatch};
 use crate::metrics::{EvalPoint, History, RunSummary, StalenessHistogram};
 use crate::server::{GradientCache, Server};
 use crate::sim::client::{Accumulator, ClientState, SamplerKind};
+use crate::sim::observers::RunObserver;
 use crate::sim::probe::{ProbeLog, ProbeRecord};
 use crate::sim::trace::{Event, Trace};
 
@@ -69,6 +70,13 @@ pub(crate) struct ProtocolCore {
     pub(crate) probe_every: u64,
     pub(crate) probes: ProbeLog,
     pub(crate) probe_buf: Vec<f32>,
+    /// Does the policy park clients at a barrier (sync-style)? Resolved
+    /// once from the registry — keeps string compares off the hot loop.
+    pub(crate) barrier: bool,
+    /// Composable run subscribers (see [`crate::sim::observers`]): each
+    /// sees the event stream, eval points, and the final summary, in
+    /// schedule order — identical between serial and parallel drivers.
+    pub(crate) observers: Vec<Box<dyn RunObserver>>,
 }
 
 impl ProtocolCore {
@@ -122,8 +130,11 @@ impl ProtocolCore {
             crate::rng::stream(cfg.seed, "bandwidth", 0),
         );
         let acc = BandwidthAccounting::new(p as u64 * 4);
+        let barrier = cfg.policy.is_barrier();
         let core = Self {
             blocked: vec![false; lambda],
+            barrier,
+            observers: Vec::new(),
             bw,
             acc,
             cache,
@@ -182,6 +193,16 @@ impl ProtocolCore {
         }
     }
 
+    /// Record a protocol event: into the bounded trace and out to every
+    /// attached observer.
+    #[inline]
+    pub(crate) fn emit(&mut self, e: Event) {
+        self.trace.record(e);
+        for o in &mut self.observers {
+            o.on_event(&e);
+        }
+    }
+
     /// Everything after the gradient: the paper §2.1 protocol with §2.3
     /// gating, in schedule order. `probe_xy` carries the minibatch for the
     /// B-Staleness probe (classification only); `probe_engine` recomputes
@@ -194,7 +215,7 @@ impl ProtocolCore {
         probe_xy: Option<(&[f32], &[i32])>,
         probe_engine: &mut dyn GradientEngine,
     ) -> Result<()> {
-        self.trace.record(Event::Selected { iter: self.iter, client: l });
+        self.emit(Event::Selected { iter: self.iter, client: l });
         self.history.record_train_loss(loss as f64);
         self.iter += 1;
         let client_ts = self.clients[l].ts;
@@ -230,19 +251,19 @@ impl ProtocolCore {
         }
 
         // 2. Push opportunity (paper §2.3 gate; Always mode always fires).
-        // Sync policy force-transmits: a dropped push would park the client
-        // at the barrier with no future unblock and deadlock the scheduler
+        // Barrier policies force-transmit: a dropped push would park the
+        // client at the barrier with no future unblock and deadlock the scheduler
         // (the config combination is also rejected up front by
         // `ExperimentConfig::validate`; this is defense in depth for
         // hand-assembled simulators).
-        let push = if self.cfg.policy == Policy::Sync {
+        let push = if self.barrier {
             true
         } else {
             let v_mean = self.server.v_mean();
             self.bw.decide(Direction::Push, l, v_mean)
         };
         self.acc.record_push(push);
-        self.trace.record(Event::Push {
+        self.emit(Event::Push {
             iter: self.iter,
             client: l,
             transmitted: push,
@@ -276,7 +297,7 @@ impl ProtocolCore {
                         .map(|(g, ts)| (g.to_vec(), ts));
                     if let Some((g, ts)) = cached {
                         let out = self.server.apply_update(&g, ts, l)?;
-                        self.trace.record(Event::Applied {
+                        self.emit(Event::Applied {
                             iter: self.iter,
                             client: l,
                             tau: out.staleness.unwrap_or(0),
@@ -301,7 +322,7 @@ impl ProtocolCore {
             if let Some(tau) = out.staleness {
                 self.staleness.record(tau);
                 if push {
-                    self.trace.record(Event::Applied {
+                    self.emit(Event::Applied {
                         iter: self.iter,
                         client: l,
                         tau,
@@ -320,14 +341,14 @@ impl ProtocolCore {
                     c.ts = ts;
                     *b = false; // barrier over: everyone schedulable again
                 }
-                self.trace.record(Event::BarrierRelease {
+                self.emit(Event::BarrierRelease {
                     iter: self.iter,
                     server_ts: ts,
                 });
             }
         }
 
-        if self.cfg.policy == Policy::Sync {
+        if self.barrier {
             // Parked until the barrier releases (unless it just did).
             if outcome.map_or(true, |o| !o.unblock_all) {
                 self.blocked[l] = true;
@@ -337,7 +358,7 @@ impl ProtocolCore {
             let fetch =
                 self.bw.decide(Direction::Fetch, l, self.server.v_mean());
             self.acc.record_fetch(fetch);
-            self.trace.record(Event::Fetch {
+            self.emit(Event::Fetch {
                 iter: self.iter,
                 client: l,
                 transmitted: fetch,
@@ -436,22 +457,26 @@ impl ProtocolCore {
                 (tot_loss / done as f64, tot_acc / done as f64)
             }
         };
-        self.history.record_eval(EvalPoint {
+        let point = EvalPoint {
             iter: self.iter,
             server_ts: self.server.timestamp(),
             val_loss: loss,
             val_acc: acc,
-        });
-        self.trace.record(Event::Eval {
+        };
+        self.history.record_eval(point);
+        for o in &mut self.observers {
+            o.on_eval(&point);
+        }
+        self.emit(Event::Eval {
             iter: self.iter,
             server_ts: self.server.timestamp(),
         });
         Ok(())
     }
 
-    /// Fold the finished run into its summary record.
+    /// Fold the finished run into its summary record, notifying observers.
     pub(crate) fn into_summary(self, wall_secs: f64) -> RunSummary {
-        RunSummary {
+        let summary = RunSummary {
             name: self.cfg.name.clone(),
             policy: self.server.name().to_string(),
             clients: self.cfg.clients,
@@ -463,6 +488,11 @@ impl ProtocolCore {
             wall_secs,
             server_updates: self.server_updates,
             probes: self.probes,
+        };
+        let mut observers = self.observers;
+        for o in &mut observers {
+            o.on_finish(&summary);
         }
+        summary
     }
 }

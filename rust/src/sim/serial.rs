@@ -13,6 +13,7 @@ use crate::metrics::RunSummary;
 use crate::rng;
 use crate::server::Server;
 use crate::sim::client::SamplerKind;
+use crate::sim::observers::RunObserver;
 use crate::sim::probe::ProbeLog;
 use crate::sim::protocol::{DataSource, ProtocolCore, SimParts};
 use crate::sim::selection::Selector;
@@ -57,6 +58,18 @@ impl Simulator {
     /// Enable the B-Staleness probe every `every` iterations.
     pub fn enable_probe(&mut self, every: u64) {
         self.core.probe_every = every;
+    }
+
+    /// Attach a [`RunObserver`] — it sees every protocol event, eval
+    /// point, and the final summary, in schedule order.
+    pub fn add_observer(&mut self, obs: Box<dyn RunObserver>) {
+        self.core.observers.push(obs);
+    }
+
+    /// Shared protocol state (for the [`crate::sim::Simulation`] facade's
+    /// mode-independent read accessors).
+    pub(crate) fn core(&self) -> &ProtocolCore {
+        &self.core
     }
 
     pub fn probes(&self) -> &ProbeLog {
@@ -125,6 +138,17 @@ impl Simulator {
             probe_xy,
             self.grad_engine.as_mut(),
         )
+    }
+
+    /// Advance to exactly `target_iter` iterations (clamped to
+    /// `cfg.iters`) — the serial counterpart of
+    /// [`crate::sim::ParallelSimulator::run_until`].
+    pub fn run_until(&mut self, target_iter: u64) -> Result<()> {
+        let target = target_iter.min(self.core.cfg.iters);
+        while self.core.iter < target {
+            self.step()?;
+        }
+        Ok(())
     }
 
     /// Run to `cfg.iters`, with an initial and a final evaluation.

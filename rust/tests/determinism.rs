@@ -22,7 +22,7 @@ fn same_seed_bitwise_equal_all_policies() {
         Policy::Exponential,
         Policy::Fasgd,
     ] {
-        let cfg = fast_test_config(policy);
+        let cfg = fast_test_config(policy.clone());
         let a = curve(&cfg);
         let b = curve(&cfg);
         assert_eq!(a, b, "{policy:?} not deterministic");

@@ -74,7 +74,7 @@ fn bitwise_equal_across_seeds_policies_and_gating() {
                     eps: 1e-8,
                 },
             ] {
-                let mut cfg = small_cfg(policy, seed);
+                let mut cfg = small_cfg(policy.clone(), seed);
                 cfg.bandwidth = bandwidth;
                 assert_equivalent(&cfg, 3);
             }
@@ -137,6 +137,36 @@ fn final_parameters_bitwise_equal() {
     assert_eq!(parallel.iterations(), 257);
     assert_eq!(serial.server().params(), parallel.server().params());
     assert_eq!(serial.server().timestamp(), parallel.server().timestamp());
+}
+
+#[test]
+fn builder_facade_preserves_bitwise_equivalence() {
+    // The public SimulationBuilder front door must uphold the same
+    // serial-vs-parallel contract as the raw constructors — including for
+    // the registry-added gap_aware policy.
+    use fasgd::sim::Simulation;
+    for policy in [Policy::Fasgd, Policy::GapAware] {
+        let mut cfg = small_cfg(policy, 17);
+        cfg.lookahead = 8;
+        let serial = Simulation::builder(cfg.clone())
+            .workers(1)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        let parallel = Simulation::builder(cfg.clone())
+            .workers(4)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(
+            fingerprint(&serial),
+            fingerprint(&parallel),
+            "builder serial != builder parallel for {:?}",
+            cfg.policy
+        );
+    }
 }
 
 #[test]

@@ -43,7 +43,7 @@ fn all_async_policies_learn_at_their_rates() {
         (Policy::Exponential, 1.5),
         (Policy::Fasgd, 1.0),
     ] {
-        let mut cfg = fast_test_config(policy);
+        let mut cfg = fast_test_config(policy.clone());
         cfg.iters = 1_500;
         let s = run_experiment(&cfg).unwrap();
         assert!(
@@ -137,7 +137,7 @@ fn grad_failure_surfaces_and_state_stays_consistent() {
     let split = fasgd::data::synthetic::generate(
         cfg.seed, cfg.dataset.train, cfg.dataset.val, cfg.dataset.noise);
     let server = fasgd::server::build_server(
-        &cfg, init, fasgd::server::UpdateEngine::Rust);
+        &cfg, init, fasgd::server::UpdateEngine::Rust).unwrap();
     let parts = SimParts {
         server,
         grad: Box::new(FailingEngine {
@@ -170,7 +170,8 @@ fn mismatched_engine_and_server_rejected() {
             &cfg,
             vec![0.0; 7], // wrong P
             fasgd::server::UpdateEngine::Rust,
-        ),
+        )
+        .unwrap(),
         grad: Box::new(RustMlpEngine::new(sizes.clone(), cfg.batch)),
         eval: Box::new(RustMlpEngine::new(sizes, 32)),
         data: DataSource::Classif(split),

@@ -1,0 +1,330 @@
+//! The open-API contract: policies plug in by name through the registry
+//! (no edits to config/schema.rs, experiments/common.rs, or
+//! sim/protocol.rs), `--policy` parse errors enumerate what is registered,
+//! and the `SimulationBuilder` facade runs either execution mode with
+//! composable observers.
+
+use fasgd::cli::Args;
+use fasgd::config::{ExperimentConfig, Policy};
+use fasgd::experiments::common::fast_test_config;
+use fasgd::server::{registry, PolicySpec, Server, UpdateOutcome};
+use fasgd::sim::{EventCounter, RunObserver, Simulation};
+
+// ---------------------------------------------------------------------------
+// registry-backed parsing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn unknown_policy_parse_error_enumerates_registered_names() {
+    let err = "definitely_not_a_policy".parse::<Policy>().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("unknown policy \"definitely_not_a_policy\""),
+        "{msg}"
+    );
+    assert!(msg.contains("registered policies:"), "{msg}");
+    for name in ["sync", "asgd", "sasgd", "exponential", "fasgd", "gap_aware"]
+    {
+        assert!(msg.contains(name), "error should list {name}: {msg}");
+    }
+}
+
+#[test]
+fn config_set_policy_goes_through_the_registry() {
+    let mut cfg = ExperimentConfig::default();
+    let err = cfg.set("policy", "bogus").unwrap_err();
+    assert!(format!("{err:#}").contains("registered policies:"), "{err:#}");
+    cfg.set("policy", "gap_aware").unwrap();
+    assert_eq!(cfg.policy, Policy::GapAware);
+    // Aliases parse to canonical names.
+    cfg.set("policy", "ssgd").unwrap();
+    assert_eq!(cfg.policy, Policy::Sync);
+    cfg.set("policy", "EXP").unwrap();
+    assert_eq!(cfg.policy, Policy::Exponential);
+}
+
+// ---------------------------------------------------------------------------
+// a custom policy, registered and run without touching any core file
+// ---------------------------------------------------------------------------
+
+/// Sign-SGD: `θ ← θ − α·sign(g)` — deliberately not one of the built-ins.
+struct ToySign {
+    params: Vec<f32>,
+    alpha: f32,
+    ts: u64,
+}
+
+impl Server for ToySign {
+    fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    fn timestamp(&self) -> u64 {
+        self.ts
+    }
+
+    fn apply_update(
+        &mut self,
+        grad: &[f32],
+        grad_timestamp: u64,
+        _client: usize,
+    ) -> anyhow::Result<UpdateOutcome> {
+        let tau = fasgd::server::staleness(self.ts, grad_timestamp);
+        for (p, g) in self.params.iter_mut().zip(grad) {
+            *p -= self.alpha * g.signum();
+        }
+        self.ts += 1;
+        Ok(UpdateOutcome {
+            applied: true,
+            staleness: Some(tau),
+            unblock_all: false,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "toy_sign"
+    }
+}
+
+#[test]
+fn custom_policy_registers_and_runs_end_to_end() {
+    registry().register(PolicySpec::new(
+        "toy_sign",
+        "test-only sign-SGD",
+        |a| {
+            Ok(Box::new(ToySign {
+                params: a.init,
+                alpha: a.cfg.alpha * 0.01,
+                ts: 0,
+            }))
+        },
+    ));
+
+    // The name now parses like a built-in (the config path, untouched)...
+    let mut cfg = fast_test_config(Policy::Fasgd);
+    cfg.set("policy", "toy_sign").unwrap();
+    cfg.iters = 200;
+    assert_eq!(cfg.policy, Policy::custom("toy_sign"));
+
+    // ...and runs through the builder facade in both execution modes.
+    let serial = Simulation::builder(cfg.clone()).build().unwrap().run()
+        .unwrap();
+    assert_eq!(serial.policy, "toy_sign");
+    assert_eq!(serial.server_updates, 200);
+    assert!(serial.final_val_loss().is_finite());
+
+    let parallel = Simulation::builder(cfg)
+        .workers(3)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(parallel.policy, "toy_sign");
+    assert_eq!(serial.history.evals, parallel.history.evals);
+}
+
+// ---------------------------------------------------------------------------
+// gap_aware: CLI-shaped entry + determinism
+// ---------------------------------------------------------------------------
+
+#[test]
+fn gap_aware_runs_from_cli_flags() {
+    // The exact `repro train --policy gap_aware ...` path: parsed flags
+    // forwarded to ExperimentConfig::set, then run.
+    let args = Args::parse(vec![
+        "train",
+        "--policy",
+        "gap_aware",
+        "--grad_engine",
+        "rust",
+        "--mlp.hidden",
+        "16",
+        "--lambda",
+        "6",
+        "--mu",
+        "4",
+        "--iters",
+        "300",
+        "--eval_every",
+        "100",
+        "--dataset.train",
+        "512",
+        "--dataset.val",
+        "256",
+    ])
+    .unwrap();
+    let mut cfg = ExperimentConfig::default();
+    for (k, v) in args.remaining_options(&[]) {
+        cfg.set(k, v).unwrap();
+    }
+    cfg.validate().unwrap();
+    assert_eq!(cfg.policy, Policy::GapAware);
+    let summary = Simulation::builder(cfg).build().unwrap().run().unwrap();
+    assert_eq!(summary.policy, "gap_aware");
+    assert_eq!(summary.server_updates, 300);
+    assert!(summary.final_val_loss().is_finite());
+    // An async policy at lambda=6 must see real staleness.
+    assert!(summary.staleness.mean() > 0.0);
+}
+
+#[test]
+fn gap_aware_is_deterministic() {
+    let mut cfg = fast_test_config(Policy::GapAware);
+    cfg.iters = 400;
+    let fingerprint = |s: &fasgd::metrics::RunSummary| -> Vec<(u64, u64, u64)> {
+        s.history
+            .evals
+            .iter()
+            .map(|p| (p.iter, p.val_loss.to_bits(), p.val_acc.to_bits()))
+            .collect()
+    };
+    let a = Simulation::builder(cfg.clone()).build().unwrap().run().unwrap();
+    let b = Simulation::builder(cfg).build().unwrap().run().unwrap();
+    assert_eq!(fingerprint(&a), fingerprint(&b));
+    assert_eq!(a.server_updates, b.server_updates);
+}
+
+#[test]
+fn gap_aware_learns() {
+    let mut cfg = fast_test_config(Policy::GapAware);
+    cfg.iters = 1_000;
+    let s = Simulation::builder(cfg).build().unwrap().run().unwrap();
+    let first = s.history.evals.first().unwrap().val_loss;
+    let last = s.final_val_loss();
+    assert!(last < first, "no learning: {first} -> {last}");
+}
+
+// ---------------------------------------------------------------------------
+// the observer contract
+// ---------------------------------------------------------------------------
+
+#[test]
+fn observers_see_evals_events_and_finish() {
+    let counter = EventCounter::new();
+    let counts = counter.counts();
+    let mut cfg = fast_test_config(Policy::Asgd);
+    cfg.iters = 120;
+    cfg.eval_every = 40;
+    let summary = Simulation::builder(cfg)
+        .observer(counter)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let evals = counts.evals.load(std::sync::atomic::Ordering::Relaxed);
+    let applies = counts.applies.load(std::sync::atomic::Ordering::Relaxed);
+    let finishes = counts.finishes.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(evals as usize, summary.history.evals.len());
+    assert_eq!(applies, summary.server_updates);
+    assert_eq!(finishes, 1);
+    assert!(
+        counts.events.load(std::sync::atomic::Ordering::Relaxed)
+            >= summary.iters
+    );
+}
+
+#[test]
+fn observer_stream_is_mode_independent() {
+    // The parallel driver must deliver the identical callback sequence
+    // (counted here; ordering is covered by parallel_equivalence.rs).
+    let mut cfg = fast_test_config(Policy::Fasgd);
+    cfg.iters = 150;
+    cfg.eval_every = 50;
+    let count_for = |workers: usize| {
+        let counter = EventCounter::new();
+        let counts = counter.counts();
+        Simulation::builder(cfg.clone())
+            .workers(workers)
+            .observer(counter)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        (
+            counts.evals.load(std::sync::atomic::Ordering::Relaxed),
+            counts.events.load(std::sync::atomic::Ordering::Relaxed),
+            counts.applies.load(std::sync::atomic::Ordering::Relaxed),
+        )
+    };
+    assert_eq!(count_for(1), count_for(4));
+}
+
+// ---------------------------------------------------------------------------
+// builder handle: step / history / run_until parity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn builder_handle_steps_and_exposes_history() {
+    let mut cfg = fast_test_config(Policy::Sasgd);
+    cfg.iters = 90;
+    cfg.eval_every = 30;
+    let mut sim = Simulation::builder(cfg.clone()).build().unwrap();
+    assert_eq!(sim.worker_count(), 1);
+    for _ in 0..10 {
+        sim.step().unwrap();
+    }
+    assert_eq!(sim.iterations(), 10);
+    sim.run_until(60).unwrap();
+    assert_eq!(sim.iterations(), 60);
+    assert!(!sim.history().evals.is_empty());
+    assert!(sim.server().timestamp() > 0);
+
+    // Parallel handle: same surface, same state trajectory.
+    let mut par = Simulation::builder(cfg).workers(3).build().unwrap();
+    assert_eq!(par.worker_count(), 3);
+    par.run_until(60).unwrap();
+    assert_eq!(par.iterations(), 60);
+    assert_eq!(sim.server().params(), par.server().params());
+}
+
+#[test]
+fn csv_curve_writer_observer_writes_on_finish() {
+    let dir = std::env::temp_dir().join("fasgd_csv_observer_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("run_curve.csv");
+    let _ = std::fs::remove_file(&path);
+    let mut cfg = fast_test_config(Policy::Asgd);
+    cfg.iters = 80;
+    cfg.eval_every = 40;
+    let summary = Simulation::builder(cfg)
+        .observer(fasgd::sim::CsvCurveWriter::new(path.clone()))
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut lines = text.lines();
+    assert_eq!(
+        lines.next().unwrap(),
+        "run,policy,iter,server_ts,val_loss,val_acc"
+    );
+    assert_eq!(lines.count(), summary.history.evals.len());
+}
+
+/// A run observer that records eval iterations — exercises a stateful
+/// custom observer through the builder (mirrors what live plotting does).
+struct EvalIters(std::sync::Arc<std::sync::Mutex<Vec<u64>>>);
+
+impl RunObserver for EvalIters {
+    fn on_eval(&mut self, e: &fasgd::metrics::EvalPoint) {
+        self.0.lock().unwrap().push(e.iter);
+    }
+}
+
+#[test]
+fn custom_observer_matches_recorded_history() {
+    let seen = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+    let mut cfg = fast_test_config(Policy::Fasgd);
+    cfg.iters = 200;
+    cfg.eval_every = 50;
+    let summary = Simulation::builder(cfg)
+        .observer(EvalIters(seen.clone()))
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let seen = seen.lock().unwrap();
+    let recorded: Vec<u64> =
+        summary.history.evals.iter().map(|p| p.iter).collect();
+    assert_eq!(*seen, recorded);
+}

@@ -12,7 +12,7 @@ fn mlp_parts(cfg: &ExperimentConfig, val: usize, eval_mu: usize) -> SimParts {
     let init = init_params(cfg.seed, &sizes);
     let split = synthetic::generate(cfg.seed, 64, val, 0.3);
     SimParts {
-        server: build_server(cfg, init, UpdateEngine::Rust),
+        server: build_server(cfg, init, UpdateEngine::Rust).unwrap(),
         grad: Box::new(RustMlpEngine::new(sizes.clone(), cfg.batch)),
         eval: Box::new(RustMlpEngine::new(sizes, eval_mu)),
         data: DataSource::Classif(split),
