@@ -2,9 +2,10 @@
 //! the fused FASGD server update, the SASGD axpy, the PJRT dispatch cost of
 //! the grad/eval/update graphs, pure-rust grad, the dispatcher's per-step
 //! overhead with gradient cost excluded, per-policy dispatcher throughput,
-//! and the serial-vs-parallel speedup.
+//! and the serial vs. barrier-windowed vs. pipelined-speculative
+//! dispatcher comparison (with the speculation miss-rate counter).
 //!
-//! `cargo bench --bench micro -- --json BENCH_pr2.json` additionally
+//! `cargo bench --bench micro -- --json BENCH_pr3.json` additionally
 //! writes the throughput snapshot as JSON (the per-PR perf trajectory).
 
 use std::time::Duration;
@@ -102,10 +103,13 @@ fn main() -> anyhow::Result<()> {
         sim.step().unwrap();
     });
 
-    // --- serial vs parallel dispatcher throughput ---------------------------
-    // The paper-size MLP workload at λ=8: gradient-step throughput of the
-    // serial dispatcher vs the worker pool (acceptance bar: ≥ 2x with 4
-    // workers).
+    // --- barrier vs pipelined dispatcher throughput -------------------------
+    // The async micro workload (paper-size MLP, λ=8, asgd): gradient-step
+    // throughput of the serial dispatcher vs the worker pool in both
+    // parallel flavors — the legacy per-window fan-out/fan-in loop
+    // (`pipeline=false`) and the pipelined speculative dispatcher.
+    // Acceptance bars: parallel ≥ 2x serial at 4 workers (PR 1) and
+    // pipelined ≥ 1.3x barrier-mode at 4 workers (PR 3).
     let mk_cfg = || {
         let mut cfg =
             fasgd::experiments::common::fast_test_config(Policy::Asgd);
@@ -137,30 +141,78 @@ fn main() -> anyhow::Result<()> {
     );
 
     let mut speedup_at_4 = 0.0;
-    let mut parallel_rows: Vec<Json> = Vec::new();
+    let mut pipelined_vs_barrier_at_4 = 0.0;
+    let mut barrier_rows: Vec<Json> = Vec::new();
+    let mut pipelined_rows: Vec<Json> = Vec::new();
     for workers in [2usize, 4, 8] {
-        let mut par =
-            fasgd::experiments::common::build_parallel_sim(&cfg, workers)?;
+        // Legacy windowed (fan-out/fan-in barrier per window).
+        let mut barrier_cfg = cfg.clone();
+        barrier_cfg.pipeline = false;
+        let mut par = fasgd::experiments::common::build_parallel_sim(
+            &barrier_cfg,
+            workers,
+        )?;
         par.run_until(warmup)?;
         let t0 = std::time::Instant::now();
         par.run_until(warmup + iters)?;
+        let barrier_sps = iters as f64 / t0.elapsed().as_secs_f64();
+        println!(
+            "dispatcher barrier  (mlp lambda=8 mu=8, {workers} workers) {barrier_sps:>10.0} steps/s  ({:.2}x serial)",
+            barrier_sps / serial_sps
+        );
+        barrier_rows.push(obj(vec![
+            ("workers", workers.into()),
+            ("steps_per_sec", barrier_sps.into()),
+            ("speedup_vs_serial", (barrier_sps / serial_sps).into()),
+        ]));
+
+        // Pipelined speculative (the default).
+        let mut par =
+            fasgd::experiments::common::build_parallel_sim(&cfg, workers)?;
+        par.run_until(warmup)?;
+        let spec0 = par.speculation();
+        let t0 = std::time::Instant::now();
+        par.run_until(warmup + iters)?;
         let sps = iters as f64 / t0.elapsed().as_secs_f64();
+        let spec = par.speculation();
+        let submitted = spec.submitted - spec0.submitted;
+        let recomputed = spec.recomputed - spec0.recomputed;
+        let miss_rate = if submitted == 0 {
+            0.0
+        } else {
+            recomputed as f64 / submitted as f64
+        };
         let speedup = sps / serial_sps;
+        let vs_barrier = sps / barrier_sps;
         if workers == 4 {
             speedup_at_4 = speedup;
+            pipelined_vs_barrier_at_4 = vs_barrier;
         }
         println!(
-            "dispatcher parallel (mlp lambda=8 mu=8, {workers} workers) {sps:>10.0} steps/s  ({speedup:.2}x)"
+            "dispatcher pipelined(mlp lambda=8 mu=8, {workers} workers) {sps:>10.0} steps/s  ({speedup:.2}x serial, {vs_barrier:.2}x barrier, {:.1}% miss)",
+            100.0 * miss_rate
         );
-        parallel_rows.push(obj(vec![
+        pipelined_rows.push(obj(vec![
             ("workers", workers.into()),
             ("steps_per_sec", sps.into()),
             ("speedup_vs_serial", speedup.into()),
+            ("speedup_vs_barrier", vs_barrier.into()),
+            ("spec_submitted", (submitted as f64).into()),
+            ("spec_recomputed", (recomputed as f64).into()),
+            ("spec_miss_rate", miss_rate.into()),
         ]));
     }
     println!(
         "parallel speedup at 4 workers: {speedup_at_4:.2}x {}",
         if speedup_at_4 >= 2.0 { "(>= 2x target met)" } else { "(below 2x target)" }
+    );
+    println!(
+        "pipelined vs barrier at 4 workers: {pipelined_vs_barrier_at_4:.2}x {}",
+        if pipelined_vs_barrier_at_4 >= 1.3 {
+            "(>= 1.3x target met)"
+        } else {
+            "(below 1.3x target)"
+        }
     );
 
     // --- per-policy dispatcher throughput (serial, via the builder) ---------
@@ -193,9 +245,14 @@ fn main() -> anyhow::Result<()> {
             ("bench", "micro".into()),
             ("workload", "mlp lambda=8 mu=8 hidden=200 (pure-rust grad)".into()),
             ("serial_steps_per_sec", serial_sps.into()),
-            ("parallel", Json::Arr(parallel_rows)),
+            ("parallel_barrier", Json::Arr(barrier_rows)),
+            ("parallel_pipelined", Json::Arr(pipelined_rows)),
             ("per_policy_serial", Json::Arr(policy_rows)),
             ("speedup_at_4_workers", speedup_at_4.into()),
+            (
+                "pipelined_vs_barrier_at_4_workers",
+                pipelined_vs_barrier_at_4.into(),
+            ),
         ]);
         std::fs::write(&path, snapshot.to_string_pretty())?;
         println!("wrote throughput snapshot to {path}");

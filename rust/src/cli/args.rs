@@ -153,10 +153,12 @@ mod tests {
 
     #[test]
     fn workers_flag_reaches_config() {
-        // `--workers N` / `--lookahead K` are plain config knobs: they ride
-        // the remaining_options → ExperimentConfig::set path like any other.
+        // `--workers N` / `--lookahead K` / `--inflight D` / `--pipeline`
+        // are plain config knobs: they ride the remaining_options →
+        // ExperimentConfig::set path like any other.
         let a = Args::parse(vec![
             "train", "--workers", "4", "--lookahead=16", "--lambda", "8",
+            "--inflight", "12", "--pipeline", "false",
         ])
         .unwrap();
         let mut cfg = crate::config::ExperimentConfig::default();
@@ -166,5 +168,7 @@ mod tests {
         assert_eq!(cfg.workers, 4);
         assert_eq!(cfg.lookahead, 16);
         assert_eq!(cfg.clients, 8);
+        assert_eq!(cfg.inflight, 12);
+        assert!(!cfg.pipeline);
     }
 }

@@ -290,10 +290,20 @@ pub struct ExperimentConfig {
     /// per available core. Results are bitwise identical across all
     /// settings (rust/tests/parallel_equivalence.rs).
     pub workers: usize,
-    /// Parallel mode only: max iterations per pre-drawn schedule window
-    /// (the window also cuts at client repeats / sync barriers to stay
-    /// deterministic; this bounds speculation and buffer footprint).
+    /// Legacy windowed parallel mode only (`pipeline = false`): max
+    /// iterations per pre-drawn schedule window (the window also cuts at
+    /// client repeats / sync barriers to stay deterministic).
     pub lookahead: usize,
+    /// Parallel mode: run the **pipelined speculative dispatcher**
+    /// (default) instead of the legacy per-window fan-out/fan-in loop.
+    /// Both are bitwise identical to serial; pipelined keeps the worker
+    /// pool saturated across window boundaries via θ-epoch speculation.
+    pub pipeline: bool,
+    /// Pipelined mode: max gradient tasks outstanding (in flight on the
+    /// pool + parked in the reorder buffer + deferred behind a same-client
+    /// dependency). 0 = auto (2 × workers). Bounds speculation depth and
+    /// snapshot/buffer memory.
+    pub inflight: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -321,6 +331,8 @@ impl Default for ExperimentConfig {
             probe_every: 0,
             workers: 1,
             lookahead: 32,
+            pipeline: true,
+            inflight: 0,
         }
     }
 }
@@ -359,6 +371,16 @@ impl ExperimentConfig {
             "probe_every" => self.probe_every = value.parse()?,
             "workers" | "jobs" => self.workers = value.parse()?,
             "lookahead" | "window" => self.lookahead = value.parse()?,
+            "inflight" => self.inflight = value.parse()?,
+            "pipeline" => {
+                self.pipeline = match value {
+                    "true" | "on" | "1" => true,
+                    "false" | "off" | "0" => false,
+                    other => bail!(
+                        "pipeline must be true/false, got {other:?}"
+                    ),
+                }
+            }
             "push_drop" => self.push_drop = value.parse()?,
             "fasgd.gamma" => self.fasgd.gamma = value.parse()?,
             "fasgd.beta" => self.fasgd.beta = value.parse()?,
@@ -523,6 +545,14 @@ impl ExperimentConfig {
         if self.lookahead == 0 {
             bail!("lookahead must be >= 1 (it caps the parallel window)");
         }
+        // 0 = auto (2 × workers); an explicit depth is capped so a typo'd
+        // value cannot pin λ whole-model snapshots per task in memory.
+        if self.inflight > 65_536 {
+            bail!(
+                "inflight must be <= 65536 (it bounds in-flight parameter \
+                 snapshots and gradient buffers; 0 = auto, 2 x workers)"
+            );
+        }
         if self.model == ModelKind::Mlp
             && self.dataset.val == 0
             && self.dataset.mnist_dir.is_none()
@@ -616,6 +646,28 @@ mod tests {
         c.validate().unwrap();
         c.set("lookahead", "0").unwrap();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn inflight_and_pipeline_knobs() {
+        let mut c = ExperimentConfig::default();
+        assert!(c.pipeline, "pipelined dispatcher is the default");
+        assert_eq!(c.inflight, 0, "0 = auto (2 x workers)");
+        c.set("inflight", "16").unwrap();
+        assert_eq!(c.inflight, 16);
+        c.validate().unwrap();
+        c.set("inflight", "1").unwrap(); // min depth: serial-order pipeline
+        c.validate().unwrap();
+        c.set("inflight", "100000").unwrap();
+        let err = c.validate().unwrap_err();
+        assert!(format!("{err}").contains("inflight"), "{err}");
+        c.set("inflight", "0").unwrap();
+        c.set("pipeline", "false").unwrap();
+        assert!(!c.pipeline);
+        c.set("pipeline", "on").unwrap();
+        assert!(c.pipeline);
+        assert!(c.set("pipeline", "maybe").is_err());
+        c.validate().unwrap();
     }
 
     #[test]

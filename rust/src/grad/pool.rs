@@ -31,6 +31,12 @@ pub struct GradTask {
     /// Global iteration sequence number (apply order).
     pub seq: u64,
     pub client: usize,
+    /// θ-epoch of the snapshot this task was planned against. The
+    /// pipelined dispatcher bumps a client's epoch whenever its θ_j is
+    /// replaced at apply time; a result whose epoch no longer matches was
+    /// computed from a stale snapshot and is recomputed (speculation
+    /// miss). Opaque to the pool — it just rides along.
+    pub epoch: u64,
     /// Snapshot of the client's parameters at schedule time.
     pub theta: Arc<Vec<f32>>,
     pub batch: OwnedBatch,
@@ -43,6 +49,9 @@ pub struct GradTask {
 pub struct GradResult {
     pub seq: u64,
     pub client: usize,
+    /// Echo of [`GradTask::epoch`] (validated against the client's current
+    /// epoch at apply time).
+    pub epoch: u64,
     pub loss: f32,
     pub grad: Vec<f32>,
     pub batch: OwnedBatch,
@@ -152,6 +161,7 @@ fn worker_loop(
             Ok(loss) => Ok(GradResult {
                 seq: task.seq,
                 client: task.client,
+                epoch: task.epoch,
                 loss,
                 grad,
                 batch: task.batch,
@@ -197,6 +207,7 @@ mod tests {
             pool.submit(GradTask {
                 seq: i as u64,
                 client: i,
+                epoch: 7,
                 theta: Arc::clone(&theta),
                 batch: b.clone(),
                 grad_buf: Vec::new(),
@@ -212,6 +223,7 @@ mod tests {
                 inline.grad(&theta, &b.as_batch(), &mut want).unwrap();
             assert_eq!(r.loss, want_loss, "seq {}", r.seq);
             assert_eq!(r.grad, want, "seq {}", r.seq);
+            assert_eq!(r.epoch, 7, "epoch tag must ride through the pool");
         }
     }
 
@@ -223,6 +235,7 @@ mod tests {
         pool.submit(GradTask {
             seq: 0,
             client: 0,
+            epoch: 0,
             theta: Arc::new(vec![0.0]),
             batch: OwnedBatch::Classif { x: vec![], y: vec![] },
             grad_buf: Vec::new(),

@@ -16,6 +16,10 @@ use crate::grad::{Batch, EvalEngine, GradientEngine};
 pub struct RustMlpEngine {
     sizes: Vec<usize>,
     mu: usize,
+    /// (w_offset, b_offset, fan_in, fan_out) per layer — computed once at
+    /// construction; `forward`/`grad` run per iteration and must not
+    /// rebuild it.
+    offsets: Vec<(usize, usize, usize, usize)>,
     // scratch (reused across calls)
     h: Vec<Vec<f32>>,     // activations per layer, batch-major
     delta: Vec<Vec<f32>>, // backprop deltas
@@ -31,7 +35,8 @@ impl RustMlpEngine {
         assert!(sizes.len() >= 2 && mu > 0);
         let h = sizes.iter().map(|&d| vec![0.0; mu * d]).collect();
         let delta = sizes.iter().map(|&d| vec![0.0; mu * d]).collect();
-        Self { sizes, mu, h, delta }
+        let offsets = Self::layer_offsets(&sizes);
+        Self { sizes, mu, offsets, h, delta }
     }
 
     pub fn flat_param_count(sizes: &[usize]) -> usize {
@@ -41,11 +46,11 @@ impl RustMlpEngine {
             .sum()
     }
 
-    fn layer_offsets(&self) -> Vec<(usize, usize, usize, usize)> {
+    fn layer_offsets(sizes: &[usize]) -> Vec<(usize, usize, usize, usize)> {
         // (w_offset, b_offset, fan_in, fan_out) per layer
         let mut out = Vec::new();
         let mut off = 0;
-        for w in self.sizes.windows(2) {
+        for w in sizes.windows(2) {
             let (fi, fo) = (w[0], w[1]);
             out.push((off, off + fi * fo, fi, fo));
             off += fi * fo + fo;
@@ -66,12 +71,16 @@ impl RustMlpEngine {
             );
         }
         self.h[0].copy_from_slice(x);
-        let offsets = self.layer_offsets();
-        let n_layers = offsets.len();
-        for (li, &(wo, bo, fi, fo)) in offsets.iter().enumerate() {
+        let n_layers = self.offsets.len();
+        for (li, &(wo, bo, fi, fo)) in self.offsets.iter().enumerate() {
             let w = &theta[wo..wo + fi * fo];
             let b = &theta[bo..bo + fo];
             let last = li == n_layers - 1;
+            // Input layer only: MNIST pixels are mostly zero, so skipping
+            // zero inputs beats streaming the weight rows. Hidden (ReLU)
+            // activations are dense — there the data-dependent branch
+            // defeats vectorization and the blocked kernel wins.
+            let sparse = li == 0;
             // split scratch to appease the borrow checker
             let (head, tail) = self.h.split_at_mut(li + 1);
             let input = &head[li];
@@ -80,13 +89,37 @@ impl RustMlpEngine {
                 let xrow = &input[r * fi..(r + 1) * fi];
                 let orow = &mut out[r * fo..(r + 1) * fo];
                 orow.copy_from_slice(b);
-                for (k, &xv) in xrow.iter().enumerate() {
-                    if xv == 0.0 {
-                        continue;
+                if sparse {
+                    for (k, &xv) in xrow.iter().enumerate() {
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let wrow = &w[k * fo..(k + 1) * fo];
+                        for (o, wv) in orow.iter_mut().zip(wrow) {
+                            *o += xv * *wv;
+                        }
                     }
-                    let wrow = &w[k * fo..(k + 1) * fo];
-                    for (o, wv) in orow.iter_mut().zip(wrow) {
-                        *o += xv * *wv;
+                } else {
+                    // Dense path: 4 weight rows per pass, branch-free.
+                    let mut k = 0;
+                    while k + 4 <= fi {
+                        let base = k * fo;
+                        crate::tensor::axpy_block(
+                            orow,
+                            &[xrow[k], xrow[k + 1], xrow[k + 2], xrow[k + 3]],
+                            &w[base..base + fo],
+                            &w[base + fo..base + 2 * fo],
+                            &w[base + 2 * fo..base + 3 * fo],
+                            &w[base + 3 * fo..base + 4 * fo],
+                        );
+                        k += 4;
+                    }
+                    for kt in k..fi {
+                        let xv = xrow[kt];
+                        let wrow = &w[kt * fo..(kt + 1) * fo];
+                        for (o, wv) in orow.iter_mut().zip(wrow) {
+                            *o += xv * *wv;
+                        }
                     }
                 }
                 if !last {
@@ -159,9 +192,8 @@ impl GradientEngine for RustMlpEngine {
         }
 
         grad_out.fill(0.0);
-        let offsets = self.layer_offsets();
-        for li in (0..offsets.len()).rev() {
-            let (wo, bo, fi, fo) = offsets[li];
+        for li in (0..self.offsets.len()).rev() {
+            let (wo, bo, fi, fo) = self.offsets[li];
             // dW = h[li]^T @ delta[li+1]; db = sum_rows(delta[li+1])
             {
                 let input = &self.h[li];

@@ -18,9 +18,13 @@
 //! ```
 //!
 //! `--workers N` (N > 1, or 0 for one per core) runs the parallel
-//! deterministic dispatcher: gradients for a pre-drawn lookahead window
-//! (`--lookahead K`) are computed on N threads and applied in schedule
-//! order, so results are bitwise identical to `--workers 1`.
+//! deterministic dispatcher. By default it is the **pipelined speculative**
+//! dispatcher: the selection schedule streams with per-client θ-epoch
+//! tags, up to `--inflight D` gradient tasks (0 = auto, 2×workers) stay
+//! outstanding across window boundaries, and stale-snapshot speculation is
+//! detected and recomputed at apply time — results stay bitwise identical
+//! to `--workers 1`. `--pipeline false` falls back to the legacy
+//! per-window fan-out/fan-in loop (`--lookahead K`).
 
 use anyhow::{bail, Context, Result};
 
@@ -183,7 +187,8 @@ fn print_help() {
          usage: repro <train|fig1|fig2|fig3|sweep-lr|live|info> [--key value ...]\n\n\
          common flags: --policy <{policies}>\n\
          \x20                --lambda N --mu N --iters N --alpha F --seed N\n\
-         \x20                --workers N --lookahead K (parallel dispatcher)\n\
+         \x20                --workers N --inflight D --pipeline true|false\n\
+         \x20                --lookahead K (parallel dispatcher)\n\
          \x20                --config file.toml --out dir/\n\
          see README.md for the full knob list"
     );

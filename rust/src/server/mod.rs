@@ -109,9 +109,28 @@ pub fn staleness_divisor(server_ts: u64, grad_ts: u64) -> f32 {
 /// computed gradients are applied exactly as the serial schedule would —
 /// the invariant the parallel dispatcher's bitwise-equality guarantee
 /// rests on.
+///
+/// The pipelined speculative dispatcher additionally needs an
+/// *invalidation-aware* pop ([`Self::pop_ready_validated`]): the
+/// in-sequence item may have been computed from a θ snapshot that a
+/// sequenced-earlier apply has since replaced. Such an item is surfaced as
+/// [`PopReady::Invalid`] **without** advancing the sequence cursor, so the
+/// caller can recompute it and re-push the same seq.
 pub struct ApplyQueue<T> {
     next_seq: u64,
     pending: BinaryHeap<SeqEntry<T>>,
+}
+
+/// Outcome of [`ApplyQueue::pop_ready_validated`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum PopReady<T> {
+    /// The next in-sequence item has not arrived yet.
+    Empty,
+    /// The next in-sequence item, validated; the cursor advanced.
+    Valid(T),
+    /// The next in-sequence item failed validation; the cursor did NOT
+    /// advance — recompute and re-push under the same seq.
+    Invalid(T),
 }
 
 struct SeqEntry<T> {
@@ -159,6 +178,26 @@ impl<T> ApplyQueue<T> {
             Some(self.pending.pop().expect("peeked entry").item)
         } else {
             None
+        }
+    }
+
+    /// Invalidation-aware pop: release the next in-sequence item only if
+    /// `valid` accepts it. An invalid item is removed and returned, but
+    /// the sequence cursor stays put — the caller owes a fresh item for
+    /// the same seq (the pipelined dispatcher's speculation-miss path).
+    pub fn pop_ready_validated(
+        &mut self,
+        valid: impl FnOnce(&T) -> bool,
+    ) -> PopReady<T> {
+        if self.pending.peek().map(|e| e.seq) != Some(self.next_seq) {
+            return PopReady::Empty;
+        }
+        let entry = self.pending.pop().expect("peeked entry");
+        if valid(&entry.item) {
+            self.next_seq += 1;
+            PopReady::Valid(entry.item)
+        } else {
+            PopReady::Invalid(entry.item)
         }
     }
 
@@ -220,6 +259,38 @@ mod tests {
         assert_eq!(q.pop_ready(), Some("e"));
         assert_eq!(q.pending_len(), 0);
         assert_eq!(q.next_seq(), 15);
+    }
+
+    #[test]
+    fn apply_queue_invalidation_aware_pop() {
+        let mut q = ApplyQueue::new(0);
+        q.push(0, ("a", 1u64));
+        q.push(1, ("b", 1));
+        // Head fails validation: handed back, cursor unmoved.
+        assert_eq!(
+            q.pop_ready_validated(|&(_, e)| e == 2),
+            PopReady::Invalid(("a", 1))
+        );
+        assert_eq!(q.next_seq(), 0);
+        // Later seqs stay blocked behind the unreleased head.
+        assert_eq!(
+            q.pop_ready_validated(|&(_, e)| e == 1),
+            PopReady::<(&str, u64)>::Empty
+        );
+        // Recomputed item re-pushed under the same seq now releases, and
+        // the stream continues in order.
+        q.push(0, ("a2", 2));
+        assert_eq!(
+            q.pop_ready_validated(|&(_, e)| e == 2),
+            PopReady::Valid(("a2", 2))
+        );
+        assert_eq!(
+            q.pop_ready_validated(|_| true),
+            PopReady::Valid(("b", 1))
+        );
+        assert_eq!(q.pop_ready_validated(|_| true), PopReady::Empty);
+        assert_eq!(q.next_seq(), 2);
+        assert_eq!(q.pending_len(), 0);
     }
 
     #[test]

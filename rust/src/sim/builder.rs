@@ -131,10 +131,20 @@ impl SimulationBuilder {
                 ),
                 None => crate::experiments::common::engine_factory(&self.cfg)?,
             };
-            log::info!(
-                "parallel dispatcher: {workers} workers, lookahead {}",
-                self.cfg.lookahead
-            );
+            if self.cfg.pipeline {
+                log::info!(
+                    "pipelined dispatcher: {workers} workers, inflight {}",
+                    match self.cfg.inflight {
+                        0 => workers * 2,
+                        d => d,
+                    }
+                );
+            } else {
+                log::info!(
+                    "windowed dispatcher: {workers} workers, lookahead {}",
+                    self.cfg.lookahead
+                );
+            }
             Exec::Parallel(ParallelSimulator::new(
                 self.cfg, parts, factory, workers,
             )?)
@@ -240,6 +250,16 @@ impl Simulation {
         match &self.exec {
             Exec::Serial(_) => 1,
             Exec::Parallel(p) => p.worker_count(),
+        }
+    }
+
+    /// Speculation counters of the pipelined dispatcher (`None` in serial
+    /// mode; in windowed parallel mode `submitted` still counts fan-outs
+    /// while `recomputed`/`deferred` stay zero).
+    pub fn speculation(&self) -> Option<crate::sim::parallel::SpecStats> {
+        match &self.exec {
+            Exec::Serial(_) => None,
+            Exec::Parallel(p) => Some(p.speculation()),
         }
     }
 }

@@ -27,12 +27,21 @@ impl Accumulator {
     }
 
     /// Fold the current gradient in and drain to `(mean_grad, ts)`.
-    pub fn flush_with(&mut self, grad: &[f32], ts: u64) -> (Vec<f32>, u64) {
+    ///
+    /// `spare` is a recycled buffer (any length) that becomes the new
+    /// zeroed accumulation sum; the caller hands the returned mean back on
+    /// the next flush — like the dispatcher's `grad_free` pool, the
+    /// steady-state flush path allocates nothing.
+    pub fn flush_with(
+        &mut self,
+        grad: &[f32],
+        ts: u64,
+        mut spare: Vec<f32>,
+    ) -> (Vec<f32>, u64) {
         self.add(grad, ts);
-        let mut mean = std::mem::replace(
-            &mut self.sum,
-            vec![0.0; grad.len()],
-        );
+        spare.clear();
+        spare.resize(self.sum.len(), 0.0);
+        let mut mean = std::mem::replace(&mut self.sum, spare);
         crate::tensor::scale(&mut mean, 1.0 / self.count as f32);
         let newest = self.newest_ts;
         self.count = 0;
@@ -77,7 +86,7 @@ mod tests {
         assert!(a.is_empty());
         a.add(&[1.0, 0.0], 3);
         a.add(&[3.0, 2.0], 5);
-        let (mean, ts) = a.flush_with(&[2.0, 4.0], 4);
+        let (mean, ts) = a.flush_with(&[2.0, 4.0], 4, Vec::new());
         assert_eq!(mean, vec![2.0, 2.0]);
         assert_eq!(ts, 5); // newest of {3,5,4}
         assert!(a.is_empty());
@@ -87,8 +96,25 @@ mod tests {
     #[test]
     fn flush_single_gradient_is_identity() {
         let mut a = Accumulator::new(2);
-        let (mean, ts) = a.flush_with(&[4.0, -2.0], 9);
+        let (mean, ts) = a.flush_with(&[4.0, -2.0], 9, Vec::new());
         assert_eq!(mean, vec![4.0, -2.0]);
         assert_eq!(ts, 9);
+    }
+
+    #[test]
+    fn flush_recycles_spare_buffer() {
+        // A dirty, wrong-length spare must come back as the zeroed sum.
+        let mut a = Accumulator::new(3);
+        a.add(&[1.0, 2.0, 3.0], 1);
+        let spare = vec![9.0f32; 7];
+        let (mean, ts) = a.flush_with(&[3.0, 2.0, 1.0], 2, spare);
+        assert_eq!(mean, vec![2.0, 2.0, 2.0]);
+        assert_eq!(ts, 2);
+        assert_eq!(a.sum, vec![0.0, 0.0, 0.0]);
+        // The drained mean recycles straight back in as the next spare.
+        a.add(&[1.0, 1.0, 1.0], 3);
+        let (mean2, _) = a.flush_with(&[1.0, 1.0, 1.0], 4, mean);
+        assert_eq!(mean2, vec![1.0, 1.0, 1.0]);
+        assert_eq!(a.sum, vec![0.0, 0.0, 0.0]);
     }
 }

@@ -24,11 +24,14 @@
 //!   cadence), plus run assembly;
 //! * [`serial`] — [`Simulator`]: one client gradient per
 //!   [`Simulator::step`] on the calling thread (the paper's x-axis unit);
-//! * [`parallel`] — [`ParallelSimulator`]: pre-draws a deterministic
-//!   selection window ([`selection::SchedulePlanner`]), computes the
-//!   window's gradients concurrently on a
-//!   [`crate::grad::EnginePool`], and applies them strictly in schedule
-//!   order ([`crate::server::ApplyQueue`]).
+//! * [`parallel`] — [`ParallelSimulator`]: streams the deterministic
+//!   selection schedule ([`selection::SchedulePlanner`]), keeps up to
+//!   `--inflight` speculative gradient tasks outstanding on a
+//!   [`crate::grad::EnginePool`] across window boundaries (θ-epoch
+//!   validation, recompute on speculation miss), and applies results
+//!   strictly in schedule order ([`crate::server::ApplyQueue`]). The
+//!   legacy per-window fan-out/fan-in loop survives behind
+//!   `pipeline = false`.
 //!
 //! Determinism: all randomness flows from named [`crate::rng`] streams of
 //! the master seed; gradient engines and the data generators are
@@ -54,9 +57,9 @@ pub use builder::{Simulation, SimulationBuilder};
 pub use observers::{
     CsvCurveWriter, EvalLogger, EventCounter, RunObserver,
 };
-pub use parallel::ParallelSimulator;
+pub use parallel::{ParallelSimulator, SpecStats};
 pub use probe::{ProbeLog, ProbeRecord};
 pub use protocol::{DataSource, SimParts};
-pub use selection::{SchedulePlanner, Selector};
+pub use selection::{PlannedPick, SchedulePlanner, Selector};
 pub use serial::Simulator;
 pub use trace::{Event, Trace};

@@ -1,37 +1,88 @@
-//! The parallel deterministic dispatcher.
+//! The parallel deterministic dispatcher, in two flavors behind one type:
 //!
-//! Execution model: a [`SchedulePlanner`] pre-draws the selection schedule
-//! for a lookahead window of up to `cfg.lookahead` iterations (cut so that
-//! no client's θ_j can change inside the window — see the planner docs),
-//! the coordinator snapshots each scheduled client's parameters and
-//! minibatch, an [`EnginePool`] computes the window's gradients
-//! concurrently on per-thread engines, and an [`ApplyQueue`] releases the
-//! results strictly in schedule order into the shared
-//! [`ProtocolCore`](crate::sim::protocol) — the same code the serial
-//! dispatcher runs. Every protocol decision (bandwidth RNG draws, server
-//! applies, eval cadence) therefore happens in the identical order, and a
-//! parallel run is bitwise identical to a serial run of the same config
-//! (rust/tests/parallel_equivalence.rs).
+//! **Pipelined speculative** (`cfg.pipeline = true`, the default). The
+//! [`SchedulePlanner`] streams the pick sequence with no window cuts; the
+//! coordinator keeps up to `--inflight D` gradient tasks outstanding on
+//! the [`EnginePool`] and applies results strictly in schedule order
+//! through an invalidation-aware [`ApplyQueue`]. Correctness across the
+//! old window boundaries comes from **θ-epochs**: every client has an
+//! epoch counter that bumps exactly when its parameter copy θ_j is
+//! replaced at apply time (its own fetch, or a barrier release bumping all
+//! λ). Each task is tagged with the epoch of the snapshot it was planned
+//! against; when a result reaches the head of the apply queue with a
+//! stale epoch, the speculation missed — it is resubmitted against the
+//! now-final θ_j and the head waits for the recompute (nothing later can
+//! apply anyway). Since async policies fetch only at the selected client,
+//! a pick whose client has no in-flight predecessor can never miss; picks
+//! that are *guaranteed* to miss (bandwidth mode `always`: every fetch
+//! replaces θ_j) are instead parked in a per-client deferred queue and
+//! submitted the moment the predecessor applies. Barrier policies pause
+//! planning at each release pick and so degrade gracefully to
+//! cycle-at-a-time. The pool therefore stays saturated across window
+//! boundaries instead of idling at a per-window fan-in barrier.
 //!
-//! Only the embarrassingly parallel part — gradient computation, the hot
-//! path that scales with λ — leaves the coordinator thread.
+//! **Windowed** (`cfg.pipeline = false`, the legacy loop, kept for A/B
+//! benchmarks): plan a repeat-free window, fan out its snapshots, drain it
+//! completely, repeat.
+//!
+//! Both flavors make every protocol decision (bandwidth RNG draws, server
+//! applies, eval cadence) inside
+//! [`ProtocolCore::complete_iteration`](crate::sim::protocol) in exact
+//! serial schedule order, so runs are bitwise identical to `--workers 1`
+//! (rust/tests/parallel_equivalence.rs — including runs where speculation
+//! misses and recomputes).
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::config::ExperimentConfig;
+use crate::config::{BandwidthMode, ExperimentConfig};
 use crate::grad::{EngineFactory, EnginePool, GradResult, GradTask,
                   GradientEngine, OwnedBatch};
 use crate::metrics::RunSummary;
 use crate::rng;
-use crate::server::{ApplyQueue, Server};
+use crate::server::{ApplyQueue, PopReady, Server};
 use crate::sim::observers::RunObserver;
 use crate::sim::probe::ProbeLog;
-use crate::sim::protocol::{ProtocolCore, SimParts};
+use crate::sim::protocol::{ProtocolCore, SimParts, ThetaReplaced};
 use crate::sim::selection::{SchedulePlanner, Selector};
 use crate::sim::trace::Trace;
+
+/// Speculation counters for the pipelined dispatcher. Windowed mode
+/// (`pipeline = false`) counts its fan-out submissions too, but never
+/// recomputes or defers — those two stay zero there.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpecStats {
+    /// Tasks handed to the worker pool (recomputes counted separately).
+    pub submitted: u64,
+    /// Speculation misses: results recomputed because the snapshot's
+    /// θ-epoch was stale at apply time.
+    pub recomputed: u64,
+    /// Picks parked behind a same-client in-flight task instead of being
+    /// speculated (bandwidth mode `always`: a miss would be guaranteed).
+    pub deferred: u64,
+}
+
+impl SpecStats {
+    /// Recomputes per pool submission (0.0 when nothing ran).
+    pub fn miss_rate(&self) -> f64 {
+        if self.submitted == 0 {
+            0.0
+        } else {
+            self.recomputed as f64 / self.submitted as f64
+        }
+    }
+}
+
+/// A pick drawn (batch and all) but held back until its client's
+/// in-flight predecessor applies — submitting it now would speculate
+/// against a snapshot that is guaranteed to be replaced.
+struct DeferredIter {
+    seq: u64,
+    batch: OwnedBatch,
+}
 
 /// FRED-rs in worker-pool mode: bitwise identical to the serial
 /// [`crate::sim::Simulator`], `--workers` times wider on the gradient path.
@@ -47,8 +98,33 @@ pub struct ParallelSimulator {
     /// size) — the steady-state fan-out loop allocates nothing.
     grad_free: Vec<Vec<f32>>,
     batch_free: Vec<OwnedBatch>,
-    lookahead: usize,
+    /// Per-client θ-epoch: bumped exactly when that client's θ_j is
+    /// replaced at apply time (authoritative [`ThetaReplaced`] report).
+    epochs: Vec<u64>,
+    /// Per-client submitted-but-not-yet-applied task count.
+    in_flight: Vec<u32>,
+    /// Per-client FIFO of guaranteed-miss picks awaiting their
+    /// predecessor's apply.
+    deferred: Vec<VecDeque<DeferredIter>>,
+    deferred_total: usize,
+    /// Tasks submitted to the pool and not yet applied (includes results
+    /// parked in `queue` and in-flight recomputes).
+    outstanding: usize,
+    /// Cap on `outstanding + deferred_total` (resolved `cfg.inflight`).
+    inflight: usize,
+    /// Planning frontier: next iteration sequence number to draw.
     next_seq: u64,
+    /// A barrier-release pick is in flight: every θ_j changes when it
+    /// applies, so planning past it would only manufacture misses.
+    barrier_pending: bool,
+    /// Defer repeat-client picks instead of speculating: under bandwidth
+    /// mode `always` every fetch replaces θ_j, so a repeat speculation
+    /// can never hit.
+    defer_repeats: bool,
+    /// `cfg.pipeline`: pipelined speculative vs legacy windowed loop.
+    pipelined: bool,
+    lookahead: usize,
+    stats: SpecStats,
 }
 
 impl ParallelSimulator {
@@ -71,7 +147,16 @@ impl ParallelSimulator {
             cfg.clients,
             cfg.policy.is_barrier(),
         );
+        let workers = workers.max(1);
         let lookahead = cfg.lookahead;
+        let pipelined = cfg.pipeline;
+        let inflight = match cfg.inflight {
+            0 => workers * 2,
+            d => d,
+        }
+        .max(1);
+        let defer_repeats = cfg.bandwidth == BandwidthMode::Always;
+        let lambda = cfg.clients;
         let (core, probe_engine) = ProtocolCore::new(cfg, parts)?;
         Ok(Self {
             core,
@@ -81,8 +166,18 @@ impl ParallelSimulator {
             queue: ApplyQueue::new(0),
             grad_free: Vec::new(),
             batch_free: Vec::new(),
-            lookahead,
+            epochs: vec![0; lambda],
+            in_flight: vec![0; lambda],
+            deferred: (0..lambda).map(|_| VecDeque::new()).collect(),
+            deferred_total: 0,
+            outstanding: 0,
+            inflight,
             next_seq: 0,
+            barrier_pending: false,
+            defer_repeats,
+            pipelined,
+            lookahead,
+            stats: SpecStats::default(),
         })
     }
 
@@ -128,9 +223,163 @@ impl ParallelSimulator {
         self.pool.worker_count()
     }
 
-    /// Plan one window, compute its gradients concurrently, apply its
-    /// iterations in schedule order. Advances `iter` by the window length
-    /// (≥ 1, ≤ min(lookahead, remaining-to-target)).
+    /// Speculation counters (submissions / misses / deferrals).
+    pub fn speculation(&self) -> SpecStats {
+        self.stats
+    }
+
+    /// Submit one planned iteration against the client's *current* θ_j,
+    /// tagged with its current epoch.
+    fn submit(&mut self, seq: u64, client: usize, batch: OwnedBatch)
+              -> Result<()> {
+        let theta = Arc::clone(&self.core.clients[client].theta);
+        let grad_buf = self.grad_free.pop().unwrap_or_default();
+        self.pool.submit(GradTask {
+            seq,
+            client,
+            epoch: self.epochs[client],
+            theta,
+            batch,
+            grad_buf,
+        })?;
+        self.in_flight[client] += 1;
+        self.outstanding += 1;
+        self.stats.submitted += 1;
+        Ok(())
+    }
+
+    /// Speculation miss: the head-of-queue result was computed from a
+    /// snapshot an earlier apply replaced. Recompute the same iteration
+    /// (same seq, same minibatch) against the now-final θ_j, reusing the
+    /// stale result's buffers. `outstanding`/`in_flight` stay counted —
+    /// the seq is still owed an apply.
+    fn resubmit(&mut self, r: GradResult) -> Result<()> {
+        let theta = Arc::clone(&self.core.clients[r.client].theta);
+        self.pool.submit(GradTask {
+            seq: r.seq,
+            client: r.client,
+            epoch: self.epochs[r.client],
+            theta,
+            batch: r.batch,
+            grad_buf: r.grad,
+        })?;
+        self.stats.recomputed += 1;
+        Ok(())
+    }
+
+    /// Plan and submit picks until the in-flight budget is full, the
+    /// target is fully planned, or a barrier release pauses planning.
+    fn fill(&mut self, target_iter: u64) -> Result<()> {
+        while self.outstanding + self.deferred_total < self.inflight
+            && self.next_seq < target_iter
+            && !self.barrier_pending
+        {
+            let pick = self.planner.next_pick();
+            let seq = self.next_seq;
+            self.next_seq += 1;
+            if pick.barrier_release {
+                // Every θ_j changes when this applies; planning resumes
+                // once `apply_result` observes ThetaReplaced::All.
+                self.barrier_pending = true;
+            }
+            // Drawing the batch now is safe out of order: sampler streams
+            // are per-client and picks arrive in serial order per client.
+            let batch =
+                self.core.draw_batch(pick.client, self.batch_free.pop())?;
+            if self.defer_repeats && self.in_flight[pick.client] > 0 {
+                self.deferred[pick.client]
+                    .push_back(DeferredIter { seq, batch });
+                self.deferred_total += 1;
+                self.stats.deferred += 1;
+            } else {
+                self.submit(seq, pick.client, batch)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply every ready, epoch-valid result in schedule order, topping
+    /// the pipeline back up after each apply. Stops at `target_iter`, at a
+    /// gap in the sequence, or at a speculation miss (whose recompute the
+    /// head then waits for).
+    fn drain(&mut self, target_iter: u64) -> Result<()> {
+        while self.core.iter < target_iter {
+            let epochs = &self.epochs;
+            match self
+                .queue
+                .pop_ready_validated(|r| r.epoch == epochs[r.client])
+            {
+                PopReady::Valid(r) => {
+                    self.apply_result(r)?;
+                    self.fill(target_iter)?;
+                }
+                PopReady::Invalid(r) => {
+                    self.resubmit(r)?;
+                    break;
+                }
+                PopReady::Empty => break,
+            }
+        }
+        Ok(())
+    }
+
+    /// One pipelined pump cycle: top up the pipeline, block for one
+    /// result, apply everything that became ready.
+    fn pump(&mut self, target_iter: u64) -> Result<()> {
+        self.fill(target_iter)?;
+        // fill() always leaves work in flight while iterations remain: a
+        // deferred pick rides behind its client's in-flight predecessor,
+        // and a pending barrier release is itself in flight.
+        debug_assert!(self.outstanding > 0, "pipelined dispatcher stalled");
+        let res = self.pool.recv()?;
+        self.queue.push(res.seq, res);
+        self.drain(target_iter)
+    }
+
+    /// Complete one iteration in schedule order and maintain the
+    /// speculation state machine: bump θ-epochs from the authoritative
+    /// replacement report, resume planning after a barrier release, and
+    /// promote the client's oldest deferred pick (its θ_j is now exactly
+    /// what the serial dispatcher would use).
+    fn apply_result(&mut self, r: GradResult) -> Result<()> {
+        let probe_xy = match &r.batch {
+            OwnedBatch::Classif { x, y } => {
+                Some((x.as_slice(), y.as_slice()))
+            }
+            OwnedBatch::Lm { .. } => None,
+        };
+        let replaced = self.core.complete_iteration(
+            r.client,
+            r.loss,
+            &r.grad,
+            probe_xy,
+            self.probe_engine.as_mut(),
+        )?;
+        self.outstanding -= 1;
+        self.in_flight[r.client] -= 1;
+        match replaced {
+            ThetaReplaced::None => {}
+            ThetaReplaced::Client => self.epochs[r.client] += 1,
+            ThetaReplaced::All => {
+                for e in self.epochs.iter_mut() {
+                    *e += 1;
+                }
+                self.barrier_pending = false;
+            }
+        }
+        self.grad_free.push(r.grad);
+        self.batch_free.push(r.batch);
+        if let Some(d) = self.deferred[r.client].pop_front() {
+            self.deferred_total -= 1;
+            self.submit(d.seq, r.client, d.batch)?;
+        }
+        Ok(())
+    }
+
+    /// Legacy windowed loop: plan one repeat-free window, compute its
+    /// gradients concurrently, drain it completely (the per-window
+    /// fan-out/fan-in barrier the pipelined mode exists to remove — kept
+    /// for A/B benchmarks and as a conservative fallback).
     fn run_window(&mut self, target_iter: u64) -> Result<()> {
         let remaining = target_iter.saturating_sub(self.core.iter);
         let max_len = (self.lookahead as u64).min(remaining).max(1) as usize;
@@ -140,22 +389,15 @@ impl ParallelSimulator {
         // clients per window ⇒ each θ snapshot is exactly the θ_j the
         // serial dispatcher would see at that iteration.
         for &l in &window {
-            let recycled = self.batch_free.pop();
-            let batch = self.core.draw_batch(l, recycled)?;
-            let theta = Arc::clone(&self.core.clients[l].theta);
-            let grad_buf = self.grad_free.pop().unwrap_or_default();
-            self.pool.submit(GradTask {
-                seq: self.next_seq,
-                client: l,
-                theta,
-                batch,
-                grad_buf,
-            })?;
+            let seq = self.next_seq;
             self.next_seq += 1;
+            let batch = self.core.draw_batch(l, self.batch_free.pop())?;
+            self.submit(seq, l, batch)?;
         }
 
         // Fan in: complete iterations strictly in schedule order as their
-        // gradients land.
+        // gradients land. Window snapshots are always epoch-valid, so the
+        // plain pop suffices.
         for _ in 0..window.len() {
             let res = self.pool.recv()?;
             self.queue.push(res.seq, res);
@@ -167,32 +409,19 @@ impl ParallelSimulator {
         Ok(())
     }
 
-    fn apply_result(&mut self, r: GradResult) -> Result<()> {
-        let probe_xy = match &r.batch {
-            OwnedBatch::Classif { x, y } => {
-                Some((x.as_slice(), y.as_slice()))
-            }
-            OwnedBatch::Lm { .. } => None,
-        };
-        self.core.complete_iteration(
-            r.client,
-            r.loss,
-            &r.grad,
-            probe_xy,
-            self.probe_engine.as_mut(),
-        )?;
-        self.grad_free.push(r.grad);
-        self.batch_free.push(r.batch);
-        Ok(())
-    }
-
     /// Advance to exactly `target_iter` iterations (clamped to
-    /// `cfg.iters`), window by window. Exposed so tests and benches can
-    /// compare intermediate state against a stepped serial simulator.
+    /// `cfg.iters`). Exposed so tests and benches can compare
+    /// intermediate state against a stepped serial simulator; planning is
+    /// capped at the target, so the pipeline fully drains before
+    /// returning.
     pub fn run_until(&mut self, target_iter: u64) -> Result<()> {
         let target = target_iter.min(self.core.cfg.iters);
         while self.core.iter < target {
-            self.run_window(target)?;
+            if self.pipelined {
+                self.pump(target)?;
+            } else {
+                self.run_window(target)?;
+            }
         }
         Ok(())
     }
@@ -201,10 +430,18 @@ impl ParallelSimulator {
     pub fn run(mut self) -> Result<RunSummary> {
         let start = Instant::now();
         self.core.run_eval()?; // the t=0 point every curve in the paper has
-        while self.core.iter < self.core.cfg.iters {
-            self.run_window(self.core.cfg.iters)?;
-        }
+        self.run_until(u64::MAX)?;
         self.core.run_eval()?;
+        if self.stats.recomputed > 0 {
+            log::debug!(
+                "pipelined dispatcher: {} submissions, {} recomputes \
+                 ({:.1}% miss), {} deferred",
+                self.stats.submitted,
+                self.stats.recomputed,
+                100.0 * self.stats.miss_rate(),
+                self.stats.deferred
+            );
+        }
         Ok(self.core.into_summary(start.elapsed().as_secs_f64()))
     }
 }

@@ -31,6 +31,21 @@ use crate::sim::observers::RunObserver;
 use crate::sim::probe::{ProbeLog, ProbeRecord};
 use crate::sim::trace::{Event, Trace};
 
+/// Which client parameter copies an apply replaced — the signal the
+/// pipelined dispatcher's θ-epoch tracking keys off. Reported by
+/// [`ProtocolCore::complete_iteration`] so epoch bumps are authoritative
+/// (comparing `Arc` pointers would be ABA-prone: a freed snapshot's
+/// allocation can be reused by its replacement).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ThetaReplaced {
+    /// No θ_j changed (fetch gated off, or a barrier still filling).
+    None,
+    /// Only the completing client fetched fresh parameters.
+    Client,
+    /// A barrier release refreshed every client (bump all λ epochs).
+    All,
+}
+
 /// The data a run trains/evaluates on.
 pub enum DataSource {
     Classif(Split),
@@ -70,6 +85,9 @@ pub(crate) struct ProtocolCore {
     pub(crate) probe_every: u64,
     pub(crate) probes: ProbeLog,
     pub(crate) probe_buf: Vec<f32>,
+    /// Recycled mean buffer for `Accumulator::flush_with` (Accumulate
+    /// push-drop mode) — one flush allocation at steady state, zero after.
+    pub(crate) accum_spare: Vec<f32>,
     /// Does the policy park clients at a barrier (sync-style)? Resolved
     /// once from the registry — keeps string compares off the hot loop.
     pub(crate) barrier: bool,
@@ -147,6 +165,7 @@ impl ProtocolCore {
             probe_every: cfg.probe_every,
             probes: ProbeLog::default(),
             probe_buf: Vec::new(),
+            accum_spare: Vec::new(),
             server: parts.server,
             eval_engine: parts.eval,
             data: parts.data,
@@ -207,6 +226,9 @@ impl ProtocolCore {
     /// gating, in schedule order. `probe_xy` carries the minibatch for the
     /// B-Staleness probe (classification only); `probe_engine` recomputes
     /// it at the server parameters when the probe cadence fires.
+    ///
+    /// Returns which client θ copies this apply replaced — the pipelined
+    /// dispatcher bumps its θ-epochs from this (serial mode ignores it).
     pub(crate) fn complete_iteration(
         &mut self,
         l: usize,
@@ -214,7 +236,7 @@ impl ProtocolCore {
         grad: &[f32],
         probe_xy: Option<(&[f32], &[i32])>,
         probe_engine: &mut dyn GradientEngine,
-    ) -> Result<()> {
+    ) -> Result<ThetaReplaced> {
         self.emit(Event::Selected { iter: self.iter, client: l });
         self.history.record_train_loss(loss as f64);
         self.iter += 1;
@@ -274,11 +296,14 @@ impl ProtocolCore {
             // Accumulate mode folds any unsent gradients into this push.
             let acc_state = self.clients[l].accum.as_mut();
             if let Some(a) = acc_state.filter(|a| !a.is_empty()) {
-                let (mean, ts) = a.flush_with(grad, client_ts);
+                let spare = std::mem::take(&mut self.accum_spare);
+                let (mean, ts) = a.flush_with(grad, client_ts, spare);
                 outcome = Some(self.server.apply_update(&mean, ts, l)?);
                 if let Some(cache) = &mut self.cache {
                     cache.store(l, &mean, ts);
                 }
+                // Hand the drained mean buffer back for the next flush.
+                self.accum_spare = mean;
             } else {
                 outcome =
                     Some(self.server.apply_update(grad, client_ts, l)?);
@@ -315,6 +340,7 @@ impl ProtocolCore {
             }
         }
 
+        let mut replaced = ThetaReplaced::None;
         if let Some(out) = outcome {
             if out.applied {
                 self.server_updates += 1;
@@ -341,6 +367,7 @@ impl ProtocolCore {
                     c.ts = ts;
                     *b = false; // barrier over: everyone schedulable again
                 }
+                replaced = ThetaReplaced::All;
                 self.emit(Event::BarrierRelease {
                     iter: self.iter,
                     server_ts: ts,
@@ -367,6 +394,7 @@ impl ProtocolCore {
                 let client = &mut self.clients[l];
                 client.theta = Arc::new(self.server.params().to_vec());
                 client.ts = self.server.timestamp();
+                replaced = ThetaReplaced::Client;
             }
         }
 
@@ -388,7 +416,7 @@ impl ProtocolCore {
                 self.history.train_ema().unwrap_or(f64::NAN)
             );
         }
-        Ok(())
+        Ok(replaced)
     }
 
     /// Evaluate validation cost on the whole val set (chunked).

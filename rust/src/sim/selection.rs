@@ -99,12 +99,31 @@ impl Selector {
     }
 }
 
+/// One planned iteration from the streaming schedule (pipelined mode).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlannedPick {
+    pub client: usize,
+    /// True when this pick completes a sync barrier: every client's θ_j
+    /// will be replaced when this iteration applies, so the dispatcher
+    /// must not plan past it until then (it bumps all λ epochs).
+    pub barrier_release: bool,
+}
+
 /// Pre-draws the deterministic selection schedule for the parallel
-/// dispatcher, one *window* at a time.
+/// dispatcher — either as a *stream* of picks ([`Self::next_pick`], the
+/// pipelined dispatcher) or one *window* at a time ([`Self::next_window`],
+/// the legacy fan-out/fan-in mode).
 ///
-/// A window is a run of consecutive iterations whose gradients can all be
-/// computed concurrently from parameter snapshots taken at the window
-/// start, because no client's θ_j can change inside it:
+/// **Streaming (pipelined).** Picks carry no window cut at all: the
+/// dispatcher tags each task with the selected client's current θ-epoch
+/// and revalidates at apply time, so repeats and barrier releases are
+/// speculation/invalidation concerns, not planning concerns. The planner
+/// only flags barrier-release picks (every θ_j changes there).
+///
+/// **Windowed (legacy).** A window is a run of consecutive iterations
+/// whose gradients can all be computed concurrently from parameter
+/// snapshots taken at the window start, because no client's θ_j can
+/// change inside it:
 ///
 /// * **async policies** — a client's θ_j changes only at its own fetch, so
 ///   the window ends just before the first *repeated* client (the repeat
@@ -116,9 +135,10 @@ impl Selector {
 ///   under sync, see `ExperimentConfig::validate`), so the planner
 ///   replays it without touching protocol state.
 ///
-/// The planner draws picks in exactly the order the serial dispatcher
-/// would (`pick` → `on_selected` → `step_recover` per iteration), so the
-/// RNG stream advances identically and schedules are bitwise equal.
+/// Either way the planner draws picks in exactly the order the serial
+/// dispatcher would (`pick` → `on_selected` → `step_recover` per
+/// iteration), so the RNG stream advances identically and schedules are
+/// bitwise equal.
 pub struct SchedulePlanner {
     selector: Selector,
     /// Simulated blocked state (sync barrier replay; all-false for async).
@@ -142,6 +162,20 @@ impl SchedulePlanner {
             in_window: vec![0; lambda],
             generation: 0,
         }
+    }
+
+    /// Stream the next pick in serial schedule order (pipelined mode).
+    /// Consumes any pick buffered by a previous [`Self::next_window`]
+    /// repeat-cut first, so the two draw styles can hand over mid-run
+    /// without skipping or replaying RNG draws.
+    pub fn next_pick(&mut self) -> PlannedPick {
+        let (client, barrier_release) = match self.pending.take() {
+            // A buffered repeat never completes a barrier: repeats cannot
+            // occur while sync blocking is active.
+            Some(l) => (l, false),
+            None => self.draw(),
+        };
+        PlannedPick { client, barrier_release }
     }
 
     /// Draw the next window of at most `max_len` picks (≥ 1). Within the
@@ -347,6 +381,70 @@ mod tests {
         for _ in 0..50 {
             assert!(p.next_window(4).len() <= 4);
         }
+    }
+
+    #[test]
+    fn streamed_picks_replay_serial_order() {
+        // next_pick must consume the RNG exactly as a serial selector
+        // would, for every rule — no window cuts, no buffering artifacts.
+        for rule in [
+            SelectionRule::Uniform,
+            SelectionRule::Heterogeneous { sigma: 1.0 },
+            SelectionRule::Cooldown { factor: 0.5, recovery: 1.1 },
+        ] {
+            let mut serial = Selector::new(
+                rule.clone(), 6, rng::stream(12, "s", 0));
+            let blocked = vec![false; 6];
+            let mut p = planner(rule, 6, false);
+            for _ in 0..300 {
+                let l = serial.pick(&blocked);
+                serial.on_selected(l);
+                serial.step_recover();
+                let pk = p.next_pick();
+                assert_eq!(pk.client, l);
+                assert!(!pk.barrier_release);
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_picks_flag_barrier_releases() {
+        // Under sync, exactly every λ-th pick completes the barrier and
+        // each cycle covers all clients once.
+        let lambda = 4;
+        let mut p = planner(SelectionRule::Uniform, lambda, true);
+        for _ in 0..25 {
+            let mut cycle = Vec::new();
+            for i in 0..lambda {
+                let pk = p.next_pick();
+                assert_eq!(pk.barrier_release, i == lambda - 1, "{cycle:?}");
+                cycle.push(pk.client);
+            }
+            cycle.sort_unstable();
+            assert_eq!(cycle, (0..lambda).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn streamed_picks_resume_after_window_cut() {
+        // A repeat buffered by next_window must come out of next_pick
+        // first, keeping the concatenated sequence serial-identical.
+        let mut serial =
+            Selector::new(SelectionRule::Uniform, 3, rng::stream(12, "s", 0));
+        let blocked = vec![false; 3];
+        let mut want = Vec::new();
+        for _ in 0..64 {
+            let l = serial.pick(&blocked);
+            serial.on_selected(l);
+            serial.step_recover();
+            want.push(l);
+        }
+        let mut p = planner(SelectionRule::Uniform, 3, false);
+        let mut got = p.next_window(64); // cut at the first repeat
+        while got.len() < 64 {
+            got.push(p.next_pick().client);
+        }
+        assert_eq!(got, want);
     }
 
     #[test]

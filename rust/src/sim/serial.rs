@@ -125,7 +125,9 @@ impl Simulator {
             }
         };
 
-        // 2..4. Push gate → apply → barrier/fetch → eval cadence.
+        // 2..4. Push gate → apply → barrier/fetch → eval cadence. The
+        // θ-replacement report only matters to the pipelined dispatcher's
+        // epoch tracking; serial always works from the live client state.
         let probe_xy = if classif {
             Some((self.x_buf.as_slice(), self.y_buf.as_slice()))
         } else {
@@ -137,7 +139,8 @@ impl Simulator {
             &self.grad_buf,
             probe_xy,
             self.grad_engine.as_mut(),
-        )
+        )?;
+        Ok(())
     }
 
     /// Advance to exactly `target_iter` iterations (clamped to

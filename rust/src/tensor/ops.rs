@@ -8,6 +8,35 @@ pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
     }
 }
 
+/// `y[i] += a[0]·x0[i] + a[1]·x1[i] + a[2]·x2[i] + a[3]·x3[i]` — four
+/// fused axpys in one pass over `y`.
+///
+/// The MLP forward accumulation (`out += x_k · w_row_k` per input k) is
+/// branch-free here where the scalar loop pays a data-dependent
+/// `if xv == 0.0` test per element; processing four weight rows per pass
+/// also quarters the `y` read/write traffic. The two independent
+/// two-term products per element give LLVM separate dependency chains to
+/// vectorize across.
+pub fn axpy_block(
+    y: &mut [f32],
+    a: &[f32; 4],
+    x0: &[f32],
+    x1: &[f32],
+    x2: &[f32],
+    x3: &[f32],
+) {
+    let n = y.len();
+    assert!(
+        x0.len() == n && x1.len() == n && x2.len() == n && x3.len() == n,
+        "axpy_block length mismatch"
+    );
+    for i in 0..n {
+        let p01 = a[0] * x0[i] + a[1] * x1[i];
+        let p23 = a[2] * x2[i] + a[3] * x3[i];
+        y[i] += p01 + p23;
+    }
+}
+
 /// `y = x` (vector copy through a reusable buffer).
 pub fn copy(y: &mut [f32], x: &[f32]) {
     assert_eq!(y.len(), x.len());
@@ -195,6 +224,41 @@ mod tests {
         let mut y = vec![1.0, 2.0, 3.0];
         axpy(&mut y, -0.5, &[2.0, 2.0, 2.0]);
         assert_eq!(y, vec![0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn axpy_block_matches_four_axpys() {
+        let n = 37; // odd length exercises any tail handling
+        let mut rng = crate::rng::Xoshiro256pp::new(11);
+        let mk = |rng: &mut crate::rng::Xoshiro256pp| -> Vec<f32> {
+            (0..n).map(|_| rng.f32() - 0.5).collect()
+        };
+        let (x0, x1, x2, x3) =
+            (mk(&mut rng), mk(&mut rng), mk(&mut rng), mk(&mut rng));
+        let a = [0.7f32, -1.3, 0.0, 2.5];
+        let y0: Vec<f32> = mk(&mut rng);
+
+        let mut got = y0.clone();
+        axpy_block(&mut got, &a, &x0, &x1, &x2, &x3);
+
+        let mut want = y0;
+        axpy(&mut want, a[0], &x0);
+        axpy(&mut want, a[1], &x1);
+        axpy(&mut want, a[2], &x2);
+        axpy(&mut want, a[3], &x3);
+        for (g, w) in got.iter().zip(&want) {
+            // Pairwise accumulation reassociates vs. four serial passes.
+            assert!((g - w).abs() <= 1e-5, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "axpy_block length mismatch")]
+    fn axpy_block_rejects_mismatch() {
+        let mut y = vec![0.0f32; 4];
+        let x = vec![0.0f32; 4];
+        let short = vec![0.0f32; 3];
+        axpy_block(&mut y, &[1.0; 4], &x, &x, &x, &short);
     }
 
     #[test]

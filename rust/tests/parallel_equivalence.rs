@@ -186,3 +186,127 @@ fn lookahead_and_worker_count_do_not_change_results() {
         );
     }
 }
+
+#[test]
+fn pipelined_matrix_policies_selection_inflight() {
+    // The pipelined speculative dispatcher over every registered policy ×
+    // every selection rule × in-flight depths {1, 2×workers, deep}. One
+    // serial baseline per (policy, rule); every pipelined run must match
+    // it bitwise.
+    let workers = 4;
+    for policy in [
+        Policy::Sync,
+        Policy::Asgd,
+        Policy::Sasgd,
+        Policy::Exponential,
+        Policy::Fasgd,
+        Policy::GapAware,
+    ] {
+        for rule in [
+            SelectionRule::Uniform,
+            SelectionRule::Heterogeneous { sigma: 1.0 },
+            SelectionRule::Cooldown { factor: 0.3, recovery: 1.5 },
+        ] {
+            let mut cfg = small_cfg(policy.clone(), 13);
+            cfg.iters = 200;
+            cfg.eval_every = 50;
+            cfg.selection = rule.clone();
+            let serial = build_sim(&cfg).unwrap().run().unwrap();
+            let want = fingerprint(&serial);
+            for inflight in [1usize, 2 * workers, 64] {
+                cfg.inflight = inflight;
+                let parallel = build_parallel_sim(&cfg, workers)
+                    .unwrap()
+                    .run()
+                    .unwrap();
+                assert_eq!(
+                    want,
+                    fingerprint(&parallel),
+                    "pipelined != serial for policy {:?} rule {rule:?} \
+                     inflight {inflight}",
+                    cfg.policy
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pipelined_matches_windowed_legacy_mode() {
+    // `pipeline = false` keeps the PR-1 windowed fan-out/fan-in loop
+    // alive for A/B benchmarks; it must stay bitwise-equivalent too.
+    for policy in [Policy::Fasgd, Policy::Sync] {
+        let mut cfg = small_cfg(policy, 23);
+        let serial = build_sim(&cfg).unwrap().run().unwrap();
+        cfg.pipeline = false;
+        let windowed =
+            build_parallel_sim(&cfg, 4).unwrap().run().unwrap();
+        assert_eq!(
+            fingerprint(&serial),
+            fingerprint(&windowed),
+            "windowed legacy mode diverged for {:?}",
+            cfg.policy
+        );
+    }
+}
+
+#[test]
+fn speculation_miss_recomputes_from_fresh_snapshot() {
+    // Force epoch invalidations: fixed-period gating with k_fetch = 1
+    // transmits every fetch (so every apply replaces the fetching
+    // client's θ and bumps its epoch) while keeping bandwidth mode
+    // non-`always`, which makes the dispatcher speculate eagerly on
+    // repeat clients instead of deferring them. With λ=4 and a deep
+    // in-flight window, repeats land in flight constantly, so stale
+    // snapshots MUST be detected and recomputed — and the applied
+    // gradients must come from the fresh snapshots, or the parameter
+    // vector diverges from serial immediately.
+    let mut cfg = small_cfg(Policy::Fasgd, 41);
+    cfg.clients = 4;
+    cfg.iters = 250;
+    cfg.bandwidth = BandwidthMode::Fixed { k_push: 1, k_fetch: 1 };
+    cfg.inflight = 16;
+
+    let mut serial = build_sim(&cfg).unwrap();
+    serial.run_until(250).unwrap();
+
+    let mut parallel = build_parallel_sim(&cfg, 4).unwrap();
+    parallel.run_until(250).unwrap();
+
+    let spec = parallel.speculation();
+    assert!(
+        spec.recomputed > 0,
+        "expected forced speculation misses, got {spec:?}"
+    );
+    // Gated mode speculates every pick (no deferrals); recomputes are
+    // counted separately from first submissions.
+    assert_eq!(spec.submitted, 250, "{spec:?}");
+    assert_eq!(spec.deferred, 0, "{spec:?}");
+    assert_eq!(
+        serial.server().params(),
+        parallel.server().params(),
+        "a stale-snapshot gradient reached the server"
+    );
+    assert_eq!(serial.server().timestamp(), parallel.server().timestamp());
+}
+
+#[test]
+fn always_mode_defers_instead_of_missing() {
+    // Under bandwidth `always` every fetch replaces θ, so repeat
+    // speculation can never hit; the dispatcher must park repeats behind
+    // their predecessor (deferral) rather than burn recomputes.
+    let mut cfg = small_cfg(Policy::Asgd, 47);
+    cfg.clients = 3; // small λ ⇒ repeats in flight constantly
+    cfg.inflight = 12;
+
+    let mut serial = build_sim(&cfg).unwrap();
+    serial.run_until(cfg.iters).unwrap();
+
+    let mut parallel = build_parallel_sim(&cfg, 4).unwrap();
+    parallel.run_until(cfg.iters).unwrap();
+    let spec = parallel.speculation();
+    assert_eq!(spec.recomputed, 0, "guaranteed misses must be deferred");
+    assert!(spec.deferred > 0, "λ=3 with inflight 12 must defer: {spec:?}");
+    assert_eq!(serial.server().params(), parallel.server().params());
+    assert_eq!(serial.server().timestamp(), parallel.server().timestamp());
+}

@@ -50,6 +50,12 @@ fn arb_config(rng: &mut Xoshiro256pp) -> ExperimentConfig {
         _ => PushDropMode::Skip,
     };
     cfg.fasgd.inverse_variant = rng.below(2) == 1;
+    // Execution mode must not matter to any protocol invariant: mix the
+    // serial dispatcher with the pipelined speculative one at several
+    // in-flight depths (0 = auto). Gated-bandwidth cases exercise the
+    // eager-speculation/recompute path, `always` the deferral path.
+    cfg.workers = [1, 1, 2, 4][rng.below(4) as usize];
+    cfg.inflight = [0, 1, 16][rng.below(3) as usize];
     cfg
 }
 
