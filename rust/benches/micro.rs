@@ -2,8 +2,10 @@
 //! the fused FASGD server update, the SASGD axpy, the PJRT dispatch cost of
 //! the grad/eval/update graphs, pure-rust grad, the dispatcher's per-step
 //! overhead with gradient cost excluded, per-policy dispatcher throughput,
-//! and the serial vs. barrier-windowed vs. pipelined-speculative
-//! dispatcher comparison (with the speculation miss-rate counter).
+//! the serial vs. barrier-windowed vs. pipelined-speculative
+//! dispatcher comparison (with the speculation miss-rate counter), and
+//! virtual-time throughput (simulated-seconds/sec on a straggler-fleet
+//! delay-model workload).
 //!
 //! `cargo bench --bench micro -- --json BENCH_pr3.json` additionally
 //! writes the throughput snapshot as JSON (the per-PR perf trajectory).
@@ -215,6 +217,61 @@ fn main() -> anyhow::Result<()> {
         }
     );
 
+    // --- virtual-time throughput (simulated seconds per wall second) --------
+    // The straggler-fleet workload: bimodal compute delays + lognormal
+    // network jitter on the paper MLP, scheduled by the virtual clock
+    // (completion-order selection). Reported as simulated-seconds/sec
+    // alongside steps/sec — the clock's hot-path cost and the dispatcher's
+    // simulation rate on time-driven scenarios both show up here.
+    let mk_delay_cfg = || {
+        let mut cfg = mk_cfg();
+        cfg.delay.compute = fasgd::config::DelayModel::Bimodal {
+            straggler_frac: 0.25,
+            slow_mult: 8.0,
+        };
+        cfg.delay.network =
+            fasgd::config::DelayModel::LogNormal { mu: -2.0, sigma: 0.3 };
+        cfg
+    };
+    let cfg_d = mk_delay_cfg();
+    let mut serial_d = fasgd::experiments::common::build_sim(&cfg_d)?;
+    serial_d.run_until(warmup)?;
+    let v0 = serial_d.virtual_secs();
+    let t0 = std::time::Instant::now();
+    serial_d.run_until(warmup + iters)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let serial_d_sps = iters as f64 / wall;
+    let serial_vsps = (serial_d.virtual_secs() - v0) / wall;
+    println!(
+        "dispatcher serial   (straggler fleet, vclock)    {serial_d_sps:>10.0} steps/s  {serial_vsps:>12.0} sim-secs/s"
+    );
+    let mut vclock_rows: Vec<Json> = vec![obj(vec![
+        ("workers", 1usize.into()),
+        ("steps_per_sec", serial_d_sps.into()),
+        ("sim_secs_per_sec", serial_vsps.into()),
+    ])];
+    for workers in [2usize, 4, 8] {
+        let mut par =
+            fasgd::experiments::common::build_parallel_sim(&cfg_d, workers)?;
+        par.run_until(warmup)?;
+        let v0 = par.virtual_secs();
+        let t0 = std::time::Instant::now();
+        par.run_until(warmup + iters)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let sps = iters as f64 / wall;
+        let vsps = (par.virtual_secs() - v0) / wall;
+        println!(
+            "dispatcher pipelined(straggler fleet, vclock, {workers} workers) {sps:>10.0} steps/s  {vsps:>12.0} sim-secs/s  ({:.2}x serial)",
+            sps / serial_d_sps
+        );
+        vclock_rows.push(obj(vec![
+            ("workers", workers.into()),
+            ("steps_per_sec", sps.into()),
+            ("sim_secs_per_sec", vsps.into()),
+            ("speedup_vs_serial", (sps / serial_d_sps).into()),
+        ]));
+    }
+
     // --- per-policy dispatcher throughput (serial, via the builder) ---------
     // Coordination + policy apply_update cost per step at the paper MLP
     // size; gap_aware pays an extra ||theta||_2 pass per update, fasgd the
@@ -247,6 +304,18 @@ fn main() -> anyhow::Result<()> {
             ("serial_steps_per_sec", serial_sps.into()),
             ("parallel_barrier", Json::Arr(barrier_rows)),
             ("parallel_pipelined", Json::Arr(pipelined_rows)),
+            (
+                "virtual_time",
+                obj(vec![
+                    (
+                        "workload",
+                        "straggler fleet: bimodal compute (25% at 8x) + \
+                         lognormal network, vclock completion order"
+                            .into(),
+                    ),
+                    ("rows", Json::Arr(vclock_rows)),
+                ]),
+            ),
             ("per_policy_serial", Json::Arr(policy_rows)),
             ("speedup_at_4_workers", speedup_at_4.into()),
             (

@@ -162,6 +162,89 @@ impl Default for BandwidthMode {
     }
 }
 
+/// One per-round delay source for the virtual-time scheduler
+/// ([`crate::sim::clock`]): how many virtual seconds a client's compute
+/// (or network round-trip) takes.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum DelayModel {
+    /// Contributes zero virtual seconds (both sources `none` ⇒ the clock
+    /// is off entirely and selection stays RNG-driven).
+    #[default]
+    None,
+    /// Each draw is `exp(N(mu, sigma))` virtual seconds: heavy-tailed
+    /// per-iteration jitter (the classic datacenter latency fit).
+    LogNormal { mu: f64, sigma: f64 },
+    /// Two deterministic cohorts: clients `[0, ceil(straggler_frac·λ))`
+    /// take `slow_mult` virtual seconds per draw, the rest 1.0 — the
+    /// straggler-fleet scenario, with the slow cohort addressable by
+    /// index.
+    Bimodal { straggler_frac: f64, slow_mult: f64 },
+}
+
+impl DelayModel {
+    pub fn is_none(&self) -> bool {
+        matches!(self, DelayModel::None)
+    }
+
+    /// Parse the mode name; parameters then arrive via the dedicated keys
+    /// (`delay.compute_mu` etc.) like the bandwidth sub-keys do.
+    fn parse_mode(value: &str) -> Result<Self> {
+        Ok(match value.to_ascii_lowercase().as_str() {
+            "none" => DelayModel::None,
+            "lognormal" | "log_normal" | "log-normal" => {
+                DelayModel::LogNormal { mu: 0.0, sigma: 0.5 }
+            }
+            "bimodal" => DelayModel::Bimodal {
+                straggler_frac: 0.25,
+                slow_mult: 10.0,
+            },
+            other => bail!(
+                "unknown delay model {other:?} (none|lognormal|bimodal)"
+            ),
+        })
+    }
+
+    fn validate(&self, what: &str) -> Result<()> {
+        match self {
+            DelayModel::None => {}
+            DelayModel::LogNormal { mu, sigma } => {
+                if !mu.is_finite() || !sigma.is_finite() || *sigma < 0.0 {
+                    bail!("{what}: lognormal needs finite mu and sigma >= 0");
+                }
+            }
+            DelayModel::Bimodal { straggler_frac, slow_mult } => {
+                if !(0.0..=1.0).contains(straggler_frac) {
+                    bail!("{what}: straggler_frac must be in [0,1]");
+                }
+                if !slow_mult.is_finite() || *slow_mult < 1.0 {
+                    bail!("{what}: slow_mult must be >= 1");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-client latency configuration: a compute-time model and a network
+/// round-trip model, added per round. When either is non-`none` the
+/// dispatcher switches to **completion-order selection**: the next
+/// iteration belongs to the earliest-finishing client (deterministic
+/// virtual-time event queue, delays drawn from the dispatcher RNG
+/// stream), and `selection.rule` is ignored. Staleness τ then emerges
+/// from the delays instead of from pick probabilities.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct DelayConfig {
+    pub compute: DelayModel,
+    pub network: DelayModel,
+}
+
+impl DelayConfig {
+    /// Is the virtual-time scheduler active (any delay source enabled)?
+    pub fn enabled(&self) -> bool {
+        !(self.compute.is_none() && self.network.is_none())
+    }
+}
+
 /// Dispatcher client-selection rule (FRED's "probability of being selected
 /// and how that probability changes upon selection").
 #[derive(Debug, Clone, PartialEq)]
@@ -271,6 +354,10 @@ pub struct ExperimentConfig {
     pub bandwidth: BandwidthMode,
     pub push_drop: PushDropMode,
     pub selection: SelectionRule,
+    /// Per-client latency models (compute + network). Any non-`none`
+    /// model turns on the deterministic virtual clock and
+    /// completion-order selection ([`crate::sim::clock`]).
+    pub delay: DelayConfig,
     pub model: ModelKind,
     pub dataset: DatasetConfig,
     pub grad_engine: GradEngineKind,
@@ -280,6 +367,10 @@ pub struct ExperimentConfig {
     pub mlp_hidden: usize,
     /// Evaluate validation cost every this many *server updates*.
     pub eval_every: u64,
+    /// Additionally evaluate every this many *virtual seconds* (0 = off).
+    /// With no delay model the clock degenerates to 1 virtual second per
+    /// iteration, so this doubles as an every-N-iterations cadence.
+    pub eval_every_vsecs: f64,
     /// Progress logging cadence, in iterations (0 = quiet).
     pub log_every: u64,
     /// Measure true B-Staleness (eq. 3) every this many iterations
@@ -321,12 +412,14 @@ impl Default for ExperimentConfig {
             bandwidth: BandwidthMode::Always,
             push_drop: PushDropMode::ReapplyCached,
             selection: SelectionRule::Uniform,
+            delay: DelayConfig::default(),
             model: ModelKind::Mlp,
             dataset: DatasetConfig::default(),
             grad_engine: GradEngineKind::Xla,
             update_engine: UpdateEngineKind::Rust,
             mlp_hidden: 200,
             eval_every: 500,
+            eval_every_vsecs: 0.0,
             log_every: 0,
             probe_every: 0,
             workers: 1,
@@ -367,6 +460,7 @@ impl ExperimentConfig {
             "update_engine" => self.update_engine = value.parse()?,
             "mlp.hidden" => self.mlp_hidden = value.parse()?,
             "eval_every" => self.eval_every = value.parse()?,
+            "eval_every_vsecs" => self.eval_every_vsecs = value.parse()?,
             "log_every" => self.log_every = value.parse()?,
             "probe_every" => self.probe_every = value.parse()?,
             "workers" | "jobs" => self.workers = value.parse()?,
@@ -439,6 +533,74 @@ impl ExperimentConfig {
                     "bandwidth.eps requires bandwidth.mode = probabilistic"
                 ),
             },
+            "delay.compute" => {
+                self.delay.compute = DelayModel::parse_mode(value)?
+            }
+            "delay.network" => {
+                self.delay.network = DelayModel::parse_mode(value)?
+            }
+            "delay.compute_mu" => match &mut self.delay.compute {
+                DelayModel::LogNormal { mu, .. } => *mu = value.parse()?,
+                _ => bail!(
+                    "delay.compute_mu requires delay.compute = lognormal"
+                ),
+            },
+            "delay.compute_sigma" => match &mut self.delay.compute {
+                DelayModel::LogNormal { sigma, .. } => {
+                    *sigma = value.parse()?
+                }
+                _ => bail!(
+                    "delay.compute_sigma requires delay.compute = lognormal"
+                ),
+            },
+            "delay.compute_straggler_frac" => match &mut self.delay.compute {
+                DelayModel::Bimodal { straggler_frac, .. } => {
+                    *straggler_frac = value.parse()?
+                }
+                _ => bail!(
+                    "delay.compute_straggler_frac requires delay.compute = \
+                     bimodal"
+                ),
+            },
+            "delay.compute_slow_mult" => match &mut self.delay.compute {
+                DelayModel::Bimodal { slow_mult, .. } => {
+                    *slow_mult = value.parse()?
+                }
+                _ => bail!(
+                    "delay.compute_slow_mult requires delay.compute = bimodal"
+                ),
+            },
+            "delay.network_mu" => match &mut self.delay.network {
+                DelayModel::LogNormal { mu, .. } => *mu = value.parse()?,
+                _ => bail!(
+                    "delay.network_mu requires delay.network = lognormal"
+                ),
+            },
+            "delay.network_sigma" => match &mut self.delay.network {
+                DelayModel::LogNormal { sigma, .. } => {
+                    *sigma = value.parse()?
+                }
+                _ => bail!(
+                    "delay.network_sigma requires delay.network = lognormal"
+                ),
+            },
+            "delay.network_straggler_frac" => match &mut self.delay.network {
+                DelayModel::Bimodal { straggler_frac, .. } => {
+                    *straggler_frac = value.parse()?
+                }
+                _ => bail!(
+                    "delay.network_straggler_frac requires delay.network = \
+                     bimodal"
+                ),
+            },
+            "delay.network_slow_mult" => match &mut self.delay.network {
+                DelayModel::Bimodal { slow_mult, .. } => {
+                    *slow_mult = value.parse()?
+                }
+                _ => bail!(
+                    "delay.network_slow_mult requires delay.network = bimodal"
+                ),
+            },
             "selection.rule" => {
                 self.selection = match value {
                     "uniform" => SelectionRule::Uniform,
@@ -498,6 +660,11 @@ impl ExperimentConfig {
         if self.eval_every == 0 {
             bail!("eval_every must be >= 1");
         }
+        if !self.eval_every_vsecs.is_finite() || self.eval_every_vsecs < 0.0 {
+            bail!("eval_every_vsecs must be >= 0 (0 = off)");
+        }
+        self.delay.compute.validate("delay.compute")?;
+        self.delay.network.validate("delay.network")?;
         if !(0.0..1.0).contains(&(self.fasgd.gamma as f64)) {
             bail!("fasgd.gamma must be in [0,1)");
         }
@@ -698,6 +865,89 @@ mod tests {
         c.policy = Policy::Sync;
         c.bandwidth = BandwidthMode::Always;
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn delay_model_keys() {
+        let mut c = ExperimentConfig::default();
+        assert!(!c.delay.enabled(), "delays off by default");
+        // Parameter keys demand the matching mode, like bandwidth's.
+        assert!(c.set("delay.compute_sigma", "0.5").is_err());
+        c.set("delay.compute", "lognormal").unwrap();
+        c.set("delay.compute_mu", "0.2").unwrap();
+        c.set("delay.compute_sigma", "1.5").unwrap();
+        assert_eq!(
+            c.delay.compute,
+            DelayModel::LogNormal { mu: 0.2, sigma: 1.5 }
+        );
+        assert!(c.delay.enabled());
+        c.set("delay.network", "bimodal").unwrap();
+        c.set("delay.network_straggler_frac", "0.5").unwrap();
+        c.set("delay.network_slow_mult", "8").unwrap();
+        assert_eq!(
+            c.delay.network,
+            DelayModel::Bimodal { straggler_frac: 0.5, slow_mult: 8.0 }
+        );
+        c.validate().unwrap();
+        assert!(c.set("delay.compute", "gaussian").is_err());
+        c.set("delay.compute", "none").unwrap();
+        c.set("delay.network", "none").unwrap();
+        assert!(!c.delay.enabled());
+    }
+
+    #[test]
+    fn delay_and_vsecs_validation() {
+        let mut c = ExperimentConfig::default();
+        c.delay.compute = DelayModel::LogNormal { mu: 0.0, sigma: -1.0 };
+        assert!(c.validate().is_err());
+
+        let mut c = ExperimentConfig::default();
+        c.delay.network =
+            DelayModel::Bimodal { straggler_frac: 1.5, slow_mult: 4.0 };
+        assert!(c.validate().is_err());
+
+        let mut c = ExperimentConfig::default();
+        c.delay.compute =
+            DelayModel::Bimodal { straggler_frac: 0.25, slow_mult: 0.5 };
+        assert!(c.validate().is_err(), "slow_mult < 1 rejected");
+
+        let mut c = ExperimentConfig::default();
+        c.set("eval_every_vsecs", "-3").unwrap();
+        assert!(c.validate().is_err());
+        c.set("eval_every_vsecs", "12.5").unwrap();
+        c.validate().unwrap();
+        assert_eq!(c.eval_every_vsecs, 12.5);
+    }
+
+    #[test]
+    fn delay_toml_section() {
+        let dir = std::env::temp_dir().join("fasgd_cfg_delay_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("delay.toml");
+        std::fs::write(
+            &path,
+            r#"
+            name = "straggler-fleet"
+            policy = asgd
+            [delay]
+            compute = bimodal
+            compute_straggler_frac = 0.125
+            compute_slow_mult = 16
+            network = lognormal
+            network_sigma = 0.75
+            "#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml_file(&path).unwrap();
+        assert_eq!(
+            c.delay.compute,
+            DelayModel::Bimodal { straggler_frac: 0.125, slow_mult: 16.0 }
+        );
+        assert_eq!(
+            c.delay.network,
+            DelayModel::LogNormal { mu: 0.0, sigma: 0.75 }
+        );
+        assert!(c.delay.enabled());
     }
 
     #[test]

@@ -25,6 +25,14 @@
 //! detected and recomputed at apply time — results stay bitwise identical
 //! to `--workers 1`. `--pipeline false` falls back to the legacy
 //! per-window fan-out/fan-in loop (`--lookahead K`).
+//!
+//! `--delay.compute` / `--delay.network` `{none|lognormal|bimodal}` enable
+//! the virtual-time scheduler: per-client latency models feed a
+//! deterministic event queue, the next iteration belongs to the
+//! earliest-finishing client, and staleness emerges from lateness
+//! (lognormal params: `--delay.compute_mu/_sigma`; bimodal:
+//! `--delay.compute_straggler_frac/_slow_mult`, same for `network_`).
+//! `--eval_every_vsecs S` adds an eval cadence in simulated seconds.
 
 use anyhow::{bail, Context, Result};
 
@@ -189,6 +197,12 @@ fn print_help() {
          \x20                --lambda N --mu N --iters N --alpha F --seed N\n\
          \x20                --workers N --inflight D --pipeline true|false\n\
          \x20                --lookahead K (parallel dispatcher)\n\
+         \x20                --delay.compute none|lognormal|bimodal\n\
+         \x20                --delay.network none|lognormal|bimodal\n\
+         \x20                  (lognormal: --delay.compute_mu F --delay.compute_sigma F;\n\
+         \x20                   bimodal: --delay.compute_straggler_frac F\n\
+         \x20                   --delay.compute_slow_mult F; same keys with network_)\n\
+         \x20                --eval_every_vsecs S (eval cadence in simulated seconds)\n\
          \x20                --config file.toml --out dir/\n\
          see README.md for the full knob list"
     );

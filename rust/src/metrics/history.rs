@@ -7,6 +7,10 @@ pub struct EvalPoint {
     pub iter: u64,
     /// Server timestamp T at evaluation time.
     pub server_ts: u64,
+    /// Virtual seconds elapsed ([`crate::sim::clock`]) — the
+    /// error-vs-runtime x-axis. 1.0 per iteration when delay models are
+    /// off.
+    pub vtime: f64,
     /// Mean validation NLL ("validation cost" in the figures).
     pub val_loss: f64,
     /// Validation accuracy.
@@ -81,7 +85,13 @@ mod tests {
     use super::*;
 
     fn pt(iter: u64, loss: f64) -> EvalPoint {
-        EvalPoint { iter, server_ts: iter, val_loss: loss, val_acc: 0.5 }
+        EvalPoint {
+            iter,
+            server_ts: iter,
+            vtime: iter as f64,
+            val_loss: loss,
+            val_acc: 0.5,
+        }
     }
 
     #[test]

@@ -68,6 +68,9 @@ pub struct RunSummary {
     pub staleness: StalenessHistogram,
     pub bandwidth: BandwidthReport,
     pub wall_secs: f64,
+    /// Total virtual seconds the run simulated ([`crate::sim::clock`];
+    /// equals `iters` when delay models are off).
+    pub virtual_secs: f64,
     pub server_updates: u64,
     /// B-Staleness probe log (empty unless the probe was enabled).
     pub probes: crate::sim::probe::ProbeLog,
@@ -104,6 +107,7 @@ impl RunSummary {
             ("fetch_copies", self.bandwidth.fetch_copies.into()),
             ("fetch_potential", self.bandwidth.fetch_potential.into()),
             ("wall_secs", self.wall_secs.into()),
+            ("virtual_secs", self.virtual_secs.into()),
         ])
     }
 }

@@ -9,21 +9,22 @@ use crate::metrics::RunSummary;
 use crate::util::json::Json;
 
 /// Write loss curves of several runs as tidy CSV:
-/// `run,policy,iter,server_ts,val_loss,val_acc`.
+/// `run,policy,iter,server_ts,vsecs,val_loss,val_acc` (`vsecs` is the
+/// virtual-time x-axis; 1.0/iteration when delay models are off).
 pub fn write_curves_csv(path: &Path, runs: &[RunSummary]) -> Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir).ok();
     }
     let mut f = std::fs::File::create(path)
         .with_context(|| format!("creating {path:?}"))?;
-    writeln!(f, "run,policy,iter,server_ts,val_loss,val_acc")?;
+    writeln!(f, "run,policy,iter,server_ts,vsecs,val_loss,val_acc")?;
     for run in runs {
         for p in &run.history.evals {
             writeln!(
                 f,
-                "{},{},{},{},{:.6},{:.4}",
-                run.name, run.policy, p.iter, p.server_ts, p.val_loss,
-                p.val_acc
+                "{},{},{},{},{:.6},{:.6},{:.4}",
+                run.name, run.policy, p.iter, p.server_ts, p.vtime,
+                p.val_loss, p.val_acc
             )?;
         }
     }
@@ -86,6 +87,7 @@ mod tests {
         h.record_eval(EvalPoint {
             iter: 10,
             server_ts: 10,
+            vtime: 10.0,
             val_loss: 0.7,
             val_acc: 0.8,
         });
@@ -99,6 +101,7 @@ mod tests {
             staleness: StalenessHistogram::new(8),
             bandwidth: BandwidthReport::default(),
             wall_secs: 0.1,
+            virtual_secs: 10.0,
             server_updates: 10,
             probes: Default::default(),
         }

@@ -237,6 +237,12 @@ impl Simulation {
         self.core().iter
     }
 
+    /// Virtual seconds simulated so far ([`crate::sim::clock`]; 1.0 per
+    /// iteration when delay models are off).
+    pub fn virtual_secs(&self) -> f64 {
+        self.core().vnow
+    }
+
     pub fn trace(&self) -> &Trace {
         &self.core().trace
     }

@@ -1,0 +1,315 @@
+//! Virtual-time event scheduling: a deterministic priority queue of
+//! client-completion events plus the per-client latency models that feed
+//! it.
+//!
+//! The paper's staleness story is about *time* — slow clients push
+//! gradients computed at parameters the server has long since replaced —
+//! but selection probabilities only fake that (a slow client is merely
+//! *unlikely* to be picked, never *late*). The [`VirtualClock`] makes time
+//! first-class while staying simulation-deterministic: events are ordered
+//! by `(virtual_time, seq)` where `seq` is a monotonically increasing
+//! scheduling sequence number, so ties never fall back to heap insertion
+//! order and a pop sequence is a pure function of the schedule calls
+//! (rust/tests/prop_clock.rs).
+//!
+//! [`LatencyModel`] draws per-iteration delays (compute + network) from
+//! the dispatcher RNG stream, so enabling a delay model perturbs no other
+//! named stream and runs stay bitwise reproducible. Supported shapes per
+//! [`crate::config::DelayModel`]:
+//!
+//! * `none` — contributes 0 seconds;
+//! * `lognormal{mu,sigma}` — each draw is `exp(N(mu, sigma))` virtual
+//!   seconds: heavy-tailed per-iteration jitter, the classic empirical fit
+//!   for datacenter compute/network latencies;
+//! * `bimodal{straggler_frac, slow_mult}` — a deterministic two-cohort
+//!   fleet: clients `[0, ceil(straggler_frac·λ))` take `slow_mult` virtual
+//!   seconds per draw, the rest take 1.0 — the Dutta et al. 2018 straggler
+//!   scenario, with the slow cohort identifiable by index in tests.
+//!
+//! Staleness τ then *emerges* from completion order (a straggler's push
+//! arrives many server updates after its fetch) instead of being imposed
+//! by pick probabilities — see `Selector`'s completion-order mode in
+//! [`crate::sim::selection`].
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::config::{DelayConfig, DelayModel};
+use crate::rng::{Normal, Xoshiro256pp};
+
+/// One scheduled client-completion event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClockEvent {
+    /// Virtual time at which the client finishes its round.
+    pub time: f64,
+    /// Scheduling sequence number (assigned by [`VirtualClock::schedule`],
+    /// strictly increasing) — the deterministic tie-break for equal times.
+    pub seq: u64,
+    pub client: usize,
+}
+
+impl Eq for ClockEvent {}
+
+impl Ord for ClockEvent {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // total_cmp gives a total order over f64; times are finite and
+        // non-negative by construction (schedule() asserts), so this is
+        // plain numeric order. seq is unique, making the order strict —
+        // pop order can never depend on heap-internal insertion order.
+        self.time
+            .total_cmp(&other.time)
+            .then_with(|| self.seq.cmp(&other.seq))
+    }
+}
+
+impl PartialOrd for ClockEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Deterministic virtual-time event queue: min-heap over
+/// `(virtual_time, seq)` with a monotone `now`.
+#[derive(Debug, Clone, Default)]
+pub struct VirtualClock {
+    // BinaryHeap is a max-heap; Reverse flips ClockEvent's order.
+    heap: BinaryHeap<std::cmp::Reverse<ClockEvent>>,
+    now: f64,
+    next_seq: u64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current virtual time: the timestamp of the last popped event
+    /// (0.0 before any pop).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Schedule a completion for `client` at absolute virtual time
+    /// `finish`, returning the event's sequence number. Times must be
+    /// finite and not in the past (the simulation only ever schedules
+    /// forward from `now`).
+    pub fn schedule(&mut self, client: usize, finish: f64) -> u64 {
+        assert!(
+            finish.is_finite() && finish >= self.now,
+            "clock: scheduling {finish} before now={}",
+            self.now
+        );
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(std::cmp::Reverse(ClockEvent {
+            time: finish,
+            seq,
+            client,
+        }));
+        seq
+    }
+
+    /// Pop the earliest event (ties by `seq`) and advance `now` to it.
+    /// Panics when empty — the scheduler guarantees every unblocked client
+    /// has a pending completion.
+    pub fn pop(&mut self) -> ClockEvent {
+        let ev = self
+            .heap
+            .pop()
+            .expect("virtual clock empty: all clients blocked")
+            .0;
+        self.now = ev.time;
+        ev
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+/// One delay source (compute or network), resolved from a
+/// [`DelayModel`] for a fleet of λ clients.
+#[derive(Debug, Clone)]
+enum DelaySampler {
+    None,
+    LogNormal { normal: Normal },
+    Bimodal { stragglers: usize, slow_mult: f64 },
+}
+
+impl DelaySampler {
+    fn from_model(model: &DelayModel, lambda: usize) -> Self {
+        match model {
+            DelayModel::None => DelaySampler::None,
+            DelayModel::LogNormal { mu, sigma } => DelaySampler::LogNormal {
+                normal: Normal::new(*mu, *sigma),
+            },
+            DelayModel::Bimodal { straggler_frac, slow_mult } => {
+                DelaySampler::Bimodal {
+                    stragglers: straggler_count(*straggler_frac, lambda),
+                    slow_mult: *slow_mult,
+                }
+            }
+        }
+    }
+
+    /// Virtual seconds this source contributes to `client`'s next round.
+    fn draw(&mut self, client: usize, rng: &mut Xoshiro256pp) -> f64 {
+        match self {
+            DelaySampler::None => 0.0,
+            DelaySampler::LogNormal { normal } => normal.sample(rng).exp(),
+            DelaySampler::Bimodal { stragglers, slow_mult } => {
+                if client < *stragglers {
+                    *slow_mult
+                } else {
+                    1.0
+                }
+            }
+        }
+    }
+}
+
+/// The bimodal model's slow cohort is the index prefix
+/// `[0, ceil(frac·λ))`, clamped to `[0, λ]` — deterministic by
+/// construction so tests (and users) can address the cohorts directly.
+pub fn straggler_count(frac: f64, lambda: usize) -> usize {
+    ((frac * lambda as f64).ceil() as usize).min(lambda)
+}
+
+/// Per-client latency model: compute delay + network delay per round,
+/// drawn from the dispatcher RNG stream in a deterministic order.
+#[derive(Debug, Clone)]
+pub struct LatencyModel {
+    compute: DelaySampler,
+    network: DelaySampler,
+}
+
+impl LatencyModel {
+    pub fn from_config(delay: &DelayConfig, lambda: usize) -> Self {
+        Self {
+            compute: DelaySampler::from_model(&delay.compute, lambda),
+            network: DelaySampler::from_model(&delay.network, lambda),
+        }
+    }
+
+    /// Total virtual seconds for `client`'s next round
+    /// (compute then network, each drawn independently). Always > 0 when
+    /// at least one model is non-`none` (lognormal is strictly positive,
+    /// bimodal ≥ 1), so scheduled events strictly advance the clock.
+    pub fn draw(&mut self, client: usize, rng: &mut Xoshiro256pp) -> f64 {
+        self.compute.draw(client, rng) + self.network.draw(client, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut c = VirtualClock::new();
+        c.schedule(0, 3.0);
+        c.schedule(1, 1.0);
+        c.schedule(2, 2.0);
+        assert_eq!(c.pop().client, 1);
+        assert_eq!(c.pop().client, 2);
+        assert_eq!(c.pop().client, 0);
+        assert!(c.is_empty());
+        assert_eq!(c.now(), 3.0);
+    }
+
+    #[test]
+    fn equal_times_tie_break_by_seq() {
+        let mut c = VirtualClock::new();
+        for client in [4usize, 2, 7, 0] {
+            c.schedule(client, 5.0);
+        }
+        let popped: Vec<usize> = (0..4).map(|_| c.pop().client).collect();
+        assert_eq!(popped, vec![4, 2, 7, 0], "FIFO among equal timestamps");
+    }
+
+    #[test]
+    fn now_is_monotone_under_interleaving() {
+        let mut c = VirtualClock::new();
+        let mut rng = rng::stream(9, "clock-test", 0);
+        c.schedule(0, 0.5);
+        let mut last = 0.0;
+        for i in 0..500 {
+            let ev = c.pop();
+            assert!(ev.time >= last, "time went backwards");
+            last = ev.time;
+            // Keep 1-3 events pending, always scheduled at/after now.
+            c.schedule(i % 7, c.now() + rng.f64());
+            if c.len() < 2 {
+                c.schedule((i + 3) % 7, c.now() + 2.0 * rng.f64());
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "before now")]
+    fn scheduling_in_the_past_panics() {
+        let mut c = VirtualClock::new();
+        c.schedule(0, 2.0);
+        c.pop();
+        c.schedule(1, 1.0);
+    }
+
+    #[test]
+    fn straggler_prefix_is_clamped_ceil() {
+        assert_eq!(straggler_count(0.25, 8), 2);
+        assert_eq!(straggler_count(0.25, 7), 2); // ceil(1.75)
+        assert_eq!(straggler_count(0.0, 8), 0);
+        assert_eq!(straggler_count(1.0, 8), 8);
+        assert_eq!(straggler_count(2.0, 8), 8); // clamp
+    }
+
+    #[test]
+    fn latency_models_draw_expected_shapes() {
+        let mut rng = rng::stream(3, "clock-test", 0);
+        let cfg = DelayConfig {
+            compute: DelayModel::Bimodal {
+                straggler_frac: 0.5,
+                slow_mult: 10.0,
+            },
+            network: DelayModel::None,
+        };
+        let mut m = LatencyModel::from_config(&cfg, 4);
+        assert_eq!(m.draw(0, &mut rng), 10.0);
+        assert_eq!(m.draw(1, &mut rng), 10.0);
+        assert_eq!(m.draw(2, &mut rng), 1.0);
+        assert_eq!(m.draw(3, &mut rng), 1.0);
+
+        let cfg = DelayConfig {
+            compute: DelayModel::LogNormal { mu: 0.0, sigma: 0.5 },
+            network: DelayModel::LogNormal { mu: -1.0, sigma: 0.25 },
+        };
+        let mut m = LatencyModel::from_config(&cfg, 4);
+        for _ in 0..1000 {
+            let d = m.draw(0, &mut rng);
+            assert!(d > 0.0 && d.is_finite());
+        }
+    }
+
+    #[test]
+    fn latency_draws_are_deterministic_given_stream() {
+        let cfg = DelayConfig {
+            compute: DelayModel::LogNormal { mu: 0.2, sigma: 1.0 },
+            network: DelayModel::Bimodal {
+                straggler_frac: 0.25,
+                slow_mult: 4.0,
+            },
+        };
+        let mut a = LatencyModel::from_config(&cfg, 8);
+        let mut b = LatencyModel::from_config(&cfg, 8);
+        let mut ra = rng::stream(11, "clock-test", 0);
+        let mut rb = rng::stream(11, "clock-test", 0);
+        for i in 0..200 {
+            assert_eq!(a.draw(i % 8, &mut ra), b.draw(i % 8, &mut rb));
+        }
+    }
+}

@@ -33,6 +33,16 @@
 //!   legacy per-window fan-out/fan-in loop survives behind
 //!   `pipeline = false`.
 //!
+//! # Virtual time
+//!
+//! [`clock`] adds a deterministic virtual-time event scheduler: per-client
+//! latency models (`delay.compute` / `delay.network` config keys) feed a
+//! `(virtual_time, seq)`-ordered priority queue, the [`Selector`] picks
+//! the earliest-finishing client (completion-order mode), and staleness τ
+//! emerges from lateness instead of pick probabilities. Protocol events,
+//! eval points, and run summaries all carry virtual timestamps; with
+//! delays off the clock degenerates to 1.0 per iteration.
+//!
 //! Determinism: all randomness flows from named [`crate::rng`] streams of
 //! the master seed; gradient engines and the data generators are
 //! deterministic; therefore same config ⇒ bitwise-identical loss curves
@@ -44,6 +54,7 @@
 
 pub mod builder;
 pub mod client;
+pub mod clock;
 pub mod dispatcher;
 pub mod observers;
 pub mod parallel;
@@ -54,6 +65,7 @@ pub mod serial;
 pub mod trace;
 
 pub use builder::{Simulation, SimulationBuilder};
+pub use clock::{ClockEvent, LatencyModel, VirtualClock};
 pub use observers::{
     CsvCurveWriter, EvalLogger, EventCounter, RunObserver,
 };

@@ -52,10 +52,11 @@ impl EvalLogger {
 impl RunObserver for EvalLogger {
     fn on_eval(&mut self, eval: &EvalPoint) {
         log::info!(
-            "{}: iter {} T={} val_loss={:.4} val_acc={:.3}",
+            "{}: iter {} T={} vsecs={:.1} val_loss={:.4} val_acc={:.3}",
             self.name,
             eval.iter,
             eval.server_ts,
+            eval.vtime,
             eval.val_loss,
             eval.val_acc
         );
@@ -63,12 +64,14 @@ impl RunObserver for EvalLogger {
 
     fn on_finish(&mut self, summary: &RunSummary) {
         log::info!(
-            "{}: done — final={:.4} best={:.4} mean_tau={:.1} wall={:.1}s",
+            "{}: done — final={:.4} best={:.4} mean_tau={:.1} wall={:.1}s \
+             vsecs={:.1}",
             self.name,
             summary.final_val_loss(),
             summary.best_val_loss(),
             summary.staleness.mean(),
-            summary.wall_secs
+            summary.wall_secs,
+            summary.virtual_secs
         );
     }
 }

@@ -107,6 +107,12 @@ pub struct ParallelSimulator {
     /// predecessor's apply.
     deferred: Vec<VecDeque<DeferredIter>>,
     deferred_total: usize,
+    /// Virtual completion time of every planned-but-not-yet-applied
+    /// iteration, in seq order. Applies drain strictly in seq order, so a
+    /// FIFO keyed by `(seq, vtime)` hands `complete_iteration` exactly
+    /// the timestamp the serial dispatcher would, with no change to the
+    /// worker task shape.
+    planned_times: VecDeque<(u64, Option<f64>)>,
     /// Tasks submitted to the pool and not yet applied (includes results
     /// parked in `queue` and in-flight recomputes).
     outstanding: usize,
@@ -137,10 +143,11 @@ impl ParallelSimulator {
         factory: EngineFactory,
         workers: usize,
     ) -> Result<Self> {
-        let selector = Selector::new(
+        let selector = Selector::with_delays(
             cfg.selection.clone(),
             cfg.clients,
             rng::stream(cfg.seed, "dispatcher", 0),
+            &cfg.delay,
         );
         let planner = SchedulePlanner::new(
             selector,
@@ -170,6 +177,7 @@ impl ParallelSimulator {
             in_flight: vec![0; lambda],
             deferred: (0..lambda).map(|_| VecDeque::new()).collect(),
             deferred_total: 0,
+            planned_times: VecDeque::new(),
             outstanding: 0,
             inflight,
             next_seq: 0,
@@ -217,6 +225,11 @@ impl ParallelSimulator {
 
     pub fn iterations(&self) -> u64 {
         self.core.iter
+    }
+
+    /// Virtual seconds simulated so far ([`crate::sim::clock`]).
+    pub fn virtual_secs(&self) -> f64 {
+        self.core.vnow
     }
 
     pub fn worker_count(&self) -> usize {
@@ -277,6 +290,7 @@ impl ParallelSimulator {
             let pick = self.planner.next_pick();
             let seq = self.next_seq;
             self.next_seq += 1;
+            self.planned_times.push_back((seq, pick.vtime));
             if pick.barrier_release {
                 // Every θ_j changes when this applies; planning resumes
                 // once `apply_result` observes ThetaReplaced::All.
@@ -348,12 +362,20 @@ impl ParallelSimulator {
             }
             OwnedBatch::Lm { .. } => None,
         };
+        // Applies drain strictly in seq order, so the planning-time FIFO
+        // head is always this iteration's virtual timestamp.
+        let (seq, vtime) = self
+            .planned_times
+            .pop_front()
+            .expect("apply without a planned vtime");
+        debug_assert_eq!(seq, r.seq, "planned-time FIFO out of sync");
         let replaced = self.core.complete_iteration(
             r.client,
             r.loss,
             &r.grad,
             probe_xy,
             self.probe_engine.as_mut(),
+            vtime,
         )?;
         self.outstanding -= 1;
         self.in_flight[r.client] -= 1;
@@ -388,11 +410,13 @@ impl ParallelSimulator {
         // Fan out: per-iteration parameter + minibatch snapshots. Distinct
         // clients per window ⇒ each θ snapshot is exactly the θ_j the
         // serial dispatcher would see at that iteration.
-        for &l in &window {
+        for pk in &window {
             let seq = self.next_seq;
             self.next_seq += 1;
-            let batch = self.core.draw_batch(l, self.batch_free.pop())?;
-            self.submit(seq, l, batch)?;
+            self.planned_times.push_back((seq, pk.vtime));
+            let batch =
+                self.core.draw_batch(pk.client, self.batch_free.pop())?;
+            self.submit(seq, pk.client, batch)?;
         }
 
         // Fan in: complete iterations strictly in schedule order as their

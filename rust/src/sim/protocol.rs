@@ -80,6 +80,13 @@ pub(crate) struct ProtocolCore {
     pub(crate) iter: u64,
     pub(crate) server_updates: u64,
     pub(crate) next_eval_ts: u64,
+    /// Virtual time of the most recently completed iteration
+    /// ([`crate::sim::clock`]). With delay models off the clock
+    /// degenerates to 1.0 per iteration, so the virtual-seconds axis is
+    /// always populated.
+    pub(crate) vnow: f64,
+    /// Next virtual-time eval threshold (∞ when `eval_every_vsecs` = 0).
+    pub(crate) next_eval_vtime: f64,
     /// Every N iterations, measure the true B-Staleness Γ (eq. 3) by
     /// re-running the probed minibatch at the server parameters. 0 = off.
     pub(crate) probe_every: u64,
@@ -162,6 +169,12 @@ impl ProtocolCore {
             iter: 0,
             server_updates: 0,
             next_eval_ts: cfg.eval_every,
+            vnow: 0.0,
+            next_eval_vtime: if cfg.eval_every_vsecs > 0.0 {
+                cfg.eval_every_vsecs
+            } else {
+                f64::INFINITY
+            },
             probe_every: cfg.probe_every,
             probes: ProbeLog::default(),
             probe_buf: Vec::new(),
@@ -225,7 +238,10 @@ impl ProtocolCore {
     /// Everything after the gradient: the paper §2.1 protocol with §2.3
     /// gating, in schedule order. `probe_xy` carries the minibatch for the
     /// B-Staleness probe (classification only); `probe_engine` recomputes
-    /// it at the server parameters when the probe cadence fires.
+    /// it at the server parameters when the probe cadence fires. `vtime`
+    /// is the iteration's virtual completion time from the clock-driven
+    /// selector (`None` with delay models off: the clock then degenerates
+    /// to 1.0 virtual seconds per iteration).
     ///
     /// Returns which client θ copies this apply replaced — the pipelined
     /// dispatcher bumps its θ-epochs from this (serial mode ignores it).
@@ -236,8 +252,14 @@ impl ProtocolCore {
         grad: &[f32],
         probe_xy: Option<(&[f32], &[i32])>,
         probe_engine: &mut dyn GradientEngine,
+        vtime: Option<f64>,
     ) -> Result<ThetaReplaced> {
-        self.emit(Event::Selected { iter: self.iter, client: l });
+        self.vnow = vtime.unwrap_or(self.vnow + 1.0);
+        self.emit(Event::Selected {
+            iter: self.iter,
+            client: l,
+            vtime: self.vnow,
+        });
         self.history.record_train_loss(loss as f64);
         self.iter += 1;
         let client_ts = self.clients[l].ts;
@@ -289,6 +311,7 @@ impl ProtocolCore {
             iter: self.iter,
             client: l,
             transmitted: push,
+            vtime: self.vnow,
         });
 
         let mut outcome = None;
@@ -327,6 +350,7 @@ impl ProtocolCore {
                             client: l,
                             tau: out.staleness.unwrap_or(0),
                             reapplied: true,
+                            vtime: self.vnow,
                         });
                         outcome = Some(out);
                     }
@@ -353,6 +377,7 @@ impl ProtocolCore {
                         client: l,
                         tau,
                         reapplied: false,
+                        vtime: self.vnow,
                     });
                 }
             }
@@ -371,6 +396,7 @@ impl ProtocolCore {
                 self.emit(Event::BarrierRelease {
                     iter: self.iter,
                     server_ts: ts,
+                    vtime: self.vnow,
                 });
             }
         }
@@ -389,6 +415,7 @@ impl ProtocolCore {
                 iter: self.iter,
                 client: l,
                 transmitted: fetch,
+                vtime: self.vnow,
             });
             if fetch {
                 let client = &mut self.clients[l];
@@ -399,11 +426,37 @@ impl ProtocolCore {
         }
 
         // 4. Validation cadence (in server updates, like the paper's plots).
+        let mut evaluated = false;
         if self.server.timestamp() >= self.next_eval_ts {
             self.run_eval()?;
+            evaluated = true;
             while self.next_eval_ts <= self.server.timestamp() {
                 self.next_eval_ts += self.cfg.eval_every;
             }
+        }
+        // 4b. Optional virtual-time cadence (error-vs-runtime curves):
+        // evaluate every `eval_every_vsecs` simulated seconds. Virtual
+        // time advances in schedule order in both execution modes, so
+        // this stays bitwise serial↔parallel identical. When both
+        // cadences cross in the same iteration, evaluate once (a second
+        // pass would duplicate the identical point) but still advance the
+        // virtual threshold.
+        if self.vnow >= self.next_eval_vtime {
+            if !evaluated {
+                self.run_eval()?;
+            }
+            // Advance the threshold multiplicatively, not by repeated
+            // addition: once ulp(threshold) exceeds a tiny cadence the
+            // `+=` form stops changing the value and loops forever.
+            let every = self.cfg.eval_every_vsecs;
+            let mut next = ((self.vnow / every).floor() + 1.0) * every;
+            if next <= self.vnow {
+                // Rounding guard; if `every` is below ulp(vnow) this
+                // degrades to at most one eval per iteration, never a
+                // stall.
+                next = self.vnow + every;
+            }
+            self.next_eval_vtime = next;
         }
 
         if self.cfg.log_every > 0 && self.iter % self.cfg.log_every == 0 {
@@ -488,6 +541,7 @@ impl ProtocolCore {
         let point = EvalPoint {
             iter: self.iter,
             server_ts: self.server.timestamp(),
+            vtime: self.vnow,
             val_loss: loss,
             val_acc: acc,
         };
@@ -498,6 +552,7 @@ impl ProtocolCore {
         self.emit(Event::Eval {
             iter: self.iter,
             server_ts: self.server.timestamp(),
+            vtime: self.vnow,
         });
         Ok(())
     }
@@ -514,6 +569,7 @@ impl ProtocolCore {
             staleness: self.staleness,
             bandwidth: self.acc.report(),
             wall_secs,
+            virtual_secs: self.vnow,
             server_updates: self.server_updates,
             probes: self.probes,
         };

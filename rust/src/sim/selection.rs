@@ -1,16 +1,52 @@
 //! Client-selection rules (FRED §3: "a rule determining each client's
 //! probability of being selected and how that probability will change upon
-//! that client having been selected").
+//! that client having been selected") — plus the **completion-order mode**
+//! where the next iteration belongs to the earliest-finishing client on a
+//! deterministic virtual clock ([`crate::sim::clock`]).
 
-use crate::config::SelectionRule;
+use crate::config::{DelayConfig, SelectionRule};
 use crate::rng::{Categorical, Normal, Xoshiro256pp};
+use crate::sim::clock::{LatencyModel, VirtualClock};
+
+/// Virtual-time machinery for completion-order selection. Lives inside
+/// [`Selector`] so the parallel planner's serial-order replay of `pick()`
+/// replays the clock too — the bitwise serial↔parallel contract needs no
+/// new dispatcher machinery.
+struct CompletionState {
+    clock: VirtualClock,
+    latency: LatencyModel,
+    /// Clients with no pending completion event in the clock, ascending
+    /// (all λ at start; the popped client re-enters after each pick;
+    /// blocked clients persist until a pick finds them released). A
+    /// worklist instead of an all-λ rescan keeps the steady-state async
+    /// pick O(log λ): outside barrier fills, only the just-popped client
+    /// is ever unscheduled. Ascending iteration keeps RNG draw order
+    /// identical to an index-order scan, so the scheme is invisible to
+    /// determinism.
+    unscheduled: std::collections::BTreeSet<usize>,
+}
 
 /// Stateful selector over λ clients, with blocking support (sync barriers).
+///
+/// Two selection modes:
+/// * **probability-driven** ([`Selector::new`]): the FRED rules — uniform,
+///   static-heterogeneous weights, cooldown;
+/// * **completion-order** ([`Selector::with_delays`] with any delay model
+///   enabled): a deterministic virtual clock schedules each client's next
+///   completion at `now + compute_delay + network_delay` (delays drawn
+///   from the dispatcher RNG stream) and `pick` pops the earliest event,
+///   ties broken by scheduling sequence. `selection.rule` weights are
+///   ignored in this mode; heterogeneity comes from the latency models
+///   and staleness τ becomes an emergent consequence of lateness.
 pub struct Selector {
     rule: SelectionRule,
     weights: Option<Categorical>,
     lambda: usize,
     rng: Xoshiro256pp,
+    completion: Option<CompletionState>,
+    /// Virtual completion time of the most recent pick (completion mode
+    /// only).
+    last_vtime: Option<f64>,
 }
 
 impl Selector {
@@ -30,13 +66,79 @@ impl Selector {
                 Some(Categorical::uniform(lambda))
             }
         };
-        Self { rule, weights, lambda, rng }
+        Self {
+            rule,
+            weights,
+            lambda,
+            rng,
+            completion: None,
+            last_vtime: None,
+        }
+    }
+
+    /// Like [`Selector::new`], but with the configured latency models: any
+    /// non-`none` delay model switches the selector to completion-order
+    /// mode on a deterministic virtual clock. Both dispatchers build their
+    /// selectors through this constructor so the delay draws come from the
+    /// same dispatcher RNG stream in both execution modes.
+    pub fn with_delays(
+        rule: SelectionRule,
+        lambda: usize,
+        rng: Xoshiro256pp,
+        delay: &DelayConfig,
+    ) -> Self {
+        let mut s = Self::new(rule, lambda, rng);
+        if delay.enabled() {
+            s.completion = Some(CompletionState {
+                clock: VirtualClock::new(),
+                latency: LatencyModel::from_config(delay, lambda),
+                unscheduled: (0..lambda).collect(),
+            });
+        }
+        s
+    }
+
+    /// Virtual completion time of the most recent [`Selector::pick`]
+    /// (`None` when the virtual clock is disabled).
+    pub fn last_vtime(&self) -> Option<f64> {
+        self.last_vtime
+    }
+
+    /// Completion-order pick: schedule a completion for every unblocked
+    /// client that lacks one (start = `now`, i.e. the previous completion
+    /// or barrier release), then pop the earliest event. The worklist is
+    /// visited in ascending client order so RNG consumption is
+    /// deterministic (identical to an index-order scan over all λ).
+    fn pick_completion(&mut self, blocked: &[bool]) -> usize {
+        let cm = self.completion.as_mut().unwrap();
+        let rng = &mut self.rng;
+        let clock = &mut cm.clock;
+        let latency = &mut cm.latency;
+        cm.unscheduled.retain(|&i| {
+            if blocked[i] {
+                // Parked at a barrier: stays unscheduled, revisited once
+                // a later pick sees it released.
+                return true;
+            }
+            let d = latency.draw(i, rng);
+            clock.schedule(i, clock.now() + d);
+            false
+        });
+        assert!(!clock.is_empty(), "all clients blocked");
+        let ev = clock.pop();
+        debug_assert!(!blocked[ev.client], "blocked client had an event");
+        self.last_vtime = Some(ev.time);
+        cm.unscheduled.insert(ev.client);
+        ev.client
     }
 
     /// Pick the next client; `blocked[i]` clients are never selected.
     /// Panics if every client is blocked (a protocol bug by construction).
     pub fn pick(&mut self, blocked: &[bool]) -> usize {
         debug_assert_eq!(blocked.len(), self.lambda);
+        if self.completion.is_some() {
+            return self.pick_completion(blocked);
+        }
         let any_blocked = blocked.iter().any(|&b| b);
         match (&self.weights, any_blocked) {
             (None, false) => self.rng.below(self.lambda as u64) as usize,
@@ -100,13 +202,18 @@ impl Selector {
 }
 
 /// One planned iteration from the streaming schedule (pipelined mode).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PlannedPick {
     pub client: usize,
     /// True when this pick completes a sync barrier: every client's θ_j
     /// will be replaced when this iteration applies, so the dispatcher
     /// must not plan past it until then (it bumps all λ epochs).
     pub barrier_release: bool,
+    /// Virtual completion time of this iteration (`None` when the clock
+    /// is disabled). The dispatcher threads it through to
+    /// `complete_iteration` so protocol events and eval points carry the
+    /// same timestamps serial execution would produce.
+    pub vtime: Option<f64>,
 }
 
 /// Pre-draws the deterministic selection schedule for the parallel
@@ -145,8 +252,9 @@ pub struct SchedulePlanner {
     blocked: Vec<bool>,
     /// `Some(parked_count)` when replaying sync barriers.
     parked: Option<usize>,
-    /// A drawn pick that closed the previous window by repeating.
-    pending: Option<usize>,
+    /// A drawn pick (with its virtual timestamp) that closed the previous
+    /// window by repeating.
+    pending: Option<(usize, Option<f64>)>,
     /// Window membership per client, generation-stamped to avoid clears.
     in_window: Vec<u64>,
     generation: u64,
@@ -169,35 +277,39 @@ impl SchedulePlanner {
     /// repeat-cut first, so the two draw styles can hand over mid-run
     /// without skipping or replaying RNG draws.
     pub fn next_pick(&mut self) -> PlannedPick {
-        let (client, barrier_release) = match self.pending.take() {
+        let (client, barrier_release, vtime) = match self.pending.take() {
             // A buffered repeat never completes a barrier: repeats cannot
             // occur while sync blocking is active.
-            Some(l) => (l, false),
+            Some((l, vt)) => (l, false, vt),
             None => self.draw(),
         };
-        PlannedPick { client, barrier_release }
+        PlannedPick { client, barrier_release, vtime }
     }
 
     /// Draw the next window of at most `max_len` picks (≥ 1). Within the
     /// returned window every client appears at most once and, under sync,
     /// the window never crosses a barrier release.
-    pub fn next_window(&mut self, max_len: usize) -> Vec<usize> {
+    pub fn next_window(&mut self, max_len: usize) -> Vec<PlannedPick> {
         let max_len = max_len.max(1);
         self.generation += 1;
         let mut window = Vec::with_capacity(max_len);
         while window.len() < max_len {
-            let (l, released) = match self.pending.take() {
+            let (l, released, vtime) = match self.pending.take() {
                 // A buffered repeat never completes a barrier: repeats
                 // cannot occur while sync blocking is active.
-                Some(l) => (l, false),
+                Some((l, vt)) => (l, false, vt),
                 None => self.draw(),
             };
             if self.in_window[l] == self.generation {
-                self.pending = Some(l);
+                self.pending = Some((l, vtime));
                 break;
             }
             self.in_window[l] = self.generation;
-            window.push(l);
+            window.push(PlannedPick {
+                client: l,
+                barrier_release: released,
+                vtime,
+            });
             if released {
                 break;
             }
@@ -206,9 +318,10 @@ impl SchedulePlanner {
     }
 
     /// One serial-order pick, replaying sync barrier blocking. Returns
-    /// `(client, barrier_released_after_this_iteration)`.
-    fn draw(&mut self) -> (usize, bool) {
+    /// `(client, barrier_released_after_this_iteration, vtime)`.
+    fn draw(&mut self) -> (usize, bool, Option<f64>) {
         let l = self.selector.pick(&self.blocked);
+        let vtime = self.selector.last_vtime();
         self.selector.on_selected(l);
         self.selector.step_recover();
         let mut released = false;
@@ -223,7 +336,7 @@ impl SchedulePlanner {
                 }
             }
         }
-        (l, released)
+        (l, released, vtime)
     }
 }
 
@@ -356,7 +469,7 @@ mod tests {
             while got.len() < 200 {
                 let w = p.next_window(7);
                 assert!(!w.is_empty());
-                got.extend_from_slice(&w);
+                got.extend(w.iter().map(|pk| pk.client));
             }
             got.truncate(200);
             assert_eq!(got, want);
@@ -367,7 +480,8 @@ mod tests {
     fn planner_windows_have_distinct_clients() {
         let mut p = planner(SelectionRule::Uniform, 5, false);
         for _ in 0..100 {
-            let w = p.next_window(16);
+            let w: Vec<usize> =
+                p.next_window(16).iter().map(|pk| pk.client).collect();
             let mut sorted = w.clone();
             sorted.sort_unstable();
             sorted.dedup();
@@ -440,7 +554,9 @@ mod tests {
             want.push(l);
         }
         let mut p = planner(SelectionRule::Uniform, 3, false);
-        let mut got = p.next_window(64); // cut at the first repeat
+        // cut at the first repeat
+        let mut got: Vec<usize> =
+            p.next_window(64).iter().map(|pk| pk.client).collect();
         while got.len() < 64 {
             got.push(p.next_pick().client);
         }
@@ -454,10 +570,164 @@ mod tests {
         let lambda = 4;
         let mut p = planner(SelectionRule::Uniform, lambda, true);
         for _ in 0..25 {
-            let w = p.next_window(64);
+            let w: Vec<usize> =
+                p.next_window(64).iter().map(|pk| pk.client).collect();
             let mut sorted = w.clone();
             sorted.sort_unstable();
             assert_eq!(sorted, (0..lambda).collect::<Vec<_>>(), "{w:?}");
+        }
+    }
+
+    fn bimodal_delays() -> crate::config::DelayConfig {
+        crate::config::DelayConfig {
+            compute: crate::config::DelayModel::Bimodal {
+                straggler_frac: 0.25,
+                slow_mult: 8.0,
+            },
+            network: crate::config::DelayModel::LogNormal {
+                mu: -2.0,
+                sigma: 0.3,
+            },
+        }
+    }
+
+    #[test]
+    fn completion_mode_is_deterministic_and_timed() {
+        let mk = || {
+            Selector::with_delays(
+                SelectionRule::Uniform,
+                8,
+                rng::stream(5, "s", 0),
+                &bimodal_delays(),
+            )
+        };
+        let blocked = vec![false; 8];
+        let (mut a, mut b) = (mk(), mk());
+        let mut last = 0.0;
+        for _ in 0..300 {
+            let (ia, ib) = (a.pick(&blocked), b.pick(&blocked));
+            assert_eq!(ia, ib);
+            assert_eq!(a.last_vtime(), b.last_vtime());
+            let t = a.last_vtime().expect("clock enabled");
+            assert!(t >= last, "virtual time went backwards");
+            last = t;
+        }
+    }
+
+    #[test]
+    fn completion_mode_picks_stragglers_less_often() {
+        // 2 of 8 clients are 8x slower: over many rounds the fast cohort
+        // must complete (be picked) far more often.
+        let mut s = Selector::with_delays(
+            SelectionRule::Uniform,
+            8,
+            rng::stream(6, "s", 0),
+            &bimodal_delays(),
+        );
+        let blocked = vec![false; 8];
+        let mut counts = [0usize; 8];
+        for _ in 0..4000 {
+            counts[s.pick(&blocked)] += 1;
+        }
+        let slow: usize = counts[..2].iter().sum();
+        let fast: usize = counts[2..].iter().sum();
+        // fast/slow per-client ratio ≈ slow_mult = 8.
+        assert!(
+            fast > 4 * slow,
+            "completion order not skewed: slow={slow} fast={fast}"
+        );
+        assert!(counts.iter().all(|&c| c > 0), "stragglers still run");
+    }
+
+    #[test]
+    fn completion_mode_respects_blocking() {
+        // Parked clients are never rescheduled until unblocked; after
+        // unblocking they resume from the barrier-release time.
+        let mut s = Selector::with_delays(
+            SelectionRule::Uniform,
+            4,
+            rng::stream(7, "s", 0),
+            &bimodal_delays(),
+        );
+        let mut blocked = vec![false; 4];
+        let mut parked = Vec::new();
+        for _ in 0..4 {
+            let l = s.pick(&blocked);
+            assert!(!blocked[l]);
+            blocked[l] = true;
+            parked.push(l);
+        }
+        parked.sort_unstable();
+        assert_eq!(parked, vec![0, 1, 2, 3], "one full barrier cycle");
+        let release_t = s.last_vtime().unwrap();
+        for b in blocked.iter_mut() {
+            *b = false;
+        }
+        let l = s.pick(&blocked);
+        assert!(
+            s.last_vtime().unwrap() >= release_t,
+            "post-release pick ({l}) predates the release"
+        );
+    }
+
+    #[test]
+    fn no_delay_selector_reports_no_vtime() {
+        let mut s =
+            Selector::new(SelectionRule::Uniform, 4, rng::stream(8, "s", 0));
+        s.pick(&[false; 4]);
+        assert_eq!(s.last_vtime(), None);
+        // with_delays + all-none models behaves identically.
+        let mut s = Selector::with_delays(
+            SelectionRule::Uniform,
+            4,
+            rng::stream(8, "s", 0),
+            &crate::config::DelayConfig::default(),
+        );
+        s.pick(&[false; 4]);
+        assert_eq!(s.last_vtime(), None);
+    }
+
+    #[test]
+    fn planner_replays_completion_order_picks_and_vtimes() {
+        // The streaming planner must replay the completion-order pick
+        // stream (clients AND virtual timestamps) exactly, async and sync.
+        for sync in [false, true] {
+            let delays = bimodal_delays();
+            let mut serial = Selector::with_delays(
+                SelectionRule::Uniform,
+                6,
+                rng::stream(14, "s", 0),
+                &delays,
+            );
+            let mut blocked = vec![false; 6];
+            let mut parked = 0usize;
+            let mut p = SchedulePlanner::new(
+                Selector::with_delays(
+                    SelectionRule::Uniform,
+                    6,
+                    rng::stream(14, "s", 0),
+                    &delays,
+                ),
+                6,
+                sync,
+            );
+            for _ in 0..240 {
+                let l = serial.pick(&blocked);
+                let vt = serial.last_vtime();
+                serial.on_selected(l);
+                serial.step_recover();
+                if sync {
+                    blocked[l] = true;
+                    parked += 1;
+                    if parked == 6 {
+                        parked = 0;
+                        blocked.iter_mut().for_each(|b| *b = false);
+                    }
+                }
+                let pk = p.next_pick();
+                assert_eq!(pk.client, l);
+                assert_eq!(pk.vtime, vt);
+            }
         }
     }
 
@@ -468,7 +738,7 @@ mod tests {
         let mut p = planner(SelectionRule::Uniform, lambda, true);
         let mut picks = Vec::new();
         while picks.len() < 3 * lambda {
-            picks.extend(p.next_window(2));
+            picks.extend(p.next_window(2).iter().map(|pk| pk.client));
         }
         for cycle in picks.chunks(lambda).take(3) {
             let mut sorted = cycle.to_vec();

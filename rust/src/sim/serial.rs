@@ -33,10 +33,11 @@ pub struct Simulator {
 impl Simulator {
     /// Assemble a simulator from config + engines.
     pub fn new(cfg: ExperimentConfig, parts: SimParts) -> Result<Self> {
-        let selector = Selector::new(
+        let selector = Selector::with_delays(
             cfg.selection.clone(),
             cfg.clients,
             rng::stream(cfg.seed, "dispatcher", 0),
+            &cfg.delay,
         );
         let (core, grad_engine) = ProtocolCore::new(cfg, parts)?;
         let p = grad_engine.param_count();
@@ -88,9 +89,15 @@ impl Simulator {
         self.core.iter
     }
 
+    /// Virtual seconds simulated so far ([`crate::sim::clock`]).
+    pub fn virtual_secs(&self) -> f64 {
+        self.core.vnow
+    }
+
     /// One iteration: one client computes one stochastic gradient.
     pub fn step(&mut self) -> Result<()> {
         let l = self.selector.pick(&self.core.blocked);
+        let vtime = self.selector.last_vtime();
         self.selector.on_selected(l);
         self.selector.step_recover();
 
@@ -139,6 +146,7 @@ impl Simulator {
             &self.grad_buf,
             probe_xy,
             self.grad_engine.as_mut(),
+            vtime,
         )?;
         Ok(())
     }

@@ -1,14 +1,38 @@
-//! Bounded event trace for protocol debugging and protocol-level tests.
+//! Bounded event trace for protocol debugging, protocol-level tests, and
+//! the golden-trace regression snapshots (rust/tests/golden_trace.rs).
 
-/// One simulator event.
+/// One simulator event. Every variant carries `vtime`, the virtual time
+/// of the iteration that emitted it ([`crate::sim::clock`]; with delay
+/// models disabled the clock degenerates to 1 virtual second per
+/// iteration, so `vtime` still orders and spaces events sensibly).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Event {
-    Selected { iter: u64, client: usize },
-    Push { iter: u64, client: usize, transmitted: bool },
-    Applied { iter: u64, client: usize, tau: u64, reapplied: bool },
-    Fetch { iter: u64, client: usize, transmitted: bool },
-    BarrierRelease { iter: u64, server_ts: u64 },
-    Eval { iter: u64, server_ts: u64 },
+    Selected { iter: u64, client: usize, vtime: f64 },
+    Push { iter: u64, client: usize, transmitted: bool, vtime: f64 },
+    Applied {
+        iter: u64,
+        client: usize,
+        tau: u64,
+        reapplied: bool,
+        vtime: f64,
+    },
+    Fetch { iter: u64, client: usize, transmitted: bool, vtime: f64 },
+    BarrierRelease { iter: u64, server_ts: u64, vtime: f64 },
+    Eval { iter: u64, server_ts: u64, vtime: f64 },
+}
+
+impl Event {
+    /// The event's virtual timestamp.
+    pub fn vtime(&self) -> f64 {
+        match self {
+            Event::Selected { vtime, .. }
+            | Event::Push { vtime, .. }
+            | Event::Applied { vtime, .. }
+            | Event::Fetch { vtime, .. }
+            | Event::BarrierRelease { vtime, .. }
+            | Event::Eval { vtime, .. } => *vtime,
+        }
+    }
 }
 
 /// Ring-buffer trace; capacity 0 disables recording entirely (the default
@@ -61,24 +85,52 @@ impl Trace {
 mod tests {
     use super::*;
 
+    fn sel(iter: u64) -> Event {
+        Event::Selected { iter, client: 0, vtime: iter as f64 }
+    }
+
     #[test]
     fn ring_semantics() {
         let mut t = Trace::new(3);
         for i in 0..5 {
-            t.record(Event::Selected { iter: i, client: 0 });
+            t.record(sel(i));
         }
         let evs = t.events();
         assert_eq!(evs.len(), 3);
-        assert_eq!(evs[0], Event::Selected { iter: 2, client: 0 });
-        assert_eq!(evs[2], Event::Selected { iter: 4, client: 0 });
+        assert_eq!(evs[0], sel(2));
+        assert_eq!(evs[2], sel(4));
         assert_eq!(t.recorded(), 5);
     }
 
     #[test]
     fn disabled_records_nothing() {
         let mut t = Trace::disabled();
-        t.record(Event::Eval { iter: 0, server_ts: 0 });
+        t.record(Event::Eval { iter: 0, server_ts: 0, vtime: 0.0 });
         assert!(t.events().is_empty());
         assert_eq!(t.recorded(), 0);
+    }
+
+    #[test]
+    fn vtime_accessor_covers_all_variants() {
+        let evs = [
+            Event::Selected { iter: 1, client: 0, vtime: 1.5 },
+            Event::Push { iter: 1, client: 0, transmitted: true, vtime: 1.5 },
+            Event::Applied {
+                iter: 1,
+                client: 0,
+                tau: 0,
+                reapplied: false,
+                vtime: 1.5,
+            },
+            Event::Fetch {
+                iter: 1,
+                client: 0,
+                transmitted: false,
+                vtime: 1.5,
+            },
+            Event::BarrierRelease { iter: 1, server_ts: 1, vtime: 1.5 },
+            Event::Eval { iter: 1, server_ts: 1, vtime: 1.5 },
+        ];
+        assert!(evs.iter().all(|e| e.vtime() == 1.5));
     }
 }

@@ -1,10 +1,13 @@
 //! Validation of the paper's central hypothesis (§2.2): true B-Staleness
 //! Γ (eq. 3) is tracked by the statistics FASGD maintains, and grows with
-//! both the cluster size λ and the step-staleness τ.
+//! both the cluster size λ and the step-staleness τ — plus, with the
+//! virtual clock, that step-staleness is an *emergent* consequence of
+//! client lateness rather than an artifact of pick probabilities.
 
-use fasgd::config::Policy;
+use fasgd::config::{DelayModel, Policy};
 use fasgd::experiments::common::{fast_test_config, run_experiment};
 use fasgd::metrics::RunSummary;
+use fasgd::sim::{Event, Simulation};
 
 fn probed(lambda: usize, alpha: f32, iters: u64) -> RunSummary {
     let mut cfg = fast_test_config(Policy::Fasgd);
@@ -76,4 +79,88 @@ fn tau_alone_is_a_weak_predictor_within_a_run() {
     assert!(taus.iter().any(|&t| t > 0));
     let t_corr = s.probes.tau_gamma_correlation();
     assert!(t_corr.is_some());
+}
+
+#[test]
+fn staleness_is_emergent_and_sane_under_bimodal_stragglers() {
+    // With the virtual clock on, τ is no longer a by-product of pick
+    // order: a straggler's gradient genuinely arrives after the server
+    // moved. The slow cohort (bimodal delay: clients [0, ceil(0.25·8))
+    // = {0, 1}, 8× slower) must therefore show strictly larger empirical
+    // mean τ at apply time than the fast cohort.
+    let mut cfg = fast_test_config(Policy::Asgd);
+    cfg.clients = 8;
+    cfg.iters = 2_000;
+    cfg.eval_every = 1_000;
+    cfg.delay.compute = DelayModel::Bimodal {
+        straggler_frac: 0.25,
+        slow_mult: 8.0,
+    };
+    let mut sim = Simulation::builder(cfg.clone())
+        .trace(16_384)
+        .build()
+        .unwrap();
+    sim.run_until(cfg.iters).unwrap();
+    let trace = sim.trace();
+    assert_eq!(
+        trace.recorded() as usize,
+        trace.events().len(),
+        "trace ring overflowed; cohort means would be biased to the tail"
+    );
+    let (mut slow, mut fast) = ((0u64, 0u64), (0u64, 0u64)); // (Στ, n)
+    for e in trace.events() {
+        if let Event::Applied { client, tau, reapplied: false, .. } = e {
+            let cohort = if client < 2 { &mut slow } else { &mut fast };
+            cohort.0 += tau;
+            cohort.1 += 1;
+        }
+    }
+    assert!(slow.1 > 0, "stragglers never applied");
+    assert!(fast.1 > 0);
+    // Completion order must also make stragglers *run less often*.
+    assert!(
+        fast.1 > 2 * slow.1,
+        "fast cohort should dominate applies: slow={} fast={}",
+        slow.1,
+        fast.1
+    );
+    let mean_slow = slow.0 as f64 / slow.1 as f64;
+    let mean_fast = fast.0 as f64 / fast.1 as f64;
+    assert!(
+        mean_slow > mean_fast,
+        "emergent staleness inverted: slow cohort mean τ {mean_slow:.2} \
+         vs fast {mean_fast:.2}"
+    );
+}
+
+#[test]
+fn staleness_aware_policies_still_learn_under_stragglers() {
+    // fasgd and gap_aware must keep reaching the micro workload's learned
+    // regime when staleness comes from real (virtual-time) lateness
+    // instead of selection probabilities.
+    for policy in [Policy::Fasgd, Policy::GapAware] {
+        let mut cfg = fast_test_config(policy.clone());
+        cfg.clients = 8;
+        cfg.iters = 1_000;
+        cfg.delay.compute = DelayModel::Bimodal {
+            straggler_frac: 0.25,
+            slow_mult: 8.0,
+        };
+        cfg.delay.network = DelayModel::LogNormal { mu: -2.0, sigma: 0.3 };
+        let s = run_experiment(&cfg).unwrap();
+        let first = s.history.evals.first().unwrap().val_loss;
+        let last = s.final_val_loss();
+        assert!(
+            last < first,
+            "{policy:?} stopped learning under delays: {first} -> {last}"
+        );
+        // ~ln(10) ≈ 2.3 is chance level on the 10-class micro workload;
+        // the seed runs end well below 2.0 and delays must not undo that.
+        assert!(last < 2.0, "{policy:?} final loss {last}");
+        assert!(
+            s.staleness.mean() > 0.0,
+            "async under delays must still observe staleness"
+        );
+        assert!(s.virtual_secs > 0.0);
+    }
 }

@@ -1,0 +1,204 @@
+//! Golden-trace regression tests: the full protocol event stream of
+//! fixed-seed micro runs, serialized and compared against committed
+//! snapshots under rust/tests/golden/. Any change to selection order,
+//! gate draws, apply/barrier behavior, eval cadence, or virtual
+//! timestamps shows up as a snapshot diff — silent cross-PR protocol
+//! drift cannot land unnoticed.
+//!
+//! Regenerating after an *intentional* protocol change:
+//!
+//! ```text
+//! UPDATE_GOLDEN=1 cargo test --test golden_trace
+//! ```
+//!
+//! then commit the rewritten files with the change that explains them.
+//!
+//! Bootstrap behavior: when a snapshot file does not exist yet (first run
+//! on a new scenario, or an authoring environment without a toolchain),
+//! the test writes it and passes with a notice — the *next* run compares.
+//! Every scenario also asserts the serial and parallel event streams are
+//! identical, which holds regardless of snapshot state.
+
+use std::path::PathBuf;
+
+use fasgd::config::{BandwidthMode, DelayModel, ExperimentConfig, Policy};
+use fasgd::experiments::common::fast_test_config;
+use fasgd::sim::{Event, Simulation};
+
+const TRACE_CAP: usize = 8192;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+/// One line per event; `{:?}` on f64 prints the shortest exact round-trip
+/// decimal, so snapshots are bit-faithful to the virtual clock.
+fn fmt_event(e: &Event) -> String {
+    match *e {
+        Event::Selected { iter, client, vtime } => {
+            format!("selected iter={iter} client={client} vtime={vtime:?}")
+        }
+        Event::Push { iter, client, transmitted, vtime } => {
+            format!(
+                "push iter={iter} client={client} tx={transmitted} \
+                 vtime={vtime:?}"
+            )
+        }
+        Event::Applied { iter, client, tau, reapplied, vtime } => {
+            format!(
+                "applied iter={iter} client={client} tau={tau} \
+                 reapplied={reapplied} vtime={vtime:?}"
+            )
+        }
+        Event::Fetch { iter, client, transmitted, vtime } => {
+            format!(
+                "fetch iter={iter} client={client} tx={transmitted} \
+                 vtime={vtime:?}"
+            )
+        }
+        Event::BarrierRelease { iter, server_ts, vtime } => {
+            format!("barrier_release iter={iter} T={server_ts} vtime={vtime:?}")
+        }
+        Event::Eval { iter, server_ts, vtime } => {
+            format!("eval iter={iter} T={server_ts} vtime={vtime:?}")
+        }
+    }
+}
+
+/// Run a scenario in one execution mode and return its serialized trace.
+fn trace_of(cfg: &ExperimentConfig, workers: usize) -> Vec<Event> {
+    let mut sim = Simulation::builder(cfg.clone())
+        .workers(workers)
+        .trace(TRACE_CAP)
+        .build()
+        .unwrap();
+    sim.run_until(cfg.iters).unwrap();
+    let trace = sim.trace();
+    assert_eq!(
+        trace.recorded() as usize,
+        trace.events().len(),
+        "trace ring overflowed; raise TRACE_CAP so snapshots are complete"
+    );
+    trace.events()
+}
+
+fn serialize(cfg: &ExperimentConfig, events: &[Event]) -> String {
+    let mut out = format!(
+        "# golden trace: {} policy={} lambda={} seed={} iters={}\n",
+        cfg.name,
+        cfg.policy.name(),
+        cfg.clients,
+        cfg.seed,
+        cfg.iters
+    );
+    for e in events {
+        out.push_str(&fmt_event(e));
+        out.push('\n');
+    }
+    out
+}
+
+fn check_scenario(name: &str, cfg: &ExperimentConfig) {
+    // The always-on invariant: both execution modes emit the identical
+    // event stream (the bitwise serial↔parallel contract, at event
+    // granularity).
+    let serial = trace_of(cfg, 1);
+    let parallel = trace_of(cfg, 3);
+    assert_eq!(
+        serial, parallel,
+        "{name}: serial and parallel event streams diverged"
+    );
+
+    let got = serialize(cfg, &serial);
+    let dir = golden_dir();
+    let path = dir.join(format!("{name}.trace"));
+    let update = std::env::var("UPDATE_GOLDEN").is_ok_and(|v| v == "1");
+    if update || !path.exists() {
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(&path, &got).unwrap();
+        if !update {
+            eprintln!(
+                "golden_trace: bootstrapped {path:?} — commit it to lock \
+                 the protocol stream"
+            );
+        }
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    if want != got {
+        // Point at the first diverging line; full dumps would drown the
+        // signal on long traces.
+        let diff = want
+            .lines()
+            .zip(got.lines())
+            .enumerate()
+            .find(|(_, (w, g))| w != g);
+        match diff {
+            Some((i, (w, g))) => panic!(
+                "{name}: protocol trace drifted from {path:?} at line {}:\n\
+                 golden: {w}\n\
+                 got:    {g}\n\
+                 If this change is intentional, regenerate with \
+                 UPDATE_GOLDEN=1 cargo test --test golden_trace",
+                i + 1
+            ),
+            None => panic!(
+                "{name}: trace length changed ({} golden lines vs {} got); \
+                 regenerate with UPDATE_GOLDEN=1 if intentional",
+                want.lines().count(),
+                got.lines().count()
+            ),
+        }
+    }
+}
+
+#[test]
+fn golden_async_gated() {
+    // Async FASGD with probabilistic gating: exercises Push/Fetch gate
+    // draws, reapply-cached drops, and the server-update eval cadence.
+    let mut cfg = fast_test_config(Policy::Fasgd);
+    cfg.name = "golden_async_gated".into();
+    cfg.seed = 2024;
+    cfg.clients = 4;
+    cfg.iters = 48;
+    cfg.eval_every = 16;
+    cfg.bandwidth = BandwidthMode::Probabilistic {
+        c_push: 0.3,
+        c_fetch: 0.6,
+        eps: 1e-8,
+    };
+    check_scenario("async_gated", &cfg);
+}
+
+#[test]
+fn golden_barrier_sync() {
+    // Sync: barrier parks, releases, and zero-staleness applies.
+    let mut cfg = fast_test_config(Policy::Sync);
+    cfg.name = "golden_barrier_sync".into();
+    cfg.seed = 2025;
+    cfg.clients = 4;
+    cfg.iters = 48;
+    cfg.eval_every = 4;
+    check_scenario("barrier_sync", &cfg);
+}
+
+#[test]
+fn golden_delay_bimodal() {
+    // The virtual clock: a bimodal straggler fleet plus lognormal network
+    // jitter, with the virtual-seconds eval cadence active — locks the
+    // completion order, the emergent τ values, and every virtual
+    // timestamp.
+    let mut cfg = fast_test_config(Policy::Asgd);
+    cfg.name = "golden_delay_bimodal".into();
+    cfg.seed = 2026;
+    cfg.clients = 5;
+    cfg.iters = 48;
+    cfg.eval_every = 16;
+    cfg.delay.compute = DelayModel::Bimodal {
+        straggler_frac: 0.2,
+        slow_mult: 4.0,
+    };
+    cfg.delay.network = DelayModel::LogNormal { mu: -1.5, sigma: 0.25 };
+    cfg.eval_every_vsecs = 10.0;
+    check_scenario("delay_bimodal", &cfg);
+}

@@ -3,7 +3,8 @@
 //! every staleness count, every bandwidth decision, and the final
 //! parameter vector.
 
-use fasgd::config::{BandwidthMode, ExperimentConfig, Policy, SelectionRule};
+use fasgd::config::{BandwidthMode, DelayConfig, DelayModel,
+                    ExperimentConfig, Policy, SelectionRule};
 use fasgd::experiments::common::{build_parallel_sim, build_sim,
                                  fast_test_config};
 use fasgd::metrics::RunSummary;
@@ -22,9 +23,10 @@ fn fingerprint(s: &RunSummary) -> String {
     let mut out = String::new();
     for p in &s.history.evals {
         out.push_str(&format!(
-            "eval {} {} {:?} {:?}\n",
+            "eval {} {} {:?} {:?} {:?}\n",
             p.iter,
             p.server_ts,
+            p.vtime.to_bits(),
             p.val_loss.to_bits(),
             p.val_acc.to_bits()
         ));
@@ -32,6 +34,7 @@ fn fingerprint(s: &RunSummary) -> String {
     for (i, e) in &s.history.train_curve {
         out.push_str(&format!("train {} {:?}\n", i, e.to_bits()));
     }
+    out.push_str(&format!("vsecs {:?}\n", s.virtual_secs.to_bits()));
     out.push_str(&format!(
         "updates {} staleness {} {} {} bw {} {} {} {}\n",
         s.server_updates,
@@ -288,6 +291,134 @@ fn speculation_miss_recomputes_from_fresh_snapshot() {
         "a stale-snapshot gradient reached the server"
     );
     assert_eq!(serial.server().timestamp(), parallel.server().timestamp());
+}
+
+fn delay_matrix() -> Vec<(&'static str, DelayConfig)> {
+    vec![
+        (
+            "bimodal_compute",
+            DelayConfig {
+                compute: DelayModel::Bimodal {
+                    straggler_frac: 0.25,
+                    slow_mult: 6.0,
+                },
+                network: DelayModel::None,
+            },
+        ),
+        (
+            "lognormal_both",
+            DelayConfig {
+                compute: DelayModel::LogNormal { mu: 0.0, sigma: 0.8 },
+                network: DelayModel::LogNormal { mu: -1.0, sigma: 0.4 },
+            },
+        ),
+        (
+            "bimodal_net_lognormal_compute",
+            DelayConfig {
+                compute: DelayModel::LogNormal { mu: -0.5, sigma: 0.5 },
+                network: DelayModel::Bimodal {
+                    straggler_frac: 0.5,
+                    slow_mult: 3.0,
+                },
+            },
+        ),
+    ]
+}
+
+#[test]
+fn pipelined_matrix_delay_models_inflight() {
+    // The acceptance bar: with any delay model enabled, `--workers N` is
+    // bitwise identical to `--workers 1` — over the delay-model matrix ×
+    // in-flight depths {1, 2×workers, 64}, for an async, a
+    // staleness-aware, and the barrier policy.
+    let workers = 4;
+    for policy in [Policy::Asgd, Policy::Fasgd, Policy::Sync] {
+        for (name, delay) in delay_matrix() {
+            let mut cfg = small_cfg(policy.clone(), 61);
+            cfg.iters = 200;
+            cfg.eval_every = 50;
+            cfg.delay = delay;
+            cfg.eval_every_vsecs = 40.0; // virtual-time cadence in play too
+            let serial = build_sim(&cfg).unwrap().run().unwrap();
+            let want = fingerprint(&serial);
+            for inflight in [1usize, 2 * workers, 64] {
+                cfg.inflight = inflight;
+                let parallel = build_parallel_sim(&cfg, workers)
+                    .unwrap()
+                    .run()
+                    .unwrap();
+                assert_eq!(
+                    want,
+                    fingerprint(&parallel),
+                    "delay {name}: pipelined != serial for policy {:?} \
+                     inflight {inflight}",
+                    cfg.policy
+                );
+            }
+            // The legacy windowed loop must uphold the contract under
+            // delays too (repeat cuts are frequent in completion order).
+            cfg.inflight = 0;
+            cfg.pipeline = false;
+            let windowed =
+                build_parallel_sim(&cfg, workers).unwrap().run().unwrap();
+            assert_eq!(
+                want,
+                fingerprint(&windowed),
+                "delay {name}: windowed != serial for policy {:?}",
+                cfg.policy
+            );
+            // Delay-enabled runs must report real virtual time (not the
+            // degenerate 1.0/iteration clock).
+            assert!(serial.virtual_secs > 0.0);
+            assert!(
+                (serial.virtual_secs - serial.iters as f64).abs() > 1e-9,
+                "delay {name}: vsecs suspiciously equals iteration count"
+            );
+        }
+    }
+}
+
+#[test]
+fn delays_with_forced_speculation_misses_stay_bitwise_equal() {
+    // Fixed k_fetch = 1 gating makes every apply replace the fetching
+    // client's θ (eager speculation, never deferral), so with λ=4 and a
+    // deep in-flight window the pipelined dispatcher must hit stale
+    // θ-epochs and recompute — while the virtual clock is driving
+    // completion order. Misses must not perturb timestamps or results.
+    let mut cfg = small_cfg(Policy::Fasgd, 67);
+    cfg.clients = 4;
+    cfg.iters = 250;
+    cfg.bandwidth = BandwidthMode::Fixed { k_push: 1, k_fetch: 1 };
+    cfg.inflight = 16;
+    cfg.delay.compute = DelayModel::Bimodal {
+        straggler_frac: 0.25,
+        slow_mult: 5.0,
+    };
+    cfg.delay.network = DelayModel::LogNormal { mu: -1.5, sigma: 0.3 };
+
+    let mut serial = build_sim(&cfg).unwrap();
+    serial.run_until(250).unwrap();
+
+    let mut parallel = build_parallel_sim(&cfg, 4).unwrap();
+    parallel.run_until(250).unwrap();
+
+    let spec = parallel.speculation();
+    assert!(
+        spec.recomputed > 0,
+        "expected forced speculation misses under delays, got {spec:?}"
+    );
+    assert_eq!(spec.deferred, 0, "gated mode never defers: {spec:?}");
+    assert_eq!(
+        serial.server().params(),
+        parallel.server().params(),
+        "a stale-snapshot gradient reached the server under delays"
+    );
+    assert_eq!(serial.server().timestamp(), parallel.server().timestamp());
+    assert_eq!(
+        serial.virtual_secs().to_bits(),
+        parallel.virtual_secs().to_bits(),
+        "virtual clock diverged across recomputes"
+    );
 }
 
 #[test]

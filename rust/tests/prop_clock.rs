@@ -1,0 +1,188 @@
+//! Property tests for the virtual-time event scheduler
+//! (`sim/clock.rs`) and the completion-order selection mode built on it.
+//! proptest is unavailable offline, so this uses the in-tree mini-harness
+//! convention (see rust/tests/prop_coordinator.rs): seeded random case
+//! generation, failures reported with enough context to reproduce.
+
+use fasgd::config::{DelayConfig, DelayModel, Policy};
+use fasgd::experiments::common::{build_parallel_sim, build_sim,
+                                 fast_test_config};
+use fasgd::rng::Xoshiro256pp;
+use fasgd::sim::VirtualClock;
+
+/// Equal-timestamp events must always pop in scheduling-sequence order,
+/// whatever mix of times surrounds them.
+#[test]
+fn prop_equal_timestamps_tie_break_by_seq() {
+    let mut rng = Xoshiro256pp::new(0xC10C);
+    for case in 0..50 {
+        let mut clock = VirtualClock::new();
+        // A handful of distinct times, several events per time.
+        let times: Vec<f64> =
+            (0..4).map(|i| i as f64 + rng.f64()).collect();
+        let mut expect: Vec<Vec<(u64, usize)>> = vec![Vec::new(); 4];
+        for i in 0..40usize {
+            let which = rng.below(4) as usize;
+            let seq = clock.schedule(i, times[which]);
+            expect[which].push((seq, i));
+        }
+        let mut order: Vec<usize> =
+            (0..4).collect();
+        order.sort_by(|&a, &b| times[a].total_cmp(&times[b]));
+        for which in order {
+            for &(seq, client) in &expect[which] {
+                let ev = clock.pop();
+                assert_eq!(
+                    (ev.seq, ev.client),
+                    (seq, client),
+                    "case {case}: tie at t={} broke out of seq order",
+                    times[which]
+                );
+            }
+        }
+        assert!(clock.is_empty());
+    }
+}
+
+/// For distinct timestamps, pop order is a pure function of the times —
+/// independent of the order events were inserted in.
+#[test]
+fn prop_pop_order_independent_of_insertion_order() {
+    let mut rng = Xoshiro256pp::new(0xC10C2);
+    for case in 0..50 {
+        let n = 3 + rng.below(40) as usize;
+        // Distinct times by construction (strictly increasing jitter).
+        let mut t = 0.0;
+        let events: Vec<(usize, f64)> = (0..n)
+            .map(|i| {
+                t += 1e-6 + rng.f64();
+                (i, t)
+            })
+            .collect();
+        let baseline: Vec<usize> = {
+            let mut clock = VirtualClock::new();
+            for &(client, time) in &events {
+                clock.schedule(client, time);
+            }
+            (0..n).map(|_| clock.pop().client).collect()
+        };
+        // Re-insert under several random permutations.
+        for _ in 0..4 {
+            let mut shuffled = events.clone();
+            // Fisher–Yates with the test RNG.
+            for i in (1..shuffled.len()).rev() {
+                let j = rng.below(i as u64 + 1) as usize;
+                shuffled.swap(i, j);
+            }
+            let mut clock = VirtualClock::new();
+            for &(client, time) in &shuffled {
+                clock.schedule(client, time);
+            }
+            let got: Vec<usize> =
+                (0..n).map(|_| clock.pop().client).collect();
+            assert_eq!(
+                got, baseline,
+                "case {case}: pop order depended on insertion order"
+            );
+        }
+    }
+}
+
+/// Popped times never decrease, even when scheduling interleaves with
+/// popping (the simulation's actual usage pattern).
+#[test]
+fn prop_popped_times_monotone_under_interleaving() {
+    let mut rng = Xoshiro256pp::new(0xC10C3);
+    for _ in 0..20 {
+        let mut clock = VirtualClock::new();
+        for c in 0..8 {
+            clock.schedule(c, rng.f64());
+        }
+        let mut last = 0.0f64;
+        for i in 0..400 {
+            let ev = clock.pop();
+            assert!(ev.time >= last, "clock ran backwards");
+            last = ev.time;
+            clock.schedule(ev.client, clock.now() + rng.f64());
+            if i % 7 == 0 {
+                clock.schedule(i % 8, clock.now() + 2.0 * rng.f64());
+            }
+        }
+    }
+}
+
+/// Random delay-model configs: runs stay deterministic and bitwise equal
+/// between the serial and the parallel (pipelined speculative)
+/// dispatcher — the tentpole's acceptance contract, fuzzed.
+#[test]
+fn prop_random_delay_configs_bitwise_serial_parallel_equal() {
+    let mut rng = Xoshiro256pp::new(0xDE1A);
+    for case in 0..10u64 {
+        let model = |rng: &mut Xoshiro256pp| match rng.below(3) {
+            0 => DelayModel::None,
+            1 => DelayModel::LogNormal {
+                mu: rng.f64() - 0.5,
+                sigma: 0.1 + rng.f64(),
+            },
+            _ => DelayModel::Bimodal {
+                straggler_frac: 0.1 + 0.4 * rng.f64(),
+                slow_mult: 2.0 + 10.0 * rng.f64(),
+            },
+        };
+        let mut cfg = fast_test_config(match rng.below(3) {
+            0 => Policy::Asgd,
+            1 => Policy::Fasgd,
+            _ => Policy::Sync,
+        });
+        cfg.seed = 1000 + case;
+        cfg.clients = 3 + rng.below(6) as usize;
+        cfg.iters = 150 + rng.below(150);
+        cfg.eval_every = 40;
+        cfg.delay = DelayConfig {
+            compute: model(&mut rng),
+            network: model(&mut rng),
+        };
+        if !cfg.delay.enabled() {
+            // Ensure the clock is actually on for every case.
+            cfg.delay.compute =
+                DelayModel::LogNormal { mu: 0.0, sigma: 0.5 };
+        }
+        cfg.inflight = [0, 1, 16][rng.below(3) as usize];
+        cfg.eval_every_vsecs = if rng.below(2) == 0 { 0.0 } else { 25.0 };
+
+        let serial = build_sim(&cfg).unwrap().run().unwrap();
+        let parallel =
+            build_parallel_sim(&cfg, 4).unwrap().run().unwrap();
+
+        // Bitwise: every eval point (incl. virtual timestamps), the
+        // staleness rollup, and the total simulated time.
+        assert_eq!(
+            serial.history.evals, parallel.history.evals,
+            "case {case}: eval curves diverged for {:?}",
+            cfg.delay
+        );
+        assert_eq!(
+            serial.virtual_secs.to_bits(),
+            parallel.virtual_secs.to_bits(),
+            "case {case}: virtual clock diverged"
+        );
+        assert_eq!(serial.server_updates, parallel.server_updates);
+        assert_eq!(serial.staleness.total(), parallel.staleness.total());
+        assert_eq!(
+            serial.staleness.mean().to_bits(),
+            parallel.staleness.mean().to_bits()
+        );
+        // And determinism of the serial run itself.
+        let again = build_sim(&cfg).unwrap().run().unwrap();
+        assert_eq!(serial.history.evals, again.history.evals);
+
+        // Virtual time must have advanced beyond the degenerate
+        // 1.0/iteration clock's floor behavior: with delays on, vsecs is
+        // positive and finite.
+        assert!(
+            serial.virtual_secs.is_finite() && serial.virtual_secs > 0.0,
+            "case {case}: vsecs {}",
+            serial.virtual_secs
+        );
+    }
+}

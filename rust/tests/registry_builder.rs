@@ -296,7 +296,7 @@ fn csv_curve_writer_observer_writes_on_finish() {
     let mut lines = text.lines();
     assert_eq!(
         lines.next().unwrap(),
-        "run,policy,iter,server_ts,val_loss,val_acc"
+        "run,policy,iter,server_ts,vsecs,val_loss,val_acc"
     );
     assert_eq!(lines.count(), summary.history.evals.len());
 }
