@@ -3,9 +3,11 @@
 //! the grad/eval/update graphs, pure-rust grad, the dispatcher's per-step
 //! overhead with gradient cost excluded, per-policy dispatcher throughput,
 //! the serial vs. barrier-windowed vs. pipelined-speculative
-//! dispatcher comparison (with the speculation miss-rate counter), and
+//! dispatcher comparison (with the speculation miss-rate counter),
 //! virtual-time throughput (simulated-seconds/sec on a straggler-fleet
-//! delay-model workload).
+//! delay-model workload), and the sharded-gating workload
+//! (bytes-on-wire/sec + the gated-vs-always byte reduction under
+//! per-shard B-FASGD gating on a finite-rate link).
 //!
 //! `cargo bench --bench micro -- --json BENCH_pr3.json` additionally
 //! writes the throughput snapshot as JSON (the per-PR perf trajectory).
@@ -272,6 +274,73 @@ fn main() -> anyhow::Result<()> {
         ]));
     }
 
+    // --- sharded B-FASGD gating: bytes-on-wire throughput -------------------
+    // The paper MLP under per-shard probabilistic gating with a
+    // finite-rate link: per-shard gate draws + byte accounting + wire-time
+    // charging are all on the per-iteration path, so steps/sec here is the
+    // sharding overhead and bytes-on-wire/sec is the simulated traffic
+    // rate. The `always` twin gives the raw-bytes baseline the reduction
+    // factor is measured against.
+    let mk_sharded = |gated: bool| {
+        let mut cfg =
+            fasgd::experiments::common::fast_test_config(Policy::Fasgd);
+        cfg.clients = 8;
+        cfg.batch = 8;
+        cfg.mlp_hidden = 200;
+        cfg.dataset.train = 4_096;
+        cfg.dataset.val = 512;
+        cfg.iters = fasgd::bench_util::bench_iters(1_500);
+        cfg.eval_every = u64::MAX >> 2;
+        cfg.shards.count = 8;
+        cfg.link.rate_bytes_per_vsec = 1e9;
+        if gated {
+            cfg.bandwidth = fasgd::config::BandwidthMode::Probabilistic {
+                c_push: 0.3,
+                c_fetch: 0.6,
+                eps: 1e-8,
+            };
+        }
+        cfg
+    };
+    let gated_run =
+        fasgd::experiments::common::run_experiment(&mk_sharded(true))?;
+    let always_run =
+        fasgd::experiments::common::run_experiment(&mk_sharded(false))?;
+    let gated_sps = gated_run.iters as f64 / gated_run.wall_secs;
+    let gated_bps =
+        gated_run.bandwidth.total_bytes() as f64 / gated_run.wall_secs;
+    let raw_bytes = always_run.bandwidth.total_bytes();
+    let gated_bytes = gated_run.bandwidth.total_bytes();
+    let byte_reduction = if gated_bytes == 0 {
+        f64::INFINITY
+    } else {
+        raw_bytes as f64 / gated_bytes as f64
+    };
+    println!(
+        "sharded gating (8 shards, B-FASGD, vclock+link)  {gated_sps:>10.0} steps/s  {:>10.1} MB-on-wire/s  ({byte_reduction:.2}x byte cut vs always)",
+        gated_bps / 1e6
+    );
+    let bandwidth_block = obj(vec![
+        (
+            "workload",
+            "mlp lambda=8 mu=8 hidden=200, shards=8, probabilistic \
+             c_push=0.3 c_fetch=0.6, link 1e9 B/vs"
+                .into(),
+        ),
+        ("shards", 8usize.into()),
+        ("steps_per_sec", gated_sps.into()),
+        ("bytes_on_wire_per_sec", gated_bps.into()),
+        ("gated_bytes", gated_bytes.into()),
+        ("raw_bytes", raw_bytes.into()),
+        (
+            "byte_reduction_vs_always",
+            if byte_reduction.is_finite() { byte_reduction } else { -1.0 }
+                .into(),
+        ),
+        ("virtual_secs_gated", gated_run.virtual_secs.into()),
+        ("virtual_secs_always", always_run.virtual_secs.into()),
+    ]);
+
     // --- per-policy dispatcher throughput (serial, via the builder) ---------
     // Coordination + policy apply_update cost per step at the paper MLP
     // size; gap_aware pays an extra ||theta||_2 pass per update, fasgd the
@@ -317,6 +386,7 @@ fn main() -> anyhow::Result<()> {
                 ]),
             ),
             ("per_policy_serial", Json::Arr(policy_rows)),
+            ("bandwidth", bandwidth_block),
             ("speedup_at_4_workers", speedup_at_4.into()),
             (
                 "pipelined_vs_barrier_at_4_workers",

@@ -1,15 +1,29 @@
-//! Copies-vs-potential-copies accounting (the Figure-3 y-axes).
+//! Copies-vs-potential-copies accounting (the Figure-3 y-axes), now
+//! byte-accurate: besides opportunity counts, the accumulator tracks the
+//! bytes actually put on the wire — per direction and per shard — so the
+//! paper's "factor of 5" bandwidth claim is checkable directly from a
+//! run summary, partial (per-shard) transmissions included.
 
 /// Final bandwidth numbers for one run.
-#[derive(Debug, Clone, Copy, Default, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct BandwidthReport {
+    /// Opportunities on which at least one shard was transmitted.
     pub push_copies: u64,
     pub push_potential: u64,
     pub fetch_copies: u64,
     pub fetch_potential: u64,
-    /// Bytes per copy (param_count × 4; both directions move one full
-    /// parameter-sized tensor in this model, as in the paper).
+    /// Bytes per full-model copy (param_count × bytes_per_param; both
+    /// directions move one parameter-sized tensor in this model, as in
+    /// the paper).
     pub bytes_per_copy: u64,
+    /// Bytes actually transmitted client → server (gated; a partial push
+    /// counts only its transmitted shards).
+    pub push_bytes: u64,
+    /// Bytes actually transmitted server → client.
+    pub fetch_bytes: u64,
+    /// Bytes actually transmitted per shard, both directions combined —
+    /// which chunks of θ still move and which have gone quiet.
+    pub shard_bytes: Vec<u64>,
 }
 
 impl BandwidthReport {
@@ -21,14 +35,24 @@ impl BandwidthReport {
         ratio(self.fetch_copies, self.fetch_potential)
     }
 
-    /// Total transmitted bytes.
+    /// Total bytes actually transmitted (the gated total).
     pub fn total_bytes(&self) -> u64 {
-        (self.push_copies + self.fetch_copies) * self.bytes_per_copy
+        self.push_bytes + self.fetch_bytes
     }
 
-    /// Total bytes a never-gating run would have moved.
+    /// Total bytes a never-gating run would have moved (the raw total).
     pub fn potential_bytes(&self) -> u64 {
         (self.push_potential + self.fetch_potential) * self.bytes_per_copy
+    }
+
+    /// Gated-bytes fraction of the raw total (1.0 when nothing gated).
+    pub fn byte_ratio(&self) -> f64 {
+        let pot = self.potential_bytes();
+        if pot == 0 {
+            1.0
+        } else {
+            self.total_bytes() as f64 / pot as f64
+        }
     }
 
     /// Overall reduction factor (the paper's headline "factor of 5").
@@ -57,28 +81,50 @@ pub struct BandwidthAccounting {
 }
 
 impl BandwidthAccounting {
+    /// Whole-model accounting (one shard).
     pub fn new(bytes_per_copy: u64) -> Self {
+        Self::with_shards(bytes_per_copy, 1)
+    }
+
+    /// Per-shard byte accounting over `shards` chunks.
+    pub fn with_shards(bytes_per_copy: u64, shards: usize) -> Self {
         Self {
-            report: BandwidthReport { bytes_per_copy, ..Default::default() },
+            report: BandwidthReport {
+                bytes_per_copy,
+                shard_bytes: vec![0; shards.max(1)],
+                ..Default::default()
+            },
         }
     }
 
-    pub fn record_push(&mut self, transmitted: bool) {
+    /// One push opportunity: `transmitted` = any shard went out, `bytes`
+    /// = the bytes those shards put on the wire (0 when fully gated).
+    pub fn record_push(&mut self, transmitted: bool, bytes: u64) {
         self.report.push_potential += 1;
+        self.report.push_bytes += bytes;
         if transmitted {
             self.report.push_copies += 1;
         }
     }
 
-    pub fn record_fetch(&mut self, transmitted: bool) {
+    /// One fetch opportunity (same conventions as [`Self::record_push`]).
+    pub fn record_fetch(&mut self, transmitted: bool, bytes: u64) {
         self.report.fetch_potential += 1;
+        self.report.fetch_bytes += bytes;
         if transmitted {
             self.report.fetch_copies += 1;
         }
     }
 
+    /// Attribute `bytes` of wire traffic to shard `s` (either direction).
+    pub fn record_shard(&mut self, s: usize, bytes: u64) {
+        if let Some(b) = self.report.shard_bytes.get_mut(s) {
+            *b += bytes;
+        }
+    }
+
     pub fn report(&self) -> BandwidthReport {
-        self.report
+        self.report.clone()
     }
 }
 
@@ -90,8 +136,9 @@ mod tests {
     fn ratios_and_reduction() {
         let mut acc = BandwidthAccounting::new(100);
         for i in 0..10 {
-            acc.record_push(true); // all pushes
-            acc.record_fetch(i % 10 == 0); // 1/10 fetches
+            acc.record_push(true, 100); // all pushes, full copies
+            let fetch = i % 10 == 0;
+            acc.record_fetch(fetch, if fetch { 100 } else { 0 });
         }
         let r = acc.report();
         assert_eq!(r.push_ratio(), 1.0);
@@ -100,6 +147,7 @@ mod tests {
         assert_eq!(r.potential_bytes(), 2000);
         // 10x fetch cut ⇒ ~1.8x total here (push still full)
         assert!((r.reduction_factor() - 2000.0 / 1100.0).abs() < 1e-12);
+        assert!((r.byte_ratio() - 1100.0 / 2000.0).abs() < 1e-12);
     }
 
     #[test]
@@ -107,7 +155,27 @@ mod tests {
         let r = BandwidthReport::default();
         assert_eq!(r.push_ratio(), 1.0);
         assert_eq!(r.fetch_ratio(), 1.0);
+        assert_eq!(r.byte_ratio(), 1.0);
         assert!(r.reduction_factor().is_infinite());
+    }
+
+    #[test]
+    fn partial_transmissions_count_partial_bytes() {
+        // 4 shards of 25 bytes: a push that moves 3 of them is one copy
+        // on the opportunity axis but 75 bytes on the wire.
+        let mut acc = BandwidthAccounting::with_shards(100, 4);
+        acc.record_push(true, 75);
+        for s in 0..3 {
+            acc.record_shard(s, 25);
+        }
+        acc.record_fetch(false, 0);
+        let r = acc.report();
+        assert_eq!(r.push_copies, 1);
+        assert_eq!(r.push_bytes, 75);
+        assert_eq!(r.fetch_bytes, 0);
+        assert_eq!(r.total_bytes(), 75);
+        assert_eq!(r.potential_bytes(), 200);
+        assert_eq!(r.shard_bytes, vec![25, 25, 25, 0]);
     }
 
     #[test]
@@ -122,6 +190,9 @@ mod tests {
             fetch_copies: 100,
             fetch_potential: 1000,
             bytes_per_copy: 1,
+            push_bytes: 100,
+            fetch_bytes: 100,
+            shard_bytes: vec![200],
         };
         assert!((r.fetch_ratio() - 0.1).abs() < 1e-12);
         assert!((r.reduction_factor() - 1100.0 / 200.0) < 1e-12);

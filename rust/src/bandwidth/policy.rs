@@ -1,4 +1,10 @@
-//! Transmit/drop decisions for each push and fetch opportunity.
+//! Transmit/drop decisions for each push and fetch opportunity, decided
+//! per (client, shard, direction): the B-FASGD gate (paper eq. 9)
+//! evaluates each parameter shard independently against that shard's
+//! moving-average statistic, so converged chunks stop moving while noisy
+//! chunks keep transmitting. A single-shard policy (the default) is the
+//! whole-model gate, bitwise: one counter/draw per opportunity, exactly
+//! as before.
 
 use crate::config::BandwidthMode;
 use crate::rng::Xoshiro256pp;
@@ -12,43 +18,68 @@ pub enum Direction {
     Fetch,
 }
 
-/// Stateful gate evaluated at every opportunity.
+/// Stateful gate evaluated at every (client, shard, direction)
+/// opportunity.
 pub struct BandwidthPolicy {
     mode: BandwidthMode,
-    /// Per-client opportunity counters for the fixed-period baseline.
+    shards: usize,
+    /// Per-(client, shard) opportunity counters for the fixed-period
+    /// baseline, indexed `client * shards + shard`.
     push_counters: Vec<u64>,
     fetch_counters: Vec<u64>,
     rng: Xoshiro256pp,
 }
 
 impl BandwidthPolicy {
+    /// Whole-model gate: one shard per client.
     pub fn new(mode: BandwidthMode, lambda: usize, rng: Xoshiro256pp) -> Self {
+        Self::with_shards(mode, lambda, 1, rng)
+    }
+
+    /// Per-shard gate over `shards` chunks per client.
+    pub fn with_shards(
+        mode: BandwidthMode,
+        lambda: usize,
+        shards: usize,
+        rng: Xoshiro256pp,
+    ) -> Self {
+        let shards = shards.max(1);
         Self {
             mode,
-            push_counters: vec![0; lambda],
-            fetch_counters: vec![0; lambda],
+            shards,
+            push_counters: vec![0; lambda * shards],
+            fetch_counters: vec![0; lambda * shards],
             rng,
         }
     }
 
-    /// Decide one opportunity. `v_mean` is the FASGD server's mean moving-
-    /// average std (None for non-FASGD policies, which always transmit
-    /// under the probabilistic mode — eq. 9 is defined in terms of v).
+    /// Number of shards each opportunity is decided over.
+    pub fn shard_count(&self) -> usize {
+        self.shards
+    }
+
+    /// Decide one (client, shard, direction) opportunity. `v_mean` is the
+    /// FASGD server's mean moving-average std *over that shard* (`None`
+    /// for policies without statistics, which always transmit under the
+    /// probabilistic mode — eq. 9 is defined in terms of v; config
+    /// validation rejects that pairing up front, this is defense in
+    /// depth).
     pub fn decide(
         &mut self,
         dir: Direction,
         client: usize,
+        shard: usize,
         v_mean: Option<f64>,
     ) -> bool {
+        debug_assert!(shard < self.shards);
         match &self.mode {
             BandwidthMode::Always => true,
             BandwidthMode::Fixed { k_push, k_fetch } => {
+                let idx = client * self.shards + shard;
                 let (counter, k) = match dir {
-                    Direction::Push => {
-                        (&mut self.push_counters[client], *k_push)
-                    }
+                    Direction::Push => (&mut self.push_counters[idx], *k_push),
                     Direction::Fetch => {
-                        (&mut self.fetch_counters[client], *k_fetch)
+                        (&mut self.fetch_counters[idx], *k_fetch)
                     }
                 };
                 let fire = *counter % k as u64 == 0;
@@ -101,8 +132,8 @@ mod tests {
     fn always_transmits() {
         let mut p = BandwidthPolicy::new(BandwidthMode::Always, 2, rngs());
         for _ in 0..10 {
-            assert!(p.decide(Direction::Push, 0, None));
-            assert!(p.decide(Direction::Fetch, 1, Some(0.1)));
+            assert!(p.decide(Direction::Push, 0, 0, None));
+            assert!(p.decide(Direction::Fetch, 1, 0, Some(0.1)));
         }
     }
 
@@ -110,11 +141,13 @@ mod tests {
     fn fixed_period_pattern() {
         let mode = BandwidthMode::Fixed { k_push: 3, k_fetch: 2 };
         let mut p = BandwidthPolicy::new(mode, 1, rngs());
-        let pushes: Vec<bool> =
-            (0..6).map(|_| p.decide(Direction::Push, 0, None)).collect();
+        let pushes: Vec<bool> = (0..6)
+            .map(|_| p.decide(Direction::Push, 0, 0, None))
+            .collect();
         assert_eq!(pushes, vec![true, false, false, true, false, false]);
-        let fetches: Vec<bool> =
-            (0..4).map(|_| p.decide(Direction::Fetch, 0, None)).collect();
+        let fetches: Vec<bool> = (0..4)
+            .map(|_| p.decide(Direction::Fetch, 0, 0, None))
+            .collect();
         assert_eq!(fetches, vec![true, false, true, false]);
     }
 
@@ -122,9 +155,20 @@ mod tests {
     fn fixed_counters_are_per_client() {
         let mode = BandwidthMode::Fixed { k_push: 2, k_fetch: 2 };
         let mut p = BandwidthPolicy::new(mode, 2, rngs());
-        assert!(p.decide(Direction::Push, 0, None));
-        assert!(p.decide(Direction::Push, 1, None)); // client 1 independent
-        assert!(!p.decide(Direction::Push, 0, None));
+        assert!(p.decide(Direction::Push, 0, 0, None));
+        assert!(p.decide(Direction::Push, 1, 0, None)); // client 1 independent
+        assert!(!p.decide(Direction::Push, 0, 0, None));
+    }
+
+    #[test]
+    fn fixed_counters_are_per_shard() {
+        let mode = BandwidthMode::Fixed { k_push: 2, k_fetch: 2 };
+        let mut p = BandwidthPolicy::with_shards(mode, 1, 3, rngs());
+        assert!(p.decide(Direction::Push, 0, 0, None));
+        assert!(p.decide(Direction::Push, 0, 1, None)); // shard 1 independent
+        assert!(!p.decide(Direction::Push, 0, 0, None));
+        assert!(!p.decide(Direction::Push, 0, 1, None));
+        assert!(p.decide(Direction::Push, 0, 2, None)); // shard 2 untouched
     }
 
     #[test]
@@ -138,20 +182,47 @@ mod tests {
         // v = 1 ⇒ p = 1/(1+1) = 0.5
         let n = 20_000;
         let hits = (0..n)
-            .filter(|_| p.decide(Direction::Push, 0, Some(1.0)))
+            .filter(|_| p.decide(Direction::Push, 0, 0, Some(1.0)))
             .count();
         let frac = hits as f64 / n as f64;
         assert!((frac - 0.5).abs() < 0.02, "{frac}");
         // v huge ⇒ transmit nearly always
         let hits = (0..1000)
-            .filter(|_| p.decide(Direction::Fetch, 0, Some(1e9)))
+            .filter(|_| p.decide(Direction::Fetch, 0, 0, Some(1e9)))
             .count();
         assert!(hits > 990);
         // v tiny ⇒ transmit almost never
         let hits = (0..1000)
-            .filter(|_| p.decide(Direction::Fetch, 0, Some(1e-12)))
+            .filter(|_| p.decide(Direction::Fetch, 0, 0, Some(1e-12)))
             .count();
         assert!(hits < 10);
+    }
+
+    #[test]
+    fn per_shard_gating_is_independent() {
+        // Two shards with wildly different v: the converged shard (tiny v)
+        // nearly never transmits while the noisy shard nearly always does
+        // — the chunk-granularity savings the paper's §4 extension is
+        // about.
+        let mode = BandwidthMode::Probabilistic {
+            c_push: 1.0,
+            c_fetch: 1.0,
+            eps: 1e-8,
+        };
+        let mut p = BandwidthPolicy::with_shards(mode, 1, 2, rngs());
+        let n = 2_000;
+        let mut hot = 0;
+        let mut cold = 0;
+        for _ in 0..n {
+            if p.decide(Direction::Push, 0, 0, Some(1e9)) {
+                hot += 1;
+            }
+            if p.decide(Direction::Push, 0, 1, Some(1e-12)) {
+                cold += 1;
+            }
+        }
+        assert!(hot > n * 95 / 100, "noisy shard transmitted {hot}/{n}");
+        assert!(cold < n * 5 / 100, "converged shard transmitted {cold}/{n}");
     }
 
     #[test]
@@ -181,7 +252,7 @@ mod tests {
         };
         let mut p = BandwidthPolicy::new(mode, 1, rngs());
         for _ in 0..100 {
-            assert!(p.decide(Direction::Push, 0, Some(1e-15)));
+            assert!(p.decide(Direction::Push, 0, 0, Some(1e-15)));
         }
     }
 }

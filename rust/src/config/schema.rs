@@ -238,6 +238,41 @@ pub struct DelayConfig {
     pub network: DelayModel,
 }
 
+/// The sharded parameter plane ([`crate::server::ParamStore`]): θ and
+/// every same-shaped state track are partitioned into `count` contiguous
+/// shards, the unit the bandwidth gate transmits or drops. `count = 1`
+/// (the default) is today's whole-model behavior, bitwise.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardConfig {
+    /// Number of shards S (clamped to the parameter count at build time).
+    pub count: usize,
+    /// Wire bytes per parameter (4 = f32; lower models quantized links).
+    pub bytes_per_param: u64,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        Self { count: 1, bytes_per_param: 4 }
+    }
+}
+
+/// Finite-rate network link ([`crate::sim::clock::LinkModel`]): every
+/// byte actually transmitted through the parameter server costs
+/// `1 / rate_bytes_per_vsec` virtual seconds on the shared server link.
+/// `0` (the default) disables wire-time charging — transmissions stay
+/// time-free, the pre-link behavior, and virtual timestamps are bitwise
+/// unchanged.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkConfig {
+    pub rate_bytes_per_vsec: f64,
+}
+
+impl Default for LinkConfig {
+    fn default() -> Self {
+        Self { rate_bytes_per_vsec: 0.0 }
+    }
+}
+
 impl DelayConfig {
     /// Is the virtual-time scheduler active (any delay source enabled)?
     pub fn enabled(&self) -> bool {
@@ -358,6 +393,11 @@ pub struct ExperimentConfig {
     /// model turns on the deterministic virtual clock and
     /// completion-order selection ([`crate::sim::clock`]).
     pub delay: DelayConfig,
+    /// Sharded parameter plane: the bandwidth gate decides per
+    /// (client, shard, direction) and bytes are accounted per shard.
+    pub shards: ShardConfig,
+    /// Finite-rate server link: transmitted bytes cost virtual seconds.
+    pub link: LinkConfig,
     pub model: ModelKind,
     pub dataset: DatasetConfig,
     pub grad_engine: GradEngineKind,
@@ -413,6 +453,8 @@ impl Default for ExperimentConfig {
             push_drop: PushDropMode::ReapplyCached,
             selection: SelectionRule::Uniform,
             delay: DelayConfig::default(),
+            shards: ShardConfig::default(),
+            link: LinkConfig::default(),
             model: ModelKind::Mlp,
             dataset: DatasetConfig::default(),
             grad_engine: GradEngineKind::Xla,
@@ -533,6 +575,13 @@ impl ExperimentConfig {
                     "bandwidth.eps requires bandwidth.mode = probabilistic"
                 ),
             },
+            "shards.count" => self.shards.count = value.parse()?,
+            "shards.bytes_per_param" => {
+                self.shards.bytes_per_param = value.parse()?
+            }
+            "link.rate_bytes_per_vsec" | "link.rate" => {
+                self.link.rate_bytes_per_vsec = value.parse()?
+            }
             "delay.compute" => {
                 self.delay.compute = DelayModel::parse_mode(value)?
             }
@@ -705,6 +754,61 @@ impl ExperimentConfig {
                  (use bandwidth.mode = always, or an async policy)",
                 self.policy.name()
             );
+        }
+        if let BandwidthMode::Probabilistic { c_push, c_fetch, .. } =
+            self.bandwidth
+        {
+            // Eq. 9 gates on the server's moving-average gradient
+            // statistics; a policy without them would silently transmit
+            // everything, burning the config's intent.
+            if (c_push > 0.0 || c_fetch > 0.0) && !policy_entry.v_stats {
+                bail!(
+                    "bandwidth.mode = probabilistic (B-FASGD eq. 9) gates \
+                     on the server's moving-average gradient statistics v, \
+                     which policy {:?} does not expose — the gate would \
+                     silently always-transmit. Policies with v statistics: \
+                     {}. Use bandwidth.mode = fixed for a statistics-free \
+                     baseline, or set c_push = c_fetch = 0",
+                    self.policy.name(),
+                    crate::server::registry().v_stats_names().join(", ")
+                );
+            }
+        }
+        if self.shards.count == 0 {
+            bail!("shards.count must be >= 1 (1 = whole-model, the default)");
+        }
+        if self.shards.count > 4096 {
+            bail!(
+                "shards.count must be <= 4096 (it sizes per-shard gate \
+                 counters and byte accounting per client)"
+            );
+        }
+        if self.shards.bytes_per_param == 0 {
+            bail!("shards.bytes_per_param must be >= 1");
+        }
+        if !self.link.rate_bytes_per_vsec.is_finite()
+            || self.link.rate_bytes_per_vsec < 0.0
+        {
+            bail!(
+                "link.rate_bytes_per_vsec must be finite and >= 0 \
+                 (0 = no wire-time charging)"
+            );
+        }
+        if self.shards.count > 1 {
+            if self.push_drop == PushDropMode::Accumulate {
+                bail!(
+                    "push_drop = accumulate folds whole-model gradients and \
+                     cannot represent per-shard drops; with shards.count > 1 \
+                     use push_drop = reapply or skip"
+                );
+            }
+            if self.update_engine == UpdateEngineKind::Xla {
+                bail!(
+                    "update_engine = xla runs the whole-model AOT update \
+                     artifact and cannot apply per shard; shards.count > 1 \
+                     requires update_engine = rust"
+                );
+            }
         }
         if self.mlp_hidden == 0 {
             bail!("mlp.hidden must be >= 1");
@@ -954,6 +1058,85 @@ mod tests {
     fn unknown_key_rejected() {
         let mut c = ExperimentConfig::default();
         assert!(c.set("no_such_key", "1").is_err());
+    }
+
+    #[test]
+    fn shard_and_link_keys() {
+        let mut c = ExperimentConfig::default();
+        assert_eq!(c.shards, ShardConfig { count: 1, bytes_per_param: 4 });
+        assert_eq!(c.link.rate_bytes_per_vsec, 0.0);
+        c.set("shards.count", "8").unwrap();
+        c.set("shards.bytes_per_param", "2").unwrap();
+        c.set("link.rate", "1e6").unwrap();
+        assert_eq!(c.shards.count, 8);
+        assert_eq!(c.shards.bytes_per_param, 2);
+        assert_eq!(c.link.rate_bytes_per_vsec, 1e6);
+        c.set("link.rate_bytes_per_vsec", "5e5").unwrap();
+        assert_eq!(c.link.rate_bytes_per_vsec, 5e5);
+        c.validate().unwrap();
+
+        c.shards.count = 0;
+        assert!(c.validate().is_err());
+        c.shards.count = 10_000;
+        assert!(c.validate().is_err());
+        c.shards.count = 4;
+        c.shards.bytes_per_param = 0;
+        assert!(c.validate().is_err());
+        c.shards.bytes_per_param = 4;
+        c.link.rate_bytes_per_vsec = -1.0;
+        assert!(c.validate().is_err());
+        c.link.rate_bytes_per_vsec = f64::INFINITY;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn sharding_rejects_whole_model_modes() {
+        let mut c = ExperimentConfig::default();
+        c.shards.count = 4;
+        c.push_drop = PushDropMode::Accumulate;
+        let err = c.validate().unwrap_err();
+        assert!(format!("{err}").contains("accumulate"), "{err}");
+        c.push_drop = PushDropMode::ReapplyCached;
+        c.validate().unwrap();
+        c.update_engine = UpdateEngineKind::Xla;
+        let err = c.validate().unwrap_err();
+        assert!(format!("{err}").contains("update_engine"), "{err}");
+    }
+
+    #[test]
+    fn probabilistic_gating_requires_v_stats_policy() {
+        // Eq. 9 needs the server's v statistics; a statistics-free policy
+        // would silently always-transmit (the old behavior this guard
+        // replaces).
+        for policy in [Policy::Asgd, Policy::Sasgd, Policy::Exponential] {
+            let mut c = ExperimentConfig::default();
+            c.policy = policy.clone();
+            c.bandwidth = BandwidthMode::Probabilistic {
+                c_push: 0.3,
+                c_fetch: 0.0,
+                eps: 1e-8,
+            };
+            let err = c.validate().unwrap_err();
+            let msg = format!("{err}");
+            assert!(msg.contains("statistics"), "{policy}: {msg}");
+            assert!(msg.contains("fasgd"), "should name v-stats policies: {msg}");
+            // c = 0 on both sides never gates — harmless, stays allowed.
+            c.bandwidth = BandwidthMode::Probabilistic {
+                c_push: 0.0,
+                c_fetch: 0.0,
+                eps: 1e-8,
+            };
+            c.validate().unwrap();
+        }
+        // fasgd keeps the statistics-driven gate.
+        let mut c = ExperimentConfig::default();
+        c.policy = Policy::Fasgd;
+        c.bandwidth = BandwidthMode::Probabilistic {
+            c_push: 0.3,
+            c_fetch: 0.6,
+            eps: 1e-8,
+        };
+        c.validate().unwrap();
     }
 
     #[test]

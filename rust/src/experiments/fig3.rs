@@ -107,5 +107,8 @@ pub fn report(points: &[SweepPoint], out_dir: &std::path::Path) -> Result<()> {
     let all: Vec<RunSummary> = points.iter().map(|p| p.run.clone()).collect();
     writer::write_curves_csv(&out_dir.join("fig3_curves.csv"), &all)?;
     writer::write_summaries_json(&out_dir.join("fig3_summary.json"), &all)?;
+    // Per-shard bytes-on-wire (one row per shard; a single row under the
+    // default whole-model config) — which chunks of θ the gate silenced.
+    writer::write_shard_bytes_csv(&out_dir.join("fig3_shard_bytes.csv"), &all)?;
     Ok(())
 }

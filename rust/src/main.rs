@@ -33,6 +33,13 @@
 //! (lognormal params: `--delay.compute_mu/_sigma`; bimodal:
 //! `--delay.compute_straggler_frac/_slow_mult`, same for `network_`).
 //! `--eval_every_vsecs S` adds an eval cadence in simulated seconds.
+//!
+//! `--shards.count S` partitions θ into S contiguous shards: the
+//! bandwidth gate decides per (client, shard, direction) — B-FASGD gates
+//! each chunk on its own `v` statistics — and bytes-on-wire are
+//! accounted per shard. `--link.rate_bytes_per_vsec R` charges
+//! transmitted bytes as virtual seconds on the server link, so gated
+//! traffic shows up on the error-vs-runtime axis.
 
 use anyhow::{bail, Context, Result};
 
@@ -203,6 +210,11 @@ fn print_help() {
          \x20                   bimodal: --delay.compute_straggler_frac F\n\
          \x20                   --delay.compute_slow_mult F; same keys with network_)\n\
          \x20                --eval_every_vsecs S (eval cadence in simulated seconds)\n\
+         \x20                --shards.count S (partition theta into S chunks;\n\
+         \x20                   the bandwidth gate decides per shard)\n\
+         \x20                --shards.bytes_per_param B (wire bytes per param, default 4)\n\
+         \x20                --link.rate_bytes_per_vsec R (finite-rate server link:\n\
+         \x20                   transmitted bytes cost virtual seconds; 0 = off)\n\
          \x20                --config file.toml --out dir/\n\
          see README.md for the full knob list"
     );

@@ -106,6 +106,23 @@ impl RunSummary {
             ("push_potential", self.bandwidth.push_potential.into()),
             ("fetch_copies", self.bandwidth.fetch_copies.into()),
             ("fetch_potential", self.bandwidth.fetch_potential.into()),
+            // Raw (never-gating) vs gated bytes-on-wire: the paper's
+            // "factor of 5" bandwidth claim is raw_bytes / gated_bytes,
+            // checkable directly from this record.
+            ("raw_bytes", self.bandwidth.potential_bytes().into()),
+            ("gated_bytes", self.bandwidth.total_bytes().into()),
+            ("push_bytes", self.bandwidth.push_bytes.into()),
+            ("fetch_bytes", self.bandwidth.fetch_bytes.into()),
+            (
+                "shard_bytes",
+                Json::Arr(
+                    self.bandwidth
+                        .shard_bytes
+                        .iter()
+                        .map(|&b| b.into())
+                        .collect(),
+                ),
+            ),
             ("wall_secs", self.wall_secs.into()),
             ("virtual_secs", self.virtual_secs.into()),
         ])
@@ -115,6 +132,43 @@ impl RunSummary {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn to_json_reports_raw_and_gated_bytes() {
+        let summary = RunSummary {
+            name: "x".into(),
+            policy: "fasgd".into(),
+            clients: 2,
+            batch: 1,
+            iters: 4,
+            history: History::new(),
+            staleness: StalenessHistogram::new(4),
+            bandwidth: BandwidthReport {
+                push_copies: 4,
+                push_potential: 4,
+                fetch_copies: 1,
+                fetch_potential: 4,
+                bytes_per_copy: 100,
+                push_bytes: 400,
+                fetch_bytes: 150,
+                shard_bytes: vec![300, 250],
+            },
+            wall_secs: 0.0,
+            virtual_secs: 4.0,
+            server_updates: 4,
+            probes: Default::default(),
+        };
+        let j = summary.to_json().to_string_pretty();
+        let parsed = crate::util::json::Json::parse(&j).unwrap();
+        let num = |k: &str| parsed.get(k).unwrap().as_f64().unwrap();
+        assert_eq!(num("raw_bytes"), 800.0);
+        assert_eq!(num("gated_bytes"), 550.0);
+        assert_eq!(num("push_bytes"), 400.0);
+        assert_eq!(num("fetch_bytes"), 150.0);
+        let shards =
+            parsed.get("shard_bytes").unwrap().as_arr().unwrap();
+        assert_eq!(shards.len(), 2);
+    }
 
     #[test]
     fn histogram_basics() {

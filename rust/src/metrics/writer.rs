@@ -31,6 +31,24 @@ pub fn write_curves_csv(path: &Path, runs: &[RunSummary]) -> Result<()> {
     Ok(())
 }
 
+/// Write per-shard bytes-on-wire rows as tidy CSV:
+/// `run,policy,shard,bytes` — which chunks of θ still move under the
+/// per-shard B-FASGD gate and which have gone quiet.
+pub fn write_shard_bytes_csv(path: &Path, runs: &[RunSummary]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {path:?}"))?;
+    writeln!(f, "run,policy,shard,bytes")?;
+    for run in runs {
+        for (s, bytes) in run.bandwidth.shard_bytes.iter().enumerate() {
+            writeln!(f, "{},{},{},{}", run.name, run.policy, s, bytes)?;
+        }
+    }
+    Ok(())
+}
+
 /// Write per-run summary rows as a JSON array.
 pub fn write_summaries_json(path: &Path, runs: &[RunSummary]) -> Result<()> {
     if let Some(dir) = path.parent() {
@@ -123,6 +141,22 @@ mod tests {
         let parsed =
             Json::parse(&std::fs::read_to_string(&js).unwrap()).unwrap();
         assert_eq!(parsed.as_arr().unwrap().len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_bytes_csv() {
+        let dir = std::env::temp_dir().join("fasgd_writer_shard_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut run = dummy_run("s");
+        run.bandwidth.shard_bytes = vec![120, 0, 64];
+        let csv = dir.join("shards.csv");
+        write_shard_bytes_csv(&csv, &[run]).unwrap();
+        let text = std::fs::read_to_string(&csv).unwrap();
+        assert!(text.starts_with("run,policy,shard,bytes"));
+        assert_eq!(text.lines().count(), 4);
+        assert!(text.contains("s,fasgd,0,120"));
+        assert!(text.contains("s,fasgd,2,64"));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -15,7 +15,7 @@
 use anyhow::Result;
 
 use crate::grad::XlaUpdateEngine;
-use crate::server::{Server, UpdateOutcome};
+use crate::server::{ParamStore, Server, UpdateOutcome};
 use crate::tensor::{fasgd_update_fused, FasgdHparams};
 
 /// Which implementation applies eqs. 4–8 (the configuration carrier).
@@ -75,7 +75,11 @@ impl UpdateBackend for XlaBackend {
     }
 }
 
-/// The FASGD parameter server, generic over the update backend.
+/// The FASGD parameter server, generic over the update backend. The
+/// state tracks are partitioned by a [`ParamStore`]: the update applies
+/// shard by shard and each shard's `v` mean is cached, so the per-shard
+/// B-FASGD gate reads its statistic in O(1). A single-shard store (the
+/// default) is bitwise-identical to the pre-shard whole-model path.
 pub struct FasgdServer<U: UpdateBackend> {
     params: Vec<f32>,
     n: Vec<f32>,
@@ -88,6 +92,10 @@ pub struct FasgdServer<U: UpdateBackend> {
     /// no statistics exist, else a gated cluster deadlocks (v=0 reads as
     /// "converged, drop everything" and no update can ever establish v).
     v_mean: Option<f64>,
+    store: ParamStore,
+    /// Per-shard mean of `v`, refreshed by every apply (meaningful only
+    /// once `v_mean` is `Some`).
+    v_shard_means: Vec<f64>,
     backend: U,
 }
 
@@ -99,23 +107,44 @@ impl Fasgd {
         FasgdServer::with_backend(params, alpha, hp, RustBackend)
     }
 
-    /// Build the configured variant as a boxed trait object.
+    /// Build the configured variant as a boxed trait object (whole-model,
+    /// single shard).
     pub fn new(
         params: Vec<f32>,
         alpha: f32,
         hp: FasgdHparams,
         engine: UpdateEngine,
     ) -> Box<dyn Server> {
+        let store = ParamStore::new(params.len(), 1, 4);
+        Self::new_sharded(params, alpha, hp, engine, store)
+    }
+
+    /// Build the configured variant over a [`ParamStore`]: the update
+    /// applies per shard and `v_mean_shard` serves the per-shard gate.
+    pub fn new_sharded(
+        params: Vec<f32>,
+        alpha: f32,
+        hp: FasgdHparams,
+        engine: UpdateEngine,
+        store: ParamStore,
+    ) -> Box<dyn Server> {
         match engine {
-            UpdateEngine::Rust => {
-                Box::new(FasgdServer::with_backend(params, alpha, hp, RustBackend))
-            }
-            UpdateEngine::Xla(x) => Box::new(FasgdServer::with_backend(
+            UpdateEngine::Rust => Box::new(FasgdServer::with_backend_sharded(
                 params,
                 alpha,
                 hp,
-                XlaBackend(x),
+                RustBackend,
+                store,
             )),
+            UpdateEngine::Xla(x) => {
+                Box::new(FasgdServer::with_backend_sharded(
+                    params,
+                    alpha,
+                    hp,
+                    XlaBackend(x),
+                    store,
+                ))
+            }
         }
     }
 }
@@ -127,7 +156,23 @@ impl<U: UpdateBackend> FasgdServer<U> {
         hp: FasgdHparams,
         backend: U,
     ) -> Self {
+        let store = ParamStore::new(params.len(), 1, 4);
+        Self::with_backend_sharded(params, alpha, hp, backend, store)
+    }
+
+    pub fn with_backend_sharded(
+        params: Vec<f32>,
+        alpha: f32,
+        hp: FasgdHparams,
+        backend: U,
+        store: ParamStore,
+    ) -> Self {
         let p = params.len();
+        assert_eq!(
+            store.param_count(),
+            p,
+            "ParamStore geometry does not match the parameter vector"
+        );
         Self {
             params,
             n: vec![0.0; p],
@@ -137,6 +182,8 @@ impl<U: UpdateBackend> FasgdServer<U> {
             hp,
             ts: 0,
             v_mean: None,
+            v_shard_means: vec![0.0; store.count()],
+            store,
             backend,
         }
     }
@@ -148,6 +195,11 @@ impl<U: UpdateBackend> FasgdServer<U> {
     /// The `v` track (exposed for tests / per-tensor extensions).
     pub fn v(&self) -> &[f32] {
         &self.v
+    }
+
+    /// The shard geometry this server applies updates through.
+    pub fn store(&self) -> &ParamStore {
+        &self.store
     }
 }
 
@@ -169,15 +221,39 @@ impl<U: UpdateBackend> Server for FasgdServer<U> {
         let tau = super::staleness(self.ts, grad_timestamp);
         let aot =
             self.alpha / super::staleness_divisor(self.ts, grad_timestamp);
-        self.v_mean = Some(self.backend.apply(
-            &mut self.params,
-            &mut self.n,
-            &mut self.b,
-            &mut self.v,
-            grad,
-            aot,
-            &self.hp,
-        )?);
+        if self.store.count() == 1 {
+            // Whole-model fast path — one backend call, and the returned
+            // mean is used directly so single-shard runs stay bitwise
+            // identical to the pre-shard server.
+            let m = self.backend.apply(
+                &mut self.params,
+                &mut self.n,
+                &mut self.b,
+                &mut self.v,
+                grad,
+                aot,
+                &self.hp,
+            )?;
+            self.v_shard_means[0] = m;
+            self.v_mean = Some(m);
+        } else {
+            let mut weighted = 0.0f64;
+            for s in 0..self.store.count() {
+                let r = self.store.range(s);
+                let m = self.backend.apply(
+                    &mut self.params[r.clone()],
+                    &mut self.n[r.clone()],
+                    &mut self.b[r.clone()],
+                    &mut self.v[r.clone()],
+                    &grad[r.clone()],
+                    aot,
+                    &self.hp,
+                )?;
+                self.v_shard_means[s] = m;
+                weighted += m * r.len() as f64;
+            }
+            self.v_mean = Some(weighted / self.params.len().max(1) as f64);
+        }
         self.ts += 1;
         Ok(UpdateOutcome {
             applied: true,
@@ -188,6 +264,11 @@ impl<U: UpdateBackend> Server for FasgdServer<U> {
 
     fn v_mean(&self) -> Option<f64> {
         self.v_mean
+    }
+
+    fn v_mean_shard(&self, s: usize) -> Option<f64> {
+        self.v_mean?;
+        self.v_shard_means.get(s).copied().or(self.v_mean)
     }
 
     fn name(&self) -> &'static str {
@@ -262,5 +343,54 @@ mod tests {
     fn rust_backend_server_is_send() {
         fn assert_send<T: Send>() {}
         assert_send::<Fasgd>();
+    }
+
+    fn sharded_server(p: usize, shards: usize) -> Fasgd {
+        FasgdServer::with_backend_sharded(
+            vec![0.0; p],
+            0.1,
+            FasgdHparams::default(),
+            RustBackend,
+            ParamStore::new(p, shards, 4),
+        )
+    }
+
+    #[test]
+    fn sharded_apply_matches_whole_model() {
+        // Per-shard application of eqs. 4-8 is elementwise, so the state
+        // tracks must match a single-shard server exactly; only the mean
+        // reductions may reassociate.
+        let mut whole = sharded_server(37, 1);
+        let mut sharded = sharded_server(37, 5);
+        let mut rng = crate::rng::Xoshiro256pp::new(3);
+        for _ in 0..20 {
+            let g: Vec<f32> = (0..37).map(|_| rng.f32() - 0.5).collect();
+            let ts = whole.timestamp();
+            whole.apply_update(&g, ts, 0).unwrap();
+            sharded.apply_update(&g, ts, 0).unwrap();
+        }
+        assert_eq!(whole.params(), sharded.params());
+        assert_eq!(whole.v(), sharded.v());
+        assert!(
+            (whole.v_mean().unwrap() - sharded.v_mean().unwrap()).abs()
+                < 1e-6
+        );
+    }
+
+    #[test]
+    fn shard_v_means_match_direct_slices() {
+        let mut s = sharded_server(23, 4);
+        let g: Vec<f32> = (0..23).map(|i| (i as f32 * 0.7).sin()).collect();
+        assert_eq!(s.v_mean_shard(0), None, "no stats before first update");
+        s.apply_update(&g, 0, 0).unwrap();
+        let store = s.store().clone();
+        for sh in 0..store.count() {
+            let direct = crate::tensor::mean(&s.v()[store.range(sh)]);
+            let got = s.v_mean_shard(sh).unwrap();
+            assert!((got - direct).abs() < 1e-6, "shard {sh}: {got} {direct}");
+        }
+        // The whole-model mean is the length-weighted combination.
+        let direct = crate::tensor::mean(s.v());
+        assert!((s.v_mean().unwrap() - direct).abs() < 1e-6);
     }
 }

@@ -6,6 +6,8 @@
 //! for large values of λ or large models". The cache tracks its own memory
 //! footprint so that cost is measurable (reported per run).
 
+use crate::server::ParamStore;
+
 /// Most-recent gradient (+ its parameter timestamp) per client.
 pub struct GradientCache {
     slots: Vec<Option<(Vec<f32>, u64)>>,
@@ -30,6 +32,35 @@ impl GradientCache {
                 *slot = Some((grad.to_vec(), grad_ts));
             }
         }
+    }
+
+    /// Merge a *partial* transmission from client `c`: overwrite only the
+    /// shards flagged in `mask` (per `store`'s geometry), leaving
+    /// previously cached chunks in place — a slot touched for the first
+    /// time starts zero-filled, so never-transmitted shards read as zero
+    /// contribution. The slot timestamp advances to `grad_ts` (the
+    /// transmitted chunks dominate the entry's age).
+    pub fn store_shards(
+        &mut self,
+        c: usize,
+        grad: &[f32],
+        grad_ts: u64,
+        mask: &[bool],
+        store: &ParamStore,
+    ) {
+        if self.slots[c].is_none() {
+            self.bytes += grad.len() * std::mem::size_of::<f32>();
+            self.slots[c] = Some((vec![0.0; grad.len()], grad_ts));
+        }
+        let (buf, ts) = self.slots[c].as_mut().expect("slot just ensured");
+        debug_assert_eq!(buf.len(), grad.len());
+        for (s, &tx) in mask.iter().enumerate() {
+            if tx {
+                let r = store.range(s);
+                buf[r.clone()].copy_from_slice(&grad[r]);
+            }
+        }
+        *ts = grad_ts;
     }
 
     /// The most recent gradient from client `c`, if any.
@@ -64,6 +95,23 @@ mod tests {
         assert_eq!(g, &[3.0, 4.0]);
         assert_eq!(ts, 9);
         assert_eq!(c.populated(), 1);
+    }
+
+    #[test]
+    fn partial_store_merges_shards() {
+        let store = ParamStore::new(4, 2, 4);
+        let mut c = GradientCache::new(1);
+        // First contact: only shard 1 transmitted; shard 0 reads as zero.
+        c.store_shards(0, &[1.0, 2.0, 3.0, 4.0], 3, &[false, true], &store);
+        let (g, ts) = c.get(0).unwrap();
+        assert_eq!(g, &[0.0, 0.0, 3.0, 4.0]);
+        assert_eq!(ts, 3);
+        // Later partial store overwrites shard 0, keeps shard 1's chunk.
+        c.store_shards(0, &[9.0, 8.0, 7.0, 6.0], 5, &[true, false], &store);
+        let (g, ts) = c.get(0).unwrap();
+        assert_eq!(g, &[9.0, 8.0, 3.0, 4.0]);
+        assert_eq!(ts, 5);
+        assert_eq!(c.bytes(), 16); // one slot, counted once
     }
 
     #[test]

@@ -32,6 +32,7 @@ pub mod gap_aware;
 pub mod gradient_cache;
 pub mod registry;
 pub mod sasgd;
+pub mod shard;
 pub mod sync;
 
 pub use asgd::Asgd;
@@ -44,6 +45,7 @@ pub use registry::{
     PolicyRegistry, PolicySpec, ThreadedPolicyFactory,
 };
 pub use sasgd::Sasgd;
+pub use shard::ParamStore;
 pub use sync::SyncSgd;
 
 use std::cmp::Ordering;
@@ -86,6 +88,16 @@ pub trait Server {
     /// consumed every opportunity by the B-FASGD bandwidth gate.
     fn v_mean(&self) -> Option<f64> {
         None
+    }
+
+    /// Mean of `v` over shard `s` of the server's [`ParamStore`] (FASGD
+    /// only): the statistic the per-shard B-FASGD gate evaluates eq. 9
+    /// with, so each chunk is gated on its own convergence. The default
+    /// falls back to the whole-model mean — correct for single-shard
+    /// servers and for policies without v statistics.
+    fn v_mean_shard(&self, s: usize) -> Option<f64> {
+        let _ = s;
+        self.v_mean()
     }
 
     /// Policy name for reports.

@@ -55,6 +55,7 @@ pub struct PolicySpec {
     about: String,
     aliases: Vec<String>,
     barrier: bool,
+    v_stats: bool,
     factory: PolicyFactory,
     threaded: Option<ThreadedPolicyFactory>,
 }
@@ -73,6 +74,7 @@ impl PolicySpec {
             about: about.to_string(),
             aliases: Vec::new(),
             barrier: false,
+            v_stats: false,
             factory: Arc::new(factory),
             threaded: None,
         }
@@ -89,6 +91,16 @@ impl PolicySpec {
     /// bandwidth gating is rejected at validation (deadlock).
     pub fn barrier(mut self) -> Self {
         self.barrier = true;
+        self
+    }
+
+    /// Declare that this policy's server exposes the moving-average
+    /// gradient statistics (`Server::v_mean` / `v_mean_shard`) the
+    /// probabilistic B-FASGD bandwidth gate evaluates (eq. 9). Config
+    /// validation rejects `bandwidth.mode = probabilistic` for policies
+    /// without this flag — the gate would silently always-transmit.
+    pub fn v_stats(mut self) -> Self {
+        self.v_stats = true;
         self
     }
 
@@ -111,6 +123,8 @@ pub struct PolicyEntry {
     pub name: String,
     pub about: String,
     pub barrier: bool,
+    /// Exposes the v statistics the probabilistic bandwidth gate needs.
+    pub v_stats: bool,
     factory: PolicyFactory,
     threaded: Option<ThreadedPolicyFactory>,
 }
@@ -144,6 +158,7 @@ impl PolicyRegistry {
             name: spec.name.clone(),
             about: spec.about,
             barrier: spec.barrier,
+            v_stats: spec.v_stats,
             factory: spec.factory,
             threaded: spec.threaded,
         });
@@ -180,6 +195,18 @@ impl PolicyRegistry {
     pub fn names(&self) -> Vec<String> {
         let inner = self.inner.read().expect("policy registry poisoned");
         inner.entries.keys().cloned().collect()
+    }
+
+    /// Registered policies that expose the v statistics the probabilistic
+    /// bandwidth gate needs, sorted.
+    pub fn v_stats_names(&self) -> Vec<String> {
+        let inner = self.inner.read().expect("policy registry poisoned");
+        inner
+            .entries
+            .values()
+            .filter(|e| e.v_stats)
+            .map(|e| e.name.clone())
+            .collect()
     }
 
     /// Alias-aware, case-insensitive lookup. Canonical names take
@@ -273,7 +300,8 @@ pub fn policy_is_barrier(name: &str) -> bool {
 }
 
 fn register_builtins(reg: &PolicyRegistry) {
-    use crate::server::{Asgd, ExponentialPenalty, Fasgd, Sasgd, SyncSgd};
+    use crate::server::{Asgd, ExponentialPenalty, Fasgd, FasgdServer, Sasgd,
+                        SyncSgd};
 
     reg.register(
         PolicySpec::new(
@@ -319,10 +347,27 @@ fn register_builtins(reg: &PolicyRegistry) {
         PolicySpec::new(
             "fasgd",
             "the paper's contribution: moving-average gradient statistics (eqs. 4-8)",
-            |a| Ok(Fasgd::new(a.init, a.cfg.alpha, a.cfg.fasgd, a.update)),
+            |a| {
+                let store = crate::server::ParamStore::from_config(
+                    a.init.len(),
+                    &a.cfg.shards,
+                );
+                Ok(Fasgd::new_sharded(
+                    a.init, a.cfg.alpha, a.cfg.fasgd, a.update, store,
+                ))
+            },
         )
+        .v_stats()
         .threaded(|cfg, init| {
-            Ok(Box::new(Fasgd::new_rust(init, cfg.alpha, cfg.fasgd)))
+            let store =
+                crate::server::ParamStore::from_config(init.len(), &cfg.shards);
+            Ok(Box::new(FasgdServer::with_backend_sharded(
+                init,
+                cfg.alpha,
+                cfg.fasgd,
+                crate::server::RustBackend,
+                store,
+            )))
         }),
     );
 }
@@ -366,6 +411,16 @@ mod tests {
         assert!(!policy_is_barrier("gap_aware"));
         // unregistered name: conservative fallback
         assert!(!policy_is_barrier("not_registered"));
+    }
+
+    #[test]
+    fn v_stats_flags() {
+        assert!(registry().resolve("fasgd").unwrap().v_stats);
+        assert!(!registry().resolve("asgd").unwrap().v_stats);
+        assert!(!registry().resolve("sync").unwrap().v_stats);
+        let names = registry().v_stats_names();
+        assert!(names.contains(&"fasgd".to_string()), "{names:?}");
+        assert!(!names.contains(&"asgd".to_string()), "{names:?}");
     }
 
     #[test]

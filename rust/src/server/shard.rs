@@ -1,0 +1,164 @@
+//! The sharded parameter plane: [`ParamStore`] partitions the flat θ
+//! vector (and every same-shaped state track — FASGD's `n`/`b`/`v`, the
+//! gradient) into `S` contiguous shards, the unit at which the B-FASGD
+//! bandwidth gate transmits or drops (paper §2.3 gates *chunks* of
+//! parameters on per-chunk statistics, not the whole model).
+//!
+//! A `ParamStore` is pure geometry plus wire cost: it owns no floats.
+//! Servers and the protocol core each build one from the same
+//! `(param_count, shards.count)` pair, so their shard indices always
+//! agree. Shards tile the vector exactly — no gaps, no overlap, the
+//! first `P mod S` shards one element longer than the rest (uneven tail)
+//! — and `shards.count = 1` degenerates to today's whole-model behavior
+//! (rust/tests/shards.rs locks the tiling property and the bitwise
+//! compatibility).
+
+use std::ops::Range;
+
+use crate::config::ShardConfig;
+
+/// Shard geometry over a flat parameter vector of `P` floats, plus the
+/// bytes each shard occupies on the wire.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamStore {
+    p: usize,
+    count: usize,
+    /// Floor size of a shard; the first `rem` shards get one extra.
+    base: usize,
+    rem: usize,
+    bytes_per_param: u64,
+}
+
+impl ParamStore {
+    /// Partition `p` parameters into `count` contiguous shards. `count`
+    /// is clamped to `[1, max(p, 1)]` so every shard holds at least one
+    /// parameter (a shard that can never carry bytes would be dead
+    /// weight in every per-shard loop).
+    pub fn new(p: usize, count: usize, bytes_per_param: u64) -> Self {
+        let count = count.clamp(1, p.max(1));
+        Self {
+            p,
+            count,
+            base: p / count,
+            rem: p % count,
+            bytes_per_param,
+        }
+    }
+
+    /// The geometry the config asks for over a `p`-parameter model.
+    pub fn from_config(p: usize, cfg: &ShardConfig) -> Self {
+        Self::new(p, cfg.count, cfg.bytes_per_param)
+    }
+
+    /// Total parameters P.
+    pub fn param_count(&self) -> usize {
+        self.p
+    }
+
+    /// Number of shards S (≥ 1).
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    pub fn bytes_per_param(&self) -> u64 {
+        self.bytes_per_param
+    }
+
+    /// The half-open index range of shard `s`.
+    pub fn range(&self, s: usize) -> Range<usize> {
+        assert!(s < self.count, "shard {s} out of {} shards", self.count);
+        let extra = s.min(self.rem);
+        let start = s * self.base + extra;
+        let len = self.base + usize::from(s < self.rem);
+        start..start + len
+    }
+
+    /// Parameters in shard `s`.
+    pub fn len(&self, s: usize) -> usize {
+        self.range(s).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.p == 0
+    }
+
+    /// Wire bytes one transmission of shard `s` moves.
+    pub fn shard_bytes(&self, s: usize) -> u64 {
+        self.len(s) as u64 * self.bytes_per_param
+    }
+
+    /// Wire bytes a full-model transmission moves (one "copy").
+    pub fn total_bytes(&self) -> u64 {
+        self.p as u64 * self.bytes_per_param
+    }
+
+    /// All shard ranges, in index order.
+    pub fn ranges(&self) -> impl Iterator<Item = Range<usize>> + '_ {
+        (0..self.count).map(|s| self.range(s))
+    }
+
+    /// Shard `s` of a same-shaped track (read view).
+    pub fn view<'a>(&self, s: usize, x: &'a [f32]) -> &'a [f32] {
+        &x[self.range(s)]
+    }
+
+    /// Shard `s` of a same-shaped track (write view).
+    pub fn view_mut<'a>(&self, s: usize, x: &'a mut [f32]) -> &'a mut [f32] {
+        &mut x[self.range(s)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_shard_covers_everything() {
+        let ps = ParamStore::new(17, 1, 4);
+        assert_eq!(ps.count(), 1);
+        assert_eq!(ps.range(0), 0..17);
+        assert_eq!(ps.shard_bytes(0), 17 * 4);
+        assert_eq!(ps.total_bytes(), 68);
+    }
+
+    #[test]
+    fn uneven_tail_tiles_exactly() {
+        // 10 params / 4 shards: sizes 3,3,2,2 — contiguous, no gaps.
+        let ps = ParamStore::new(10, 4, 4);
+        assert_eq!(ps.range(0), 0..3);
+        assert_eq!(ps.range(1), 3..6);
+        assert_eq!(ps.range(2), 6..8);
+        assert_eq!(ps.range(3), 8..10);
+        let total: usize = ps.ranges().map(|r| r.len()).sum();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn count_clamps_to_param_count() {
+        let ps = ParamStore::new(3, 100, 4);
+        assert_eq!(ps.count(), 3);
+        assert!(ps.ranges().all(|r| r.len() == 1));
+        // Degenerate empty model still yields one (empty) shard.
+        let ps = ParamStore::new(0, 5, 4);
+        assert_eq!(ps.count(), 1);
+        assert_eq!(ps.range(0), 0..0);
+        assert!(ps.is_empty());
+    }
+
+    #[test]
+    fn views_slice_the_right_ranges() {
+        let ps = ParamStore::new(5, 2, 4);
+        let x: Vec<f32> = (0..5).map(|i| i as f32).collect();
+        assert_eq!(ps.view(0, &x), &[0.0, 1.0, 2.0]);
+        assert_eq!(ps.view(1, &x), &[3.0, 4.0]);
+        let mut y = x.clone();
+        ps.view_mut(1, &mut y).fill(9.0);
+        assert_eq!(y, vec![0.0, 1.0, 2.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of")]
+    fn out_of_range_shard_panics() {
+        ParamStore::new(8, 2, 4).range(2);
+    }
+}

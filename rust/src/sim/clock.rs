@@ -34,7 +34,7 @@
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-use crate::config::{DelayConfig, DelayModel};
+use crate::config::{DelayConfig, DelayModel, LinkConfig};
 use crate::rng::{Normal, Xoshiro256pp};
 
 /// One scheduled client-completion event.
@@ -204,10 +204,61 @@ impl LatencyModel {
     }
 }
 
+/// Finite-rate server link: converts bytes actually transmitted into
+/// virtual seconds. The protocol core charges
+/// `bytes_on_wire / rate_bytes_per_vsec` onto the virtual-time axis for
+/// every push/fetch, *after* the gate decisions — a fully gated
+/// opportunity costs ~0 wire time and a partial (per-shard) transmission
+/// costs proportionally. All traffic crosses the parameter server's NIC,
+/// so the charge models one serialized link; it rides on top of the
+/// per-client [`LatencyModel`] jitter rather than replacing it, and is
+/// applied in schedule order inside `complete_iteration`, which keeps the
+/// serial↔parallel bitwise contract intact with no new dispatcher
+/// machinery. Rate 0 disables charging (gated transmissions stay
+/// time-free — the pre-link behavior, bit for bit).
+#[derive(Debug, Clone, Copy)]
+pub struct LinkModel {
+    rate_bytes_per_vsec: f64,
+}
+
+impl LinkModel {
+    pub fn from_config(link: &LinkConfig) -> Self {
+        Self { rate_bytes_per_vsec: link.rate_bytes_per_vsec }
+    }
+
+    /// Is wire-time charging active?
+    pub fn enabled(&self) -> bool {
+        self.rate_bytes_per_vsec > 0.0
+    }
+
+    /// Virtual seconds `bytes` occupy on the link (0.0 when disabled).
+    pub fn wire_secs(&self, bytes: u64) -> f64 {
+        if self.enabled() {
+            bytes as f64 / self.rate_bytes_per_vsec
+        } else {
+            0.0
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::rng;
+
+    #[test]
+    fn link_model_charges_per_byte() {
+        let link = LinkModel::from_config(&LinkConfig {
+            rate_bytes_per_vsec: 1000.0,
+        });
+        assert!(link.enabled());
+        assert_eq!(link.wire_secs(0), 0.0);
+        assert_eq!(link.wire_secs(500), 0.5);
+        assert_eq!(link.wire_secs(2000), 2.0);
+        let off = LinkModel::from_config(&LinkConfig::default());
+        assert!(!off.enabled());
+        assert_eq!(off.wire_secs(1 << 30), 0.0);
+    }
 
     #[test]
     fn pops_in_time_order() {

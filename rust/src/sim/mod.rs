@@ -65,7 +65,7 @@ pub mod serial;
 pub mod trace;
 
 pub use builder::{Simulation, SimulationBuilder};
-pub use clock::{ClockEvent, LatencyModel, VirtualClock};
+pub use clock::{ClockEvent, LatencyModel, LinkModel, VirtualClock};
 pub use observers::{
     CsvCurveWriter, EvalLogger, EventCounter, RunObserver,
 };

@@ -25,8 +25,9 @@ use crate::data::{corpus::Corpus, sampler::{BatchSampler, WindowSampler},
                   Split};
 use crate::grad::{Batch, EvalEngine, GradientEngine, OwnedBatch};
 use crate::metrics::{EvalPoint, History, RunSummary, StalenessHistogram};
-use crate::server::{GradientCache, Server};
+use crate::server::{GradientCache, ParamStore, Server};
 use crate::sim::client::{Accumulator, ClientState, SamplerKind};
+use crate::sim::clock::LinkModel;
 use crate::sim::observers::RunObserver;
 use crate::sim::probe::{ProbeLog, ProbeRecord};
 use crate::sim::trace::{Event, Trace};
@@ -83,10 +84,27 @@ pub(crate) struct ProtocolCore {
     /// Virtual time of the most recently completed iteration
     /// ([`crate::sim::clock`]). With delay models off the clock
     /// degenerates to 1.0 per iteration, so the virtual-seconds axis is
-    /// always populated.
+    /// always populated. `vnow = vclock + wire_secs`: the latency-model
+    /// clock plus the cumulative wire time of every byte transmitted
+    /// through the server's finite-rate link.
     pub(crate) vnow: f64,
+    /// The latency-clock component of `vnow` (wire charges excluded).
+    pub(crate) vclock: f64,
+    /// Cumulative virtual seconds charged for transmitted bytes
+    /// ([`LinkModel`]; stays 0.0 with no link rate configured, leaving
+    /// `vnow` bit-identical to the pre-link clock).
+    pub(crate) wire_secs: f64,
     /// Next virtual-time eval threshold (∞ when `eval_every_vsecs` = 0).
     pub(crate) next_eval_vtime: f64,
+    /// Shard geometry of θ (and the gradient): the unit of bandwidth
+    /// gating and byte accounting. `shards.count = 1` = whole-model.
+    pub(crate) store: ParamStore,
+    /// Finite-rate server link for wire-time charging.
+    pub(crate) link: LinkModel,
+    /// Scratch per-shard transmit mask, refilled per opportunity.
+    shard_mask: Vec<bool>,
+    /// Scratch composite gradient for partial (mixed-shard) pushes.
+    masked_buf: Vec<f32>,
     /// Every N iterations, measure the true B-Staleness Γ (eq. 3) by
     /// re-running the probed minibatch at the server parameters. 0 = off.
     pub(crate) probe_every: u64,
@@ -149,12 +167,16 @@ impl ProtocolCore {
         let cache = (cfg.bandwidth != BandwidthMode::Always
             && cfg.push_drop == PushDropMode::ReapplyCached)
             .then(|| GradientCache::new(lambda));
-        let bw = BandwidthPolicy::new(
+        let store = ParamStore::from_config(p, &cfg.shards);
+        let bw = BandwidthPolicy::with_shards(
             cfg.bandwidth.clone(),
             lambda,
+            store.count(),
             crate::rng::stream(cfg.seed, "bandwidth", 0),
         );
-        let acc = BandwidthAccounting::new(p as u64 * 4);
+        let acc =
+            BandwidthAccounting::with_shards(store.total_bytes(), store.count());
+        let link = LinkModel::from_config(&cfg.link);
         let barrier = cfg.policy.is_barrier();
         let core = Self {
             blocked: vec![false; lambda],
@@ -170,6 +192,12 @@ impl ProtocolCore {
             server_updates: 0,
             next_eval_ts: cfg.eval_every,
             vnow: 0.0,
+            vclock: 0.0,
+            wire_secs: 0.0,
+            store,
+            link,
+            shard_mask: Vec::new(),
+            masked_buf: Vec::new(),
             next_eval_vtime: if cfg.eval_every_vsecs > 0.0 {
                 cfg.eval_every_vsecs
             } else {
@@ -235,6 +263,36 @@ impl ProtocolCore {
         }
     }
 
+    /// Evaluate the bandwidth gate for one (client, direction)
+    /// opportunity, shard by shard in index order (the per-shard RNG
+    /// draws happen here, inside `complete_iteration`'s schedule-order
+    /// call, so both execution modes consume the bandwidth stream
+    /// identically). Fills `self.shard_mask`, books per-shard byte
+    /// accounting, and returns
+    /// `(any_transmitted, all_transmitted, shards_tx, bytes_tx)`.
+    fn gate_opportunity(
+        &mut self,
+        dir: Direction,
+        l: usize,
+    ) -> (bool, bool, u32, u64) {
+        let count = self.store.count();
+        self.shard_mask.clear();
+        let mut tx = 0u32;
+        let mut bytes = 0u64;
+        for s in 0..count {
+            let v = self.server.v_mean_shard(s);
+            let d = self.bw.decide(dir, l, s, v);
+            self.shard_mask.push(d);
+            if d {
+                tx += 1;
+                let b = self.store.shard_bytes(s);
+                bytes += b;
+                self.acc.record_shard(s, b);
+            }
+        }
+        (tx > 0, tx as usize == count, tx, bytes)
+    }
+
     /// Everything after the gradient: the paper §2.1 protocol with §2.3
     /// gating, in schedule order. `probe_xy` carries the minibatch for the
     /// B-Staleness probe (classification only); `probe_engine` recomputes
@@ -254,7 +312,8 @@ impl ProtocolCore {
         probe_engine: &mut dyn GradientEngine,
         vtime: Option<f64>,
     ) -> Result<ThetaReplaced> {
-        self.vnow = vtime.unwrap_or(self.vnow + 1.0);
+        self.vclock = vtime.unwrap_or(self.vclock + 1.0);
+        self.vnow = self.vclock + self.wire_secs;
         self.emit(Event::Selected {
             iter: self.iter,
             client: l,
@@ -294,28 +353,39 @@ impl ProtocolCore {
             }
         }
 
-        // 2. Push opportunity (paper §2.3 gate; Always mode always fires).
-        // Barrier policies force-transmit: a dropped push would park the
-        // client at the barrier with no future unblock and deadlock the scheduler
-        // (the config combination is also rejected up front by
+        // 2. Push opportunity (paper §2.3 gate; Always mode always fires),
+        // decided per shard — each chunk of the gradient is transmitted or
+        // dropped on its own statistics. Barrier policies force-transmit
+        // every shard: a dropped push would park the client at the barrier
+        // with no future unblock and deadlock the scheduler (the config
+        // combination is also rejected up front by
         // `ExperimentConfig::validate`; this is defense in depth for
         // hand-assembled simulators).
-        let push = if self.barrier {
-            true
+        let (push, push_all, push_shards, push_bytes) = if self.barrier {
+            let count = self.store.count();
+            self.shard_mask.clear();
+            self.shard_mask.resize(count, true);
+            for s in 0..count {
+                let b = self.store.shard_bytes(s);
+                self.acc.record_shard(s, b);
+            }
+            (true, true, count as u32, self.store.total_bytes())
         } else {
-            let v_mean = self.server.v_mean();
-            self.bw.decide(Direction::Push, l, v_mean)
+            self.gate_opportunity(Direction::Push, l)
         };
-        self.acc.record_push(push);
+        self.acc.record_push(push, push_bytes);
         self.emit(Event::Push {
             iter: self.iter,
             client: l,
             transmitted: push,
+            shards_tx: push_shards,
+            bytes: push_bytes,
             vtime: self.vnow,
         });
+        let mut wire_bytes = push_bytes;
 
         let mut outcome = None;
-        if push {
+        if push_all {
             // Accumulate mode folds any unsent gradients into this push.
             let acc_state = self.clients[l].accum.as_mut();
             if let Some(a) = acc_state.filter(|a| !a.is_empty()) {
@@ -334,6 +404,50 @@ impl ProtocolCore {
                     cache.store(l, grad, client_ts);
                 }
             }
+        } else if push {
+            // Partial push (some shards gated): the server receives the
+            // transmitted chunks of this gradient; each dropped chunk
+            // arrives as that client's cached chunk (reapply mode — the
+            // paper's per-shard reapply, no wire cost since the cache is
+            // server-side) or contributes nothing (skip). Accumulate with
+            // shards > 1 is rejected at validation, so no accumulator
+            // exists on this path.
+            let mut masked = std::mem::take(&mut self.masked_buf);
+            masked.clear();
+            masked.extend_from_slice(grad);
+            let cached = (self.cfg.push_drop == PushDropMode::ReapplyCached)
+                .then(|| self.cache.as_ref().and_then(|c| c.get(l)))
+                .flatten();
+            // The composite mixes ages; with one scalar timestamp per
+            // apply, the oldest constituent is the conservative choice
+            // (overstating τ shrinks the step — same direction as the
+            // partial-fetch rule below; per-shard timestamps are the
+            // finer-grained follow-up).
+            let mut apply_ts = client_ts;
+            for s in 0..self.store.count() {
+                if self.shard_mask[s] {
+                    continue;
+                }
+                let r = self.store.range(s);
+                if let Some((g, ts)) = cached {
+                    masked[r.clone()].copy_from_slice(&g[r]);
+                    apply_ts = apply_ts.min(ts);
+                } else {
+                    masked[r].fill(0.0);
+                }
+            }
+            let out = self.server.apply_update(&masked, apply_ts, l)?;
+            if let Some(cache) = &mut self.cache {
+                cache.store_shards(
+                    l,
+                    grad,
+                    client_ts,
+                    &self.shard_mask,
+                    &self.store,
+                );
+            }
+            self.masked_buf = masked;
+            outcome = Some(out);
         } else {
             match self.cfg.push_drop {
                 PushDropMode::ReapplyCached => {
@@ -381,10 +495,16 @@ impl ProtocolCore {
                     });
                 }
             }
-            // 3a. Sync barrier release: everyone fetches θ_{T}.
+            // 3a. Sync barrier release: everyone fetches θ_{T}. The
+            // broadcast is λ full-model server→client transmissions —
+            // metered like any fetch (actual = potential: barriers never
+            // gate) and charged wire time, so sync pays its real traffic
+            // on the virtual-time axis next to the async policies.
             if out.unblock_all {
                 let params = Arc::new(self.server.params().to_vec());
                 let ts = self.server.timestamp();
+                let lambda = self.clients.len() as u64;
+                let copy = self.store.total_bytes();
                 for (c, b) in
                     self.clients.iter_mut().zip(self.blocked.iter_mut())
                 {
@@ -392,10 +512,19 @@ impl ProtocolCore {
                     c.ts = ts;
                     *b = false; // barrier over: everyone schedulable again
                 }
+                for _ in 0..lambda {
+                    self.acc.record_fetch(true, copy);
+                }
+                for s in 0..self.store.count() {
+                    let b = self.store.shard_bytes(s);
+                    self.acc.record_shard(s, b * lambda);
+                }
+                wire_bytes += copy * lambda;
                 replaced = ThetaReplaced::All;
                 self.emit(Event::BarrierRelease {
                     iter: self.iter,
                     server_ts: ts,
+                    bytes: copy * lambda,
                     vtime: self.vnow,
                 });
             }
@@ -407,22 +536,56 @@ impl ProtocolCore {
                 self.blocked[l] = true;
             }
         } else {
-            // 3b. Fetch opportunity.
-            let fetch =
-                self.bw.decide(Direction::Fetch, l, self.server.v_mean());
-            self.acc.record_fetch(fetch);
+            // 3b. Fetch opportunity, gated per shard: the client refreshes
+            // exactly the chunks of θ the gate transmits.
+            let (fetch, fetch_all, fetch_shards, fetch_bytes) =
+                self.gate_opportunity(Direction::Fetch, l);
+            self.acc.record_fetch(fetch, fetch_bytes);
             self.emit(Event::Fetch {
                 iter: self.iter,
                 client: l,
                 transmitted: fetch,
+                shards_tx: fetch_shards,
+                bytes: fetch_bytes,
                 vtime: self.vnow,
             });
-            if fetch {
+            wire_bytes += fetch_bytes;
+            if fetch_all {
                 let client = &mut self.clients[l];
                 client.theta = Arc::new(self.server.params().to_vec());
                 client.ts = self.server.timestamp();
                 replaced = ThetaReplaced::Client;
+            } else if fetch {
+                // Partial fetch: overwrite only the transmitted ranges.
+                // The scalar staleness timestamp j stays put — the copy
+                // still holds chunks from the older fetch, and overstating
+                // τ is the conservative direction for every staleness
+                // penalty (per-shard timestamps are the finer-grained
+                // follow-up).
+                let mut theta = (*self.clients[l].theta).clone();
+                for s in 0..self.store.count() {
+                    if self.shard_mask[s] {
+                        let r = self.store.range(s);
+                        theta[r.clone()]
+                            .copy_from_slice(&self.server.params()[r]);
+                    }
+                }
+                self.clients[l].theta = Arc::new(theta);
+                replaced = ThetaReplaced::Client;
             }
+        }
+
+        // 3c. Wire time: the bytes this iteration actually transmitted
+        // occupy the server's finite-rate link for `bytes / rate` virtual
+        // seconds ([`LinkModel`]). Charged in schedule order, after this
+        // iteration's events and before the eval cadence, so a fully
+        // gated opportunity costs ~0 wire time, a partial one costs
+        // proportionally, and both execution modes stay bitwise
+        // identical. With no link rate configured the charge is exactly
+        // 0.0 and `vnow` is untouched.
+        if self.link.enabled() {
+            self.wire_secs += self.link.wire_secs(wire_bytes);
+            self.vnow = self.vclock + self.wire_secs;
         }
 
         // 4. Validation cadence (in server updates, like the paper's plots).

@@ -5,10 +5,21 @@
 /// of the iteration that emitted it ([`crate::sim::clock`]; with delay
 /// models disabled the clock degenerates to 1 virtual second per
 /// iteration, so `vtime` still orders and spaces events sensibly).
+/// `Push`/`Fetch` additionally carry the wire cost of the opportunity:
+/// how many parameter shards were transmitted and the bytes they put on
+/// the wire (`transmitted` = any shard went out; a partial transmission
+/// has `0 < shards_tx < shards.count`).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Event {
     Selected { iter: u64, client: usize, vtime: f64 },
-    Push { iter: u64, client: usize, transmitted: bool, vtime: f64 },
+    Push {
+        iter: u64,
+        client: usize,
+        transmitted: bool,
+        shards_tx: u32,
+        bytes: u64,
+        vtime: f64,
+    },
     Applied {
         iter: u64,
         client: usize,
@@ -16,8 +27,17 @@ pub enum Event {
         reapplied: bool,
         vtime: f64,
     },
-    Fetch { iter: u64, client: usize, transmitted: bool, vtime: f64 },
-    BarrierRelease { iter: u64, server_ts: u64, vtime: f64 },
+    Fetch {
+        iter: u64,
+        client: usize,
+        transmitted: bool,
+        shards_tx: u32,
+        bytes: u64,
+        vtime: f64,
+    },
+    /// Sync barrier release: θ_T broadcast to all λ clients. `bytes` is
+    /// the wire cost of that broadcast (λ full-model copies).
+    BarrierRelease { iter: u64, server_ts: u64, bytes: u64, vtime: f64 },
     Eval { iter: u64, server_ts: u64, vtime: f64 },
 }
 
@@ -114,7 +134,14 @@ mod tests {
     fn vtime_accessor_covers_all_variants() {
         let evs = [
             Event::Selected { iter: 1, client: 0, vtime: 1.5 },
-            Event::Push { iter: 1, client: 0, transmitted: true, vtime: 1.5 },
+            Event::Push {
+                iter: 1,
+                client: 0,
+                transmitted: true,
+                shards_tx: 1,
+                bytes: 64,
+                vtime: 1.5,
+            },
             Event::Applied {
                 iter: 1,
                 client: 0,
@@ -126,9 +153,16 @@ mod tests {
                 iter: 1,
                 client: 0,
                 transmitted: false,
+                shards_tx: 0,
+                bytes: 0,
                 vtime: 1.5,
             },
-            Event::BarrierRelease { iter: 1, server_ts: 1, vtime: 1.5 },
+            Event::BarrierRelease {
+                iter: 1,
+                server_ts: 1,
+                bytes: 256,
+                vtime: 1.5,
+            },
             Event::Eval { iter: 1, server_ts: 1, vtime: 1.5 },
         ];
         assert!(evs.iter().all(|e| e.vtime() == 1.5));

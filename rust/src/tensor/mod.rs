@@ -6,6 +6,12 @@
 //! update in [`ops::fasgd_update_fused`] is the single hottest L3 function
 //! (it touches 5×P floats per server update) and is benchmarked and tuned in
 //! EXPERIMENTS.md §Perf against the AOT Pallas artifact for the same math.
+//!
+//! Sharded access: every kernel here takes plain subslices, so the sharded
+//! parameter plane ([`crate::server::ParamStore`] shard views over θ and
+//! the same-shaped `n`/`b`/`v`/gradient tracks) composes with them
+//! directly — the per-shard FASGD apply is `fasgd_update_fused` over
+//! `ParamStore::view_mut` ranges, no new kernels needed.
 
 pub mod ops;
 pub mod stats;

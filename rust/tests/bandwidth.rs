@@ -30,6 +30,25 @@ fn c_zero_transmits_everything() {
     let s = gated(0.0, 0.0, PushDropMode::ReapplyCached);
     assert_eq!(s.bandwidth.push_copies, s.bandwidth.push_potential);
     assert_eq!(s.bandwidth.fetch_copies, s.bandwidth.fetch_potential);
+    // Ungated, the gated byte total equals the raw total.
+    assert_eq!(s.bandwidth.total_bytes(), s.bandwidth.potential_bytes());
+}
+
+#[test]
+fn byte_totals_make_reduction_checkable() {
+    // The 5×-reduction claim is raw_bytes / gated_bytes; both totals are
+    // first-class in the report (and RunSummary.to_json). Whole-model
+    // gating is all-or-nothing, so bytes must also reconcile with the
+    // copy counters exactly.
+    let s = gated(0.3, 0.6, PushDropMode::ReapplyCached);
+    let b = &s.bandwidth;
+    assert_eq!(b.push_bytes, b.push_copies * b.bytes_per_copy);
+    assert_eq!(b.fetch_bytes, b.fetch_copies * b.bytes_per_copy);
+    assert!(b.total_bytes() < b.potential_bytes());
+    assert!(b.reduction_factor() > 1.0);
+    // One shard by default: all traffic lands in its counter.
+    assert_eq!(b.shard_bytes.len(), 1);
+    assert_eq!(b.shard_bytes[0], b.total_bytes());
 }
 
 #[test]

@@ -38,10 +38,10 @@ fn fmt_event(e: &Event) -> String {
         Event::Selected { iter, client, vtime } => {
             format!("selected iter={iter} client={client} vtime={vtime:?}")
         }
-        Event::Push { iter, client, transmitted, vtime } => {
+        Event::Push { iter, client, transmitted, shards_tx, bytes, vtime } => {
             format!(
                 "push iter={iter} client={client} tx={transmitted} \
-                 vtime={vtime:?}"
+                 shards={shards_tx} bytes={bytes} vtime={vtime:?}"
             )
         }
         Event::Applied { iter, client, tau, reapplied, vtime } => {
@@ -50,14 +50,17 @@ fn fmt_event(e: &Event) -> String {
                  reapplied={reapplied} vtime={vtime:?}"
             )
         }
-        Event::Fetch { iter, client, transmitted, vtime } => {
+        Event::Fetch { iter, client, transmitted, shards_tx, bytes, vtime } => {
             format!(
                 "fetch iter={iter} client={client} tx={transmitted} \
-                 vtime={vtime:?}"
+                 shards={shards_tx} bytes={bytes} vtime={vtime:?}"
             )
         }
-        Event::BarrierRelease { iter, server_ts, vtime } => {
-            format!("barrier_release iter={iter} T={server_ts} vtime={vtime:?}")
+        Event::BarrierRelease { iter, server_ts, bytes, vtime } => {
+            format!(
+                "barrier_release iter={iter} T={server_ts} bytes={bytes} \
+                 vtime={vtime:?}"
+            )
         }
         Event::Eval { iter, server_ts, vtime } => {
             format!("eval iter={iter} T={server_ts} vtime={vtime:?}")
@@ -180,6 +183,30 @@ fn golden_barrier_sync() {
     cfg.iters = 48;
     cfg.eval_every = 4;
     check_scenario("barrier_sync", &cfg);
+}
+
+#[test]
+fn golden_sharded_link() {
+    // The sharded parameter plane: per-shard gate draws, partial
+    // push/fetch byte counts, and wire-time charging on a finite-rate
+    // link — locks the per-shard protocol stream and every byte-derived
+    // virtual timestamp.
+    let mut cfg = fast_test_config(Policy::Fasgd);
+    cfg.name = "golden_sharded_link".into();
+    cfg.seed = 2027;
+    cfg.clients = 4;
+    cfg.iters = 48;
+    cfg.eval_every = 16;
+    cfg.shards.count = 4;
+    cfg.bandwidth = BandwidthMode::Probabilistic {
+        c_push: 0.3,
+        c_fetch: 0.6,
+        eps: 1e-8,
+    };
+    // Small enough that wire time is visible next to the 1.0/iteration
+    // degenerate clock.
+    cfg.link.rate_bytes_per_vsec = 1e6;
+    check_scenario("sharded_link", &cfg);
 }
 
 #[test]

@@ -36,7 +36,7 @@ fn fingerprint(s: &RunSummary) -> String {
     }
     out.push_str(&format!("vsecs {:?}\n", s.virtual_secs.to_bits()));
     out.push_str(&format!(
-        "updates {} staleness {} {} {} bw {} {} {} {}\n",
+        "updates {} staleness {} {} {} bw {} {} {} {} bytes {} {} {:?}\n",
         s.server_updates,
         s.staleness.total(),
         s.staleness.max(),
@@ -44,7 +44,10 @@ fn fingerprint(s: &RunSummary) -> String {
         s.bandwidth.push_copies,
         s.bandwidth.push_potential,
         s.bandwidth.fetch_copies,
-        s.bandwidth.fetch_potential
+        s.bandwidth.fetch_potential,
+        s.bandwidth.push_bytes,
+        s.bandwidth.fetch_bytes,
+        s.bandwidth.shard_bytes
     ));
     out
 }
@@ -66,17 +69,22 @@ fn assert_equivalent(cfg: &ExperimentConfig, workers: usize) {
 
 #[test]
 fn bitwise_equal_across_seeds_policies_and_gating() {
-    // ≥ 3 seeds × {fasgd, asgd, sasgd} × {always, gated}.
+    // ≥ 3 seeds × {fasgd, asgd, sasgd} × {always, gated}. The
+    // probabilistic (eq. 9) gate needs the server's v statistics, so it
+    // pairs with fasgd only; the statistics-free policies take the Dean'12
+    // fixed-period gate (validate() rejects the old silent pairing).
     for seed in [7u64, 21, 1234] {
         for policy in [Policy::Fasgd, Policy::Asgd, Policy::Sasgd] {
-            for bandwidth in [
-                BandwidthMode::Always,
+            let gated = if policy == Policy::Fasgd {
                 BandwidthMode::Probabilistic {
                     c_push: 0.3,
                     c_fetch: 0.6,
                     eps: 1e-8,
-                },
-            ] {
+                }
+            } else {
+                BandwidthMode::Fixed { k_push: 2, k_fetch: 3 }
+            };
+            for bandwidth in [BandwidthMode::Always, gated] {
                 let mut cfg = small_cfg(policy.clone(), seed);
                 cfg.bandwidth = bandwidth;
                 assert_equivalent(&cfg, 3);

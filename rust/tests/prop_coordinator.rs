@@ -38,16 +38,31 @@ fn arb_config(rng: &mut Xoshiro256pp) -> ExperimentConfig {
             k_push: 1 + rng.below(4) as u32,
             k_fetch: 1 + rng.below(4) as u32,
         },
-        _ => BandwidthMode::Probabilistic {
+        // Eq. 9 gates on v statistics, which only fasgd exposes —
+        // validate() rejects the pairing for the other policies, so they
+        // draw a fixed-period gate instead.
+        _ if cfg.policy == Policy::Fasgd => BandwidthMode::Probabilistic {
             c_push: rng.f64() * 0.5,
             c_fetch: rng.f64() * 2.0,
             eps: 1e-8,
+        },
+        _ => BandwidthMode::Fixed {
+            k_push: 1 + rng.below(3) as u32,
+            k_fetch: 1 + rng.below(3) as u32,
         },
     };
     cfg.push_drop = match rng.below(3) {
         0 => PushDropMode::ReapplyCached,
         1 => PushDropMode::Accumulate,
         _ => PushDropMode::Skip,
+    };
+    // The sharded parameter plane must uphold every invariant too;
+    // accumulate mode is whole-model only (validate() rejects it with
+    // shards > 1).
+    cfg.shards.count = if cfg.push_drop == PushDropMode::Accumulate {
+        1
+    } else {
+        [1, 1, 4, 7][rng.below(4) as usize]
     };
     cfg.fasgd.inverse_variant = rng.below(2) == 1;
     // Execution mode must not matter to any protocol invariant: mix the

@@ -1,0 +1,361 @@
+//! The sharded parameter plane (PR 5): shard-tiling properties, the
+//! serial↔parallel bitwise contract over shard counts × bandwidth modes ×
+//! in-flight depths, per-shard byte accounting, and wire-time charging on
+//! the finite-rate server link.
+
+use fasgd::config::{BandwidthMode, ExperimentConfig, Policy, PushDropMode};
+use fasgd::experiments::common::{build_parallel_sim, build_sim,
+                                 fast_test_config};
+use fasgd::metrics::RunSummary;
+use fasgd::rng::Xoshiro256pp;
+use fasgd::server::ParamStore;
+use fasgd::sim::{Event, Simulation};
+
+// ---------------------------------------------------------------------------
+// ParamStore geometry: shards tile θ exactly.
+
+#[test]
+fn prop_shards_tile_theta_exactly() {
+    // Randomized (p, count) pairs, plus the adversarial edges: shards
+    // must cover every index exactly once, in order, with the uneven
+    // tail spread over the leading shards.
+    let mut rng = Xoshiro256pp::new(0x5A4D);
+    let mut cases: Vec<(usize, usize)> = vec![
+        (0, 1),
+        (0, 7),
+        (1, 1),
+        (1, 5),
+        (7, 7),
+        (7, 8), // count > p clamps
+        (10, 4),
+        (159_010, 7), // the paper MLP's P, uneven
+    ];
+    for _ in 0..200 {
+        let p = rng.below(10_000) as usize;
+        let count = 1 + rng.below(64) as usize;
+        cases.push((p, count));
+    }
+    for (p, count) in cases {
+        let ps = ParamStore::new(p, count, 4);
+        assert!(ps.count() >= 1 && ps.count() <= count.max(1));
+        let mut next = 0usize;
+        let mut sizes = Vec::new();
+        for s in 0..ps.count() {
+            let r = ps.range(s);
+            assert_eq!(r.start, next, "gap/overlap at shard {s} (p={p})");
+            next = r.end;
+            sizes.push(r.len());
+            assert_eq!(ps.len(s), r.len());
+            assert_eq!(ps.shard_bytes(s), r.len() as u64 * 4);
+        }
+        assert_eq!(next, p, "shards do not cover θ (p={p}, count={count})");
+        // Uneven tail: sizes differ by at most one, non-increasing.
+        let (min, max) = (
+            *sizes.iter().min().unwrap(),
+            *sizes.iter().max().unwrap(),
+        );
+        assert!(max - min <= 1, "{sizes:?}");
+        assert!(sizes.windows(2).all(|w| w[0] >= w[1]), "{sizes:?}");
+        let total: u64 = (0..ps.count()).map(|s| ps.shard_bytes(s)).sum();
+        assert_eq!(total, ps.total_bytes());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bitwise serial↔parallel equality over the sharding matrix.
+
+fn fingerprint(s: &RunSummary) -> String {
+    let mut out = String::new();
+    for p in &s.history.evals {
+        out.push_str(&format!(
+            "eval {} {} {:?} {:?} {:?}\n",
+            p.iter,
+            p.server_ts,
+            p.vtime.to_bits(),
+            p.val_loss.to_bits(),
+            p.val_acc.to_bits()
+        ));
+    }
+    out.push_str(&format!("vsecs {:?}\n", s.virtual_secs.to_bits()));
+    out.push_str(&format!(
+        "updates {} bw {} {} {} {} bytes {} {} shard_bytes {:?}\n",
+        s.server_updates,
+        s.bandwidth.push_copies,
+        s.bandwidth.push_potential,
+        s.bandwidth.fetch_copies,
+        s.bandwidth.fetch_potential,
+        s.bandwidth.push_bytes,
+        s.bandwidth.fetch_bytes,
+        s.bandwidth.shard_bytes
+    ));
+    out
+}
+
+fn sharded_cfg(shards: usize, bandwidth: BandwidthMode) -> ExperimentConfig {
+    let mut cfg = fast_test_config(Policy::Fasgd);
+    cfg.seed = 71;
+    cfg.clients = 5;
+    cfg.iters = 250;
+    cfg.eval_every = 50;
+    cfg.shards.count = shards;
+    cfg.bandwidth = bandwidth;
+    cfg
+}
+
+#[test]
+fn bitwise_equal_across_shard_counts_modes_and_inflight() {
+    // shards.count ∈ {1, 4, 7} × bandwidth modes × --inflight {1, 8}: the
+    // per-shard gate draws happen inside complete_iteration in schedule
+    // order, so the pipelined dispatcher must replay them exactly —
+    // including partial (mixed-shard) pushes and fetches.
+    let workers = 4;
+    for shards in [1usize, 4, 7] {
+        for bandwidth in [
+            BandwidthMode::Always,
+            BandwidthMode::Fixed { k_push: 2, k_fetch: 3 },
+            BandwidthMode::Probabilistic {
+                c_push: 0.3,
+                c_fetch: 0.6,
+                eps: 1e-8,
+            },
+        ] {
+            let cfg = sharded_cfg(shards, bandwidth.clone());
+            let serial = build_sim(&cfg).unwrap().run().unwrap();
+            let want = fingerprint(&serial);
+            for inflight in [1usize, 8] {
+                let mut cfg = cfg.clone();
+                cfg.inflight = inflight;
+                let parallel = build_parallel_sim(&cfg, workers)
+                    .unwrap()
+                    .run()
+                    .unwrap();
+                assert_eq!(
+                    want,
+                    fingerprint(&parallel),
+                    "serial != parallel for shards={shards} \
+                     bw={bandwidth:?} inflight={inflight}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn bitwise_equal_sharded_with_link_and_delays() {
+    // Wire-time charging + the virtual clock + sharded gating together:
+    // vnow = latency clock + cumulative wire seconds, all in schedule
+    // order — both execution modes must agree on every bit.
+    let mut cfg = sharded_cfg(
+        4,
+        BandwidthMode::Probabilistic { c_push: 0.3, c_fetch: 0.6, eps: 1e-8 },
+    );
+    cfg.link.rate_bytes_per_vsec = 5e5;
+    cfg.delay.compute = fasgd::config::DelayModel::Bimodal {
+        straggler_frac: 0.25,
+        slow_mult: 4.0,
+    };
+    cfg.eval_every_vsecs = 25.0;
+    let serial = build_sim(&cfg).unwrap().run().unwrap();
+    let parallel = build_parallel_sim(&cfg, 4).unwrap().run().unwrap();
+    assert_eq!(fingerprint(&serial), fingerprint(&parallel));
+    // The wire charge is visible on the time axis: the same run without a
+    // link rate simulates strictly fewer virtual seconds.
+    let mut no_link = cfg.clone();
+    no_link.link.rate_bytes_per_vsec = 0.0;
+    let baseline = build_sim(&no_link).unwrap().run().unwrap();
+    assert!(
+        serial.virtual_secs > baseline.virtual_secs,
+        "wire charges missing from the clock: {} vs {}",
+        serial.virtual_secs,
+        baseline.virtual_secs
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Byte accounting and the bandwidth-vs-time axis.
+
+#[test]
+fn gated_run_moves_fewer_bytes_and_less_wire_time_than_always() {
+    // The acceptance bar: a B-FASGD run shows gated bytes-on-wire <
+    // `always`-mode bytes, and with a finite-rate link the saving lands
+    // on the virtual-time axis (delays off ⇒ vnow = iters + wire secs).
+    let rate = 2e5;
+    let mk = |bandwidth| {
+        let mut cfg = sharded_cfg(4, bandwidth);
+        cfg.link.rate_bytes_per_vsec = rate;
+        cfg
+    };
+    let always = build_sim(&mk(BandwidthMode::Always)).unwrap().run().unwrap();
+    let gated = build_sim(&mk(BandwidthMode::Probabilistic {
+        c_push: 0.5,
+        c_fetch: 1.0,
+        eps: 1e-8,
+    }))
+    .unwrap()
+    .run()
+    .unwrap();
+
+    assert_eq!(
+        always.bandwidth.total_bytes(),
+        always.bandwidth.potential_bytes(),
+        "always mode transmits everything"
+    );
+    assert!(
+        gated.bandwidth.total_bytes() < always.bandwidth.total_bytes(),
+        "gated {} !< always {}",
+        gated.bandwidth.total_bytes(),
+        always.bandwidth.total_bytes()
+    );
+
+    // Virtual-time cost reflects exactly the transmitted bytes.
+    for s in [&always, &gated] {
+        let wire = s.bandwidth.total_bytes() as f64 / rate;
+        let expect = s.iters as f64 + wire;
+        assert!(
+            (s.virtual_secs - expect).abs() < 1e-6 * expect.max(1.0),
+            "vsecs {} != iters + bytes/rate {}",
+            s.virtual_secs,
+            expect
+        );
+    }
+    assert!(gated.virtual_secs < always.virtual_secs);
+}
+
+#[test]
+fn partial_transmissions_show_up_in_events_and_accounting() {
+    // With several shards under the probabilistic gate, opportunities
+    // where some-but-not-all shards transmit must appear, their byte
+    // counts must be partial, and the event stream must reconcile with
+    // the report's byte totals exactly.
+    let cfg = sharded_cfg(
+        4,
+        BandwidthMode::Probabilistic { c_push: 0.3, c_fetch: 0.6, eps: 1e-8 },
+    );
+    let iters = cfg.iters;
+    let mut sim = Simulation::builder(cfg).trace(1 << 14).build().unwrap();
+    sim.run_until(iters).unwrap();
+    let events = sim.trace().events();
+
+    let mut push_bytes = 0u64;
+    let mut fetch_bytes = 0u64;
+    let mut partial = 0u64;
+    let mut full_copy_bytes = None;
+    for e in events {
+        match e {
+            Event::Push { shards_tx, bytes, transmitted, .. } => {
+                push_bytes += bytes;
+                assert_eq!(transmitted, shards_tx > 0);
+                if shards_tx == 4 {
+                    full_copy_bytes = Some(bytes);
+                }
+                if shards_tx > 0 && shards_tx < 4 {
+                    partial += 1;
+                    assert!(bytes > 0);
+                }
+            }
+            Event::Fetch { shards_tx, bytes, transmitted, .. } => {
+                fetch_bytes += bytes;
+                assert_eq!(transmitted, shards_tx > 0);
+                if let Some(full) = full_copy_bytes {
+                    if shards_tx > 0 && shards_tx < 4 {
+                        assert!(bytes < full, "partial must cost < a copy");
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    assert!(
+        partial > 0,
+        "expected mixed-shard pushes under per-shard gating"
+    );
+    // The event stream and the accounting agree byte for byte. run() on
+    // the finished sim adds only eval points (iterations are done), so
+    // the byte counters are exactly what the events recorded.
+    let summary = sim.run().unwrap();
+    assert_eq!(summary.bandwidth.push_bytes, push_bytes);
+    assert_eq!(summary.bandwidth.fetch_bytes, fetch_bytes);
+    let shard_total: u64 = summary.bandwidth.shard_bytes.iter().sum();
+    assert_eq!(shard_total, push_bytes + fetch_bytes);
+    assert_eq!(summary.bandwidth.shard_bytes.len(), 4);
+}
+
+#[test]
+fn single_shard_no_link_is_the_legacy_protocol() {
+    // shards.count = 1 with no link rate must behave exactly like the
+    // pre-shard protocol: every opportunity is all-or-nothing, vnow stays
+    // the degenerate 1.0/iteration clock, and bytes reconcile with the
+    // copy counters.
+    let cfg = sharded_cfg(
+        1,
+        BandwidthMode::Probabilistic { c_push: 0.3, c_fetch: 0.6, eps: 1e-8 },
+    );
+    let s = build_sim(&cfg).unwrap().run().unwrap();
+    assert_eq!(s.virtual_secs, s.iters as f64, "no wire charges");
+    let b = &s.bandwidth;
+    assert_eq!(b.push_bytes, b.push_copies * b.bytes_per_copy);
+    assert_eq!(b.fetch_bytes, b.fetch_copies * b.bytes_per_copy);
+    assert_eq!(b.shard_bytes, vec![b.total_bytes()]);
+}
+
+#[test]
+fn barrier_broadcast_is_metered() {
+    // A sync release hands θ_T to all λ clients: that broadcast is λ
+    // fetch transmissions on the wire, not free — otherwise the vsecs
+    // axis would be biased toward barrier policies.
+    let mut cfg = fast_test_config(Policy::Sync);
+    cfg.clients = 4;
+    cfg.iters = 240; // 60 full barrier cycles
+    let s = build_sim(&cfg).unwrap().run().unwrap();
+    let copy = s.bandwidth.bytes_per_copy;
+    assert_eq!(s.bandwidth.push_bytes, s.iters * copy, "forced pushes");
+    assert_eq!(s.bandwidth.fetch_copies, s.bandwidth.fetch_potential);
+    assert_eq!(
+        s.bandwidth.fetch_bytes,
+        s.server_updates * cfg.clients as u64 * copy,
+        "each release broadcasts λ copies"
+    );
+}
+
+#[test]
+fn sharded_fasgd_still_learns() {
+    // Gating chunks independently must not break convergence at mild c.
+    let mut cfg = sharded_cfg(
+        7,
+        BandwidthMode::Probabilistic { c_push: 0.1, c_fetch: 0.3, eps: 1e-8 },
+    );
+    cfg.iters = 600;
+    let s = build_sim(&cfg).unwrap().run().unwrap();
+    let first = s.history.evals.first().unwrap().val_loss;
+    let last = s.final_val_loss();
+    assert!(last < first, "no learning under sharded gating: {first} -> {last}");
+}
+
+// ---------------------------------------------------------------------------
+// Validation fences.
+
+#[test]
+fn probabilistic_rejected_without_v_stats() {
+    let mut cfg = fast_test_config(Policy::Asgd);
+    cfg.bandwidth = BandwidthMode::Probabilistic {
+        c_push: 0.3,
+        c_fetch: 0.0,
+        eps: 1e-8,
+    };
+    let err = build_sim(&cfg).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("statistics"), "{msg}");
+    assert!(msg.contains("fasgd"), "should name supporting policies: {msg}");
+}
+
+#[test]
+fn sharding_config_fences() {
+    let mut cfg = fast_test_config(Policy::Fasgd);
+    cfg.shards.count = 4;
+    cfg.push_drop = PushDropMode::Accumulate;
+    assert!(build_sim(&cfg).is_err(), "accumulate is whole-model only");
+    cfg.push_drop = PushDropMode::Skip;
+    build_sim(&cfg).unwrap();
+    cfg.shards.count = 0;
+    assert!(build_sim(&cfg).is_err());
+}
