@@ -1,0 +1,133 @@
+//! repro-lint: the determinism lint (rules D001–D005, see
+//! [`fasgd::lint`] and ROADMAP.md "Determinism rules").
+//!
+//! Usage:
+//!   repro_lint [--all-rules] [--explain] [PATH ...]
+//!
+//! With no paths, lints the crate's `src/` tree (found relative to the
+//! working directory: `src/` or `rust/src/`) with path-scoped rules.
+//! Explicit paths may be files or directories; files outside a `src/`
+//! tree (e.g. `tests/lint_fixtures/`) get every rule applied, which is
+//! what the fixture tests rely on. Exits nonzero iff findings exist.
+
+use fasgd::lint;
+use std::path::{Path, PathBuf};
+
+fn main() {
+    std::process::exit(real_main());
+}
+
+fn real_main() -> i32 {
+    let mut all_rules = false;
+    let mut explain = false;
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--all-rules" => all_rules = true,
+            "--explain" => explain = true,
+            "--help" | "-h" => {
+                print_help();
+                return 0;
+            }
+            other if other.starts_with("--") => {
+                eprintln!("repro-lint: unknown flag {other}");
+                return 2;
+            }
+            other => paths.push(PathBuf::from(other)),
+        }
+    }
+    if explain {
+        for (code, what) in lint::RULEBOOK {
+            println!("{code}: {what}");
+        }
+        return 0;
+    }
+    if paths.is_empty() {
+        match default_src_root() {
+            Some(root) => paths.push(root),
+            None => {
+                eprintln!(
+                    "repro-lint: no src/ tree found from the working \
+                     directory; pass paths explicitly"
+                );
+                return 2;
+            }
+        }
+    }
+
+    let mut findings = Vec::new();
+    let mut files_scanned = 0usize;
+    for path in &paths {
+        let result = if path.is_dir() {
+            files_scanned += count_rs(path);
+            lint::lint_tree(path)
+        } else {
+            files_scanned += 1;
+            lint::lint_file(path, all_rules)
+        };
+        match result {
+            Ok(f) => findings.extend(f),
+            Err(e) => {
+                eprintln!("repro-lint: {e:#}");
+                return 2;
+            }
+        }
+    }
+
+    for f in &findings {
+        println!("{f}");
+    }
+    if findings.is_empty() {
+        println!("repro-lint: clean ({files_scanned} files)");
+        0
+    } else {
+        println!(
+            "repro-lint: {} finding(s) in {files_scanned} files \
+             (run with --explain for the rulebook)",
+            findings.len()
+        );
+        1
+    }
+}
+
+/// `src/` when run from `rust/` (the CI working directory), `rust/src/`
+/// from the repo root. The lint module marker pins the right tree.
+fn default_src_root() -> Option<PathBuf> {
+    for cand in ["src", "rust/src"] {
+        let p = Path::new(cand);
+        if p.join("lint/mod.rs").is_file() {
+            return Some(p.to_path_buf());
+        }
+    }
+    None
+}
+
+fn count_rs(dir: &Path) -> usize {
+    let mut n = 0;
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for entry in entries.flatten() {
+            let p = entry.path();
+            if p.is_dir() {
+                n += count_rs(&p);
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                n += 1;
+            }
+        }
+    }
+    n
+}
+
+fn print_help() {
+    println!(
+        "repro-lint: determinism lint for the bitwise serial<->parallel \
+         contract\n\n\
+         usage: repro_lint [--all-rules] [--explain] [PATH ...]\n\n\
+         \x20 (no paths)   lint the crate src/ tree, rules scoped by path\n\
+         \x20 PATH ...     lint files/directories; files outside a src/ \
+         tree get all rules\n\
+         \x20 --all-rules  apply every rule regardless of path\n\
+         \x20 --explain    print the rulebook (D001-D005) and exit\n\n\
+         suppress per site with: // lint:allow(Dxxx, reason) on the \
+         flagged line or the line above"
+    );
+}

@@ -1,0 +1,94 @@
+//! The `--rng-audit` harness: run the same fixed-seed config twice —
+//! serial reference (`workers = 1`) and the pipelined parallel dispatcher
+//! — with the RNG draw ledger recording
+//! ([`crate::rng::ledger`]), then diff the ledgers. A stream-discipline
+//! violation fails here with the first diverging `(stream, call_site)`
+//! instead of surfacing as an unexplained bitwise mismatch downstream.
+//!
+//! Both runs execute on the calling thread's ledger: gradient workers
+//! never draw RNG (all protocol decisions, batch draws included, happen
+//! on the coordinator), so a thread-local ledger captures every draw.
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::metrics::RunSummary;
+use crate::rng::ledger::{self, Divergence, DrawLedger};
+use crate::sim::Simulation;
+
+/// Outcome of one serial-vs-parallel ledger audit.
+#[derive(Debug)]
+pub struct AuditReport {
+    pub serial: DrawLedger,
+    pub parallel: DrawLedger,
+    pub divergence: Option<Divergence>,
+    /// Worker count the parallel leg ran with.
+    pub workers: usize,
+    /// Final val loss of each leg (bitwise contract says they match).
+    pub serial_loss: f64,
+    pub parallel_loss: f64,
+}
+
+impl AuditReport {
+    pub fn passed(&self) -> bool {
+        self.divergence.is_none()
+    }
+
+    /// Human-readable verdict for the CLI.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "rng-audit: serial {} draws / {} streams, parallel ({} \
+             workers) {} draws / {} streams\n",
+            self.serial.total_draws(),
+            self.serial.stream_count(),
+            self.workers,
+            self.parallel.total_draws(),
+            self.parallel.stream_count(),
+        );
+        match &self.divergence {
+            None => out.push_str("rng-audit: PASS — ledgers identical"),
+            Some(d) => {
+                out.push_str(&format!("rng-audit: FAIL — {d}"));
+            }
+        }
+        out
+    }
+}
+
+fn run_with_ledger(
+    cfg: ExperimentConfig,
+) -> (Result<RunSummary>, DrawLedger) {
+    ledger::begin();
+    let result = Simulation::builder(cfg).build().and_then(|s| s.run());
+    // end() runs even when the leg errors, so a failed audit never leaves
+    // a recording ledger behind on this thread.
+    (result, ledger::end())
+}
+
+/// Run the audit on `cfg`: serial leg forces `workers = 1`, parallel leg
+/// keeps `cfg.workers` (bumped to 2 if the config was serial) and the
+/// configured dispatcher (pipelined by default).
+pub fn run_rng_audit(cfg: &ExperimentConfig) -> Result<AuditReport> {
+    let mut serial_cfg = cfg.clone();
+    serial_cfg.workers = 1;
+    let mut parallel_cfg = cfg.clone();
+    if parallel_cfg.workers <= 1 {
+        parallel_cfg.workers = 2;
+    }
+    let workers = parallel_cfg.workers;
+
+    let (serial_run, serial) = run_with_ledger(serial_cfg);
+    let serial_run = serial_run?;
+    let (parallel_run, parallel) = run_with_ledger(parallel_cfg);
+    let parallel_run = parallel_run?;
+
+    let divergence = ledger::diff(&serial, &parallel);
+    Ok(AuditReport {
+        serial,
+        parallel,
+        divergence,
+        workers,
+        serial_loss: serial_run.final_val_loss(),
+        parallel_loss: parallel_run.final_val_loss(),
+    })
+}

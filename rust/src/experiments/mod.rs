@@ -3,6 +3,7 @@
 //! ([`lr_sweep`]). Each harness returns the same rows/series the paper
 //! reports and is callable from the CLI, the benches, and the examples.
 
+pub mod audit;
 pub mod common;
 pub mod fig1;
 pub mod fig2;

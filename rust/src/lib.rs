@@ -24,6 +24,7 @@ pub mod config;
 pub mod data;
 pub mod experiments;
 pub mod grad;
+pub mod lint;
 pub mod live;
 pub mod metrics;
 pub mod rng;

@@ -1,0 +1,99 @@
+//! `repro-lint` — the in-tree determinism lint (static half of the
+//! serial↔parallel contract; the dynamic half is the draw ledger in
+//! [`crate::rng::ledger`]).
+//!
+//! The bitwise serial↔parallel guarantee rests on discipline the compiler
+//! cannot check: named RNG streams drawn in schedule order, no
+//! unordered-map iteration in protocol code, no wall-clock reads in the
+//! simulator, no panics on the paths the concurrent server will make
+//! multi-writer. This module machine-checks that discipline with a
+//! token-level scanner ([`scanner`]) and a numbered rulebook
+//! ([`rules::RULEBOOK`], D001–D005), with per-site
+//! `// lint:allow(Dxxx, reason)` suppressions that must carry a reason.
+//!
+//! Run it as `cargo run --bin repro_lint` (CI runs it blocking), or call
+//! [`lint_tree`] / [`lint_file`] from tests.
+
+pub mod rules;
+pub mod scanner;
+
+pub use rules::{lint_source, scope_for, Finding, Scope, RULEBOOK};
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Lint every `.rs` file under `root` (a `src/` tree), scoping rules by
+/// path relative to `root`. Files are visited in sorted order so output
+/// and exit status are deterministic.
+pub fn lint_tree(root: &Path) -> Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)
+        .with_context(|| format!("walking {}", root.display()))?;
+    files.sort();
+    let mut findings = Vec::new();
+    for path in files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        findings.extend(rules::lint_source(&rel, &src, scope_for(&rel)));
+    }
+    Ok(findings)
+}
+
+/// Lint a single file. When the path contains a `src` component the scope
+/// is inferred from the part after it; otherwise (fixtures, ad-hoc files)
+/// every rule applies.
+pub fn lint_file(path: &Path, all_rules: bool) -> Result<Vec<Finding>> {
+    let label = path.to_string_lossy().replace('\\', "/");
+    let scope = if all_rules {
+        Scope::all()
+    } else {
+        match rel_after_src(&label) {
+            Some(rel) => scope_for(&rel),
+            None => Scope::all(),
+        }
+    };
+    let src = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    Ok(rules::lint_source(&label, &src, scope))
+}
+
+/// The path relative to the innermost `src/` component, if any.
+fn rel_after_src(path: &str) -> Option<String> {
+    let parts: Vec<&str> = path.split('/').collect();
+    parts
+        .iter()
+        .rposition(|p| *p == "src")
+        .map(|i| parts[i + 1..].join("/"))
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rel_after_src_finds_innermost() {
+        assert_eq!(
+            rel_after_src("rust/src/sim/serial.rs"),
+            Some("sim/serial.rs".to_string())
+        );
+        assert_eq!(rel_after_src("tests/lint_fixtures/d001_bad.rs"), None);
+    }
+}

@@ -1,0 +1,479 @@
+//! The numbered determinism rulebook (D001–D005) and the engine that
+//! applies it to a scanned file. See ROADMAP.md "Determinism rules" for
+//! the rationale behind each code.
+
+use super::scanner::{scan, Comment, ScannedFile, TokKind, Token};
+
+/// One rule violation (or a malformed suppression, rule `D000`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Path as given to the linter (relative for tree walks).
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}:{}: {}: {}",
+            self.file, self.line, self.rule, self.message
+        )
+    }
+}
+
+/// Which rules apply to a file. Derived from its path relative to
+/// `rust/src/` (see [`scope_for`]), or everything when `all_rules` is set
+/// (fixtures, explicit file arguments outside the tree).
+#[derive(Debug, Clone, Copy)]
+pub struct Scope {
+    pub d001: bool,
+    pub d002: bool,
+    pub d003: bool,
+    pub d004: bool,
+    pub d005: bool,
+}
+
+impl Scope {
+    pub fn all() -> Self {
+        Scope { d001: true, d002: true, d003: true, d004: true, d005: true }
+    }
+}
+
+/// Path-based rule scoping. `rel` is the path relative to the source root
+/// (`sim/serial.rs`, `server/mod.rs`, ...), with `/` separators.
+pub fn scope_for(rel: &str) -> Scope {
+    let in_dir = |d: &str| rel.starts_with(&format!("{d}/"));
+    Scope {
+        // D001: unordered-map iteration order leaks into protocol
+        // decisions in the deterministic core.
+        d001: in_dir("sim") || in_dir("server") || in_dir("bandwidth"),
+        // D002: the simulator runs on virtual time only.
+        d002: in_dir("sim"),
+        // D003: named streams everywhere except the stream implementation.
+        d003: !in_dir("rng"),
+        // D004: the paths the concurrent server (ROADMAP Open item 1)
+        // will make multi-writer must not panic.
+        d004: rel == "sim/protocol.rs" || in_dir("server"),
+        // D005 applies tree-wide.
+        d005: true,
+    }
+}
+
+/// Rule metadata for `--explain` style output and the docs.
+pub const RULEBOOK: &[(&str, &str)] = &[
+    (
+        "D001",
+        "no HashMap/HashSet in sim/, server/, bandwidth/ — iteration order \
+         is nondeterministic; use BTreeMap/BTreeSet or a sorted Vec",
+    ),
+    (
+        "D002",
+        "no Instant/SystemTime in simulator code — the simulator runs on \
+         the virtual clock (sim/clock.rs) only",
+    ),
+    (
+        "D003",
+        "RNG draws only through the named-stream API (rng::stream); no \
+         direct rand_core use or unnamed Xoshiro256pp/SplitMix64 \
+         construction outside rng/",
+    ),
+    (
+        "D004",
+        "no unwrap()/expect() in the protocol core (sim/protocol.rs) and \
+         the server apply path (server/)",
+    ),
+    ("D005", "every unsafe block carries a // SAFETY: comment"),
+];
+
+/// A parsed `// lint:allow(Dxxx, reason)` suppression.
+#[derive(Debug)]
+struct Allow {
+    rule: String,
+    /// Suppresses findings on this line and the next (comment above code).
+    line: u32,
+}
+
+/// Parse suppressions out of the comment list. Malformed suppressions
+/// (bad code, missing or empty reason) become `D000` findings — a
+/// suppression must name its reason.
+fn parse_allows(
+    file: &str,
+    comments: &[Comment],
+) -> (Vec<Allow>, Vec<Finding>) {
+    let mut allows = Vec::new();
+    let mut findings = Vec::new();
+    for c in comments {
+        let mut rest = c.text.as_str();
+        while let Some(pos) = rest.find("lint:allow") {
+            rest = &rest[pos + "lint:allow".len()..];
+            let bad = |msg: &str| Finding {
+                file: file.to_string(),
+                line: c.line,
+                rule: "D000",
+                message: msg.to_string(),
+            };
+            let Some(inner) = rest
+                .strip_prefix('(')
+                .and_then(|r| r.split(')').next())
+            else {
+                findings.push(bad(
+                    "malformed lint:allow — expected \
+                     lint:allow(Dxxx, reason)",
+                ));
+                continue;
+            };
+            let (code, reason) = match inner.split_once(',') {
+                Some((c, r)) => (c.trim(), r.trim()),
+                None => (inner.trim(), ""),
+            };
+            let code_ok = code.len() == 4
+                && code.starts_with('D')
+                && code[1..].chars().all(|ch| ch.is_ascii_digit());
+            if !code_ok {
+                findings.push(bad(&format!(
+                    "lint:allow names invalid rule code {code:?} \
+                     (expected Dxxx)"
+                )));
+            } else if reason.is_empty() {
+                findings.push(bad(&format!(
+                    "lint:allow({code}) without a reason — suppressions \
+                     must say why: lint:allow({code}, reason)"
+                )));
+            } else {
+                // A block comment ending at end_line suppresses the line
+                // below its end, like a line comment does.
+                allows.push(Allow { rule: code.to_string(), line: c.end_line });
+            }
+        }
+    }
+    (allows, findings)
+}
+
+/// Compute a mask of tokens inside `#[cfg(test)]` items (the attribute,
+/// any stacked attributes after it, and the item body up to its matching
+/// `}` or terminating `;`). Test code is exempt from all rules.
+fn test_mask(tokens: &[Token]) -> Vec<bool> {
+    let mut mask = vec![false; tokens.len()];
+    let mut i = 0usize;
+    while i < tokens.len() {
+        if !(tokens[i].is_sym('#')
+            && tokens.get(i + 1).is_some_and(|t| t.is_sym('[')))
+        {
+            i += 1;
+            continue;
+        }
+        // Find the attribute's matching `]` and check for cfg(test).
+        let attr_start = i;
+        let mut depth = 0usize;
+        let mut j = i + 1;
+        let mut saw_cfg = false;
+        let mut saw_test = false;
+        let mut saw_not = false;
+        while j < tokens.len() {
+            let t = &tokens[j];
+            if t.is_sym('[') {
+                depth += 1;
+            } else if t.is_sym(']') {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else if t.is_ident("cfg") {
+                saw_cfg = true;
+            } else if saw_cfg && t.is_ident("not") {
+                // #[cfg(not(test))] is live code, not test code.
+                saw_not = true;
+            } else if saw_cfg && t.is_ident("test") {
+                saw_test = true;
+            }
+            j += 1;
+        }
+        if !(saw_cfg && saw_test && !saw_not) {
+            i = j + 1;
+            continue;
+        }
+        // Skip any further stacked attributes, then the item itself.
+        let mut k = j + 1;
+        while k < tokens.len()
+            && tokens[k].is_sym('#')
+            && tokens.get(k + 1).is_some_and(|t| t.is_sym('['))
+        {
+            let mut d = 0usize;
+            k += 1;
+            while k < tokens.len() {
+                if tokens[k].is_sym('[') {
+                    d += 1;
+                } else if tokens[k].is_sym(']') {
+                    d -= 1;
+                    if d == 0 {
+                        k += 1;
+                        break;
+                    }
+                }
+                k += 1;
+            }
+        }
+        // Item body: up to the first `;` at brace depth 0, or the
+        // matching `}` of the first `{`.
+        let mut brace = 0usize;
+        let mut end = tokens.len();
+        while k < tokens.len() {
+            let t = &tokens[k];
+            if t.is_sym('{') {
+                brace += 1;
+            } else if t.is_sym('}') {
+                brace -= 1;
+                if brace == 0 {
+                    end = k + 1;
+                    break;
+                }
+            } else if t.is_sym(';') && brace == 0 {
+                end = k + 1;
+                break;
+            }
+            k += 1;
+        }
+        for m in mask.iter_mut().take(end.min(tokens.len())).skip(attr_start)
+        {
+            *m = true;
+        }
+        i = end;
+    }
+    mask
+}
+
+/// D005 helper: is there a `SAFETY:` comment on the `unsafe` line or in
+/// the contiguous comment block directly above it? Walks upward through
+/// adjacent comments so multi-line `// SAFETY: ...` blocks qualify.
+fn safety_documented(comments: &[Comment], unsafe_line: u32) -> bool {
+    let mut l = unsafe_line;
+    loop {
+        let Some(c) = comments
+            .iter()
+            .find(|c| c.end_line == l || c.end_line + 1 == l)
+        else {
+            return false;
+        };
+        if c.text.contains("SAFETY:") {
+            return true;
+        }
+        if c.line == 0 {
+            return false;
+        }
+        l = c.line - 1;
+    }
+}
+
+/// Lint one file's source text under the given scope. `file` is the label
+/// used in findings (relative path for tree walks).
+pub fn lint_source(file: &str, src: &str, scope: Scope) -> Vec<Finding> {
+    let scanned: ScannedFile = scan(src);
+    let tokens = &scanned.tokens;
+    let mask = test_mask(tokens);
+    let (allows, mut findings) = parse_allows(file, &scanned.comments);
+
+    let mut raw: Vec<Finding> = Vec::new();
+    let mut emit = |line: u32, rule: &'static str, message: String| {
+        raw.push(Finding { file: file.to_string(), line, rule, message });
+    };
+
+    for (i, tok) in tokens.iter().enumerate() {
+        if mask[i] {
+            continue;
+        }
+        let TokKind::Ident(name) = &tok.kind else { continue };
+        let line = tok.line;
+        match name.as_str() {
+            "HashMap" | "HashSet" if scope.d001 => emit(
+                line,
+                "D001",
+                format!(
+                    "{name} in deterministic-core code — iteration order \
+                     is nondeterministic; use BTreeMap/BTreeSet or a \
+                     sorted Vec"
+                ),
+            ),
+            "Instant" | "SystemTime" if scope.d002 => emit(
+                line,
+                "D002",
+                format!(
+                    "{name} in simulator code — the simulator runs on \
+                     virtual time only (sim/clock.rs)"
+                ),
+            ),
+            "rand_core" if scope.d003 => emit(
+                line,
+                "D003",
+                "direct rand_core use outside rng/ — draw through the \
+                 named-stream API (rng::stream)"
+                    .to_string(),
+            ),
+            "Xoshiro256pp" | "SplitMix64"
+                if scope.d003
+                    && tokens.get(i + 1).is_some_and(|t| t.is_sym(':'))
+                    && tokens.get(i + 2).is_some_and(|t| t.is_sym(':'))
+                    && tokens
+                        .get(i + 3)
+                        .is_some_and(|t| t.is_ident("new")) =>
+            {
+                emit(
+                    line,
+                    "D003",
+                    format!(
+                        "unnamed {name}::new outside rng/ — every stream \
+                         must be named via rng::stream(seed, name, index)"
+                    ),
+                )
+            }
+            "unwrap" | "expect"
+                if scope.d004
+                    && i > 0
+                    && tokens[i - 1].is_sym('.')
+                    && tokens.get(i + 1).is_some_and(|t| t.is_sym('(')) =>
+            {
+                emit(
+                    line,
+                    "D004",
+                    format!(
+                        ".{name}() in the protocol core / server apply \
+                         path — these paths go concurrent (ROADMAP Open \
+                         item 1); return an error or restructure"
+                    ),
+                )
+            }
+            "unsafe" if scope.d005 => {
+                if !safety_documented(&scanned.comments, line) {
+                    emit(
+                        line,
+                        "D005",
+                        "unsafe block without a // SAFETY: comment on or \
+                         directly above it"
+                            .to_string(),
+                    );
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // Apply suppressions: an allow on line L covers findings on L (trailing
+    // comment) and L+1 (comment on the line above).
+    let allowed = |f: &Finding| {
+        allows.iter().any(|a| {
+            a.rule == f.rule && (a.line == f.line || a.line + 1 == f.line)
+        })
+    };
+    findings.extend(raw.into_iter().filter(|f| !allowed(f)));
+    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_all(src: &str) -> Vec<Finding> {
+        lint_source("test.rs", src, Scope::all())
+    }
+
+    #[test]
+    fn cfg_test_items_are_exempt() {
+        let src = "
+            #[cfg(test)]
+            mod tests {
+                use std::collections::HashMap;
+                fn f() { x.unwrap(); }
+            }
+            fn live() {}
+        ";
+        assert!(lint_all(src).is_empty());
+    }
+
+    #[test]
+    fn unwrap_or_is_not_unwrap() {
+        let src = "fn f() { let x = y.unwrap_or(0) + z.map_or(1, g); }";
+        assert!(lint_all(src).is_empty());
+    }
+
+    #[test]
+    fn allow_with_reason_suppresses() {
+        let src = "
+            // lint:allow(D001, test helper bookkeeping only)
+            use std::collections::HashMap;
+        ";
+        assert!(lint_all(src).is_empty());
+    }
+
+    #[test]
+    fn allow_without_reason_is_flagged() {
+        let src = "
+            // lint:allow(D001)
+            use std::collections::HashMap;
+        ";
+        let f = lint_all(src);
+        // The allow is rejected, so both D000 and the original D001 fire.
+        assert!(f.iter().any(|x| x.rule == "D000"), "{f:?}");
+        assert!(f.iter().any(|x| x.rule == "D001"), "{f:?}");
+    }
+
+    #[test]
+    fn scope_limits_rules() {
+        let src = "use std::time::Instant;";
+        assert!(lint_source(
+            "server/mod.rs",
+            src,
+            scope_for("server/mod.rs")
+        )
+        .is_empty());
+        assert_eq!(
+            lint_source("sim/serial.rs", src, scope_for("sim/serial.rs"))
+                .len(),
+            1
+        );
+    }
+
+    #[test]
+    fn safety_comment_satisfies_d005() {
+        let ok = "
+            fn f() {
+                // SAFETY: single-threaded at this point.
+                unsafe { g() }
+            }
+        ";
+        assert!(lint_all(ok).is_empty());
+        let bad = "fn f() { unsafe { g() } }";
+        let f = lint_all(bad);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "D005");
+    }
+
+    #[test]
+    fn multi_line_safety_comment_satisfies_d005() {
+        // Only the first line of the block carries the SAFETY: marker;
+        // the walk-up must chain through the adjacent comment lines.
+        let ok = "
+            fn f() {
+                // SAFETY: the pointer is derived from a live Vec and the
+                // length was checked two lines up; no aliasing because
+                // the Vec is not touched again until the block ends.
+                unsafe { g() }
+            }
+        ";
+        assert!(lint_all(ok).is_empty());
+        // A blank line breaks the chain: the comment no longer documents
+        // the unsafe block directly.
+        let bad = "
+            fn f() {
+                // SAFETY: stale, detached comment.
+
+                unsafe { g() }
+            }
+        ";
+        let f = lint_all(bad);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "D005");
+    }
+}

@@ -1,0 +1,312 @@
+//! Token-level Rust scanner for `repro-lint`.
+//!
+//! No external parser: the offline vendored build (DESIGN.md §5) rules out
+//! `syn`/`proc-macro2`, and the determinism rules only need identifiers,
+//! punctuation, and comments with line numbers. The lexer understands the
+//! parts of Rust that would otherwise produce false positives: line and
+//! (nested) block comments, string/char/byte literals including raw
+//! strings, and the lifetime-vs-char-literal ambiguity. Everything inside
+//! comments and literals is invisible to the rules; comments are collected
+//! separately for `// SAFETY:` and `// lint:allow(...)` handling.
+
+/// One token with its 1-based source line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Token {
+    pub line: u32,
+    pub kind: TokKind,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword.
+    Ident(String),
+    /// Any single non-alphanumeric, non-whitespace character.
+    Sym(char),
+}
+
+impl Token {
+    pub fn is_ident(&self, name: &str) -> bool {
+        matches!(&self.kind, TokKind::Ident(s) if s == name)
+    }
+
+    pub fn is_sym(&self, c: char) -> bool {
+        matches!(&self.kind, TokKind::Sym(s) if *s == c)
+    }
+}
+
+/// A comment (line or block) with the lines it starts and ends on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Comment {
+    pub line: u32,
+    pub end_line: u32,
+    pub text: String,
+}
+
+/// Scanner output: the token stream plus all comments.
+#[derive(Debug, Default)]
+pub struct ScannedFile {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+}
+
+pub fn scan(src: &str) -> ScannedFile {
+    let mut out = ScannedFile::default();
+    let bytes: Vec<char> = src.chars().collect();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let n = bytes.len();
+
+    let is_ident_start = |c: char| c.is_alphabetic() || c == '_';
+    let is_ident_cont = |c: char| c.is_alphanumeric() || c == '_';
+
+    while i < n {
+        let c = bytes[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Comments.
+        if c == '/' && i + 1 < n {
+            match bytes[i + 1] {
+                '/' => {
+                    let start = i;
+                    while i < n && bytes[i] != '\n' {
+                        i += 1;
+                    }
+                    out.comments.push(Comment {
+                        line,
+                        end_line: line,
+                        text: bytes[start..i].iter().collect(),
+                    });
+                    continue;
+                }
+                '*' => {
+                    let start = i;
+                    let start_line = line;
+                    let mut depth = 1usize;
+                    i += 2;
+                    while i < n && depth > 0 {
+                        if bytes[i] == '\n' {
+                            line += 1;
+                            i += 1;
+                        } else if bytes[i] == '/'
+                            && i + 1 < n
+                            && bytes[i + 1] == '*'
+                        {
+                            depth += 1;
+                            i += 2;
+                        } else if bytes[i] == '*'
+                            && i + 1 < n
+                            && bytes[i + 1] == '/'
+                        {
+                            depth -= 1;
+                            i += 2;
+                        } else {
+                            i += 1;
+                        }
+                    }
+                    out.comments.push(Comment {
+                        line: start_line,
+                        end_line: line,
+                        text: bytes[start..i.min(n)].iter().collect(),
+                    });
+                    continue;
+                }
+                _ => {}
+            }
+        }
+        // Strings: plain, raw, byte, raw-byte. Raw strings must be
+        // detected before the identifier path eats the `r`/`b` prefix.
+        if c == '"' {
+            i += 1;
+            while i < n {
+                match bytes[i] {
+                    '\\' => i += 2,
+                    '"' => {
+                        i += 1;
+                        break;
+                    }
+                    '\n' => {
+                        line += 1;
+                        i += 1;
+                    }
+                    _ => i += 1,
+                }
+            }
+            continue;
+        }
+        if (c == 'r' || c == 'b') && i + 1 < n {
+            // r"..." | r#"..."# | b"..." | br#"..."# etc.
+            let mut j = i + 1;
+            if c == 'b' && j < n && bytes[j] == 'r' {
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            while j < n && bytes[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            let raw = c == 'r' || (c == 'b' && i + 1 < n && bytes[i + 1] == 'r');
+            let is_str = j < n && bytes[j] == '"' && (raw || hashes == 0);
+            if is_str && (raw || c == 'b') {
+                // Consume to the matching closing quote + hashes.
+                i = j + 1;
+                'outer: while i < n {
+                    if bytes[i] == '\n' {
+                        line += 1;
+                        i += 1;
+                        continue;
+                    }
+                    if !raw && bytes[i] == '\\' {
+                        i += 2;
+                        continue;
+                    }
+                    if bytes[i] == '"' {
+                        let mut k = i + 1;
+                        let mut h = 0usize;
+                        while k < n && h < hashes && bytes[k] == '#' {
+                            h += 1;
+                            k += 1;
+                        }
+                        if h == hashes {
+                            i = k;
+                            break 'outer;
+                        }
+                    }
+                    i += 1;
+                }
+                continue;
+            }
+            // else: fall through to identifier handling below.
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            let next = bytes.get(i + 1).copied();
+            let after = bytes.get(i + 2).copied();
+            let is_lifetime = matches!(next, Some(ch) if is_ident_start(ch))
+                && after != Some('\'');
+            if is_lifetime {
+                i += 1;
+                while i < n && is_ident_cont(bytes[i]) {
+                    i += 1;
+                }
+            } else {
+                // Char literal: 'x', '\n', '\'', '\u{1F600}'.
+                i += 1;
+                if i < n && bytes[i] == '\\' {
+                    i += 2;
+                    while i < n && bytes[i] != '\'' {
+                        i += 1;
+                    }
+                    i += 1;
+                } else {
+                    i += 1;
+                    if i < n && bytes[i] == '\'' {
+                        i += 1;
+                    }
+                }
+            }
+            continue;
+        }
+        // Numbers: consume so `1e5`/`0xFF` never masquerade as idents.
+        if c.is_ascii_digit() {
+            i += 1;
+            while i < n
+                && (is_ident_cont(bytes[i])
+                    || (bytes[i] == '.'
+                        && bytes
+                            .get(i + 1)
+                            .is_some_and(|d| d.is_ascii_digit())))
+            {
+                i += 1;
+            }
+            continue;
+        }
+        // Identifiers / keywords.
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_cont(bytes[i]) {
+                i += 1;
+            }
+            out.tokens.push(Token {
+                line,
+                kind: TokKind::Ident(bytes[start..i].iter().collect()),
+            });
+            continue;
+        }
+        // Everything else: single-char symbol.
+        out.tokens.push(Token { line, kind: TokKind::Sym(c) });
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        scan(src)
+            .tokens
+            .into_iter()
+            .filter_map(|t| match t.kind {
+                TokKind::Ident(s) => Some(s),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_invisible() {
+        let src = r##"
+            // HashMap in a comment
+            /* Instant in a /* nested */ block */
+            let x = "HashMap::new()";
+            let y = r#"SystemTime"#;
+            let z = b"unsafe";
+            real_ident();
+        "##;
+        let ids = idents(src);
+        assert!(ids.contains(&"real_ident".to_string()));
+        assert!(!ids.contains(&"HashMap".to_string()));
+        assert!(!ids.contains(&"SystemTime".to_string()));
+        assert!(!ids.contains(&"unsafe".to_string()));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> char { 'x' }";
+        let ids = idents(src);
+        // 'a consumed as a lifetime, 'x' as a char literal; `str`, `char`
+        // survive as idents.
+        assert!(ids.contains(&"str".to_string()));
+        assert!(ids.contains(&"char".to_string()));
+        assert!(!ids.contains(&"x".to_string()));
+    }
+
+    #[test]
+    fn comments_carry_line_spans() {
+        let src = "let a = 1;\n// SAFETY: fine\nunsafe { }\n";
+        let s = scan(src);
+        assert_eq!(s.comments.len(), 1);
+        assert_eq!(s.comments[0].line, 2);
+        assert!(s.comments[0].text.contains("SAFETY:"));
+        let unsafe_tok = s
+            .tokens
+            .iter()
+            .find(|t| t.is_ident("unsafe"))
+            .expect("unsafe token");
+        assert_eq!(unsafe_tok.line, 3);
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_end_strings() {
+        let src = "let s = \"a\\\"HashMap\\\"b\"; done();";
+        assert_eq!(idents(src), vec!["let", "s", "done"]);
+    }
+}

@@ -34,6 +34,12 @@
 //! `--delay.compute_straggler_frac/_slow_mult`, same for `network_`).
 //! `--eval_every_vsecs S` adds an eval cadence in simulated seconds.
 //!
+//! `repro train --rng-audit` replaces the training run with the RNG
+//! draw-ledger audit: the same fixed-seed config runs serial and
+//! pipelined-parallel with every named-stream draw recorded as
+//! `(stream, call_site, count)`, and the two ledgers are diffed — a
+//! stream-discipline violation fails with the first diverging draw site.
+//!
 //! `--shards.count S` partitions θ into S contiguous shards: the
 //! bandwidth gate decides per (client, shard, direction) — B-FASGD gates
 //! each chunk on its own `v` statistics — and bytes-on-wire are
@@ -75,7 +81,7 @@ fn real_main() -> Result<()> {
 }
 
 /// Keys the harness commands consume themselves (not config knobs).
-const HARNESS_KEYS: &[&str] = &["out", "config", "cs", "lambdas"];
+const HARNESS_KEYS: &[&str] = &["out", "config", "cs", "lambdas", "rng-audit"];
 
 /// defaults + optional --config file + remaining --key value overrides.
 fn config_from(args: &Args) -> Result<ExperimentConfig> {
@@ -98,6 +104,19 @@ fn out_dir(args: &Args) -> std::path::PathBuf {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = config_from(args)?;
+    // `--rng-audit` (flag, or `--rng-audit true`): instead of training
+    // once, run the serial and pipelined-parallel legs with the RNG draw
+    // ledger recording and diff them (see EXPERIMENTS.md §rng-audit).
+    if args.has_flag("rng-audit")
+        || args.get("rng-audit").is_some_and(|v| v == "true")
+    {
+        let report = fasgd::experiments::audit::run_rng_audit(&cfg)?;
+        println!("{}", report.render());
+        if !report.passed() {
+            bail!("rng-audit: serial and parallel draw ledgers diverge");
+        }
+        return Ok(());
+    }
     let summary = fasgd::experiments::common::run_experiment(&cfg)?;
     println!("{}", summary.to_json().to_string_pretty());
     // Written directly (not via CsvCurveWriter): a failed curve write must
@@ -216,6 +235,8 @@ fn print_help() {
          \x20                --link.rate_bytes_per_vsec R (finite-rate server link:\n\
          \x20                   transmitted bytes cost virtual seconds; 0 = off)\n\
          \x20                --config file.toml --out dir/\n\
+         \x20 train-only:    --rng-audit (serial-vs-parallel RNG draw-ledger\n\
+         \x20                   diff instead of training; see EXPERIMENTS.md)\n\
          see README.md for the full knob list"
     );
 }

@@ -18,6 +18,9 @@ impl Normal {
         Self { mean, std, cached: None }
     }
 
+    // track_caller: draw-ledger entries attribute the underlying uniform
+    // draws to the sample() call site, not this helper.
+    #[track_caller]
     pub fn sample(&mut self, rng: &mut Xoshiro256pp) -> f64 {
         let z = if let Some(z) = self.cached.take() {
             z
@@ -77,6 +80,7 @@ impl Categorical {
         self.set_weight(i, self.weights[i] * factor);
     }
 
+    #[track_caller]
     pub fn sample(&self, rng: &mut Xoshiro256pp) -> usize {
         assert!(self.total > 0.0, "all-zero categorical");
         let mut u = rng.f64() * self.total;

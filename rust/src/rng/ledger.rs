@@ -1,0 +1,278 @@
+//! RNG draw ledger: the dynamic half of the determinism contract.
+//!
+//! The static lint ([`crate::lint`], rule D003) proves every draw goes
+//! through a *named* stream; the ledger proves the *order* of draws on each
+//! stream is identical between the serial reference and the pipelined
+//! dispatcher. While a ledger is active (thread-local, coordinator thread
+//! only — workers never draw), every state advance of an audited
+//! [`super::Xoshiro256pp`] records `(stream, call_site, count)`,
+//! run-length-encoded per stream. Diffing the serial and parallel ledgers
+//! then names the **first diverging draw site** instead of leaving a
+//! bitwise mismatch to surface ten tests downstream.
+//!
+//! Per-stream, not global: the pipelined dispatcher legitimately reorders
+//! draws *across* streams (batches are drawn at plan time, ahead of the
+//! bandwidth draws of earlier iterations still in flight) — the contract
+//! is that each stream's own sequence is schedule-ordered.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::panic::Location;
+
+/// Identity tag attached to an audited stream by [`super::stream`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AuditTag {
+    pub name: String,
+    pub index: u64,
+}
+
+/// A stream's key in the ledger: `(name, index)`.
+pub type StreamId = (String, u64);
+
+/// One run-length-encoded ledger entry: `count` consecutive draws from the
+/// same call site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DrawRun {
+    pub file: &'static str,
+    pub line: u32,
+    pub count: u64,
+}
+
+impl fmt::Display for DrawRun {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{} x{}", self.file, self.line, self.count)
+    }
+}
+
+/// Per-stream record of every audited draw between `begin()` and `end()`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct DrawLedger {
+    streams: BTreeMap<StreamId, Vec<DrawRun>>,
+}
+
+impl DrawLedger {
+    fn push(&mut self, tag: &AuditTag, file: &'static str, line: u32) {
+        let runs = self
+            .streams
+            .entry((tag.name.clone(), tag.index))
+            .or_default();
+        match runs.last_mut() {
+            Some(last) if last.file == file && last.line == line => {
+                last.count += 1;
+            }
+            _ => runs.push(DrawRun { file, line, count: 1 }),
+        }
+    }
+
+    /// Total draws recorded across all streams.
+    pub fn total_draws(&self) -> u64 {
+        self.streams
+            .values()
+            .flat_map(|runs| runs.iter().map(|r| r.count))
+            .sum()
+    }
+
+    /// Number of distinct streams that drew at least once.
+    pub fn stream_count(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// The run-length-encoded draw sequence for one stream, if it drew.
+    pub fn runs(&self, name: &str, index: u64) -> Option<&[DrawRun]> {
+        self.streams
+            .get(&(name.to_string(), index))
+            .map(|v| v.as_slice())
+    }
+
+    /// Iterate streams in deterministic (sorted) order.
+    pub fn streams(&self) -> impl Iterator<Item = (&StreamId, &[DrawRun])> {
+        self.streams.iter().map(|(k, v)| (k, v.as_slice()))
+    }
+
+    /// Human-readable dump, one stream per block, sorted.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for ((name, index), runs) in &self.streams {
+            let total: u64 = runs.iter().map(|r| r.count).sum();
+            out.push_str(&format!(
+                "stream \"{name}\"[{index}]: {total} draws in {} runs\n",
+                runs.len()
+            ));
+            for r in runs {
+                out.push_str(&format!("  {r}\n"));
+            }
+        }
+        out
+    }
+}
+
+/// The first point where two ledgers disagree: which stream, which
+/// run-position, and what each side recorded there (`None` = that side's
+/// stream ended early or never drew).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Divergence {
+    pub stream: StreamId,
+    pub position: usize,
+    pub left: Option<DrawRun>,
+    pub right: Option<DrawRun>,
+}
+
+impl fmt::Display for Divergence {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let side = |r: &Option<DrawRun>| match r {
+            Some(run) => run.to_string(),
+            None => "<no draw>".to_string(),
+        };
+        write!(
+            f,
+            "stream \"{}\"[{}] diverges at run {}: serial {} vs parallel {}",
+            self.stream.0,
+            self.stream.1,
+            self.position,
+            side(&self.left),
+            side(&self.right),
+        )
+    }
+}
+
+/// Diff two ledgers; `None` means bitwise-identical draw discipline. On
+/// mismatch, returns the first diverging stream (sorted order) and the
+/// first diverging run within it.
+pub fn diff(left: &DrawLedger, right: &DrawLedger) -> Option<Divergence> {
+    let empty: Vec<DrawRun> = Vec::new();
+    let keys: std::collections::BTreeSet<&StreamId> = left
+        .streams
+        .keys()
+        .chain(right.streams.keys())
+        .collect();
+    for key in keys {
+        let l = left.streams.get(key).unwrap_or(&empty);
+        let r = right.streams.get(key).unwrap_or(&empty);
+        let n = l.len().max(r.len());
+        for i in 0..n {
+            let (a, b) = (l.get(i).copied(), r.get(i).copied());
+            if a != b {
+                return Some(Divergence {
+                    stream: key.clone(),
+                    position: i,
+                    left: a,
+                    right: b,
+                });
+            }
+        }
+    }
+    None
+}
+
+thread_local! {
+    static ACTIVE: RefCell<Option<DrawLedger>> = const { RefCell::new(None) };
+}
+
+/// Start recording on this thread. Replaces any ledger already active.
+pub fn begin() {
+    ACTIVE.with(|l| *l.borrow_mut() = Some(DrawLedger::default()));
+}
+
+/// Stop recording and return the ledger (empty if `begin` was never
+/// called on this thread).
+pub fn end() -> DrawLedger {
+    ACTIVE.with(|l| l.borrow_mut().take()).unwrap_or_default()
+}
+
+/// Is a ledger currently recording on this thread? Streams created while
+/// active carry an audit tag; draws on tagged streams record here.
+pub fn is_active() -> bool {
+    ACTIVE.with(|l| l.borrow().is_some())
+}
+
+/// Record one draw. No-op when no ledger is active (a tagged stream can
+/// outlive the audit window).
+#[inline]
+pub(crate) fn record(tag: &AuditTag, site: &'static Location<'static>) {
+    ACTIVE.with(|l| {
+        if let Some(ledger) = l.borrow_mut().as_mut() {
+            ledger.push(tag, site.file(), site.line());
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(file: &'static str, line: u32, count: u64) -> DrawRun {
+        DrawRun { file, line, count }
+    }
+
+    fn ledger(entries: &[(&str, u64, DrawRun)]) -> DrawLedger {
+        let mut led = DrawLedger::default();
+        for (name, index, r) in entries {
+            led.streams
+                .entry((name.to_string(), *index))
+                .or_default()
+                .push(*r);
+        }
+        led
+    }
+
+    #[test]
+    fn identical_ledgers_diff_none() {
+        let a = ledger(&[("s", 0, run("a.rs", 1, 3))]);
+        let b = ledger(&[("s", 0, run("a.rs", 1, 3))]);
+        assert_eq!(diff(&a, &b), None);
+    }
+
+    #[test]
+    fn count_mismatch_is_named() {
+        let a = ledger(&[("s", 0, run("a.rs", 1, 3))]);
+        let b = ledger(&[("s", 0, run("a.rs", 1, 2))]);
+        let d = diff(&a, &b).expect("must diverge");
+        assert_eq!(d.stream, ("s".to_string(), 0));
+        assert_eq!(d.position, 0);
+        assert_eq!(d.left.map(|r| r.count), Some(3));
+        assert_eq!(d.right.map(|r| r.count), Some(2));
+    }
+
+    #[test]
+    fn missing_stream_is_a_divergence() {
+        let a = ledger(&[("s", 0, run("a.rs", 1, 1))]);
+        let b = DrawLedger::default();
+        let d = diff(&a, &b).expect("must diverge");
+        assert_eq!(d.stream, ("s".to_string(), 0));
+        assert_eq!(d.right, None);
+    }
+
+    #[test]
+    fn recording_coalesces_consecutive_sites() {
+        begin();
+        let mut r = crate::rng::stream(9, "clock-test", 0);
+        for _ in 0..5 {
+            r.f64();
+        }
+        let led = end();
+        let runs = led.runs("clock-test", 0).expect("stream recorded");
+        assert_eq!(runs.len(), 1);
+        assert_eq!(runs[0].count, 5);
+        assert_eq!(led.total_draws(), 5);
+    }
+
+    #[test]
+    fn untagged_streams_never_record() {
+        begin();
+        let mut r = crate::rng::Xoshiro256pp::new(3);
+        r.f64();
+        let led = end();
+        assert_eq!(led.total_draws(), 0);
+    }
+
+    #[test]
+    fn inactive_ledger_records_nothing() {
+        // Not inside begin/end: stream() attaches no tag.
+        let mut r = crate::rng::stream(9, "clock-test", 1);
+        r.f64();
+        begin();
+        let led = end();
+        assert_eq!(led.total_draws(), 0);
+    }
+}

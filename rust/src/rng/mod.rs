@@ -7,6 +7,7 @@
 //! determinism claims testable: same config + seed ⇒ bitwise-identical run.
 
 mod dist;
+pub mod ledger;
 mod xoshiro;
 
 pub use dist::{Categorical, Normal};
@@ -16,6 +17,12 @@ pub use xoshiro::{SplitMix64, Xoshiro256pp};
 ///
 /// The name is folded through SplitMix64 so streams are decorrelated even
 /// for adjacent seeds and similar names.
+///
+/// While a draw ledger is recording on this thread
+/// ([`ledger::begin`]/[`ledger::end`]), the returned stream carries an
+/// audit tag and every draw records `(name, index, call_site)` — the
+/// dynamic check behind the `--rng-audit` mode. Normal runs attach no tag
+/// and record nothing.
 pub fn stream(master_seed: u64, name: &str, index: u64) -> Xoshiro256pp {
     let mut h = SplitMix64::new(master_seed);
     let mut acc = h.next_u64();
@@ -23,7 +30,11 @@ pub fn stream(master_seed: u64, name: &str, index: u64) -> Xoshiro256pp {
         acc = acc.wrapping_mul(0x100000001b3).wrapping_add(*b as u64);
     }
     let mut seeder = SplitMix64::new(acc ^ index.wrapping_mul(0x9E3779B97F4A7C15));
-    Xoshiro256pp::from_seeder(&mut seeder)
+    let mut rng = Xoshiro256pp::from_seeder(&mut seeder);
+    if ledger::is_active() {
+        rng.enable_audit(name, index);
+    }
+    rng
 }
 
 #[cfg(test)]

@@ -25,9 +25,23 @@ impl SplitMix64 {
 
 /// xoshiro256++ — fast, 256-bit state, passes BigCrush; the workhorse RNG
 /// for every deterministic stream in the simulator.
-#[derive(Debug, Clone, PartialEq)]
+///
+/// The optional `audit` tag (attached by [`super::stream`] while a draw
+/// ledger is recording, see [`super::ledger`]) makes every state advance
+/// report `(stream, call_site)` to the ledger; it is `None` on every
+/// normal run, so the hot path pays one branch.
+#[derive(Debug, Clone)]
 pub struct Xoshiro256pp {
     s: [u64; 4],
+    audit: Option<Box<super::ledger::AuditTag>>,
+}
+
+/// Equality is RNG *state* only: an audited stream compares equal to its
+/// un-audited twin (the audit tag is observability, not state).
+impl PartialEq for Xoshiro256pp {
+    fn eq(&self, other: &Self) -> bool {
+        self.s == other.s
+    }
 }
 
 impl Xoshiro256pp {
@@ -40,11 +54,24 @@ impl Xoshiro256pp {
     pub fn from_seeder(sm: &mut SplitMix64) -> Self {
         Self {
             s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+            audit: None,
         }
     }
 
+    /// Tag this stream for draw-ledger recording (see [`super::ledger`]).
+    pub(crate) fn enable_audit(&mut self, name: &str, index: u64) {
+        self.audit = Some(Box::new(super::ledger::AuditTag {
+            name: name.to_string(),
+            index,
+        }));
+    }
+
     #[inline]
+    #[track_caller]
     pub fn next_u64_fast(&mut self) -> u64 {
+        if let Some(tag) = &self.audit {
+            super::ledger::record(tag, std::panic::Location::caller());
+        }
         let result = self.s[0]
             .wrapping_add(self.s[3])
             .rotate_left(23)
@@ -61,18 +88,21 @@ impl Xoshiro256pp {
 
     /// Uniform in `[0, 1)` with 53 bits of precision.
     #[inline]
+    #[track_caller]
     pub fn f64(&mut self) -> f64 {
         (self.next_u64_fast() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
     /// Uniform in `[0, 1)` as f32.
     #[inline]
+    #[track_caller]
     pub fn f32(&mut self) -> f32 {
         (self.next_u64_fast() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
     }
 
     /// Uniform integer in `[0, n)` via Lemire's unbiased method.
     #[inline]
+    #[track_caller]
     pub fn below(&mut self, n: u64) -> u64 {
         assert!(n > 0, "below(0)");
         let mut x = self.next_u64_fast();
@@ -90,6 +120,7 @@ impl Xoshiro256pp {
     }
 
     /// Fisher-Yates shuffle.
+    #[track_caller]
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {
             let j = self.below((i + 1) as u64) as usize;

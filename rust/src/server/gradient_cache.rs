@@ -50,9 +50,9 @@ impl GradientCache {
     ) {
         if self.slots[c].is_none() {
             self.bytes += grad.len() * std::mem::size_of::<f32>();
-            self.slots[c] = Some((vec![0.0; grad.len()], grad_ts));
         }
-        let (buf, ts) = self.slots[c].as_mut().expect("slot just ensured");
+        let (buf, ts) = self.slots[c]
+            .get_or_insert_with(|| (vec![0.0; grad.len()], grad_ts));
         debug_assert_eq!(buf.len(), grad.len());
         for (s, &tx) in mask.iter().enumerate() {
             if tx {

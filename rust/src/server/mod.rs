@@ -185,12 +185,12 @@ impl<T> ApplyQueue<T> {
 
     /// The next in-sequence item, if it has arrived.
     pub fn pop_ready(&mut self) -> Option<T> {
-        if self.pending.peek().map(|e| e.seq) == Some(self.next_seq) {
-            self.next_seq += 1;
-            Some(self.pending.pop().expect("peeked entry").item)
-        } else {
-            None
+        if self.pending.peek().map(|e| e.seq) != Some(self.next_seq) {
+            return None;
         }
+        let entry = self.pending.pop()?;
+        self.next_seq += 1;
+        Some(entry.item)
     }
 
     /// Invalidation-aware pop: release the next in-sequence item only if
@@ -204,7 +204,9 @@ impl<T> ApplyQueue<T> {
         if self.pending.peek().map(|e| e.seq) != Some(self.next_seq) {
             return PopReady::Empty;
         }
-        let entry = self.pending.pop().expect("peeked entry");
+        let Some(entry) = self.pending.pop() else {
+            return PopReady::Empty;
+        };
         if valid(&entry.item) {
             self.next_seq += 1;
             PopReady::Valid(entry.item)

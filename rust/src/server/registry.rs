@@ -162,7 +162,11 @@ impl PolicyRegistry {
             factory: spec.factory,
             threaded: spec.threaded,
         });
-        let mut inner = self.inner.write().expect("policy registry poisoned");
+        // Poison recovery: the map is a name->factory table whose
+        // individual inserts are atomic, so state left by a panicked
+        // writer is still a consistent table.
+        let mut inner =
+            self.inner.write().unwrap_or_else(|e| e.into_inner());
         // Latest wins: replacing a name also drops the replaced entry's
         // aliases, so a dropped alias cannot keep resolving.
         inner.aliases.retain(|_, canonical| canonical != &spec.name);
@@ -193,14 +197,14 @@ impl PolicyRegistry {
 
     /// Canonical registered names, sorted (aliases excluded).
     pub fn names(&self) -> Vec<String> {
-        let inner = self.inner.read().expect("policy registry poisoned");
+        let inner = self.inner.read().unwrap_or_else(|e| e.into_inner());
         inner.entries.keys().cloned().collect()
     }
 
     /// Registered policies that expose the v statistics the probabilistic
     /// bandwidth gate needs, sorted.
     pub fn v_stats_names(&self) -> Vec<String> {
-        let inner = self.inner.read().expect("policy registry poisoned");
+        let inner = self.inner.read().unwrap_or_else(|e| e.into_inner());
         inner
             .entries
             .values()
@@ -214,7 +218,7 @@ impl PolicyRegistry {
     /// policy's own name.
     pub fn lookup(&self, name: &str) -> Option<Arc<PolicyEntry>> {
         let name = name.to_ascii_lowercase();
-        let inner = self.inner.read().expect("policy registry poisoned");
+        let inner = self.inner.read().unwrap_or_else(|e| e.into_inner());
         if let Some(e) = inner.entries.get(&name) {
             return Some(e.clone());
         }

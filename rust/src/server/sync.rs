@@ -68,8 +68,11 @@ impl Server for SyncSgd {
         // Barrier complete: θ ← θ − α · mean(grads)  (mod = g/λ in FRED).
         let scale = self.alpha / self.lambda as f32;
         for slot in self.pending.iter_mut() {
-            let g = slot.take().expect("barrier slot");
-            crate::tensor::axpy(&mut self.params, -scale, &g);
+            // Every slot is Some here: pending_count == lambda and the
+            // double-push guard above keeps count and slots in sync.
+            if let Some(g) = slot.take() {
+                crate::tensor::axpy(&mut self.params, -scale, &g);
+            }
         }
         self.pending_count = 0;
         self.ts += 1; // "weights have changed"

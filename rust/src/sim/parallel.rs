@@ -34,6 +34,7 @@
 
 use std::collections::VecDeque;
 use std::sync::Arc;
+// lint:allow(D002, wall_secs is host-side reporting, never a protocol input)
 use std::time::Instant;
 
 use anyhow::Result;
@@ -452,6 +453,7 @@ impl ParallelSimulator {
 
     /// Run to `cfg.iters`, with an initial and a final evaluation.
     pub fn run(mut self) -> Result<RunSummary> {
+        // lint:allow(D002, wall_secs measures host runtime for the summary)
         let start = Instant::now();
         self.core.run_eval()?; // the t=0 point every curve in the paper has
         self.run_until(u64::MAX)?;

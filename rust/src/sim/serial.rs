@@ -3,6 +3,7 @@
 //! single-core execution mode; the hot loop stays allocation-free by
 //! reusing flat scratch buffers.
 
+// lint:allow(D002, wall_secs is host-side reporting, never a protocol input)
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -164,6 +165,7 @@ impl Simulator {
 
     /// Run to `cfg.iters`, with an initial and a final evaluation.
     pub fn run(mut self) -> Result<RunSummary> {
+        // lint:allow(D002, wall_secs measures host runtime for the summary)
         let start = Instant::now();
         self.core.run_eval()?; // the t=0 point every curve in the paper has
         while self.core.iter < self.core.cfg.iters {

@@ -18,6 +18,9 @@ use std::path::PathBuf;
 /// PJRT client (and any worker threads) are created covers the pool too.
 pub fn enable_ftz() {
     #[cfg(target_arch = "x86_64")]
+    // SAFETY: _mm_getcsr/_mm_setcsr only read/write this thread's MXCSR
+    // register; FTZ/DAZ change float semantics for denormals only, which
+    // the training loop tolerates by design (EXPERIMENTS.md §Perf).
     unsafe {
         use std::arch::x86_64::{_mm_getcsr, _mm_setcsr};
         _mm_setcsr(_mm_getcsr() | 0x8040); // FTZ (bit 15) | DAZ (bit 6)

@@ -1,0 +1,6 @@
+// Suppression positive: a reason-less lint:allow is itself a finding
+// (D000) and does NOT suppress the underlying rule.
+// lint:allow(D001)
+use std::collections::HashMap;
+
+pub type T = HashMap<u32, u32>;

@@ -1,0 +1,9 @@
+// Suppression negative: lint:allow with a reason silences the finding,
+// both on the line above and as a trailing same-line comment.
+// lint:allow(D001, fixture demonstrating the suppression syntax)
+use std::collections::HashMap;
+
+pub fn f() -> u64 {
+    let m: HashMap<u32, u32> = HashMap::new(); // lint:allow(D001, same-line suppression)
+    m.len() as u64
+}

@@ -1,0 +1,13 @@
+// D001 positive: unordered map/set in deterministic-core code.
+use std::collections::HashMap;
+use std::collections::HashSet;
+
+pub fn tally(clients: &[usize]) -> usize {
+    let mut seen: HashSet<usize> = HashSet::new();
+    let mut counts: HashMap<usize, u64> = HashMap::new();
+    for &c in clients {
+        seen.insert(c);
+        *counts.entry(c).or_insert(0) += 1;
+    }
+    seen.len()
+}

@@ -1,0 +1,14 @@
+// D001 negative: ordered collections only; "HashMap" in strings and
+// comments must not trigger.
+use std::collections::{BTreeMap, BTreeSet};
+
+pub fn tally(clients: &[usize]) -> usize {
+    let mut seen: BTreeSet<usize> = BTreeSet::new();
+    let mut counts: BTreeMap<usize, u64> = BTreeMap::new();
+    for &c in clients {
+        seen.insert(c);
+        *counts.entry(c).or_insert(0) += 1;
+    }
+    let _doc = "a HashMap would be nondeterministic here";
+    seen.len()
+}

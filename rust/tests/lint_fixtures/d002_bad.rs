@@ -1,0 +1,8 @@
+// D002 positive: wall-clock reads in simulator code.
+use std::time::{Instant, SystemTime};
+
+pub fn step_duration() -> f64 {
+    let start = Instant::now();
+    let _epoch = SystemTime::now();
+    start.elapsed().as_secs_f64()
+}

@@ -1,0 +1,7 @@
+// D002 negative: virtual time only ("Instant" appears only in this
+// comment and in a string, which the scanner ignores).
+pub fn advance(vclock: &mut f64, dt: f64) -> f64 {
+    *vclock += dt;
+    let _doc = "never Instant::now() in the simulator";
+    *vclock
+}

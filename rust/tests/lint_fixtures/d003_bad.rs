@@ -1,0 +1,9 @@
+// D003 positive: direct rand_core use and unnamed stream construction
+// outside rng/.
+use rand_core::RngCore;
+
+pub fn draw(seed: u64) -> u64 {
+    let mut a = crate::rng::Xoshiro256pp::new(seed);
+    let mut sm = crate::rng::SplitMix64::new(seed);
+    a.next_u64() ^ sm.next_u64()
+}

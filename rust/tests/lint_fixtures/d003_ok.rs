@@ -1,0 +1,10 @@
+// D003 negative: every stream is named via the rng::stream API; passing
+// a Xoshiro256pp around (without constructing one) is fine.
+pub fn draw(master_seed: u64, client: u64) -> u64 {
+    let mut r = crate::rng::stream(master_seed, "client-sampler", client);
+    r.below(1024)
+}
+
+pub fn reuse(r: &mut crate::rng::Xoshiro256pp) -> f64 {
+    r.f64()
+}

@@ -1,0 +1,6 @@
+// D004 positive: panicking accessors on the protocol/apply path.
+pub fn apply(slot: Option<Vec<f32>>, ts: Option<u64>) -> (Vec<f32>, u64) {
+    let g = slot.unwrap();
+    let t = ts.expect("timestamp planned");
+    (g, t)
+}

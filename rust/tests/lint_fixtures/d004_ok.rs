@@ -1,0 +1,11 @@
+// D004 negative: fallible accessors and non-panicking combinators
+// (`unwrap_or`, `map_or` must not be mistaken for `unwrap`).
+pub fn apply(
+    slot: Option<Vec<f32>>,
+    ts: Option<u64>,
+) -> Option<(Vec<f32>, u64)> {
+    let g = slot?;
+    let t = ts.unwrap_or(0);
+    let _scaled = Some(2.0).map_or(1.0, |x| x);
+    Some((g, t))
+}

@@ -1,0 +1,7 @@
+// D005 positive: unsafe block with no SAFETY comment anywhere near it.
+
+pub fn ftz() {
+    unsafe {
+        core::arch::x86_64::_mm_setcsr(0x8040);
+    }
+}

@@ -1,0 +1,8 @@
+// D005 negative: the unsafe block carries a SAFETY comment directly
+// above it.
+pub fn ftz() {
+    // SAFETY: writes only this thread's MXCSR register.
+    unsafe {
+        core::arch::x86_64::_mm_setcsr(0x8040);
+    }
+}

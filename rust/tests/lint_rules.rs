@@ -1,0 +1,114 @@
+//! repro-lint integration tests: every fixture triggers (or stays clean
+//! on) exactly the rule it demonstrates, and the real source tree lints
+//! clean under path-scoped rules — the acceptance bar for the CI job.
+
+use std::path::{Path, PathBuf};
+
+use fasgd::lint::{self, Finding};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/lint_fixtures")
+        .join(name)
+}
+
+/// Fixtures sit outside any `src/` tree, so `lint_file` applies every
+/// rule — same behavior the CI invocation relies on.
+fn lint_fixture(name: &str) -> Vec<Finding> {
+    lint::lint_file(&fixture(name), false).expect("fixture readable")
+}
+
+fn rules_hit(findings: &[Finding]) -> Vec<&'static str> {
+    let mut rules: Vec<&'static str> =
+        findings.iter().map(|f| f.rule).collect();
+    rules.dedup();
+    rules
+}
+
+#[test]
+fn each_bad_fixture_triggers_its_rule() {
+    for rule in ["D001", "D002", "D003", "D004", "D005"] {
+        let name = format!("{}_bad.rs", rule.to_lowercase());
+        let findings = lint_fixture(&name);
+        assert!(
+            findings.iter().any(|f| f.rule == rule),
+            "{name} must trigger {rule}, got {findings:?}"
+        );
+        assert!(
+            findings.iter().all(|f| f.rule == rule),
+            "{name} must trigger only {rule}, got {findings:?}"
+        );
+    }
+}
+
+#[test]
+fn each_ok_fixture_is_clean() {
+    for rule in ["d001", "d002", "d003", "d004", "d005"] {
+        let name = format!("{rule}_ok.rs");
+        let findings = lint_fixture(&name);
+        assert!(findings.is_empty(), "{name} must be clean: {findings:?}");
+    }
+}
+
+#[test]
+fn d001_bad_names_both_types_with_lines() {
+    let findings = lint_fixture("d001_bad.rs");
+    // use-lines + bodies: at least the two `use` lines flag.
+    assert!(findings.len() >= 2, "{findings:?}");
+    assert!(findings.iter().all(|f| f.line > 0));
+    assert!(findings[0].file.ends_with("d001_bad.rs"));
+}
+
+#[test]
+fn suppression_with_reason_is_honored() {
+    let findings = lint_fixture("allow_with_reason.rs");
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn suppression_without_reason_is_rejected() {
+    let findings = lint_fixture("allow_no_reason.rs");
+    let rules = rules_hit(&findings);
+    assert!(rules.contains(&"D000"), "reason-less allow must flag: {findings:?}");
+    assert!(
+        rules.contains(&"D001"),
+        "rejected allow must not suppress: {findings:?}"
+    );
+}
+
+#[test]
+fn repo_tree_lints_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let findings = lint::lint_tree(&src).expect("tree walk");
+    assert!(
+        findings.is_empty(),
+        "the source tree must lint clean (fix or lint:allow with a \
+         reason):\n{}",
+        findings
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+#[test]
+fn scope_inference_by_path() {
+    // Wall-clock reads are a D002 finding in sim/ but not in server/.
+    let scope_sim = lint::scope_for("sim/serial.rs");
+    let scope_srv = lint::scope_for("server/mod.rs");
+    assert!(scope_sim.d002 && !scope_srv.d002);
+    // D004 covers the protocol core and server, nothing else in sim/.
+    assert!(lint::scope_for("sim/protocol.rs").d004);
+    assert!(!lint::scope_for("sim/parallel.rs").d004);
+    assert!(scope_srv.d004);
+    // rng/ is exempt from D003 (it IS the named-stream implementation).
+    assert!(!lint::scope_for("rng/xoshiro.rs").d003);
+    assert!(lint::scope_for("data/sampler.rs").d003);
+}
+
+#[test]
+fn rulebook_is_complete() {
+    let codes: Vec<&str> = lint::RULEBOOK.iter().map(|(c, _)| *c).collect();
+    assert_eq!(codes, vec!["D001", "D002", "D003", "D004", "D005"]);
+}
