@@ -6,5 +6,6 @@
 //! config knob is automatically a CLI flag.
 
 pub mod args;
+pub mod serve_cmds;
 
 pub use args::Args;

@@ -1,0 +1,210 @@
+//! `repro serve` and its client subcommands (`submit`, `attach`,
+//! `tail`, `runs`, `cancel`, `shutdown`).
+//!
+//! The daemon side wraps [`crate::serve::Daemon`]; the client side
+//! wraps [`crate::serve::Client`]. Stream commands print raw NDJSON
+//! frames to stdout — one frame per line, pipeable into `jq` or a
+//! plotting script.
+
+use anyhow::{bail, Context, Result};
+
+use crate::cli::Args;
+use crate::serve::protocol::{Request, ShutdownMode};
+use crate::serve::{Client, Daemon, ServeConfig, DEFAULT_PORT};
+use crate::util::json::Json;
+
+/// Keys the serve-side commands consume (not config knobs).
+const SERVE_KEYS: &[&str] = &[
+    "host",
+    "port",
+    "max-concurrent",
+    "history",
+    "frame-cap",
+    "store",
+    "chunk",
+];
+
+/// Keys the client-side commands consume; the rest of `--key value`
+/// becomes the job spec's dotted-path overrides.
+const CLIENT_KEYS: &[&str] = &["addr", "name", "events", "mode", "wait"];
+
+fn addr(args: &Args) -> String {
+    args.get("addr")
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("127.0.0.1:{DEFAULT_PORT}"))
+}
+
+/// `repro serve [--port P] [--max-concurrent N] [--store dir] ...` —
+/// run the daemon until a `shutdown` request arrives over the wire.
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    let defaults = ServeConfig::default();
+    let cfg = ServeConfig {
+        host: args
+            .get("host")
+            .unwrap_or(defaults.host.as_str())
+            .to_string(),
+        port: args.get_parse("port", defaults.port)?,
+        max_concurrent: args
+            .get_parse("max-concurrent", defaults.max_concurrent)?,
+        history_cap: args.get_parse("history", defaults.history_cap)?,
+        frame_cap: args.get_parse("frame-cap", defaults.frame_cap)?,
+        store: args.get("store").map(std::path::PathBuf::from),
+        chunk: args.get_parse("chunk", defaults.chunk)?,
+    };
+    Daemon::start(cfg)?.join()
+}
+
+/// `repro submit [--addr H:P] [--name X] [--wait] --key value ...` —
+/// queue one job; every non-serve `--key value` pair is a config
+/// override (same vocabulary as `repro train`).
+pub fn cmd_submit(args: &Args) -> Result<()> {
+    let spec = crate::serve::JobSpec {
+        name: args.get("name").map(str::to_string),
+        settings: args
+            .remaining_options(CLIENT_KEYS)
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect(),
+    };
+    let mut client = Client::connect(&addr(args))?;
+    client.send(&Request::Submit(spec))?;
+    let ack = client.expect_frame()?;
+    let run = ack
+        .get("run")
+        .and_then(Json::as_str)
+        .context("submitted frame missing run id")?
+        .to_string();
+    println!("{}", ack.to_string());
+    if !args.has_flag("wait") {
+        return Ok(());
+    }
+    // Follow the run on the same connection (tail mode: evals +
+    // lifecycle) and pretty-print the final summary.
+    client.send(&Request::Attach {
+        run: run.clone(),
+        events: false,
+    })?;
+    stream_until_terminal(&mut client, |frame| {
+        if Client::frame_type(frame) == Some("finish") {
+            if let Some(s) = frame.get("summary") {
+                println!("{}", s.to_string_pretty());
+            }
+        }
+    })
+}
+
+/// `repro attach <run-id> [--events false]` — stream a run's frames
+/// (replay, then live) as NDJSON on stdout.
+pub fn cmd_attach(args: &Args) -> Result<()> {
+    let Some(run) = args.positional.first() else {
+        bail!("usage: repro attach <run-id> [--addr H:P] [--events false]");
+    };
+    let events = args.get("events") != Some("false");
+    let mut client = Client::connect(&addr(args))?;
+    client.send(&Request::Attach {
+        run: run.clone(),
+        events,
+    })?;
+    stream_printing(&mut client)
+}
+
+/// `repro tail [run-id]` — evals + lifecycle for a run (default: the
+/// most recently submitted one).
+pub fn cmd_tail(args: &Args) -> Result<()> {
+    let mut client = Client::connect(&addr(args))?;
+    client.send(&Request::Tail {
+        run: args.positional.first().cloned(),
+    })?;
+    stream_printing(&mut client)
+}
+
+/// `repro runs` — one line per run the daemon still remembers.
+pub fn cmd_runs(args: &Args) -> Result<()> {
+    let mut client = Client::connect(&addr(args))?;
+    client.send(&Request::List)?;
+    let frame = client.expect_frame()?;
+    let Some(Json::Arr(runs)) = frame.get("runs") else {
+        bail!("malformed runs frame: {}", frame.to_string());
+    };
+    for r in runs {
+        println!("{}", r.to_string());
+    }
+    Ok(())
+}
+
+/// `repro cancel <run-id>` — cancel a queued or running job.
+pub fn cmd_cancel(args: &Args) -> Result<()> {
+    let Some(run) = args.positional.first() else {
+        bail!("usage: repro cancel <run-id> [--addr H:P]");
+    };
+    let mut client = Client::connect(&addr(args))?;
+    client.send(&Request::Cancel { run: run.clone() })?;
+    println!("{}", client.expect_frame()?.to_string());
+    Ok(())
+}
+
+/// `repro shutdown [--mode drain|now]` — stop the daemon (drain waits
+/// for queued + running jobs; now cancels them).
+pub fn cmd_shutdown(args: &Args) -> Result<()> {
+    let mode = match args.get("mode") {
+        None => ShutdownMode::Drain,
+        Some(m) => ShutdownMode::parse(m)?,
+    };
+    let mut client = Client::connect(&addr(args))?;
+    client.send(&Request::Shutdown { mode })?;
+    println!("{}", client.expect_frame()?.to_string());
+    Ok(())
+}
+
+/// Print every frame until the stream completes.
+fn stream_printing(client: &mut Client) -> Result<()> {
+    stream_until_terminal(client, |frame| println!("{}", frame.to_string()))
+}
+
+/// Drive a subscription to completion. The stream is done when either
+/// (a) the `attached` ack reports `closed: true` — the run was already
+/// terminal and the replay (which ends with its terminal frame) is
+/// complete — or (b) a terminal frame (`finish`, or `state` of
+/// `failed`/`cancelled`) arrives after the ack. Frames are handed to
+/// `sink` as they arrive, the ack included.
+fn stream_until_terminal(
+    client: &mut Client,
+    mut sink: impl FnMut(&Json),
+) -> Result<()> {
+    let mut attached = false;
+    let mut terminal = false;
+    loop {
+        let Some(frame) = client.recv()? else {
+            bail!("serve daemon closed the connection before the run ended");
+        };
+        if Client::frame_type(&frame) == Some("error") {
+            let msg = frame
+                .get("message")
+                .and_then(Json::as_str)
+                .unwrap_or("unspecified error");
+            bail!("serve daemon error: {msg}");
+        }
+        sink(&frame);
+        match Client::frame_type(&frame) {
+            Some("attached") => {
+                attached = true;
+                if frame.get("closed").and_then(Json::as_bool)
+                    == Some(true)
+                {
+                    return Ok(());
+                }
+            }
+            Some("finish") => terminal = true,
+            Some("state") => {
+                let s = frame.get("state").and_then(Json::as_str);
+                if matches!(s, Some("failed") | Some("cancelled")) {
+                    terminal = true;
+                }
+            }
+            _ => {}
+        }
+        if attached && terminal {
+            return Ok(());
+        }
+    }
+}

@@ -486,6 +486,21 @@ impl ExperimentConfig {
         Ok(cfg)
     }
 
+    /// Apply an ordered list of dotted-key settings (the CLI forwarding
+    /// and serve job-spec shape); later entries override earlier ones
+    /// exactly as repeated CLI flags do.
+    pub fn apply<K, V>(&mut self, pairs: &[(K, V)]) -> Result<()>
+    where
+        K: AsRef<str>,
+        V: AsRef<str>,
+    {
+        for (k, v) in pairs {
+            self.set(k.as_ref(), v.as_ref())
+                .with_context(|| format!("config key {:?}", k.as_ref()))?;
+        }
+        Ok(())
+    }
+
     /// Set a single knob by dotted key. Shared by TOML and CLI paths.
     pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
         match key {

@@ -29,6 +29,7 @@ pub mod live;
 pub mod metrics;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod server;
 pub mod sim;
 pub mod tensor;

@@ -48,15 +48,22 @@ pub fn scope_for(rel: &str) -> Scope {
     let in_dir = |d: &str| rel.starts_with(&format!("{d}/"));
     Scope {
         // D001: unordered-map iteration order leaks into protocol
-        // decisions in the deterministic core.
-        d001: in_dir("sim") || in_dir("server") || in_dir("bandwidth"),
+        // decisions in the deterministic core — and into the serve
+        // daemon's run listings and scheduling.
+        d001: in_dir("sim")
+            || in_dir("server")
+            || in_dir("bandwidth")
+            || in_dir("serve"),
         // D002: the simulator runs on virtual time only.
         d002: in_dir("sim"),
         // D003: named streams everywhere except the stream implementation.
         d003: !in_dir("rng"),
-        // D004: the paths the concurrent server (ROADMAP Open item 1)
-        // will make multi-writer must not panic.
-        d004: rel == "sim/protocol.rs" || in_dir("server"),
+        // D004: multi-writer paths must not panic — the server apply
+        // path, and the serve daemon (a panicking thread would wedge a
+        // multi-tenant process).
+        d004: rel == "sim/protocol.rs"
+            || in_dir("server")
+            || in_dir("serve"),
         // D005 applies tree-wide.
         d005: true,
     }
@@ -66,8 +73,9 @@ pub fn scope_for(rel: &str) -> Scope {
 pub const RULEBOOK: &[(&str, &str)] = &[
     (
         "D001",
-        "no HashMap/HashSet in sim/, server/, bandwidth/ — iteration order \
-         is nondeterministic; use BTreeMap/BTreeSet or a sorted Vec",
+        "no HashMap/HashSet in sim/, server/, bandwidth/, serve/ — \
+         iteration order is nondeterministic; use BTreeMap/BTreeSet or a \
+         sorted Vec",
     ),
     (
         "D002",
@@ -82,8 +90,8 @@ pub const RULEBOOK: &[(&str, &str)] = &[
     ),
     (
         "D004",
-        "no unwrap()/expect() in the protocol core (sim/protocol.rs) and \
-         the server apply path (server/)",
+        "no unwrap()/expect() in the protocol core (sim/protocol.rs), \
+         the server apply path (server/), and the serve daemon (serve/)",
     ),
     ("D005", "every unsafe block carries a // SAFETY: comment"),
 ];
@@ -433,6 +441,25 @@ mod tests {
                 .len(),
             1
         );
+    }
+
+    #[test]
+    fn serve_is_in_d001_and_d004_scope() {
+        // The serve daemon is multi-writer shared state: unordered maps
+        // and panicking paths are banned there like in server/.
+        let scope = scope_for("serve/daemon.rs");
+        assert!(scope.d001 && scope.d004);
+        assert!(!scope.d002, "serve/ may read host time");
+        let src = "
+            use std::collections::HashMap;
+            fn f(x: Option<u32>) -> u32 { x.unwrap() }
+        ";
+        let f = lint_source("serve/daemon.rs", src, scope);
+        assert!(f.iter().any(|x| x.rule == "D001"), "{f:?}");
+        assert!(f.iter().any(|x| x.rule == "D004"), "{f:?}");
+        // ... while a non-scoped tree (cli/) only gets the global rules.
+        let g = lint_source("cli/serve_cmds.rs", src, scope_for("cli/serve_cmds.rs"));
+        assert!(g.is_empty(), "{g:?}");
     }
 
     #[test]

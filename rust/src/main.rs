@@ -8,6 +8,9 @@
 //! * `sweep-lr` — the 16-candidate learning-rate selection protocol
 //! * `live`     — threaded live mode (coordination throughput)
 //! * `info`     — artifact inventory + platform
+//! * `serve`    — multi-tenant run daemon (NDJSON over TCP; see
+//!   `src/serve/`); clients: `submit`, `attach`, `tail`, `runs`,
+//!   `cancel`, `shutdown`
 //!
 //! Examples:
 //! ```text
@@ -72,6 +75,13 @@ fn real_main() -> Result<()> {
         Some("sweep-lr") => cmd_sweep_lr(&args),
         Some("live") => cmd_live(&args),
         Some("info") => cmd_info(),
+        Some("serve") => fasgd::cli::serve_cmds::cmd_serve(&args),
+        Some("submit") => fasgd::cli::serve_cmds::cmd_submit(&args),
+        Some("attach") => fasgd::cli::serve_cmds::cmd_attach(&args),
+        Some("tail") => fasgd::cli::serve_cmds::cmd_tail(&args),
+        Some("runs") => fasgd::cli::serve_cmds::cmd_runs(&args),
+        Some("cancel") => fasgd::cli::serve_cmds::cmd_cancel(&args),
+        Some("shutdown") => fasgd::cli::serve_cmds::cmd_shutdown(&args),
         Some(other) => bail!("unknown subcommand {other:?}; try `repro help`"),
         None => {
             print_help();
@@ -218,7 +228,8 @@ fn print_help() {
     let policies = fasgd::server::registry().names().join("|");
     println!(
         "repro — Faster Asynchronous SGD (Odena 2016) reproduction\n\n\
-         usage: repro <train|fig1|fig2|fig3|sweep-lr|live|info> [--key value ...]\n\n\
+         usage: repro <train|fig1|fig2|fig3|sweep-lr|live|info|serve> [--key value ...]\n\
+         \x20      repro <submit|attach|tail|runs|cancel|shutdown> [--addr H:P ...]\n\n\
          common flags: --policy <{policies}>\n\
          \x20                --lambda N --mu N --iters N --alpha F --seed N\n\
          \x20                --workers N --inflight D --pipeline true|false\n\
@@ -237,6 +248,11 @@ fn print_help() {
          \x20                --config file.toml --out dir/\n\
          \x20 train-only:    --rng-audit (serial-vs-parallel RNG draw-ledger\n\
          \x20                   diff instead of training; see EXPERIMENTS.md)\n\
+         \x20 serve:         --port P --max-concurrent N --history N\n\
+         \x20                   --frame-cap N --store dir/ --chunk N\n\
+         \x20 serve clients: --addr H:P (default 127.0.0.1:7878);\n\
+         \x20                   submit also takes --name X --wait and any\n\
+         \x20                   config knob as a job override\n\
          see README.md for the full knob list"
     );
 }

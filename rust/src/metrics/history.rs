@@ -17,6 +17,22 @@ pub struct EvalPoint {
     pub val_acc: f64,
 }
 
+impl EvalPoint {
+    /// JSON record (serve stream frames, reports) — round-trippable by
+    /// [`crate::util::json::Json::parse`]; a diverged run's NaN losses
+    /// degrade to `null` at the value level.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{num_or_null, obj};
+        obj(vec![
+            ("iter", self.iter.into()),
+            ("server_ts", self.server_ts.into()),
+            ("vtime", num_or_null(self.vtime)),
+            ("val_loss", num_or_null(self.val_loss)),
+            ("val_acc", num_or_null(self.val_acc)),
+        ])
+    }
+}
+
 /// The full per-run history: evaluations plus running train-loss EMA.
 #[derive(Debug, Clone, Default)]
 pub struct History {

@@ -2,7 +2,7 @@
 
 use crate::bandwidth::accounting::BandwidthReport;
 use crate::metrics::History;
-use crate::util::json::{obj, Json};
+use crate::util::json::{num_or_null, obj, Json};
 
 /// Histogram of step-staleness τ observed at apply time.
 #[derive(Debug, Clone, Default)]
@@ -86,6 +86,12 @@ impl RunSummary {
     }
 
     /// JSON record (one row of a figure's results file).
+    ///
+    /// Round-trippable by [`crate::util::json::Json::parse`]: the loss
+    /// fields can be NaN (empty history, diverged run) and are emitted as
+    /// `null` *at the value level* via [`num_or_null`], so
+    /// serialize→parse→compare is an identity — the serve layer's
+    /// determinism contract depends on this.
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("name", self.name.as_str().into()),
@@ -93,12 +99,12 @@ impl RunSummary {
             ("clients", self.clients.into()),
             ("batch", self.batch.into()),
             ("iters", self.iters.into()),
-            ("final_val_loss", self.final_val_loss().into()),
-            ("best_val_loss", self.best_val_loss().into()),
-            ("tail_val_loss", self.history.tail_mean(5).into()),
+            ("final_val_loss", num_or_null(self.final_val_loss())),
+            ("best_val_loss", num_or_null(self.best_val_loss())),
+            ("tail_val_loss", num_or_null(self.history.tail_mean(5))),
             ("final_val_acc",
-             self.history.evals.last().map(|p| p.val_acc).unwrap_or(f64::NAN)
-                 .into()),
+             num_or_null(self.history.evals.last().map(|p| p.val_acc)
+                 .unwrap_or(f64::NAN))),
             ("mean_staleness", self.staleness.mean().into()),
             ("max_staleness", self.staleness.max().into()),
             ("server_updates", self.server_updates.into()),
@@ -168,6 +174,33 @@ mod tests {
         let shards =
             parsed.get("shard_bytes").unwrap().as_arr().unwrap();
         assert_eq!(shards.len(), 2);
+    }
+
+    #[test]
+    fn to_json_round_trips_through_parser() {
+        // Empty history: final/best/tail losses and final_val_acc are all
+        // NaN — the record must still satisfy serialize→parse→compare.
+        let summary = RunSummary {
+            name: "rt".into(),
+            policy: "asgd".into(),
+            clients: 1,
+            batch: 1,
+            iters: 0,
+            history: History::new(),
+            staleness: StalenessHistogram::new(4),
+            bandwidth: Default::default(),
+            wall_secs: 0.25,
+            virtual_secs: 0.0,
+            server_updates: 0,
+            probes: Default::default(),
+        };
+        let j = summary.to_json();
+        assert_eq!(j.get("final_val_loss"), Some(&Json::Null));
+        assert_eq!(j.get("final_val_acc"), Some(&Json::Null));
+        let reparsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(reparsed, j);
+        let reparsed_pretty = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(reparsed_pretty, j);
     }
 
     #[test]

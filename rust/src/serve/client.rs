@@ -1,0 +1,93 @@
+//! Blocking NDJSON client for the serve wire protocol — the shared
+//! engine behind `repro submit` / `attach` / `tail` / `runs` /
+//! `cancel` / `shutdown` and the integration tests.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::{bail, Context, Result};
+
+use crate::serve::protocol::Request;
+use crate::util::json::Json;
+
+/// One TCP connection to a `repro serve` daemon.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    /// Connect to `host:port` (e.g. `127.0.0.1:7878`).
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to serve daemon at {addr}"))?;
+        let writer = stream
+            .try_clone()
+            .context("cloning client stream")?;
+        Ok(Self {
+            reader: BufReader::new(stream),
+            writer,
+        })
+    }
+
+    /// Send one request frame.
+    pub fn send(&mut self, req: &Request) -> Result<()> {
+        let mut line = req.to_line();
+        line.push('\n');
+        self.writer
+            .write_all(line.as_bytes())
+            .context("writing request to serve daemon")?;
+        self.writer.flush().context("flushing request")
+    }
+
+    /// Next raw frame line (`None` on EOF — daemon gone or stream done).
+    pub fn recv_line(&mut self) -> Result<Option<String>> {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            let n = self
+                .reader
+                .read_line(&mut line)
+                .context("reading frame from serve daemon")?;
+            if n == 0 {
+                return Ok(None);
+            }
+            if !line.trim().is_empty() {
+                return Ok(Some(line.trim_end().to_string()));
+            }
+        }
+    }
+
+    /// Next frame, parsed.
+    pub fn recv(&mut self) -> Result<Option<Json>> {
+        match self.recv_line()? {
+            None => Ok(None),
+            Some(line) => {
+                let j = Json::parse(&line)
+                    .with_context(|| format!("parsing frame {line:?}"))?;
+                Ok(Some(j))
+            }
+        }
+    }
+
+    /// Next frame, with `error` frames raised as errors and EOF rejected
+    /// — for request/reply exchanges where a frame is owed.
+    pub fn expect_frame(&mut self) -> Result<Json> {
+        let Some(j) = self.recv()? else {
+            bail!("serve daemon closed the connection mid-exchange");
+        };
+        if j.get("type").and_then(Json::as_str) == Some("error") {
+            let msg = j
+                .get("message")
+                .and_then(Json::as_str)
+                .unwrap_or("unspecified error");
+            bail!("serve daemon error: {msg}");
+        }
+        Ok(j)
+    }
+
+    /// Frame type accessor shared by the CLI loops.
+    pub fn frame_type(frame: &Json) -> Option<&str> {
+        frame.get("type").and_then(Json::as_str)
+    }
+}

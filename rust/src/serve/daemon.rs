@@ -1,0 +1,433 @@
+//! The `repro serve` daemon: one TCP accept loop, a fair FIFO scheduler
+//! multiplexing queued jobs over a bounded worker budget, and per-run
+//! frame fan-out to any number of subscribers.
+//!
+//! Thread layout:
+//! * **accept** — `TcpListener::accept` loop; one handler thread per
+//!   connection. Shutdown wakes it with a self-connect.
+//! * **scheduler** — claims queued runs while fewer than
+//!   `max_concurrent` are running, spawns one job thread each, then
+//!   parks on a condvar until a submission or completion wakes it.
+//! * **job** (one per running simulation) — builds the config, runs the
+//!   simulation with a [`StreamObserver`] publishing into the run's
+//!   [`FrameHub`], and records the terminal state in the registry.
+//! * **connection** (one reader + one writer per client) — the reader
+//!   parses NDJSON requests; the writer drains a bounded channel of
+//!   outgoing lines. Hub subscriptions feed that same channel, so a slow
+//!   client drops *its own* live frames (drop-and-count in the hub) and
+//!   never stalls a simulation.
+//!
+//! Lock order is registry → hub, never the reverse: the registry
+//! publishes lifecycle frames while holding its own lock, and the hub
+//! never calls back into the registry.
+//!
+//! Shutdown: `drain` closes submissions and lets queued + running jobs
+//! complete; `now` additionally cancels the queue and sets every running
+//! job's cooperative cancel flag. Either way the scheduler exits once
+//! the registry is idle and `join()` returns.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::serve::protocol::{self, Request, ShutdownMode};
+use crate::serve::registry::{ClaimedJob, RunRegistry};
+use crate::sim::observers::StreamObserver;
+use crate::sim::Simulation;
+
+/// Default port for `repro serve` / client subcommands.
+pub const DEFAULT_PORT: u16 = 7878;
+
+/// Outgoing-line buffer per connection: live frames beyond this are
+/// dropped for that subscriber (and counted by the hub).
+const CONN_BUFFER: usize = 4096;
+
+/// Daemon knobs (all CLI-settable; see `repro serve --help`).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub host: String,
+    /// 0 = ephemeral (the chosen port is printed and in `addr()`).
+    pub port: u16,
+    /// Shared worker budget: how many simulations run concurrently.
+    pub max_concurrent: usize,
+    /// Terminal runs kept in memory (the registry history ring).
+    pub history_cap: usize,
+    /// Frames buffered per run for late-subscriber replay.
+    pub frame_cap: usize,
+    /// Root directory for per-run artifacts (`None` = memory only).
+    pub store: Option<PathBuf>,
+    /// Iterations between cooperative cancellation checks.
+    pub chunk: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            host: "127.0.0.1".to_string(),
+            port: DEFAULT_PORT,
+            max_concurrent: 2,
+            history_cap: 64,
+            frame_cap: 65536,
+            store: None,
+            chunk: 128,
+        }
+    }
+}
+
+struct Shared {
+    reg: Mutex<RunRegistry>,
+    cv: Condvar,
+    stop: AtomicBool,
+    addr: SocketAddr,
+    max_concurrent: usize,
+    chunk: u64,
+}
+
+impl Shared {
+    /// Registry lock with poison recovery: a panicking job thread must
+    /// not wedge the whole daemon.
+    fn lock_reg(&self) -> MutexGuard<'_, RunRegistry> {
+        self.reg.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// A running daemon (see [`Daemon::start`]).
+pub struct DaemonHandle {
+    shared: Arc<Shared>,
+    accept: JoinHandle<()>,
+    scheduler: JoinHandle<()>,
+}
+
+impl DaemonHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    pub fn port(&self) -> u16 {
+        self.shared.addr.port()
+    }
+
+    /// Begin shutdown (idempotent; also reachable over the wire via the
+    /// `shutdown` request).
+    pub fn shutdown(&self, mode: ShutdownMode) {
+        begin_shutdown(&self.shared, mode);
+    }
+
+    /// Block until the accept loop and scheduler exit — i.e. shutdown
+    /// was requested and every claimed job reached a terminal state.
+    pub fn join(self) -> Result<()> {
+        if self.accept.join().is_err() {
+            anyhow::bail!("serve: accept thread panicked");
+        }
+        if self.scheduler.join().is_err() {
+            anyhow::bail!("serve: scheduler thread panicked");
+        }
+        Ok(())
+    }
+}
+
+/// Namespace for [`Daemon::start`].
+pub struct Daemon;
+
+impl Daemon {
+    /// Bind, print `serve: listening on <addr>`, and spawn the accept +
+    /// scheduler threads. Returns immediately with the handle.
+    pub fn start(cfg: ServeConfig) -> Result<DaemonHandle> {
+        let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))
+            .with_context(|| {
+                format!("serve: binding {}:{}", cfg.host, cfg.port)
+            })?;
+        let addr = listener
+            .local_addr()
+            .context("serve: reading bound address")?;
+        let shared = Arc::new(Shared {
+            reg: Mutex::new(RunRegistry::new(
+                cfg.history_cap,
+                cfg.frame_cap,
+                cfg.store.clone(),
+            )),
+            cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+            addr,
+            max_concurrent: cfg.max_concurrent.max(1),
+            chunk: cfg.chunk,
+        });
+        println!("serve: listening on {addr}");
+        log::info!(
+            "serve: max_concurrent={} history={} frame_cap={} store={:?}",
+            shared.max_concurrent,
+            cfg.history_cap,
+            cfg.frame_cap,
+            cfg.store,
+        );
+
+        let accept = {
+            let shared = shared.clone();
+            std::thread::spawn(move || accept_loop(listener, shared))
+        };
+        let scheduler = {
+            let shared = shared.clone();
+            std::thread::spawn(move || scheduler_loop(shared))
+        };
+        Ok(DaemonHandle {
+            shared,
+            accept,
+            scheduler,
+        })
+    }
+}
+
+fn begin_shutdown(shared: &Arc<Shared>, mode: ShutdownMode) {
+    {
+        let mut reg = shared.lock_reg();
+        reg.close_submissions();
+        if mode == ShutdownMode::Now {
+            // Cancel the queue outright; running jobs get their
+            // cooperative flag and confirm at the next chunk boundary.
+            for id in reg.queued_ids() {
+                let _ = reg.request_cancel(&id);
+            }
+            for id in reg.running_ids() {
+                let _ = reg.request_cancel(&id);
+            }
+        }
+    }
+    shared.stop.store(true, Ordering::SeqCst);
+    shared.cv.notify_all();
+    // Unblock the accept loop (it re-checks the stop flag per accept).
+    let _ = TcpStream::connect(shared.addr);
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(e) => {
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                log::warn!("serve: accept failed: {e}");
+                continue;
+            }
+        };
+        if shared.stop.load(Ordering::SeqCst) {
+            return; // the shutdown self-connect (or a straggler)
+        }
+        let shared = shared.clone();
+        std::thread::spawn(move || {
+            if let Err(e) = handle_connection(stream, &shared) {
+                log::debug!("serve: connection ended: {e:#}");
+            }
+        });
+    }
+}
+
+fn scheduler_loop(shared: Arc<Shared>) {
+    let mut guard = shared.lock_reg();
+    loop {
+        while guard.count_running() < shared.max_concurrent
+            && guard.queue_len() > 0
+        {
+            if let Some(job) = guard.claim_next() {
+                let sh = shared.clone();
+                let chunk = sh.chunk;
+                std::thread::spawn(move || run_job(&sh, job, chunk));
+            }
+        }
+        if shared.stop.load(Ordering::SeqCst) && guard.is_idle() {
+            return;
+        }
+        guard = shared
+            .cv
+            .wait(guard)
+            .unwrap_or_else(|e| e.into_inner());
+    }
+}
+
+/// One claimed job: build the config, run the simulation with a
+/// streaming observer, record the terminal state. The registry lock is
+/// only taken at the end — the simulation itself runs lock-free.
+fn run_job(shared: &Arc<Shared>, job: ClaimedJob, chunk: u64) {
+    let outcome = (|| -> Result<Option<crate::metrics::RunSummary>> {
+        let cfg = job.spec.build_config(&job.id)?;
+        let sim = Simulation::builder(cfg)
+            .observer(StreamObserver::new(job.id.as_str(), job.hub.clone()))
+            .build()?;
+        sim.run_with_cancel(&job.cancel, chunk)
+    })();
+    let mut reg = shared.lock_reg();
+    match outcome {
+        Ok(Some(summary)) => {
+            if let Some(dir) = reg.run_dir(&job.id) {
+                let path = dir.join("curve.csv");
+                if let Err(e) = crate::metrics::writer::write_curves_csv(
+                    &path,
+                    std::slice::from_ref(&summary),
+                ) {
+                    log::warn!("serve: writing {path:?} failed: {e:#}");
+                }
+            }
+            reg.finish(&job.id, summary.to_json());
+        }
+        Ok(None) => reg.mark_cancelled(&job.id),
+        Err(e) => reg.fail(&job.id, format!("{e:#}")),
+    }
+    drop(reg);
+    shared.cv.notify_all();
+}
+
+fn handle_connection(stream: TcpStream, shared: &Arc<Shared>) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+
+    let write_half = stream
+        .try_clone()
+        .context("serve: cloning connection stream")?;
+    let (tx, rx): (SyncSender<String>, Receiver<String>) =
+        sync_channel(CONN_BUFFER);
+    let writer = std::thread::spawn(move || {
+        let mut out = std::io::BufWriter::new(write_half);
+        while let Ok(line) = rx.recv() {
+            if out.write_all(line.as_bytes()).is_err()
+                || out.write_all(b"\n").is_err()
+                || out.flush().is_err()
+            {
+                return; // client gone; senders see Disconnected
+            }
+        }
+    });
+
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line.context("serve: reading request line")?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let req = match Request::parse_line(&line) {
+            Ok(r) => r,
+            Err(e) => {
+                send(&tx, protocol::error_frame(&format!("{e:#}")))?;
+                continue;
+            }
+        };
+        match req {
+            Request::Submit(spec) => {
+                // Validate before queueing so a bad spec fails at
+                // submit time, not as a dead run later.
+                if let Err(e) = spec.build_config("pending") {
+                    send(&tx, protocol::error_frame(&format!("{e:#}")))?;
+                    continue;
+                }
+                let submitted = shared.lock_reg().submit(spec);
+                match submitted {
+                    Ok((run, _hub)) => {
+                        let name = shared
+                            .lock_reg()
+                            .get(&run)
+                            .map(|e| e.name.clone())
+                            .unwrap_or_else(|| run.clone());
+                        shared.cv.notify_all();
+                        send(&tx, protocol::submitted_frame(&run, &name))?;
+                    }
+                    Err(e) => {
+                        send(&tx, protocol::error_frame(&format!("{e:#}")))?
+                    }
+                }
+            }
+            Request::Attach { run, events } => {
+                subscribe(shared, &tx, &run, events)?;
+            }
+            Request::Tail { run } => {
+                let target = match run {
+                    Some(r) => Some(r),
+                    None => shared.lock_reg().latest_id(),
+                };
+                match target {
+                    Some(r) => subscribe(shared, &tx, &r, false)?,
+                    None => send(
+                        &tx,
+                        protocol::error_frame("no runs submitted yet"),
+                    )?,
+                }
+            }
+            Request::List => {
+                let runs = shared.lock_reg().list();
+                send(&tx, protocol::runs_frame(runs))?;
+            }
+            Request::Cancel { run } => {
+                let res = shared.lock_reg().request_cancel(&run);
+                match res {
+                    Ok(state) => {
+                        shared.cv.notify_all();
+                        send(
+                            &tx,
+                            protocol::cancelled_frame(&run, state.as_str()),
+                        )?;
+                    }
+                    Err(e) => {
+                        send(&tx, protocol::error_frame(&format!("{e:#}")))?
+                    }
+                }
+            }
+            Request::Result { run } => {
+                let frame = {
+                    let reg = shared.lock_reg();
+                    match reg.get(&run) {
+                        Some(e) => protocol::result_frame(
+                            &run,
+                            e.state.as_str(),
+                            e.summary.as_ref(),
+                            e.error.as_deref(),
+                        ),
+                        None => protocol::error_frame(&format!(
+                            "unknown run {run:?}"
+                        )),
+                    }
+                };
+                send(&tx, frame)?;
+            }
+            Request::Shutdown { mode } => {
+                send(&tx, protocol::shutting_down_frame(mode))?;
+                begin_shutdown(shared, mode);
+            }
+        }
+    }
+    drop(tx);
+    let _ = writer.join();
+    Ok(())
+}
+
+/// Attach this connection's outgoing channel to a run's hub: blocking
+/// lossless replay of buffered frames, then live delivery (for which a
+/// full channel drops frames rather than stalling the run). The
+/// `attached` frame follows the replay and carries its stats —
+/// `closed: true` means the stream is complete (terminal frame already
+/// delivered), so the client should not wait for more.
+fn subscribe(
+    shared: &Arc<Shared>,
+    tx: &SyncSender<String>,
+    run: &str,
+    events: bool,
+) -> Result<()> {
+    let hub = shared.lock_reg().hub(run);
+    let Some(hub) = hub else {
+        return send(tx, protocol::error_frame(&format!("unknown run {run:?}")));
+    };
+    let sub = hub.subscribe(tx.clone(), events);
+    let mode = if events { "attach" } else { "tail" };
+    send(
+        tx,
+        protocol::attached_frame(run, mode, sub.replayed, sub.gap, sub.closed),
+    )
+}
+
+/// Queue one outgoing line, blocking if the client is slow: direct
+/// replies (acks, errors, results) are never dropped — only live hub
+/// frames go through the lossy path.
+fn send(tx: &SyncSender<String>, line: String) -> Result<()> {
+    tx.send(line).context("serve: client disconnected")
+}

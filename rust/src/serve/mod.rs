@@ -1,0 +1,48 @@
+//! `repro serve` (S16): a multi-tenant run service that multiplexes
+//! concurrent simulations over a shared worker budget and streams
+//! observer events over the wire.
+//!
+//! # Wire protocol (v1)
+//!
+//! Line-delimited JSON over plain TCP; every frame carries `"v": 1`.
+//! Client → daemon requests: `submit` (full config + dotted-path
+//! overrides, the same `--key value` vocabulary as `repro train`),
+//! `attach`
+//! (full frame stream for a run), `tail` (evals + lifecycle only),
+//! `list`, `result`, `cancel`, `shutdown`. Daemon → client frames:
+//! `submitted`, `attached`, `eval`, `event`, `state`, `finish`,
+//! `runs`, `result`, `cancelled`, `shutting_down`, `error`. Everything
+//! is hand-rolled through [`crate::util::json`] — the build stays
+//! offline, no serde/HTTP.
+//!
+//! # Determinism contract
+//!
+//! A job submitted with seed S produces a
+//! [`RunSummary`](crate::metrics::RunSummary) identical to a direct
+//! `repro train` run of the same config, except `wall_secs` (host
+//! time). Frames for one run arrive in schedule order with exactly one
+//! `finish`; a slow subscriber loses *its own* live frames
+//! (drop-and-count, reported in the finish frame's `dropped`) but never
+//! perturbs the simulation. Replay from the per-run ring
+//! ([`FrameHub`](crate::sim::observers::FrameHub)) is lossless up to
+//! `--frame-cap`.
+//!
+//! # Pieces
+//!
+//! * [`protocol`] — frame types, request parsing, frame builders;
+//! * [`registry`] — the run state machine (`queued → running →
+//!   finished | failed | cancelled`), bounded history ring, per-run
+//!   artifact store;
+//! * [`daemon`] — accept loop, FIFO scheduler with `--max-concurrent`,
+//!   graceful shutdown (drain | now);
+//! * [`client`] — the blocking client the CLI subcommands wrap.
+
+pub mod client;
+pub mod daemon;
+pub mod protocol;
+pub mod registry;
+
+pub use client::Client;
+pub use daemon::{Daemon, DaemonHandle, ServeConfig, DEFAULT_PORT};
+pub use protocol::{JobSpec, Request, ShutdownMode, WIRE_VERSION};
+pub use registry::{ClaimedJob, RunEntry, RunRegistry, RunState};

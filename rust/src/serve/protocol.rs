@@ -1,0 +1,567 @@
+//! The serve wire protocol: versioned NDJSON frames over plain TCP.
+//!
+//! Both directions speak newline-delimited JSON built and parsed by the
+//! in-tree [`crate::util::json`] (the build is offline: no serde, no HTTP
+//! stack). Every frame carries `"v": 1` ([`WIRE_VERSION`]); a version
+//! mismatch is rejected with an `error` frame naming the supported
+//! version, so old clients fail loudly instead of misparsing.
+//!
+//! Client → daemon requests ([`Request`]): `submit`, `attach`, `tail`,
+//! `list`, `cancel`, `result`, `shutdown`. A `submit` carries a
+//! [`JobSpec`] — full config plus dotted-path overrides, in the shape of
+//! the tracel runner payload (SNIPPETS.md snippets 2–3): a `config`
+//! object of dotted keys applied in order, then an `overrides` array of
+//! `[key, value]` pairs applied after it. Every value routes through
+//! [`crate::config::ExperimentConfig::set`], so the spec vocabulary is
+//! exactly the CLI/TOML vocabulary.
+//!
+//! Daemon → client frames are built by the `*_frame` helpers here:
+//! request acks (`submitted`, `attached`, `runs`, `cancelled`, `result`,
+//! `shutting_down`, `error`) and the per-run stream (`state`, `eval`,
+//! `event`, `finish`) published through a
+//! [`crate::sim::observers::FrameHub`]. Stream frames for one run arrive
+//! in schedule order with exactly one `finish`.
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::metrics::EvalPoint;
+use crate::sim::trace::Event;
+use crate::util::json::{obj, Json};
+
+/// Wire protocol version; bumped on any frame-shape change.
+pub const WIRE_VERSION: u64 = 1;
+
+/// One submitted job: an ordered list of dotted-key settings over the
+/// default config, plus an optional display name.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct JobSpec {
+    /// Run name (falls back to the assigned run id).
+    pub name: Option<String>,
+    /// Ordered `(dotted_key, value)` settings — `config` object entries
+    /// first, then `overrides` pairs; later entries win, like repeated
+    /// CLI flags.
+    pub settings: Vec<(String, String)>,
+}
+
+impl JobSpec {
+    /// Build the run's [`ExperimentConfig`]: defaults + settings in
+    /// order, name resolution (explicit `name` > a `name` setting >
+    /// `fallback_name`), then full validation.
+    pub fn build_config(&self, fallback_name: &str) -> Result<ExperimentConfig> {
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply(&self.settings)?;
+        if let Some(n) = &self.name {
+            cfg.name = n.clone();
+        } else if !self.settings.iter().any(|(k, _)| k == "name") {
+            cfg.name = fallback_name.to_string();
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// The spec's JSON form (the `submit` frame body and the on-disk
+    /// `spec.json`). Settings ride in `overrides` — an array of pairs —
+    /// so order and duplicate keys survive the round trip exactly.
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = Vec::new();
+        if let Some(n) = &self.name {
+            fields.push(("name", n.as_str().into()));
+        }
+        fields.push(("config", Json::Obj(Vec::new())));
+        fields.push((
+            "overrides",
+            Json::Arr(
+                self.settings
+                    .iter()
+                    .map(|(k, v)| {
+                        Json::Arr(vec![k.as_str().into(), v.as_str().into()])
+                    })
+                    .collect(),
+            ),
+        ));
+        obj(fields)
+    }
+
+    /// Parse a spec out of a `submit` frame (or `spec.json`): `config`
+    /// object entries in document order, then `overrides` pairs.
+    pub fn from_json(j: &Json) -> Result<JobSpec> {
+        let name = match j.get("name") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_str()
+                    .ok_or_else(|| anyhow::anyhow!("name must be a string"))?
+                    .to_string(),
+            ),
+        };
+        let mut settings = Vec::new();
+        if let Some(cfg) = j.get("config") {
+            let Json::Obj(fields) = cfg else {
+                bail!("config must be an object of dotted keys");
+            };
+            for (k, v) in fields {
+                settings.push((k.clone(), scalar_to_config_string(v)?));
+            }
+        }
+        if let Some(ovr) = j.get("overrides") {
+            let Json::Arr(pairs) = ovr else {
+                bail!("overrides must be an array of [key, value] pairs");
+            };
+            for p in pairs {
+                let Json::Arr(kv) = p else {
+                    bail!("override entries must be [key, value] pairs");
+                };
+                if kv.len() != 2 {
+                    bail!("override entries must be [key, value] pairs");
+                }
+                let k = kv[0]
+                    .as_str()
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("override keys must be strings")
+                    })?
+                    .to_string();
+                settings.push((k, scalar_to_config_string(&kv[1])?));
+            }
+        }
+        Ok(JobSpec { name, settings })
+    }
+}
+
+/// Render a scalar JSON value in the string form
+/// [`ExperimentConfig::set`] parses. Non-finite numbers and composites
+/// are rejected — config knobs are scalars.
+pub fn scalar_to_config_string(v: &Json) -> Result<String> {
+    match v {
+        Json::Str(s) => Ok(s.clone()),
+        Json::Bool(b) => Ok(b.to_string()),
+        Json::Num(n) if n.is_finite() => Ok(Json::Num(*n).to_string()),
+        other => bail!(
+            "config values must be finite scalars \
+             (string/number/bool); got {}",
+            other.to_string()
+        ),
+    }
+}
+
+/// Graceful-shutdown flavor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShutdownMode {
+    /// Stop accepting work, let queued and running jobs complete.
+    Drain,
+    /// Stop accepting work, cancel queued *and* running jobs.
+    Now,
+}
+
+impl ShutdownMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ShutdownMode::Drain => "drain",
+            ShutdownMode::Now => "now",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "drain" => Ok(ShutdownMode::Drain),
+            "now" => Ok(ShutdownMode::Now),
+            other => bail!("unknown shutdown mode {other:?} (drain|now)"),
+        }
+    }
+}
+
+/// A parsed client → daemon request frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Submit(JobSpec),
+    /// Subscribe to a run's full frame stream (replay + live).
+    /// `events = false` filters out the high-frequency event frames.
+    Attach { run: String, events: bool },
+    /// `attach` without events, defaulting to the latest run.
+    Tail { run: Option<String> },
+    List,
+    Cancel { run: String },
+    /// Fetch a run's state (and summary once finished).
+    Result { run: String },
+    Shutdown { mode: ShutdownMode },
+}
+
+impl Request {
+    /// Parse one NDJSON request line, enforcing the wire version.
+    pub fn parse_line(line: &str) -> Result<Request> {
+        let j = Json::parse(line).context("malformed request frame")?;
+        let v = j
+            .req("v")?
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("v must be a number"))?;
+        if v != WIRE_VERSION as f64 {
+            bail!(
+                "unsupported wire version {v} — this daemon speaks \
+                 v{WIRE_VERSION}"
+            );
+        }
+        let ty = j
+            .req("type")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("type must be a string"))?;
+        let run_field = |j: &Json| -> Result<String> {
+            Ok(j.req("run")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("run must be a string"))?
+                .to_string())
+        };
+        match ty {
+            "submit" => Ok(Request::Submit(JobSpec::from_json(&j)?)),
+            "attach" => Ok(Request::Attach {
+                run: run_field(&j)?,
+                events: j
+                    .get("events")
+                    .and_then(Json::as_bool)
+                    .unwrap_or(true),
+            }),
+            "tail" => Ok(Request::Tail {
+                run: match j.get("run") {
+                    None | Some(Json::Null) => None,
+                    Some(v) => Some(
+                        v.as_str()
+                            .ok_or_else(|| {
+                                anyhow::anyhow!("run must be a string")
+                            })?
+                            .to_string(),
+                    ),
+                },
+            }),
+            "list" => Ok(Request::List),
+            "cancel" => Ok(Request::Cancel { run: run_field(&j)? }),
+            "result" => Ok(Request::Result { run: run_field(&j)? }),
+            "shutdown" => Ok(Request::Shutdown {
+                mode: match j.get("mode") {
+                    None | Some(Json::Null) => ShutdownMode::Drain,
+                    Some(v) => ShutdownMode::parse(v.as_str().ok_or_else(
+                        || anyhow::anyhow!("mode must be a string"),
+                    )?)?,
+                },
+            }),
+            other => bail!("unknown request type {other:?}"),
+        }
+    }
+
+    /// The request's wire form (one line, no trailing newline) — the
+    /// client side of [`Request::parse_line`].
+    pub fn to_line(&self) -> String {
+        match self {
+            Request::Submit(spec) => {
+                let mut fields = vec![
+                    ("v".to_string(), Json::from(WIRE_VERSION)),
+                    ("type".to_string(), "submit".into()),
+                ];
+                if let Json::Obj(body) = spec.to_json() {
+                    fields.extend(body);
+                }
+                Json::Obj(fields).to_string()
+            }
+            Request::Attach { run, events } => frame(
+                "attach",
+                vec![
+                    ("run", run.as_str().into()),
+                    ("events", (*events).into()),
+                ],
+            ),
+            Request::Tail { run } => match run {
+                Some(r) => frame("tail", vec![("run", r.as_str().into())]),
+                None => frame("tail", vec![]),
+            },
+            Request::List => frame("list", vec![]),
+            Request::Cancel { run } => {
+                frame("cancel", vec![("run", run.as_str().into())])
+            }
+            Request::Result { run } => {
+                frame("result", vec![("run", run.as_str().into())])
+            }
+            Request::Shutdown { mode } => {
+                frame("shutdown", vec![("mode", mode.as_str().into())])
+            }
+        }
+    }
+}
+
+/// Build one compact frame line: `{"v":1,"type":ty, ...fields}`.
+fn frame(ty: &str, fields: Vec<(&str, Json)>) -> String {
+    let mut all: Vec<(String, Json)> = vec![
+        ("v".to_string(), Json::from(WIRE_VERSION)),
+        ("type".to_string(), ty.into()),
+    ];
+    all.extend(fields.into_iter().map(|(k, v)| (k.to_string(), v)));
+    Json::Obj(all).to_string()
+}
+
+// ---- daemon → client frames ------------------------------------------
+
+pub fn error_frame(message: &str) -> String {
+    frame("error", vec![("message", message.into())])
+}
+
+pub fn submitted_frame(run: &str, name: &str) -> String {
+    frame(
+        "submitted",
+        vec![
+            ("run", run.into()),
+            ("name", name.into()),
+            ("state", "queued".into()),
+        ],
+    )
+}
+
+/// Ack for `attach`/`tail`: what the replay delivered before live frames
+/// start. `closed` means the stream is already complete (no live frames
+/// will follow the replay).
+pub fn attached_frame(
+    run: &str,
+    mode: &str,
+    replayed: u64,
+    gap: u64,
+    closed: bool,
+) -> String {
+    frame(
+        "attached",
+        vec![
+            ("run", run.into()),
+            ("mode", mode.into()),
+            ("replayed", replayed.into()),
+            ("gap", gap.into()),
+            ("closed", closed.into()),
+        ],
+    )
+}
+
+/// Run lifecycle transition (published into the run's frame hub).
+pub fn state_frame(run: &str, state: &str, error: Option<&str>) -> String {
+    let mut fields: Vec<(&str, Json)> =
+        vec![("run", run.into()), ("state", state.into())];
+    if let Some(e) = error {
+        fields.push(("error", e.into()));
+    }
+    frame("state", fields)
+}
+
+/// One validation eval point of a run (stream frame).
+pub fn eval_frame(run: &str, p: &EvalPoint) -> String {
+    let mut fields: Vec<(String, Json)> = vec![
+        ("v".to_string(), Json::from(WIRE_VERSION)),
+        ("type".to_string(), "eval".into()),
+        ("run".to_string(), run.into()),
+    ];
+    if let Json::Obj(body) = p.to_json() {
+        fields.extend(body);
+    }
+    Json::Obj(fields).to_string()
+}
+
+/// One protocol event of a run (high-frequency stream frame).
+pub fn event_frame(run: &str, e: &Event) -> String {
+    frame("event", vec![("run", run.into()), ("event", e.to_json())])
+}
+
+/// The run's terminal summary (published by
+/// [`crate::sim::observers::StreamObserver::on_finish`]); `dropped` is
+/// the hub's drop-and-count total at finish time.
+pub fn finish_frame(run: &str, summary: Json, dropped: u64) -> String {
+    frame(
+        "finish",
+        vec![
+            ("run", run.into()),
+            ("dropped", dropped.into()),
+            ("summary", summary),
+        ],
+    )
+}
+
+/// Ack for `cancel`: the run's state after the request took effect
+/// (`cancelled` for a queued run; `running` for a running run until its
+/// job loop observes the flag; unchanged for already-terminal runs).
+pub fn cancelled_frame(run: &str, state: &str) -> String {
+    frame("cancelled", vec![("run", run.into()), ("state", state.into())])
+}
+
+/// Ack for `list`: one entry per registered run, submission order.
+pub fn runs_frame(runs: Vec<Json>) -> String {
+    frame("runs", vec![("runs", Json::Arr(runs))])
+}
+
+/// Ack for `result`.
+pub fn result_frame(
+    run: &str,
+    state: &str,
+    summary: Option<&Json>,
+    error: Option<&str>,
+) -> String {
+    let mut fields: Vec<(&str, Json)> =
+        vec![("run", run.into()), ("state", state.into())];
+    if let Some(s) = summary {
+        fields.push(("summary", s.clone()));
+    }
+    if let Some(e) = error {
+        fields.push(("error", e.into()));
+    }
+    frame("result", fields)
+}
+
+pub fn shutting_down_frame(mode: ShutdownMode) -> String {
+    frame("shutting_down", vec![("mode", mode.as_str().into())])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requests_round_trip_through_the_wire_form() {
+        let reqs = vec![
+            Request::Submit(JobSpec {
+                name: Some("j1".into()),
+                settings: vec![
+                    ("policy".into(), "fasgd".into()),
+                    ("iters".into(), "200".into()),
+                    ("iters".into(), "400".into()), // duplicates survive
+                ],
+            }),
+            Request::Attach { run: "r000001".into(), events: true },
+            Request::Attach { run: "r000001".into(), events: false },
+            Request::Tail { run: None },
+            Request::Tail { run: Some("r000002".into()) },
+            Request::List,
+            Request::Cancel { run: "r000001".into() },
+            Request::Result { run: "r000001".into() },
+            Request::Shutdown { mode: ShutdownMode::Drain },
+            Request::Shutdown { mode: ShutdownMode::Now },
+        ];
+        for r in reqs {
+            let line = r.to_line();
+            assert!(!line.contains('\n'), "frames are single lines");
+            let back = Request::parse_line(&line).unwrap();
+            assert_eq!(back, r, "round trip of {line}");
+        }
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected_naming_the_supported_version() {
+        let e = Request::parse_line(r#"{"v":2,"type":"list"}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("v1"), "{e}");
+        assert!(Request::parse_line(r#"{"type":"list"}"#).is_err());
+    }
+
+    #[test]
+    fn submit_config_object_then_overrides_in_order() {
+        let line = r#"{"v":1,"type":"submit","name":"x",
+            "config":{"policy":"asgd","iters":200,"pipeline":false},
+            "overrides":[["iters","300"],["seed",7]]}"#;
+        let Request::Submit(spec) = Request::parse_line(line).unwrap() else {
+            panic!("not a submit");
+        };
+        assert_eq!(spec.name.as_deref(), Some("x"));
+        assert_eq!(
+            spec.settings,
+            vec![
+                ("policy".to_string(), "asgd".to_string()),
+                ("iters".to_string(), "200".to_string()),
+                ("pipeline".to_string(), "false".to_string()),
+                ("iters".to_string(), "300".to_string()),
+                ("seed".to_string(), "7".to_string()),
+            ]
+        );
+        let cfg = spec.build_config("r000001").unwrap();
+        assert_eq!(cfg.name, "x");
+        assert_eq!(cfg.iters, 300); // later setting wins
+        assert_eq!(cfg.seed, 7);
+        assert!(!cfg.pipeline);
+    }
+
+    #[test]
+    fn build_config_falls_back_to_the_run_id_name() {
+        let spec = JobSpec {
+            name: None,
+            settings: vec![("iters".into(), "100".into())],
+        };
+        let cfg = spec.build_config("r000042").unwrap();
+        assert_eq!(cfg.name, "r000042");
+        // ... unless the settings themselves name the run.
+        let spec2 = JobSpec {
+            name: None,
+            settings: vec![("name".into(), "mine".into())],
+        };
+        assert_eq!(spec2.build_config("r000042").unwrap().name, "mine");
+    }
+
+    #[test]
+    fn bad_specs_fail_with_context() {
+        // unknown config key
+        let spec = JobSpec {
+            name: None,
+            settings: vec![("no_such_knob".into(), "1".into())],
+        };
+        assert!(spec.build_config("r1").is_err());
+        // composite value
+        let line = r#"{"v":1,"type":"submit","config":{"iters":[1,2]}}"#;
+        assert!(Request::parse_line(line).is_err());
+        // non-finite number never appears (JSON has none), but a null is
+        // rejected as a value too
+        let line = r#"{"v":1,"type":"submit","config":{"iters":null}}"#;
+        assert!(Request::parse_line(line).is_err());
+    }
+
+    #[test]
+    fn scalar_rendering_matches_config_set_vocabulary() {
+        assert_eq!(
+            scalar_to_config_string(&Json::Num(200.0)).unwrap(),
+            "200"
+        );
+        assert_eq!(
+            scalar_to_config_string(&Json::Num(0.005)).unwrap(),
+            "0.005"
+        );
+        assert_eq!(
+            scalar_to_config_string(&Json::Bool(true)).unwrap(),
+            "true"
+        );
+        assert_eq!(
+            scalar_to_config_string(&Json::Str("fasgd".into())).unwrap(),
+            "fasgd"
+        );
+        assert!(scalar_to_config_string(&Json::Null).is_err());
+    }
+
+    #[test]
+    fn stream_frames_parse_and_carry_the_version() {
+        use crate::util::json::Json;
+        let p = EvalPoint {
+            iter: 100,
+            server_ts: 90,
+            vtime: 100.0,
+            val_loss: 1.25,
+            val_acc: 0.5,
+        };
+        for line in [
+            eval_frame("r1", &p),
+            event_frame(
+                "r1",
+                &Event::Eval { iter: 100, server_ts: 90, vtime: 100.0 },
+            ),
+            state_frame("r1", "running", None),
+            state_frame("r1", "failed", Some("boom")),
+            finish_frame("r1", Json::Obj(vec![]), 0),
+            submitted_frame("r1", "job"),
+            attached_frame("r1", "attach", 3, 0, false),
+            cancelled_frame("r1", "cancelled"),
+            runs_frame(vec![]),
+            result_frame("r1", "finished", Some(&Json::Obj(vec![])), None),
+            shutting_down_frame(ShutdownMode::Drain),
+            error_frame("nope"),
+        ] {
+            let j = Json::parse(&line).unwrap();
+            assert_eq!(j.get("v").and_then(Json::as_f64), Some(1.0), "{line}");
+            assert!(j.get("type").and_then(Json::as_str).is_some(), "{line}");
+            assert!(!line.contains('\n'));
+        }
+    }
+}

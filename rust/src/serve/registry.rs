@@ -1,0 +1,556 @@
+//! The run registry: every job the daemon has seen, its lifecycle state
+//! machine, and the per-run artifact store on disk.
+//!
+//! States: `queued → running → finished | failed | cancelled` (a queued
+//! run can also go straight to `cancelled`). The registry is a plain
+//! mutable-state machine — the daemon wraps it in one mutex — so the
+//! transitions are unit-testable without sockets or threads.
+//!
+//! Terminal runs are kept in a bounded history ring (`history_cap`):
+//! once it overflows, the oldest terminal run is evicted from memory.
+//! Its on-disk artifacts (`<store>/<id>/spec.json`, `status.json`,
+//! `summary.json`, `curve.csv`) survive eviction — disk is the archive,
+//! memory is the working set. Disk writes are best-effort (logged, never
+//! fatal): losing an artifact must not take down a multi-tenant daemon.
+//!
+//! Lifecycle frames: `claim_next` publishes `state: running`;
+//! `fail`/`mark_cancelled` publish their terminal `state` frame. A
+//! *finished* run's terminal frame is the `finish` frame the
+//! [`StreamObserver`](crate::sim::observers::StreamObserver) published —
+//! the registry only closes the hub after it, so for every run the
+//! stream's last frame is its terminal frame.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::serve::protocol::{self, JobSpec};
+use crate::sim::observers::{FrameHub, FrameKind};
+use crate::util::json::{obj, Json};
+
+/// Lifecycle state of one run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunState {
+    Queued,
+    Running,
+    Finished,
+    Failed,
+    Cancelled,
+}
+
+impl RunState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RunState::Queued => "queued",
+            RunState::Running => "running",
+            RunState::Finished => "finished",
+            RunState::Failed => "failed",
+            RunState::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            RunState::Finished | RunState::Failed | RunState::Cancelled
+        )
+    }
+}
+
+/// One registered run.
+#[derive(Debug)]
+pub struct RunEntry {
+    pub id: String,
+    pub name: String,
+    pub spec: JobSpec,
+    pub state: RunState,
+    pub error: Option<String>,
+    /// The finished run's summary record ([`crate::metrics::RunSummary`]
+    /// JSON — round-trippable, so storing the parsed value is lossless).
+    pub summary: Option<Json>,
+    /// Per-run frame bus: the job's observer publishes into it, wire
+    /// subscribers replay/follow it.
+    pub hub: Arc<FrameHub>,
+    /// Cooperative cancel flag polled by the job's run loop.
+    pub cancel: Arc<AtomicBool>,
+}
+
+/// What the scheduler hands a job thread.
+#[derive(Debug)]
+pub struct ClaimedJob {
+    pub id: String,
+    pub spec: JobSpec,
+    pub hub: Arc<FrameHub>,
+    pub cancel: Arc<AtomicBool>,
+}
+
+/// The daemon's run table (see the module docs for the state machine).
+#[derive(Debug)]
+pub struct RunRegistry {
+    runs: BTreeMap<String, RunEntry>,
+    /// FIFO of queued run ids (fair scheduling: submission order).
+    queue: VecDeque<String>,
+    /// Terminal runs in completion order (the bounded history ring).
+    terminal_order: VecDeque<String>,
+    history_cap: usize,
+    frame_cap: usize,
+    next_id: u64,
+    store: Option<PathBuf>,
+    accepting: bool,
+    latest: Option<String>,
+}
+
+impl RunRegistry {
+    /// `history_cap` bounds how many *terminal* runs stay in memory;
+    /// `frame_cap` sizes each run's replay ring; `store` (optional) roots
+    /// the per-run artifact directories.
+    pub fn new(
+        history_cap: usize,
+        frame_cap: usize,
+        store: Option<PathBuf>,
+    ) -> Self {
+        Self {
+            runs: BTreeMap::new(),
+            queue: VecDeque::new(),
+            terminal_order: VecDeque::new(),
+            history_cap: history_cap.max(1),
+            frame_cap,
+            next_id: 0,
+            store,
+            accepting: true,
+            latest: None,
+        }
+    }
+
+    /// Register a job: assign the next run id (deterministic `r%06d` —
+    /// ids are zero-padded so submission order and BTreeMap key order
+    /// coincide), queue it, persist its spec. Errors once submissions
+    /// are closed (shutdown).
+    pub fn submit(&mut self, spec: JobSpec) -> Result<(String, Arc<FrameHub>)> {
+        if !self.accepting {
+            bail!("daemon is shutting down; not accepting new jobs");
+        }
+        self.next_id += 1;
+        let id = format!("r{:06}", self.next_id);
+        let name = spec
+            .name
+            .clone()
+            .or_else(|| {
+                spec.settings
+                    .iter()
+                    .rev()
+                    .find(|(k, _)| k == "name")
+                    .map(|(_, v)| v.clone())
+            })
+            .unwrap_or_else(|| id.clone());
+        let hub = Arc::new(FrameHub::new(self.frame_cap));
+        let entry = RunEntry {
+            id: id.clone(),
+            name,
+            spec,
+            state: RunState::Queued,
+            error: None,
+            summary: None,
+            hub: hub.clone(),
+            cancel: Arc::new(AtomicBool::new(false)),
+        };
+        self.write_artifact(&id, "spec.json", &entry.spec.to_json());
+        self.runs.insert(id.clone(), entry);
+        self.queue.push_back(id.clone());
+        self.latest = Some(id.clone());
+        self.persist_status(&id);
+        Ok((id, hub))
+    }
+
+    /// Pop the oldest queued run and mark it running (FIFO fairness).
+    pub fn claim_next(&mut self) -> Option<ClaimedJob> {
+        let id = self.queue.pop_front()?;
+        let Some(e) = self.runs.get_mut(&id) else {
+            return None;
+        };
+        e.state = RunState::Running;
+        e.hub.publish(
+            FrameKind::Lifecycle,
+            &protocol::state_frame(&id, "running", None),
+        );
+        let job = ClaimedJob {
+            id: id.clone(),
+            spec: e.spec.clone(),
+            hub: e.hub.clone(),
+            cancel: e.cancel.clone(),
+        };
+        self.persist_status(&id);
+        Some(job)
+    }
+
+    /// A running job completed; store its summary (memory + disk).
+    pub fn finish(&mut self, id: &str, summary: Json) {
+        self.set_terminal(id, RunState::Finished, None, Some(summary));
+    }
+
+    /// A job failed (config build or simulation error).
+    pub fn fail(&mut self, id: &str, error: String) {
+        self.set_terminal(id, RunState::Failed, Some(error), None);
+    }
+
+    /// A job observed its cancel flag and stopped (or was cancelled
+    /// while queued — see [`RunRegistry::request_cancel`]).
+    pub fn mark_cancelled(&mut self, id: &str) {
+        self.set_terminal(id, RunState::Cancelled, None, None);
+    }
+
+    /// Cancel a run. Queued: removed from the queue and terminal
+    /// immediately. Running: the cooperative flag is set — the run stays
+    /// `running` until its job loop observes it. Terminal: no-op.
+    /// Returns the state after the request took effect.
+    pub fn request_cancel(&mut self, id: &str) -> Result<RunState> {
+        let state = match self.runs.get(id) {
+            Some(e) => e.state,
+            None => bail!("unknown run {id:?}"),
+        };
+        match state {
+            RunState::Queued => {
+                self.queue.retain(|q| q != id);
+                self.mark_cancelled(id);
+                Ok(RunState::Cancelled)
+            }
+            RunState::Running => {
+                if let Some(e) = self.runs.get(id) {
+                    e.cancel.store(true, Ordering::Relaxed);
+                }
+                Ok(RunState::Running)
+            }
+            s => Ok(s),
+        }
+    }
+
+    fn set_terminal(
+        &mut self,
+        id: &str,
+        state: RunState,
+        error: Option<String>,
+        summary: Option<Json>,
+    ) {
+        let store = self.store.clone();
+        {
+            let Some(e) = self.runs.get_mut(id) else { return };
+            if e.state.is_terminal() {
+                return; // terminal states are final
+            }
+            e.state = state;
+            e.error = error;
+            e.summary = summary;
+            match state {
+                // A finished run's terminal frame is the observer's
+                // `finish` frame, already published before this call.
+                RunState::Finished => {}
+                RunState::Failed => e.hub.publish(
+                    FrameKind::Lifecycle,
+                    &protocol::state_frame(id, "failed", e.error.as_deref()),
+                ),
+                RunState::Cancelled => e.hub.publish(
+                    FrameKind::Lifecycle,
+                    &protocol::state_frame(id, "cancelled", None),
+                ),
+                _ => {}
+            }
+            e.hub.close();
+            if let (Some(root), Some(s)) = (&store, &e.summary) {
+                write_json(&root.join(id).join("summary.json"), s);
+            }
+        }
+        self.persist_status(id);
+        self.terminal_order.push_back(id.to_string());
+        while self.terminal_order.len() > self.history_cap {
+            if let Some(old) = self.terminal_order.pop_front() {
+                self.runs.remove(&old);
+                if self.latest.as_deref() == Some(old.as_str()) {
+                    self.latest = None;
+                }
+            }
+        }
+    }
+
+    pub fn get(&self, id: &str) -> Option<&RunEntry> {
+        self.runs.get(id)
+    }
+
+    /// The run's frame hub (for attach/tail subscriptions).
+    pub fn hub(&self, id: &str) -> Option<Arc<FrameHub>> {
+        self.runs.get(id).map(|e| e.hub.clone())
+    }
+
+    /// Most recently submitted run still in memory.
+    pub fn latest_id(&self) -> Option<String> {
+        self.latest.clone()
+    }
+
+    /// One JSON record per run, submission order (the `list` reply).
+    pub fn list(&self) -> Vec<Json> {
+        self.runs
+            .values()
+            .map(|e| {
+                let mut fields: Vec<(&str, Json)> = vec![
+                    ("run", e.id.as_str().into()),
+                    ("name", e.name.as_str().into()),
+                    ("state", e.state.as_str().into()),
+                ];
+                if let Some(err) = &e.error {
+                    fields.push(("error", err.as_str().into()));
+                }
+                obj(fields)
+            })
+            .collect()
+    }
+
+    /// Stop accepting new submissions (shutdown).
+    pub fn close_submissions(&mut self) {
+        self.accepting = false;
+    }
+
+    pub fn accepting(&self) -> bool {
+        self.accepting
+    }
+
+    /// Ids currently queued (oldest first).
+    pub fn queued_ids(&self) -> Vec<String> {
+        self.queue.iter().cloned().collect()
+    }
+
+    /// Ids currently running.
+    pub fn running_ids(&self) -> Vec<String> {
+        self.runs
+            .values()
+            .filter(|e| e.state == RunState::Running)
+            .map(|e| e.id.clone())
+            .collect()
+    }
+
+    pub fn count_running(&self) -> usize {
+        self.runs
+            .values()
+            .filter(|e| e.state == RunState::Running)
+            .count()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Nothing queued, nothing running — the drain condition.
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.count_running() == 0
+    }
+
+    /// The run's artifact directory, if a store is configured.
+    pub fn run_dir(&self, id: &str) -> Option<PathBuf> {
+        self.store.as_ref().map(|root| root.join(id))
+    }
+
+    fn persist_status(&self, id: &str) {
+        let (Some(root), Some(e)) = (&self.store, self.runs.get(id)) else {
+            return;
+        };
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("run", e.id.as_str().into()),
+            ("name", e.name.as_str().into()),
+            ("state", e.state.as_str().into()),
+        ];
+        if let Some(err) = &e.error {
+            fields.push(("error", err.as_str().into()));
+        }
+        write_json(&root.join(id).join("status.json"), &obj(fields));
+    }
+
+    fn write_artifact(&self, id: &str, file: &str, value: &Json) {
+        if let Some(root) = &self.store {
+            write_json(&root.join(id).join(file), value);
+        }
+    }
+}
+
+/// Best-effort pretty-JSON write (see the module docs: disk is the
+/// archive, losing an artifact must not take down the daemon).
+fn write_json(path: &std::path::Path, value: &Json) {
+    let res = (|| -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut text = value.to_string_pretty();
+        text.push('\n');
+        std::fs::write(path, text)
+    })();
+    if let Err(e) = res {
+        log::warn!("serve: writing {path:?} failed: {e}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str) -> JobSpec {
+        JobSpec {
+            name: Some(name.to_string()),
+            settings: vec![("iters".into(), "100".into())],
+        }
+    }
+
+    fn reg() -> RunRegistry {
+        RunRegistry::new(64, 64, None)
+    }
+
+    #[test]
+    fn queued_running_finished_transitions() {
+        let mut r = reg();
+        let (id, _hub) = r.submit(spec("a")).unwrap();
+        assert_eq!(id, "r000001");
+        assert_eq!(r.get(&id).unwrap().state, RunState::Queued);
+        assert_eq!(r.queue_len(), 1);
+
+        let job = r.claim_next().unwrap();
+        assert_eq!(job.id, id);
+        assert_eq!(r.get(&id).unwrap().state, RunState::Running);
+        assert_eq!(r.count_running(), 1);
+        assert!(r.claim_next().is_none(), "queue is empty");
+
+        r.finish(&id, Json::Obj(vec![]));
+        let e = r.get(&id).unwrap();
+        assert_eq!(e.state, RunState::Finished);
+        assert!(e.state.is_terminal());
+        assert!(e.summary.is_some());
+        assert!(e.hub.is_closed());
+        assert!(r.is_idle());
+    }
+
+    #[test]
+    fn fifo_claim_order_is_submission_order() {
+        let mut r = reg();
+        let (a, _) = r.submit(spec("a")).unwrap();
+        let (b, _) = r.submit(spec("b")).unwrap();
+        let (c, _) = r.submit(spec("c")).unwrap();
+        assert_eq!(r.claim_next().unwrap().id, a);
+        assert_eq!(r.claim_next().unwrap().id, b);
+        assert_eq!(r.claim_next().unwrap().id, c);
+    }
+
+    #[test]
+    fn cancel_while_queued_is_immediately_terminal() {
+        let mut r = reg();
+        let (a, _) = r.submit(spec("a")).unwrap();
+        let (b, _) = r.submit(spec("b")).unwrap();
+        assert_eq!(r.request_cancel(&a).unwrap(), RunState::Cancelled);
+        let e = r.get(&a).unwrap();
+        assert_eq!(e.state, RunState::Cancelled);
+        assert!(e.hub.is_closed());
+        // the queue skips it; b is claimed next
+        assert_eq!(r.claim_next().unwrap().id, b);
+        assert!(r.claim_next().is_none());
+        // cancelling a terminal run is a no-op reporting its state
+        assert_eq!(r.request_cancel(&a).unwrap(), RunState::Cancelled);
+    }
+
+    #[test]
+    fn cancel_while_running_sets_the_flag_then_job_confirms() {
+        let mut r = reg();
+        let (id, _) = r.submit(spec("a")).unwrap();
+        let job = r.claim_next().unwrap();
+        assert!(!job.cancel.load(Ordering::Relaxed));
+        // cancel leaves the run `running` until the job loop observes it
+        assert_eq!(r.request_cancel(&id).unwrap(), RunState::Running);
+        assert!(job.cancel.load(Ordering::Relaxed));
+        assert_eq!(r.get(&id).unwrap().state, RunState::Running);
+        // ... which then confirms:
+        r.mark_cancelled(&id);
+        assert_eq!(r.get(&id).unwrap().state, RunState::Cancelled);
+        assert!(r.get(&id).unwrap().hub.is_closed());
+    }
+
+    #[test]
+    fn unknown_run_cancel_errors() {
+        let mut r = reg();
+        assert!(r.request_cancel("r999999").is_err());
+    }
+
+    #[test]
+    fn bounded_history_evicts_oldest_terminal_runs() {
+        let mut r = RunRegistry::new(2, 8, None);
+        let mut ids = Vec::new();
+        for i in 0..4 {
+            let (id, _) = r.submit(spec(&format!("j{i}"))).unwrap();
+            let job = r.claim_next().unwrap();
+            assert_eq!(job.id, id);
+            r.finish(&id, Json::Obj(vec![]));
+            ids.push(id);
+        }
+        // cap 2: the two oldest terminal runs were evicted from memory
+        assert!(r.get(&ids[0]).is_none());
+        assert!(r.get(&ids[1]).is_none());
+        assert!(r.get(&ids[2]).is_some());
+        assert!(r.get(&ids[3]).is_some());
+        assert_eq!(r.list().len(), 2);
+    }
+
+    #[test]
+    fn eviction_only_touches_terminal_runs() {
+        let mut r = RunRegistry::new(1, 8, None);
+        let (live, _) = r.submit(spec("live")).unwrap();
+        let _job = r.claim_next().unwrap();
+        for i in 0..3 {
+            let (id, _) = r.submit(spec(&format!("t{i}"))).unwrap();
+            let _ = r.claim_next().unwrap();
+            r.finish(&id, Json::Obj(vec![]));
+        }
+        // the running run survives however many terminals cycled through
+        assert_eq!(r.get(&live).unwrap().state, RunState::Running);
+        assert_eq!(r.count_running(), 1);
+    }
+
+    #[test]
+    fn closed_submissions_reject_new_jobs() {
+        let mut r = reg();
+        r.close_submissions();
+        assert!(!r.accepting());
+        assert!(r.submit(spec("late")).is_err());
+    }
+
+    #[test]
+    fn failed_run_publishes_state_frame_and_keeps_error() {
+        use std::sync::mpsc::sync_channel;
+        let mut r = reg();
+        let (id, hub) = r.submit(spec("a")).unwrap();
+        let _ = r.claim_next().unwrap();
+        r.fail(&id, "boom".into());
+        let e = r.get(&id).unwrap();
+        assert_eq!(e.state, RunState::Failed);
+        assert_eq!(e.error.as_deref(), Some("boom"));
+        // the buffered stream ends with the failed state frame
+        let (tx, rx) = sync_channel(16);
+        let sub = hub.subscribe(tx, true);
+        assert!(sub.closed);
+        let last = rx.try_iter().last().unwrap();
+        let j = Json::parse(&last).unwrap();
+        assert_eq!(j.get("type").and_then(Json::as_str), Some("state"));
+        assert_eq!(j.get("state").and_then(Json::as_str), Some("failed"));
+        assert_eq!(j.get("error").and_then(Json::as_str), Some("boom"));
+    }
+
+    #[test]
+    fn list_reports_submission_order_and_latest_tracks() {
+        let mut r = reg();
+        let (a, _) = r.submit(spec("a")).unwrap();
+        let (b, _) = r.submit(spec("b")).unwrap();
+        assert_eq!(r.latest_id().as_deref(), Some(b.as_str()));
+        let l = r.list();
+        assert_eq!(l.len(), 2);
+        assert_eq!(l[0].get("run").and_then(Json::as_str), Some(a.as_str()));
+        assert_eq!(l[1].get("run").and_then(Json::as_str), Some(b.as_str()));
+        assert_eq!(
+            l[0].get("state").and_then(Json::as_str),
+            Some("queued")
+        );
+    }
+}

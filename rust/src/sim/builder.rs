@@ -197,6 +197,40 @@ impl Simulation {
         }
     }
 
+    /// [`Simulation::run`] with a cooperative cancellation point every
+    /// `chunk` iterations (the serve layer's job loop). Returns
+    /// `Ok(None)` when `cancel` was observed set — the run stops at an
+    /// iteration boundary and observers never see `on_finish` (the caller
+    /// owns the terminal state). An uncancelled run produces a summary
+    /// identical to `run()`'s except `wall_secs` (host time): both
+    /// drivers advance through the same schedule-ordered `run_until`
+    /// machinery, so chunked driving is bitwise-equivalent.
+    pub fn run_with_cancel(
+        mut self,
+        cancel: &std::sync::atomic::AtomicBool,
+        chunk: u64,
+    ) -> Result<Option<RunSummary>> {
+        use std::sync::atomic::Ordering;
+        // lint:allow(D002, wall_secs measures host runtime for the summary)
+        let start = std::time::Instant::now();
+        let chunk = chunk.max(1);
+        self.core_mut().run_eval()?; // the t=0 point every curve has
+        let iters = self.core().cfg.iters;
+        while self.iterations() < iters {
+            if cancel.load(Ordering::Relaxed) {
+                return Ok(None);
+            }
+            let target = self.iterations().saturating_add(chunk);
+            self.run_until(target)?;
+        }
+        self.core_mut().run_eval()?;
+        let wall = start.elapsed().as_secs_f64();
+        Ok(Some(match self.exec {
+            Exec::Serial(s) => s.into_summary(wall),
+            Exec::Parallel(p) => p.into_summary(wall),
+        }))
+    }
+
     /// Advance by one iteration (serial) or to the next iteration boundary
     /// through the window machinery (parallel). Mode-independent contract:
     /// a no-op once `cfg.iters` is reached (for uncapped manual stepping,
@@ -221,6 +255,13 @@ impl Simulation {
         match &self.exec {
             Exec::Serial(s) => s.core(),
             Exec::Parallel(p) => p.core(),
+        }
+    }
+
+    fn core_mut(&mut self) -> &mut ProtocolCore {
+        match &mut self.exec {
+            Exec::Serial(s) => s.core_mut(),
+            Exec::Parallel(p) => p.core_mut(),
         }
     }
 

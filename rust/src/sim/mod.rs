@@ -67,7 +67,8 @@ pub mod trace;
 pub use builder::{Simulation, SimulationBuilder};
 pub use clock::{ClockEvent, LatencyModel, LinkModel, VirtualClock};
 pub use observers::{
-    CsvCurveWriter, EvalLogger, EventCounter, RunObserver,
+    CsvCurveWriter, EvalLogger, EventCounter, FrameHub, FrameKind,
+    RunObserver, StreamObserver, Subscription,
 };
 pub use parallel::{ParallelSimulator, SpecStats};
 pub use probe::{ProbeLog, ProbeRecord};

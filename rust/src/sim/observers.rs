@@ -15,9 +15,11 @@
 //! poison a deterministic training run); observers that do I/O should hold
 //! their error and surface it at `on_finish` time or via `log::warn!`.
 
+use std::collections::VecDeque;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::mpsc::{SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
 
 use crate::metrics::{EvalPoint, RunSummary};
 use crate::sim::trace::Event;
@@ -141,5 +143,363 @@ impl RunObserver for EventCounter {
 
     fn on_finish(&mut self, _summary: &RunSummary) {
         self.0.finishes.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Which stream a published frame belongs to — [`FrameHub`] subscribers
+/// can opt out of the high-frequency `Event` stream (`repro tail`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    /// High-frequency protocol events (several per iteration).
+    Event,
+    /// Validation eval points.
+    Eval,
+    /// Run lifecycle: state transitions and the finish frame.
+    Lifecycle,
+}
+
+/// Fan-out point between one running simulation and any number of wire
+/// subscribers (the serve layer's per-run frame bus; see
+/// [`StreamObserver`] and [`crate::serve`]).
+///
+/// Policy: **the simulation never blocks on a subscriber.** Live frames
+/// are delivered with `try_send` — a full (slow) subscriber channel drops
+/// the frame and counts it ([`FrameHub::dropped`]); a disconnected
+/// subscriber is removed from the fan-out list. A bounded replay ring
+/// (capacity `cap`) lets late subscribers catch up losslessly:
+/// [`FrameHub::subscribe`] replays buffered frames with *blocking* sends
+/// outside the hub lock (backpressure lands on the attaching connection,
+/// never on the simulation), then atomically switches to live delivery
+/// with no gap or duplication.
+#[derive(Debug)]
+pub struct FrameHub {
+    inner: Mutex<HubInner>,
+}
+
+#[derive(Debug)]
+struct HubInner {
+    cap: usize,
+    frames: VecDeque<(FrameKind, String)>,
+    /// Frames evicted from the ring since creation (replay-gap counter).
+    evicted: u64,
+    subs: Vec<Subscriber>,
+    dropped: u64,
+    closed: bool,
+}
+
+#[derive(Debug)]
+struct Subscriber {
+    tx: SyncSender<String>,
+    /// Deliver high-frequency [`FrameKind::Event`] frames too?
+    events: bool,
+}
+
+/// What [`FrameHub::subscribe`] delivered before going live.
+#[derive(Debug, Clone, Copy)]
+pub struct Subscription {
+    /// Frames replayed from the ring.
+    pub replayed: u64,
+    /// Frames already evicted from the ring before this subscriber
+    /// arrived (the replay is missing these).
+    pub gap: u64,
+    /// No live frames will follow: the hub is closed (run reached a
+    /// terminal state) or the receiver disconnected during replay.
+    pub closed: bool,
+}
+
+/// Frames cloned out per lock acquisition during replay — bounds how long
+/// a catching-up subscriber can hold the hub lock.
+const REPLAY_BATCH: usize = 64;
+
+impl FrameHub {
+    /// A hub whose replay ring holds up to `cap` frames (min 1).
+    pub fn new(cap: usize) -> Self {
+        Self {
+            inner: Mutex::new(HubInner {
+                cap: cap.max(1),
+                frames: VecDeque::new(),
+                evicted: 0,
+                subs: Vec::new(),
+                dropped: 0,
+                closed: false,
+            }),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, HubInner> {
+        // Observer callbacks are infallible by design; recover the data
+        // from a poisoned lock rather than propagating the panic.
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Publish one NDJSON line: buffer it for replay, fan it out to live
+    /// subscribers (try_send — drop-and-count, never block).
+    pub fn publish(&self, kind: FrameKind, line: &str) {
+        let mut g = self.lock();
+        if g.frames.len() == g.cap {
+            g.frames.pop_front();
+            g.evicted += 1;
+        }
+        g.frames.push_back((kind, line.to_string()));
+        let mut dropped = 0u64;
+        g.subs.retain(|s| {
+            if kind == FrameKind::Event && !s.events {
+                return true;
+            }
+            match s.tx.try_send(line.to_string()) {
+                Ok(()) => true,
+                Err(TrySendError::Full(_)) => {
+                    dropped += 1;
+                    true
+                }
+                Err(TrySendError::Disconnected(_)) => false,
+            }
+        });
+        g.dropped += dropped;
+    }
+
+    /// Replay buffered frames into `tx` (blocking sends, hub lock
+    /// released while sending), then register for live delivery.
+    /// `events = false` filters out the high-frequency event stream
+    /// (replay and live). A hub that is already closed — or a receiver
+    /// that disconnects mid-replay — is reported via
+    /// [`Subscription::closed`] and not registered.
+    pub fn subscribe(
+        &self,
+        tx: SyncSender<String>,
+        events: bool,
+    ) -> Subscription {
+        let mut cursor = 0u64; // absolute frame index (evicted + offset)
+        let mut replayed = 0u64;
+        let mut gap = 0u64;
+        loop {
+            let batch: Vec<String>;
+            {
+                let mut g = self.lock();
+                if cursor < g.evicted {
+                    gap += g.evicted - cursor;
+                    cursor = g.evicted;
+                }
+                let start = (cursor - g.evicted) as usize;
+                if start >= g.frames.len() {
+                    let closed = g.closed;
+                    if !closed {
+                        g.subs.push(Subscriber { tx, events });
+                    }
+                    return Subscription { replayed, gap, closed };
+                }
+                let taken = (g.frames.len() - start).min(REPLAY_BATCH);
+                batch = g
+                    .frames
+                    .iter()
+                    .skip(start)
+                    .take(taken)
+                    .filter(|(k, _)| events || *k != FrameKind::Event)
+                    .map(|(_, l)| l.clone())
+                    .collect();
+                cursor += taken as u64;
+            }
+            for line in batch {
+                if tx.send(line).is_err() {
+                    return Subscription { replayed, gap, closed: true };
+                }
+                replayed += 1;
+            }
+        }
+    }
+
+    /// No further frames will be published (the run reached a terminal
+    /// state). Live subscribers are released (their channels close); late
+    /// subscribers still get the buffered replay.
+    pub fn close(&self) {
+        let mut g = self.lock();
+        g.closed = true;
+        g.subs.clear();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.lock().closed
+    }
+
+    /// Live frames dropped on slow subscribers so far (drop-and-count).
+    pub fn dropped(&self) -> u64 {
+        self.lock().dropped
+    }
+
+    /// Frames currently buffered for replay.
+    pub fn buffered(&self) -> usize {
+        self.lock().frames.len()
+    }
+
+    pub fn subscriber_count(&self) -> usize {
+        self.lock().subs.len()
+    }
+}
+
+/// Forwards a run's observer callbacks as NDJSON frames into a
+/// [`FrameHub`] — the bridge from one simulation to its wire subscribers
+/// (frame vocabulary: [`crate::serve::protocol`]). Both execution modes
+/// emit callbacks in schedule order, so the published frame stream is in
+/// schedule order too, finishing with exactly one `finish` frame.
+#[derive(Debug)]
+pub struct StreamObserver {
+    run: String,
+    hub: Arc<FrameHub>,
+}
+
+impl StreamObserver {
+    pub fn new(run: impl Into<String>, hub: Arc<FrameHub>) -> Self {
+        Self { run: run.into(), hub }
+    }
+}
+
+impl RunObserver for StreamObserver {
+    fn on_eval(&mut self, eval: &EvalPoint) {
+        self.hub.publish(
+            FrameKind::Eval,
+            &crate::serve::protocol::eval_frame(&self.run, eval),
+        );
+    }
+
+    fn on_event(&mut self, event: &Event) {
+        self.hub.publish(
+            FrameKind::Event,
+            &crate::serve::protocol::event_frame(&self.run, event),
+        );
+    }
+
+    fn on_finish(&mut self, summary: &RunSummary) {
+        let dropped = self.hub.dropped();
+        self.hub.publish(
+            FrameKind::Lifecycle,
+            &crate::serve::protocol::finish_frame(
+                &self.run,
+                summary.to_json(),
+                dropped,
+            ),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+    use std::sync::mpsc::sync_channel;
+
+    #[test]
+    fn hub_slow_subscriber_drops_and_counts_without_blocking() {
+        let hub = FrameHub::new(64);
+        let (tx, _rx) = sync_channel(1);
+        let sub = hub.subscribe(tx, true);
+        assert_eq!(sub.replayed, 0);
+        assert!(!sub.closed);
+        for i in 0..10 {
+            // Nobody drains the cap-1 channel: frame 0 fills it, frames
+            // 1..10 must be dropped-and-counted, never block.
+            hub.publish(FrameKind::Event, &format!("f{i}"));
+        }
+        assert_eq!(hub.dropped(), 9);
+        assert_eq!(hub.buffered(), 10);
+        assert_eq!(hub.subscriber_count(), 1);
+    }
+
+    #[test]
+    fn hub_disconnected_subscriber_is_removed() {
+        let hub = FrameHub::new(8);
+        let (tx, rx) = sync_channel(4);
+        hub.subscribe(tx, true);
+        assert_eq!(hub.subscriber_count(), 1);
+        drop(rx);
+        hub.publish(FrameKind::Eval, "x");
+        assert_eq!(hub.subscriber_count(), 0);
+    }
+
+    #[test]
+    fn hub_replays_in_order_with_event_filter_and_gap() {
+        let hub = FrameHub::new(4);
+        for i in 0..6 {
+            let kind = if i % 2 == 0 {
+                FrameKind::Event
+            } else {
+                FrameKind::Eval
+            };
+            hub.publish(kind, &format!("f{i}"));
+        }
+        // Ring cap 4: f0, f1 were evicted; the buffer holds f2..f5.
+        let (tx, rx) = sync_channel(16);
+        let sub = hub.subscribe(tx, false); // no high-frequency events
+        assert_eq!(sub.gap, 2);
+        assert_eq!(sub.replayed, 2);
+        let got: Vec<String> = rx.try_iter().collect();
+        assert_eq!(got, vec!["f3".to_string(), "f5".to_string()]);
+    }
+
+    #[test]
+    fn hub_subscribe_after_close_reports_closed_stream() {
+        let hub = FrameHub::new(8);
+        hub.publish(FrameKind::Lifecycle, "done");
+        hub.close();
+        let (tx, rx) = sync_channel(8);
+        let sub = hub.subscribe(tx, true);
+        assert!(sub.closed);
+        assert_eq!(sub.replayed, 1);
+        assert_eq!(rx.try_iter().collect::<Vec<_>>(), vec!["done"]);
+        assert_eq!(hub.subscriber_count(), 0);
+    }
+
+    #[test]
+    fn stream_observer_schedule_order_and_exactly_one_finish() {
+        let mut cfg = crate::experiments::common::fast_test_config(
+            crate::config::Policy::Asgd,
+        );
+        cfg.iters = 60;
+        cfg.eval_every = 20;
+        cfg.name = "stream".into();
+        let hub = Arc::new(FrameHub::new(4096));
+        let (tx, rx) = sync_channel(4096);
+        hub.subscribe(tx, true);
+        crate::sim::Simulation::builder(cfg)
+            .observer(StreamObserver::new("r1", hub.clone()))
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        // Generous channel: nothing may have been dropped here, so the
+        // received stream is the full frame sequence.
+        assert_eq!(hub.dropped(), 0);
+        let frames: Vec<Json> = rx
+            .try_iter()
+            .map(|l| Json::parse(&l).unwrap())
+            .collect();
+        assert!(!frames.is_empty());
+        let mut finishes = 0usize;
+        let mut last_iter = -1.0f64;
+        for f in &frames {
+            match f.get("type").and_then(Json::as_str) {
+                Some("finish") => finishes += 1,
+                Some("eval") => {
+                    let it = f.get("iter").and_then(Json::as_f64).unwrap();
+                    assert!(it >= last_iter, "eval out of order");
+                    last_iter = it;
+                }
+                Some("event") => {
+                    let it = f
+                        .get("event")
+                        .and_then(|e| e.get("iter"))
+                        .and_then(Json::as_f64)
+                        .unwrap();
+                    assert!(it >= last_iter, "event out of order");
+                    last_iter = it;
+                }
+                other => panic!("unexpected frame type {other:?}"),
+            }
+        }
+        assert_eq!(finishes, 1, "exactly one finish frame");
+        assert_eq!(
+            frames.last().and_then(|f| f.get("type")).and_then(Json::as_str),
+            Some("finish"),
+            "finish frame is last"
+        );
     }
 }

@@ -212,6 +212,18 @@ impl ParallelSimulator {
         &self.core
     }
 
+    /// Mutable protocol state (for the facade's cancellable run path).
+    pub(crate) fn core_mut(&mut self) -> &mut ProtocolCore {
+        &mut self.core
+    }
+
+    /// Fold the (already evaluated) run into its summary — the facade's
+    /// cancellable run path; [`ParallelSimulator::run`] composes the same
+    /// pieces.
+    pub(crate) fn into_summary(self, wall_secs: f64) -> RunSummary {
+        self.core.into_summary(wall_secs)
+    }
+
     pub fn probes(&self) -> &ProbeLog {
         &self.core.probes
     }

@@ -53,6 +53,63 @@ impl Event {
             | Event::Eval { vtime, .. } => *vtime,
         }
     }
+
+    /// Lowercase variant name (the `kind` field of the JSON record).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::Selected { .. } => "selected",
+            Event::Push { .. } => "push",
+            Event::Applied { .. } => "applied",
+            Event::Fetch { .. } => "fetch",
+            Event::BarrierRelease { .. } => "barrier_release",
+            Event::Eval { .. } => "eval",
+        }
+    }
+
+    /// JSON record of the event (serve stream frames, debugging dumps) —
+    /// `kind` plus the variant's fields, round-trippable by
+    /// [`crate::util::json::Json::parse`].
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{num_or_null, obj};
+        let mut fields = vec![("kind", self.kind().into())];
+        match *self {
+            Event::Selected { iter, client, vtime } => {
+                fields.push(("iter", iter.into()));
+                fields.push(("client", client.into()));
+                fields.push(("vtime", num_or_null(vtime)));
+            }
+            Event::Push { iter, client, transmitted, shards_tx, bytes, vtime }
+            | Event::Fetch {
+                iter, client, transmitted, shards_tx, bytes, vtime,
+            } => {
+                fields.push(("iter", iter.into()));
+                fields.push(("client", client.into()));
+                fields.push(("transmitted", transmitted.into()));
+                fields.push(("shards_tx", (shards_tx as u64).into()));
+                fields.push(("bytes", bytes.into()));
+                fields.push(("vtime", num_or_null(vtime)));
+            }
+            Event::Applied { iter, client, tau, reapplied, vtime } => {
+                fields.push(("iter", iter.into()));
+                fields.push(("client", client.into()));
+                fields.push(("tau", tau.into()));
+                fields.push(("reapplied", reapplied.into()));
+                fields.push(("vtime", num_or_null(vtime)));
+            }
+            Event::BarrierRelease { iter, server_ts, bytes, vtime } => {
+                fields.push(("iter", iter.into()));
+                fields.push(("server_ts", server_ts.into()));
+                fields.push(("bytes", bytes.into()));
+                fields.push(("vtime", num_or_null(vtime)));
+            }
+            Event::Eval { iter, server_ts, vtime } => {
+                fields.push(("iter", iter.into()));
+                fields.push(("server_ts", server_ts.into()));
+                fields.push(("vtime", num_or_null(vtime)));
+            }
+        }
+        obj(fields)
+    }
 }
 
 /// Ring-buffer trace; capacity 0 disables recording entirely (the default
@@ -128,6 +185,25 @@ mod tests {
         t.record(Event::Eval { iter: 0, server_ts: 0, vtime: 0.0 });
         assert!(t.events().is_empty());
         assert_eq!(t.recorded(), 0);
+    }
+
+    #[test]
+    fn event_json_round_trips_and_names_kind() {
+        use crate::util::json::Json;
+        let e = Event::Push {
+            iter: 7,
+            client: 3,
+            transmitted: true,
+            shards_tx: 2,
+            bytes: 1024,
+            vtime: 7.5,
+        };
+        let j = e.to_json();
+        assert_eq!(j.get("kind").and_then(Json::as_str), Some("push"));
+        assert_eq!(j.get("iter").and_then(Json::as_f64), Some(7.0));
+        assert_eq!(j.get("bytes").and_then(Json::as_f64), Some(1024.0));
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+        assert_eq!(e.kind(), "push");
     }
 
     #[test]

@@ -47,6 +47,13 @@ impl Json {
         }
     }
 
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
@@ -117,6 +124,21 @@ impl Json {
 /// Convenience: build an object from pairs.
 pub fn obj(fields: Vec<(&str, Json)>) -> Json {
     Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// A number as [`Json::Num`], degraded to [`Json::Null`] when non-finite.
+///
+/// The writer already emits `null` for a non-finite `Num`, but the *value*
+/// `Json::Num(NAN)` is not what the parser reproduces from that text — use
+/// this wherever a record must satisfy the serialize→parse→compare
+/// round-trip (e.g. [`crate::metrics::RunSummary::to_json`], the serve
+/// wire frames).
+pub fn num_or_null(n: f64) -> Json {
+    if n.is_finite() {
+        Json::Num(n)
+    } else {
+        Json::Null
+    }
 }
 
 impl From<f64> for Json {
@@ -458,6 +480,18 @@ mod tests {
     #[test]
     fn nonfinite_serializes_as_null() {
         assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+    }
+
+    #[test]
+    fn num_or_null_round_trips_nonfinite() {
+        // Json::Num(NAN) serializes to "null" but parses back as
+        // Json::Null — num_or_null closes that gap at the value level.
+        assert_eq!(num_or_null(f64::NAN), Json::Null);
+        assert_eq!(num_or_null(f64::INFINITY), Json::Null);
+        assert_eq!(num_or_null(f64::NEG_INFINITY), Json::Null);
+        assert_eq!(num_or_null(1.5), Json::Num(1.5));
+        let v = obj(vec![("x", num_or_null(f64::NAN))]);
+        assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
     }
 
     #[test]

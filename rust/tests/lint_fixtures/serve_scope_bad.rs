@@ -1,0 +1,9 @@
+// Scope fixture: serve/ joined the D001 + D004 scopes in PR 7 (the
+// daemon is multi-writer shared state). Linted by lint_rules.rs with
+// scope_for("serve/daemon.rs") — both rules must fire; with the cli/
+// scope neither does.
+use std::collections::HashMap;
+
+pub fn lookup(runs: &HashMap<String, u32>, id: &str) -> u32 {
+    *runs.get(id).unwrap()
+}

@@ -105,6 +105,34 @@ fn scope_inference_by_path() {
     // rng/ is exempt from D003 (it IS the named-stream implementation).
     assert!(!lint::scope_for("rng/xoshiro.rs").d003);
     assert!(lint::scope_for("data/sampler.rs").d003);
+    // serve/ is multi-writer shared state: D001 + D004 apply (PR 7),
+    // but not D002 — the daemon may read host time.
+    let scope_serve = lint::scope_for("serve/daemon.rs");
+    assert!(scope_serve.d001 && scope_serve.d004 && !scope_serve.d002);
+    assert!(!lint::scope_for("cli/serve_cmds.rs").d004);
+}
+
+#[test]
+fn serve_scope_fixture_fires_d001_and_d004() {
+    let src = std::fs::read_to_string(fixture("serve_scope_bad.rs"))
+        .expect("fixture readable");
+    let findings = lint::lint_source(
+        "serve/daemon.rs",
+        &src,
+        lint::scope_for("serve/daemon.rs"),
+    );
+    let rules = rules_hit(&findings);
+    assert!(rules.contains(&"D001"), "{findings:?}");
+    assert!(rules.contains(&"D004"), "{findings:?}");
+    // The same source under the cli/ scope is clean — the findings come
+    // from serve/'s membership in the D001/D004 scopes, not the rules
+    // being global.
+    let clean = lint::lint_source(
+        "cli/serve_cmds.rs",
+        &src,
+        lint::scope_for("cli/serve_cmds.rs"),
+    );
+    assert!(clean.is_empty(), "{clean:?}");
 }
 
 #[test]

@@ -1,0 +1,359 @@
+//! `repro serve` integration tests: many concurrent jobs over real TCP
+//! to one daemon with a bounded engine budget, streamed frames in
+//! schedule order with exactly one finish per run, and the determinism
+//! contract — a served job's `RunSummary` is identical to a direct
+//! same-config run, except `wall_secs` (host time).
+
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+use fasgd::serve::{
+    Client, Daemon, DaemonHandle, JobSpec, Request, ServeConfig,
+    ShutdownMode,
+};
+use fasgd::util::json::Json;
+
+/// The `fast_test_config` knobs as wire overrides (pure-rust engine, no
+/// artifacts, small everything) — the serve-side twin of
+/// `experiments::common::fast_test_config`.
+fn fast_settings(policy: &str, seed: u64) -> Vec<(String, String)> {
+    let alpha = if policy == "fasgd" { "0.005" } else { "0.05" };
+    let pairs: Vec<(&str, String)> = vec![
+        ("grad_engine", "rust".into()),
+        ("mlp.hidden", "16".into()),
+        ("lambda", "4".into()),
+        ("mu", "4".into()),
+        ("iters", "300".into()),
+        ("eval_every", "100".into()),
+        ("dataset.train", "512".into()),
+        ("dataset.val", "256".into()),
+        ("policy", policy.into()),
+        ("alpha", alpha.into()),
+        ("seed", seed.to_string()),
+    ];
+    pairs
+        .into_iter()
+        .map(|(k, v)| (k.to_string(), v))
+        .collect()
+}
+
+fn start_daemon(max_concurrent: usize, chunk: u64) -> Result<DaemonHandle> {
+    Daemon::start(ServeConfig {
+        port: 0, // ephemeral
+        max_concurrent,
+        chunk,
+        ..ServeConfig::default()
+    })
+}
+
+/// Drop the host-time field — the one summary field the determinism
+/// contract excludes.
+fn scrub(j: &Json) -> Json {
+    match j {
+        Json::Obj(fields) => Json::Obj(
+            fields
+                .iter()
+                .filter(|(k, _)| k != "wall_secs")
+                .cloned()
+                .collect(),
+        ),
+        other => other.clone(),
+    }
+}
+
+fn frame_type(f: &Json) -> Option<&str> {
+    Client::frame_type(f)
+}
+
+fn run_id(frame: &Json) -> Result<String> {
+    Ok(frame
+        .get("run")
+        .and_then(Json::as_str)
+        .context("frame missing run id")?
+        .to_string())
+}
+
+#[test]
+fn eight_concurrent_jobs_stream_deterministic_summaries() -> Result<()> {
+    let handle = start_daemon(3, 64)?; // 8 jobs share a 3-wide budget
+    let addr = handle.addr().to_string();
+    let mut client = Client::connect(&addr)?;
+
+    let policies = [
+        "asgd",
+        "fasgd",
+        "sasgd",
+        "exponential",
+        "asgd",
+        "fasgd",
+        "sasgd",
+        "exponential",
+    ];
+    let specs: Vec<JobSpec> = policies
+        .iter()
+        .enumerate()
+        .map(|(i, p)| JobSpec {
+            name: Some(format!("job{i}")),
+            settings: fast_settings(p, 40 + i as u64),
+        })
+        .collect();
+
+    let mut runs = Vec::new();
+    for spec in &specs {
+        client.send(&Request::Submit(spec.clone()))?;
+        let ack = client.expect_frame()?;
+        assert_eq!(frame_type(&ack), Some("submitted"));
+        runs.push(run_id(&ack)?);
+    }
+    assert_eq!(runs.len(), 8);
+
+    // Poll `result` until every job reaches `finished`.
+    let mut summaries: Vec<Option<Json>> = vec![None; runs.len()];
+    let deadline = Instant::now() + Duration::from_secs(300);
+    while summaries.iter().any(Option::is_none) {
+        assert!(Instant::now() < deadline, "jobs did not finish in time");
+        for (i, run) in runs.iter().enumerate() {
+            if summaries[i].is_some() {
+                continue;
+            }
+            client.send(&Request::Result { run: run.clone() })?;
+            let frame = client.expect_frame()?;
+            assert_eq!(frame_type(&frame), Some("result"));
+            match frame.get("state").and_then(Json::as_str) {
+                Some("finished") => {
+                    summaries[i] =
+                        Some(frame.get("summary").cloned().context(
+                            "finished result frame missing summary",
+                        )?)
+                }
+                Some("failed") | Some("cancelled") => {
+                    anyhow::bail!("run {run} ended early: {frame:?}")
+                }
+                _ => {}
+            }
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+
+    // Replay each run's full stream (attach after finish is lossless up
+    // to frame_cap) and check the interleaving contract per run.
+    for (i, run) in runs.iter().enumerate() {
+        client.send(&Request::Attach {
+            run: run.clone(),
+            events: true,
+        })?;
+        let mut frames = Vec::new();
+        loop {
+            let f = client.expect_frame()?;
+            if frame_type(&f) == Some("attached") {
+                assert_eq!(
+                    f.get("closed").and_then(Json::as_bool),
+                    Some(true),
+                    "terminal run: stream must be complete"
+                );
+                assert_eq!(
+                    f.get("gap").and_then(Json::as_f64),
+                    Some(0.0),
+                    "replay must be lossless within frame_cap"
+                );
+                break;
+            }
+            frames.push(f);
+        }
+        assert!(
+            frames
+                .iter()
+                .all(|f| f.get("run").and_then(Json::as_str)
+                    == Some(run.as_str())),
+            "every frame carries its run id"
+        );
+        // Exactly one finish, and it is the stream's last frame.
+        let finishes = frames
+            .iter()
+            .filter(|f| frame_type(f) == Some("finish"))
+            .count();
+        assert_eq!(finishes, 1, "run {run}");
+        let last = frames.last().context("empty stream")?;
+        assert_eq!(frame_type(last), Some("finish"));
+        assert_eq!(
+            last.get("dropped").and_then(Json::as_f64),
+            Some(0.0),
+            "no live subscriber lagged, so nothing was dropped"
+        );
+        // Schedule order: iteration numbers never go backwards across
+        // the interleaved eval/event stream.
+        let mut last_iter = -1.0;
+        for f in &frames {
+            let it = match frame_type(f) {
+                Some("eval") => f.get("iter").and_then(Json::as_f64),
+                Some("event") => f
+                    .get("event")
+                    .and_then(|e| e.get("iter"))
+                    .and_then(Json::as_f64),
+                _ => None,
+            };
+            if let Some(it) = it {
+                assert!(
+                    it >= last_iter,
+                    "run {run}: iter {it} after {last_iter}"
+                );
+                last_iter = it;
+            }
+        }
+        assert!(last_iter >= 300.0, "stream covers the whole run");
+
+        // Determinism: the streamed summary (finish frame), the stored
+        // summary (result frame), and a direct same-config run agree,
+        // modulo wall_secs.
+        let streamed = last
+            .get("summary")
+            .cloned()
+            .context("finish frame missing summary")?;
+        let stored = summaries[i].as_ref().context("stored summary")?;
+        assert_eq!(scrub(&streamed), scrub(stored));
+        let cfg = specs[i].build_config(run)?;
+        let direct = fasgd::experiments::common::run_experiment(&cfg)?;
+        assert_eq!(
+            scrub(&streamed),
+            scrub(&direct.to_json()),
+            "served run {run} must match the direct run bit for bit \
+             (except wall_secs)"
+        );
+    }
+
+    handle.shutdown(ShutdownMode::Drain);
+    handle.join()
+}
+
+#[test]
+fn tail_streams_live_and_daemon_drains_cleanly() -> Result<()> {
+    let handle = start_daemon(1, 32)?;
+    let addr = handle.addr().to_string();
+
+    let mut submitter = Client::connect(&addr)?;
+    let spec = JobSpec {
+        name: Some("tailed".into()),
+        settings: fast_settings("fasgd", 11),
+    };
+    submitter.send(&Request::Submit(spec.clone()))?;
+    let ack = submitter.expect_frame()?;
+    let run = run_id(&ack)?;
+
+    // A second connection tails the latest run (no id given): evals +
+    // lifecycle only, no high-frequency event frames.
+    let mut tailer = Client::connect(&addr)?;
+    tailer.send(&Request::Tail { run: None })?;
+    let mut evals = 0u32;
+    let finish = loop {
+        let f = tailer.expect_frame()?;
+        match frame_type(&f) {
+            Some("event") => anyhow::bail!("tail must filter event frames"),
+            Some("eval") => evals += 1,
+            Some("finish") => break f,
+            Some("attached") => {
+                assert_eq!(run_id(&f)?, run, "tail resolves the latest run")
+            }
+            _ => {}
+        }
+    };
+    assert!(evals >= 3, "expected the periodic evals, got {evals}");
+    assert_eq!(
+        finish.get("dropped").and_then(Json::as_f64),
+        Some(0.0),
+        "an actively-read tail drops nothing"
+    );
+    let streamed = finish
+        .get("summary")
+        .cloned()
+        .context("finish frame missing summary")?;
+    let direct = fasgd::experiments::common::run_experiment(
+        &spec.build_config(&run)?,
+    )?;
+    assert_eq!(scrub(&streamed), scrub(&direct.to_json()));
+
+    // Wire-level graceful shutdown: drain, then the daemon joins.
+    submitter.send(&Request::Shutdown {
+        mode: ShutdownMode::Drain,
+    })?;
+    let f = submitter.expect_frame()?;
+    assert_eq!(frame_type(&f), Some("shutting_down"));
+    handle.join()
+}
+
+#[test]
+fn cancel_over_the_wire_queued_and_running() -> Result<()> {
+    let handle = start_daemon(1, 16)?;
+    let addr = handle.addr().to_string();
+    let mut client = Client::connect(&addr)?;
+
+    // Job 1 is long-running (cancellation target); job 2 waits behind
+    // the 1-wide budget (queued cancellation target).
+    let mut long_settings = fast_settings("asgd", 5);
+    for (k, v) in long_settings.iter_mut() {
+        if k == "iters" {
+            *v = "2000000".to_string();
+        }
+        if k == "eval_every" {
+            *v = "1000000".to_string();
+        }
+    }
+    client.send(&Request::Submit(JobSpec {
+        name: Some("long".into()),
+        settings: long_settings,
+    }))?;
+    let running = run_id(&client.expect_frame()?)?;
+    client.send(&Request::Submit(JobSpec {
+        name: Some("stuck".into()),
+        settings: fast_settings("asgd", 6),
+    }))?;
+    let queued = run_id(&client.expect_frame()?)?;
+
+    // Cancel the queued job: immediately terminal.
+    client.send(&Request::Cancel {
+        run: queued.clone(),
+    })?;
+    let f = client.expect_frame()?;
+    assert_eq!(frame_type(&f), Some("cancelled"));
+    assert_eq!(f.get("state").and_then(Json::as_str), Some("cancelled"));
+
+    // Follow the running job on a second connection, then cancel it:
+    // the ack reports `running` (cooperative flag), and the stream ends
+    // with the `cancelled` state frame once the job loop observes it.
+    let mut tailer = Client::connect(&addr)?;
+    tailer.send(&Request::Tail {
+        run: Some(running.clone()),
+    })?;
+    client.send(&Request::Cancel {
+        run: running.clone(),
+    })?;
+    let ack = client.expect_frame()?;
+    assert_eq!(frame_type(&ack), Some("cancelled"));
+    let confirmed = loop {
+        let f = tailer.expect_frame()?;
+        if frame_type(&f) == Some("state")
+            && f.get("state").and_then(Json::as_str) == Some("cancelled")
+        {
+            break f;
+        }
+        assert_ne!(
+            frame_type(&f),
+            Some("finish"),
+            "a cancelled run must not publish a finish frame"
+        );
+    };
+    assert_eq!(run_id(&confirmed)?, running);
+
+    // The registry agrees, and an unknown run id is a wire error.
+    client.send(&Request::Result {
+        run: running.clone(),
+    })?;
+    let res = client.expect_frame()?;
+    assert_eq!(res.get("state").and_then(Json::as_str), Some("cancelled"));
+    client.send(&Request::Result {
+        run: "r999999".to_string(),
+    })?;
+    assert!(client.expect_frame().is_err(), "unknown run must error");
+
+    handle.shutdown(ShutdownMode::Drain);
+    handle.join()
+}
