@@ -126,6 +126,50 @@ impl BandwidthAccounting {
     pub fn report(&self) -> BandwidthReport {
         self.report.clone()
     }
+
+    /// Serialize for a resumable checkpoint
+    /// ([`crate::server::checkpoint`]).
+    pub fn save_state(
+        &self,
+        w: &mut crate::server::checkpoint::CkptWriter,
+    ) {
+        let r = &self.report;
+        w.section("bandwidth_acc");
+        w.put_u64(r.push_copies);
+        w.put_u64(r.push_potential);
+        w.put_u64(r.fetch_copies);
+        w.put_u64(r.fetch_potential);
+        w.put_u64(r.bytes_per_copy);
+        w.put_u64(r.push_bytes);
+        w.put_u64(r.fetch_bytes);
+        w.put_u64s(&r.shard_bytes);
+    }
+
+    /// Restore state saved by [`Self::save_state`].
+    pub fn load_state(
+        &mut self,
+        r: &mut crate::server::checkpoint::CkptReader,
+    ) -> anyhow::Result<()> {
+        r.expect_section("bandwidth_acc")?;
+        let rep = &mut self.report;
+        rep.push_copies = r.take_u64()?;
+        rep.push_potential = r.take_u64()?;
+        rep.fetch_copies = r.take_u64()?;
+        rep.fetch_potential = r.take_u64()?;
+        rep.bytes_per_copy = r.take_u64()?;
+        rep.push_bytes = r.take_u64()?;
+        rep.fetch_bytes = r.take_u64()?;
+        let shard_bytes = r.take_u64s()?;
+        if shard_bytes.len() != rep.shard_bytes.len() {
+            anyhow::bail!(
+                "checkpoint has {} shard byte counters but store has {}",
+                shard_bytes.len(),
+                rep.shard_bytes.len()
+            );
+        }
+        rep.shard_bytes = shard_bytes;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

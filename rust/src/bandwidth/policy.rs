@@ -6,8 +6,11 @@
 //! whole-model gate, bitwise: one counter/draw per opportunity, exactly
 //! as before.
 
+use anyhow::Result;
+
 use crate::config::BandwidthMode;
 use crate::rng::Xoshiro256pp;
+use crate::server::checkpoint::{CkptReader, CkptWriter};
 
 /// Which side of the link a decision concerns.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -102,6 +105,45 @@ impl BandwidthPolicy {
                 self.rng.f64() < p
             }
         }
+    }
+
+    /// Serialize the gate's mutable state (counters + RNG position) for
+    /// a resumable checkpoint ([`crate::server::checkpoint`]); the mode
+    /// and geometry are config-derived and rebuilt on resume.
+    pub fn save_state(&self, w: &mut CkptWriter) {
+        w.section("bandwidth_policy");
+        for word in self.rng.state() {
+            w.put_u64(word);
+        }
+        w.put_u64s(&self.push_counters);
+        w.put_u64s(&self.fetch_counters);
+    }
+
+    /// Restore state saved by [`Self::save_state`].
+    pub fn load_state(&mut self, r: &mut CkptReader) -> Result<()> {
+        r.expect_section("bandwidth_policy")?;
+        let mut s = [0u64; 4];
+        for word in s.iter_mut() {
+            *word = r.take_u64()?;
+        }
+        self.rng.restore_state(s);
+        let push = r.take_u64s()?;
+        let fetch = r.take_u64s()?;
+        if push.len() != self.push_counters.len()
+            || fetch.len() != self.fetch_counters.len()
+        {
+            anyhow::bail!(
+                "checkpoint gate counters ({}, {}) do not match λ×shards \
+                 ({}, {})",
+                push.len(),
+                fetch.len(),
+                self.push_counters.len(),
+                self.fetch_counters.len()
+            );
+        }
+        self.push_counters = push;
+        self.fetch_counters = fetch;
+        Ok(())
     }
 
     /// The transmit probability eq. 9 would use right now (for logs/tests).

@@ -1,4 +1,4 @@
-//! repro-lint: the determinism lint (rules D001–D005, see
+//! repro-lint: the determinism lint (rules D001–D006, see
 //! [`fasgd::lint`] and ROADMAP.md "Determinism rules").
 //!
 //! Usage:
@@ -126,7 +126,7 @@ fn print_help() {
          \x20 PATH ...     lint files/directories; files outside a src/ \
          tree get all rules\n\
          \x20 --all-rules  apply every rule regardless of path\n\
-         \x20 --explain    print the rulebook (D001-D005) and exit\n\n\
+         \x20 --explain    print the rulebook (D001-D006) and exit\n\n\
          suppress per site with: // lint:allow(Dxxx, reason) on the \
          flagged line or the line above"
     );

@@ -26,7 +26,8 @@ const SERVE_KEYS: &[&str] = &[
 
 /// Keys the client-side commands consume; the rest of `--key value`
 /// becomes the job spec's dotted-path overrides.
-const CLIENT_KEYS: &[&str] = &["addr", "name", "events", "mode", "wait"];
+const CLIENT_KEYS: &[&str] =
+    &["addr", "name", "events", "mode", "wait", "reconnect"];
 
 fn addr(args: &Args) -> String {
     args.get("addr")
@@ -93,19 +94,54 @@ pub fn cmd_submit(args: &Args) -> Result<()> {
     })
 }
 
-/// `repro attach <run-id> [--events false]` — stream a run's frames
-/// (replay, then live) as NDJSON on stdout.
+/// `repro attach <run-id> [--events false] [--reconnect]` — stream a
+/// run's frames (replay, then live) as NDJSON on stdout. With
+/// `--reconnect`, a dropped connection (daemon crash/restart) is
+/// retried with backoff and the subscription re-established; the
+/// replay then repeats from the start of the run's frame history, so
+/// consumers should key on `iter`/sequence fields, not line count.
 pub fn cmd_attach(args: &Args) -> Result<()> {
     let Some(run) = args.positional.first() else {
-        bail!("usage: repro attach <run-id> [--addr H:P] [--events false]");
+        bail!(
+            "usage: repro attach <run-id> [--addr H:P] [--events false] \
+             [--reconnect]"
+        );
     };
     let events = args.get("events") != Some("false");
-    let mut client = Client::connect(&addr(args))?;
-    client.send(&Request::Attach {
-        run: run.clone(),
-        events,
-    })?;
-    stream_printing(&mut client)
+    let reconnect = args.has_flag("reconnect");
+    let addr = addr(args);
+    loop {
+        let mut client = if reconnect {
+            Client::connect_with_retry(
+                &addr,
+                20,
+                std::time::Duration::from_millis(100),
+            )?
+        } else {
+            Client::connect(&addr)?
+        };
+        client.send(&Request::Attach {
+            run: run.clone(),
+            events,
+        })?;
+        match stream_printing(&mut client) {
+            Ok(()) => return Ok(()),
+            // A daemon-reported error (unknown run, bad request) is a
+            // definitive reply over a live connection — don't retry it.
+            Err(e) if reconnect && !is_daemon_reply(&e) => {
+                eprintln!(
+                    "attach: stream interrupted ({e:#}); reconnecting"
+                );
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// True when the error chain carries an explicit daemon error frame
+/// (as opposed to a transport failure worth retrying).
+fn is_daemon_reply(e: &anyhow::Error) -> bool {
+    format!("{e:#}").contains("serve daemon error")
 }
 
 /// `repro tail [run-id]` — evals + lifecycle for a run (default: the

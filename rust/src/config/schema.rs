@@ -280,6 +280,89 @@ impl DelayConfig {
     }
 }
 
+/// Deterministic fault-injection plane ([`crate::sim::faults`]): client
+/// crash/rejoin plus per-message loss/duplication, all drawn from the
+/// dedicated `"faults"` RNG stream inside the protocol core so serial and
+/// parallel replay identical fault histories. All probabilities default
+/// to 0 — the plane then draws nothing and traces are byte-identical to
+/// a build without it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Per-round probability a client crashes mid-round (the round's
+    /// gradient is lost; the client sits out `downtime` virtual seconds
+    /// and rejoins with its stale θ_j — τ spikes emergently).
+    pub crash_prob: f64,
+    /// Virtual seconds a crashed client stays down before rejoining.
+    pub downtime: f64,
+    /// Probability a transmitted push is lost on the wire (bytes are
+    /// still charged; the server never sees the gradient).
+    pub push_loss: f64,
+    /// Probability a transmitted fetch reply is lost (the client keeps
+    /// its stale θ_j; bytes are still charged).
+    pub fetch_loss: f64,
+    /// Probability a surviving push is duplicated (applied twice —
+    /// stresses policy idempotence; double wire bytes).
+    pub push_dup: f64,
+    /// Probability a surviving fetch is duplicated (idempotent for the
+    /// client; double wire bytes).
+    pub fetch_dup: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self {
+            crash_prob: 0.0,
+            downtime: 10.0,
+            push_loss: 0.0,
+            fetch_loss: 0.0,
+            push_dup: 0.0,
+            fetch_dup: 0.0,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Does any fault source have nonzero probability? When false the
+    /// plane makes zero RNG draws (trace-compat guarantee).
+    pub fn enabled(&self) -> bool {
+        self.crash_prob > 0.0 || self.message_faults_enabled()
+    }
+
+    /// Any message-level fault enabled? (Message faults are suppressed
+    /// under barrier policies — see `sim/faults.rs` — but this predicate
+    /// is config-static either way, keeping draw counts deterministic.)
+    pub fn message_faults_enabled(&self) -> bool {
+        self.push_loss > 0.0
+            || self.fetch_loss > 0.0
+            || self.push_dup > 0.0
+            || self.fetch_dup > 0.0
+    }
+}
+
+/// Checkpoint cadence and destination ([`crate::server::checkpoint`]).
+/// A run writes a versioned binary snapshot of its complete resumable
+/// state to `path` every `every_iters` iterations and/or every
+/// `every_vsecs` virtual seconds (whichever fires first at a chunk
+/// boundary); `repro train --resume <path>` continues the run with a
+/// tail bitwise-identical to the uninterrupted one.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct CheckpointConfig {
+    /// Write a checkpoint every this many iterations (0 = off).
+    pub every_iters: u64,
+    /// Write a checkpoint every this many virtual seconds (0 = off).
+    pub every_vsecs: f64,
+    /// Checkpoint file path (atomically replaced on each write).
+    pub path: String,
+}
+
+impl CheckpointConfig {
+    /// Is checkpoint writing active?
+    pub fn enabled(&self) -> bool {
+        !self.path.is_empty()
+            && (self.every_iters > 0 || self.every_vsecs > 0.0)
+    }
+}
+
 /// Dispatcher client-selection rule (FRED's "probability of being selected
 /// and how that probability changes upon selection").
 #[derive(Debug, Clone, PartialEq)]
@@ -398,6 +481,10 @@ pub struct ExperimentConfig {
     pub shards: ShardConfig,
     /// Finite-rate server link: transmitted bytes cost virtual seconds.
     pub link: LinkConfig,
+    /// Deterministic fault injection: crash/rejoin + message loss/dup.
+    pub fault: FaultConfig,
+    /// Checkpoint cadence + destination (resume via `--resume`).
+    pub checkpoint: CheckpointConfig,
     pub model: ModelKind,
     pub dataset: DatasetConfig,
     pub grad_engine: GradEngineKind,
@@ -455,6 +542,8 @@ impl Default for ExperimentConfig {
             delay: DelayConfig::default(),
             shards: ShardConfig::default(),
             link: LinkConfig::default(),
+            fault: FaultConfig::default(),
+            checkpoint: CheckpointConfig::default(),
             model: ModelKind::Mlp,
             dataset: DatasetConfig::default(),
             grad_engine: GradEngineKind::Xla,
@@ -596,6 +685,21 @@ impl ExperimentConfig {
             }
             "link.rate_bytes_per_vsec" | "link.rate" => {
                 self.link.rate_bytes_per_vsec = value.parse()?
+            }
+            "fault.crash_prob" => self.fault.crash_prob = value.parse()?,
+            "fault.downtime" => self.fault.downtime = value.parse()?,
+            "fault.push_loss" => self.fault.push_loss = value.parse()?,
+            "fault.fetch_loss" => self.fault.fetch_loss = value.parse()?,
+            "fault.push_dup" => self.fault.push_dup = value.parse()?,
+            "fault.fetch_dup" => self.fault.fetch_dup = value.parse()?,
+            "checkpoint.every_iters" => {
+                self.checkpoint.every_iters = value.parse()?
+            }
+            "checkpoint.every_vsecs" => {
+                self.checkpoint.every_vsecs = value.parse()?
+            }
+            "checkpoint.path" => {
+                self.checkpoint.path = value.to_string()
             }
             "delay.compute" => {
                 self.delay.compute = DelayModel::parse_mode(value)?
@@ -844,6 +948,34 @@ impl ExperimentConfig {
             && self.dataset.mnist_dir.is_none()
         {
             bail!("dataset.val must be >= 1 (evaluation needs examples)");
+        }
+        for (key, p) in [
+            ("fault.crash_prob", self.fault.crash_prob),
+            ("fault.push_loss", self.fault.push_loss),
+            ("fault.fetch_loss", self.fault.fetch_loss),
+            ("fault.push_dup", self.fault.push_dup),
+            ("fault.fetch_dup", self.fault.fetch_dup),
+        ] {
+            if !p.is_finite() || !(0.0..1.0).contains(&p) {
+                bail!("{key} must be a probability in [0, 1)");
+            }
+        }
+        if !self.fault.downtime.is_finite() || self.fault.downtime < 0.0 {
+            bail!("fault.downtime must be finite and >= 0 virtual seconds");
+        }
+        if self.checkpoint.every_iters > 0 || self.checkpoint.every_vsecs > 0.0
+        {
+            if self.checkpoint.path.is_empty() {
+                bail!(
+                    "a checkpoint cadence (checkpoint.every_iters / \
+                     every_vsecs) requires checkpoint.path"
+                );
+            }
+        }
+        if !self.checkpoint.every_vsecs.is_finite()
+            || self.checkpoint.every_vsecs < 0.0
+        {
+            bail!("checkpoint.every_vsecs must be >= 0 (0 = off)");
         }
         Ok(())
     }
@@ -1152,6 +1284,37 @@ mod tests {
             eps: 1e-8,
         };
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn fault_and_checkpoint_keys() {
+        let mut c = ExperimentConfig::default();
+        assert!(!c.fault.enabled(), "faults off by default");
+        assert!(!c.checkpoint.enabled(), "checkpointing off by default");
+        c.set("fault.crash_prob", "0.01").unwrap();
+        c.set("fault.downtime", "25").unwrap();
+        c.set("fault.push_loss", "0.05").unwrap();
+        c.set("fault.fetch_dup", "0.02").unwrap();
+        assert!(c.fault.enabled());
+        assert!(c.fault.message_faults_enabled());
+        c.validate().unwrap();
+
+        c.set("fault.crash_prob", "1.5").unwrap();
+        assert!(c.validate().is_err(), "probability >= 1 rejected");
+        c.set("fault.crash_prob", "0").unwrap();
+        c.set("fault.downtime", "-1").unwrap();
+        assert!(c.validate().is_err(), "negative downtime rejected");
+        c.set("fault.downtime", "10").unwrap();
+
+        // A cadence without a path is a misconfiguration, not a no-op.
+        c.set("checkpoint.every_iters", "100").unwrap();
+        let err = c.validate().unwrap_err();
+        assert!(format!("{err}").contains("checkpoint.path"), "{err}");
+        c.set("checkpoint.path", "/tmp/run.ckpt").unwrap();
+        c.validate().unwrap();
+        assert!(c.checkpoint.enabled());
+        c.set("checkpoint.every_vsecs", "-2").unwrap();
+        assert!(c.validate().is_err());
     }
 
     #[test]

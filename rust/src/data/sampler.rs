@@ -52,6 +52,17 @@ impl BatchSampler {
             y.push(data.y[i]);
         }
     }
+
+    /// The sampler's only mutable state is its RNG position — that is
+    /// what a resumable checkpoint saves
+    /// ([`crate::server::checkpoint`]); geometry is rebuilt from config.
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    pub fn restore_rng_state(&mut self, s: [u64; 4]) {
+        self.rng.restore_state(s);
+    }
 }
 
 /// Window sampler over a token corpus (for the transformer driver).
@@ -91,6 +102,15 @@ impl WindowSampler {
             tokens.extend_from_slice(x);
             targets.extend_from_slice(y);
         }
+    }
+
+    /// See [`BatchSampler::rng_state`].
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    pub fn restore_rng_state(&mut self, s: [u64; 4]) {
+        self.rng.restore_state(s);
     }
 }
 

@@ -210,6 +210,24 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunSummary> {
         .run()
 }
 
+/// [`run_experiment`], continuing from a checkpoint written by an earlier
+/// run of the **same config** (`repro train --resume`). The restored run's
+/// tail — evals, trace events, summary minus `wall_secs` — is bitwise
+/// identical to the uninterrupted run's, in either execution mode.
+pub fn resume_experiment(
+    cfg: &ExperimentConfig,
+    ckpt: &std::path::Path,
+) -> Result<RunSummary> {
+    let bytes = std::fs::read(ckpt)
+        .with_context(|| format!("reading checkpoint {ckpt:?}"))?;
+    let mut sim = crate::sim::Simulation::builder(cfg.clone())
+        .observer(crate::sim::EvalLogger::new(cfg.name.as_str()))
+        .build()?;
+    let iter = sim.load_checkpoint(&bytes)?;
+    log::info!("resume from iteration {iter}: {}", cfg.summary());
+    sim.run()
+}
+
 /// A quick pure-rust config for tests (no artifacts, small everything).
 pub fn fast_test_config(policy: Policy) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::default();

@@ -8,7 +8,7 @@
 //! simulator, no panics on the paths the concurrent server will make
 //! multi-writer. This module machine-checks that discipline with a
 //! token-level scanner ([`scanner`]) and a numbered rulebook
-//! ([`rules::RULEBOOK`], D001–D005), with per-site
+//! ([`rules::RULEBOOK`], D001–D006), with per-site
 //! `// lint:allow(Dxxx, reason)` suppressions that must carry a reason.
 //!
 //! Run it as `cargo run --bin repro_lint` (CI runs it blocking), or call

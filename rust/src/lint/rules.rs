@@ -1,4 +1,4 @@
-//! The numbered determinism rulebook (D001–D005) and the engine that
+//! The numbered determinism rulebook (D001–D006) and the engine that
 //! applies it to a scanned file. See ROADMAP.md "Determinism rules" for
 //! the rationale behind each code.
 
@@ -34,11 +34,19 @@ pub struct Scope {
     pub d003: bool,
     pub d004: bool,
     pub d005: bool,
+    pub d006: bool,
 }
 
 impl Scope {
     pub fn all() -> Self {
-        Scope { d001: true, d002: true, d003: true, d004: true, d005: true }
+        Scope {
+            d001: true,
+            d002: true,
+            d003: true,
+            d004: true,
+            d005: true,
+            d006: true,
+        }
     }
 }
 
@@ -66,6 +74,11 @@ pub fn scope_for(rel: &str) -> Scope {
             || in_dir("serve"),
         // D005 applies tree-wide.
         d005: true,
+        // D006: the fault plane made crashes a simulated, recoverable
+        // event — a host-level panic in the simulator, server, or serve
+        // daemon is the one failure the checkpoint/requeue machinery
+        // cannot absorb. Abort paths must return errors instead.
+        d006: in_dir("sim") || in_dir("server") || in_dir("serve"),
     }
 }
 
@@ -94,6 +107,12 @@ pub const RULEBOOK: &[(&str, &str)] = &[
          the server apply path (server/), and the serve daemon (serve/)",
     ),
     ("D005", "every unsafe block carries a // SAFETY: comment"),
+    (
+        "D006",
+        "no bare panic!/todo!/unimplemented! in sim/, server/, serve/ — \
+         crash recovery treats host panics as unrecoverable; return an \
+         error (assert!/debug_assert! invariant checks are allowed)",
+    ),
 ];
 
 /// A parsed `// lint:allow(Dxxx, reason)` suppression.
@@ -352,6 +371,20 @@ pub fn lint_source(file: &str, src: &str, scope: Scope) -> Vec<Finding> {
                     ),
                 )
             }
+            "panic" | "todo" | "unimplemented"
+                if scope.d006
+                    && tokens.get(i + 1).is_some_and(|t| t.is_sym('!')) =>
+            {
+                emit(
+                    line,
+                    "D006",
+                    format!(
+                        "{name}! in crash-recoverable code — a host panic \
+                         is the one failure checkpoint/requeue cannot \
+                         absorb; return an error instead"
+                    ),
+                )
+            }
             "unsafe" if scope.d005 => {
                 if !safety_documented(&scanned.comments, line) {
                     emit(
@@ -460,6 +493,27 @@ mod tests {
         // ... while a non-scoped tree (cli/) only gets the global rules.
         let g = lint_source("cli/serve_cmds.rs", src, scope_for("cli/serve_cmds.rs"));
         assert!(g.is_empty(), "{g:?}");
+    }
+
+    #[test]
+    fn d006_flags_abort_macros_not_panic_paths() {
+        let bad = "fn f(x: u8) { if x > 3 { panic!(\"bad {x}\") } }";
+        let f = lint_all(bad);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "D006");
+        // `assert!` and `std::panic::` path references are not bare
+        // abort macros; neither is an identifier named like the macro.
+        let ok = "
+            fn f(x: u8) {
+                assert!(x < 16);
+                debug_assert!(x != 9);
+                let _h = std::panic::take_hook();
+            }
+        ";
+        assert!(lint_all(ok).is_empty());
+        // Out of scope in trees the crash-recovery machinery never runs.
+        let scope = scope_for("cli/serve_cmds.rs");
+        assert!(lint_source("cli/serve_cmds.rs", bad, scope).is_empty());
     }
 
     #[test]

@@ -91,7 +91,8 @@ fn real_main() -> Result<()> {
 }
 
 /// Keys the harness commands consume themselves (not config knobs).
-const HARNESS_KEYS: &[&str] = &["out", "config", "cs", "lambdas", "rng-audit"];
+const HARNESS_KEYS: &[&str] =
+    &["out", "config", "cs", "lambdas", "rng-audit", "resume"];
 
 /// defaults + optional --config file + remaining --key value overrides.
 fn config_from(args: &Args) -> Result<ExperimentConfig> {
@@ -127,7 +128,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
         return Ok(());
     }
-    let summary = fasgd::experiments::common::run_experiment(&cfg)?;
+    // `--resume <ckpt>`: continue a checkpointed run of the same config;
+    // the tail is bitwise-identical to the uninterrupted run's.
+    let summary = match args.get("resume") {
+        Some(ckpt) => fasgd::experiments::common::resume_experiment(
+            &cfg,
+            std::path::Path::new(ckpt),
+        )?,
+        None => fasgd::experiments::common::run_experiment(&cfg)?,
+    };
     println!("{}", summary.to_json().to_string_pretty());
     // Written directly (not via CsvCurveWriter): a failed curve write must
     // fail the command, and observer callbacks are infallible by design.
@@ -245,14 +254,26 @@ fn print_help() {
          \x20                --shards.bytes_per_param B (wire bytes per param, default 4)\n\
          \x20                --link.rate_bytes_per_vsec R (finite-rate server link:\n\
          \x20                   transmitted bytes cost virtual seconds; 0 = off)\n\
+         \x20                --fault.crash_prob P --fault.downtime S\n\
+         \x20                --fault.push_loss P --fault.fetch_loss P\n\
+         \x20                --fault.push_dup P --fault.fetch_dup P\n\
+         \x20                   (deterministic fault plane; all default 0)\n\
+         \x20                --checkpoint.every_iters N\n\
+         \x20                --checkpoint.every_vsecs S\n\
+         \x20                --checkpoint.path file.ckpt (resumable\n\
+         \x20                   checkpoints, atomically replaced)\n\
          \x20                --config file.toml --out dir/\n\
          \x20 train-only:    --rng-audit (serial-vs-parallel RNG draw-ledger\n\
          \x20                   diff instead of training; see EXPERIMENTS.md)\n\
+         \x20                --resume file.ckpt (continue a checkpointed\n\
+         \x20                   run; tail is bitwise-identical)\n\
          \x20 serve:         --port P --max-concurrent N --history N\n\
          \x20                   --frame-cap N --store dir/ --chunk N\n\
          \x20 serve clients: --addr H:P (default 127.0.0.1:7878);\n\
          \x20                   submit also takes --name X --wait and any\n\
-         \x20                   config knob as a job override\n\
+         \x20                   config knob as a job override;\n\
+         \x20                   attach also takes --reconnect (retry with\n\
+         \x20                   backoff across daemon restarts)\n\
          see README.md for the full knob list"
     );
 }

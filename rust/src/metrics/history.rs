@@ -94,6 +94,56 @@ impl History {
         let tail = &self.evals[start..];
         tail.iter().map(|p| p.val_loss).sum::<f64>() / tail.len() as f64
     }
+
+    /// Serialize for a resumable checkpoint
+    /// ([`crate::server::checkpoint`]): a resumed run must append to the
+    /// same curves, bitwise, so the whole history travels.
+    pub fn save_state(
+        &self,
+        w: &mut crate::server::checkpoint::CkptWriter,
+    ) {
+        w.section("history");
+        w.put_usize(self.evals.len());
+        for p in &self.evals {
+            w.put_u64(p.iter);
+            w.put_u64(p.server_ts);
+            w.put_f64(p.vtime);
+            w.put_f64(p.val_loss);
+            w.put_f64(p.val_acc);
+        }
+        w.put_usize(self.train_curve.len());
+        for &(iter, loss) in &self.train_curve {
+            w.put_u64(iter);
+            w.put_f64(loss);
+        }
+        w.put_opt_f64(self.ema);
+    }
+
+    /// Restore state saved by [`Self::save_state`].
+    pub fn load_state(
+        &mut self,
+        r: &mut crate::server::checkpoint::CkptReader,
+    ) -> anyhow::Result<()> {
+        r.expect_section("history")?;
+        let n = r.take_usize()?;
+        self.evals = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            self.evals.push(EvalPoint {
+                iter: r.take_u64()?,
+                server_ts: r.take_u64()?,
+                vtime: r.take_f64()?,
+                val_loss: r.take_f64()?,
+                val_acc: r.take_f64()?,
+            });
+        }
+        let n = r.take_usize()?;
+        self.train_curve = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            self.train_curve.push((r.take_u64()?, r.take_f64()?));
+        }
+        self.ema = r.take_opt_f64()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

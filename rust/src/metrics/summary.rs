@@ -1,7 +1,11 @@
 //! Per-run rollups: staleness histogram + the final summary record.
 
+use anyhow::Result;
+
 use crate::bandwidth::accounting::BandwidthReport;
 use crate::metrics::History;
+use crate::server::checkpoint::{CkptReader, CkptWriter};
+use crate::sim::faults::FaultCounters;
 use crate::util::json::{num_or_null, obj, Json};
 
 /// Histogram of step-staleness τ observed at apply time.
@@ -54,6 +58,32 @@ impl StalenessHistogram {
     pub fn overflow(&self) -> u64 {
         self.overflow
     }
+
+    /// Serialize for a resumable checkpoint
+    /// ([`crate::server::checkpoint`]).
+    pub fn save_state(&self, w: &mut CkptWriter) {
+        w.section("staleness");
+        w.put_u64s(&self.counts);
+        w.put_u64(self.overflow);
+        w.put_u64(self.total);
+        // The u128 running sum travels as two u64 halves, low first.
+        w.put_u64(self.sum as u64);
+        w.put_u64((self.sum >> 64) as u64);
+        w.put_u64(self.max);
+    }
+
+    /// Restore state saved by [`Self::save_state`].
+    pub fn load_state(&mut self, r: &mut CkptReader) -> Result<()> {
+        r.expect_section("staleness")?;
+        self.counts = r.take_u64s()?;
+        self.overflow = r.take_u64()?;
+        self.total = r.take_u64()?;
+        let lo = r.take_u64()? as u128;
+        let hi = r.take_u64()? as u128;
+        self.sum = lo | (hi << 64);
+        self.max = r.take_u64()?;
+        Ok(())
+    }
 }
 
 /// Everything a figure harness needs from one finished run.
@@ -74,6 +104,9 @@ pub struct RunSummary {
     pub server_updates: u64,
     /// B-Staleness probe log (empty unless the probe was enabled).
     pub probes: crate::sim::probe::ProbeLog,
+    /// Fault-plane counters ([`crate::sim::faults`]); all zero when
+    /// fault injection is off.
+    pub faults: FaultCounters,
 }
 
 impl RunSummary {
@@ -131,6 +164,30 @@ impl RunSummary {
             ),
             ("wall_secs", self.wall_secs.into()),
             ("virtual_secs", self.virtual_secs.into()),
+            // Fault-plane tallies; zeros when `fault.*` is off, so the
+            // block is cheap to keep unconditional (stable schema for
+            // downstream parsers).
+            (
+                "faults",
+                obj(vec![
+                    ("crashes", self.faults.crashes.into()),
+                    ("rejoins", self.faults.rejoins.into()),
+                    ("push_lost", self.faults.push_lost.into()),
+                    ("fetch_lost", self.faults.fetch_lost.into()),
+                    (
+                        "push_duplicated",
+                        self.faults.push_duplicated.into(),
+                    ),
+                    (
+                        "fetch_duplicated",
+                        self.faults.fetch_duplicated.into(),
+                    ),
+                    (
+                        "recomputed_after_crash",
+                        self.faults.recomputed_after_crash.into(),
+                    ),
+                ]),
+            ),
         ])
     }
 }
@@ -163,6 +220,7 @@ mod tests {
             virtual_secs: 4.0,
             server_updates: 4,
             probes: Default::default(),
+            faults: Default::default(),
         };
         let j = summary.to_json().to_string_pretty();
         let parsed = crate::util::json::Json::parse(&j).unwrap();
@@ -193,6 +251,7 @@ mod tests {
             virtual_secs: 0.0,
             server_updates: 0,
             probes: Default::default(),
+            faults: Default::default(),
         };
         let j = summary.to_json();
         assert_eq!(j.get("final_val_loss"), Some(&Json::Null));
@@ -201,6 +260,53 @@ mod tests {
         assert_eq!(reparsed, j);
         let reparsed_pretty = Json::parse(&j.to_string_pretty()).unwrap();
         assert_eq!(reparsed_pretty, j);
+    }
+
+    #[test]
+    fn to_json_reports_fault_counters() {
+        let mut summary = RunSummary {
+            name: "f".into(),
+            policy: "fasgd".into(),
+            clients: 2,
+            batch: 1,
+            iters: 4,
+            history: History::new(),
+            staleness: StalenessHistogram::new(4),
+            bandwidth: Default::default(),
+            wall_secs: 0.0,
+            virtual_secs: 4.0,
+            server_updates: 4,
+            probes: Default::default(),
+            faults: Default::default(),
+        };
+        summary.faults.crashes = 3;
+        summary.faults.push_lost = 2;
+        let j = summary.to_json();
+        let f = j.get("faults").unwrap();
+        assert_eq!(f.get("crashes").unwrap().as_f64(), Some(3.0));
+        assert_eq!(f.get("push_lost").unwrap().as_f64(), Some(2.0));
+        assert_eq!(f.get("rejoins").unwrap().as_f64(), Some(0.0));
+        // Round-trippable like the rest of the record.
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn histogram_save_load_round_trips() {
+        let mut h = StalenessHistogram::new(4);
+        for tau in [0, 1, 1, 2, 10] {
+            h.record(tau);
+        }
+        let mut w = CkptWriter::new();
+        h.save_state(&mut w);
+        let bytes = w.into_bytes();
+        let mut restored = StalenessHistogram::new(4);
+        let mut r = CkptReader::new(&bytes);
+        restored.load_state(&mut r).unwrap();
+        assert_eq!(restored.total(), h.total());
+        assert_eq!(restored.overflow(), h.overflow());
+        assert_eq!(restored.max(), h.max());
+        assert_eq!(restored.count_at(1), 2);
+        assert!((restored.mean() - h.mean()).abs() < 1e-12);
     }
 
     #[test]

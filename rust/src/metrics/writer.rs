@@ -9,22 +9,40 @@ use crate::metrics::RunSummary;
 use crate::util::json::Json;
 
 /// Write loss curves of several runs as tidy CSV:
-/// `run,policy,iter,server_ts,vsecs,val_loss,val_acc` (`vsecs` is the
-/// virtual-time x-axis; 1.0/iteration when delay models are off).
+/// `run,policy,iter,server_ts,vsecs,val_loss,val_acc,crashes,rejoins,
+/// msgs_lost,msgs_duplicated` (`vsecs` is the virtual-time x-axis;
+/// 1.0/iteration when delay models are off). The trailing fault-plane
+/// columns are per-run totals repeated on every row — tidy-data style,
+/// like `run`/`policy` — so fault-rate sweeps are plottable straight
+/// from the curves file; all zeros when `fault.*` is off.
 pub fn write_curves_csv(path: &Path, runs: &[RunSummary]) -> Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir).ok();
     }
     let mut f = std::fs::File::create(path)
         .with_context(|| format!("creating {path:?}"))?;
-    writeln!(f, "run,policy,iter,server_ts,vsecs,val_loss,val_acc")?;
+    writeln!(
+        f,
+        "run,policy,iter,server_ts,vsecs,val_loss,val_acc,\
+         crashes,rejoins,msgs_lost,msgs_duplicated"
+    )?;
     for run in runs {
+        let fc = &run.faults;
         for p in &run.history.evals {
             writeln!(
                 f,
-                "{},{},{},{},{:.6},{:.6},{:.4}",
-                run.name, run.policy, p.iter, p.server_ts, p.vtime,
-                p.val_loss, p.val_acc
+                "{},{},{},{},{:.6},{:.6},{:.4},{},{},{},{}",
+                run.name,
+                run.policy,
+                p.iter,
+                p.server_ts,
+                p.vtime,
+                p.val_loss,
+                p.val_acc,
+                fc.crashes,
+                fc.rejoins,
+                fc.push_lost + fc.fetch_lost,
+                fc.push_duplicated + fc.fetch_duplicated
             )?;
         }
     }
@@ -122,6 +140,7 @@ mod tests {
             virtual_secs: 10.0,
             server_updates: 10,
             probes: Default::default(),
+            faults: Default::default(),
         }
     }
 
@@ -129,12 +148,24 @@ mod tests {
     fn csv_and_json_outputs() {
         let dir = std::env::temp_dir().join("fasgd_writer_test");
         std::fs::create_dir_all(&dir).unwrap();
-        let runs = vec![dummy_run("a"), dummy_run("b")];
+        let mut runs = vec![dummy_run("a"), dummy_run("b")];
+        runs[1].faults.crashes = 2;
+        runs[1].faults.push_lost = 3;
+        runs[1].faults.fetch_lost = 1;
         let csv = dir.join("curves.csv");
         write_curves_csv(&csv, &runs).unwrap();
         let text = std::fs::read_to_string(&csv).unwrap();
         assert!(text.starts_with("run,policy,iter"));
+        assert!(text
+            .lines()
+            .next()
+            .unwrap()
+            .ends_with("crashes,rejoins,msgs_lost,msgs_duplicated"));
         assert_eq!(text.lines().count(), 3);
+        // Fault totals ride along per row: zeros for run a, the summed
+        // lost count (push + fetch) for run b.
+        assert!(text.contains(",0.8000,0,0,0,0"), "{text}");
+        assert!(text.contains(",0.8000,2,0,4,0"), "{text}");
 
         let js = dir.join("summary.json");
         write_summaries_json(&js, &runs).unwrap();

@@ -35,6 +35,17 @@ impl Normal {
         };
         self.mean + self.std * z
     }
+
+    /// The cached Box–Muller second variate, for checkpointing: whether
+    /// the next `sample` consumes uniforms depends on it.
+    pub fn cached_variate(&self) -> Option<f64> {
+        self.cached
+    }
+
+    /// Restore a cached variate captured by [`Self::cached_variate`].
+    pub fn set_cached_variate(&mut self, z: Option<f64>) {
+        self.cached = z;
+    }
 }
 
 /// Categorical distribution with O(n) sampling and O(1) weight updates —
@@ -100,6 +111,22 @@ impl Categorical {
     /// Recompute the cached total (guards against drift after many updates).
     pub fn renormalize(&mut self) {
         self.total = self.weights.iter().sum();
+    }
+
+    /// The incrementally-maintained total, for checkpointing: it
+    /// participates in sampling, so a resume must restore it bitwise
+    /// rather than recompute it (the recomputed sum can differ in the
+    /// last ulp after a long run of `set_weight` updates).
+    pub fn total(&self) -> f64 {
+        self.total
+    }
+
+    /// Rebuild an exact state capture: `weights` + the cached `total`
+    /// from [`Self::total`].
+    pub fn from_parts(weights: Vec<f64>, total: f64) -> Self {
+        assert!(!weights.is_empty());
+        assert!(weights.iter().all(|w| *w >= 0.0 && w.is_finite()));
+        Self { weights, total }
     }
 }
 

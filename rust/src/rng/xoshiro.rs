@@ -58,6 +58,17 @@ impl Xoshiro256pp {
         }
     }
 
+    /// The raw 256-bit state, for checkpointing a stream's position.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Restore a state captured by [`Self::state`] **in place**, so an
+    /// attached audit tag (observability, not state) survives the resume.
+    pub fn restore_state(&mut self, s: [u64; 4]) {
+        self.s = s;
+    }
+
     /// Tag this stream for draw-ledger recording (see [`super::ledger`]).
     pub(crate) fn enable_audit(&mut self, name: &str, index: u64) {
         self.audit = Some(Box::new(super::ledger::AuditTag {
@@ -205,6 +216,20 @@ mod tests {
         for _ in 0..100 {
             assert_eq!(r.below(1), 0);
         }
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_stream() {
+        let mut a = Xoshiro256pp::new(42);
+        for _ in 0..17 {
+            a.next_u64_fast();
+        }
+        let snap = a.state();
+        let tail: Vec<u64> = (0..8).map(|_| a.next_u64_fast()).collect();
+        let mut b = Xoshiro256pp::new(0);
+        b.restore_state(snap);
+        let replay: Vec<u64> = (0..8).map(|_| b.next_u64_fast()).collect();
+        assert_eq!(tail, replay);
     }
 
     #[test]

@@ -30,6 +30,34 @@ impl Client {
         })
     }
 
+    /// [`Client::connect`] with bounded retry and exponential backoff —
+    /// for riding out a daemon restart (crash recovery) or racing one
+    /// that is still binding its port. `attempts` is the total number of
+    /// connection attempts (≥ 1); the delay starts at `base_delay` and
+    /// doubles per retry, capped at 2 s.
+    pub fn connect_with_retry(
+        addr: &str,
+        attempts: u32,
+        base_delay: std::time::Duration,
+    ) -> Result<Self> {
+        let attempts = attempts.max(1);
+        let mut delay = base_delay;
+        let mut last_err = None;
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                std::thread::sleep(delay);
+                delay = (delay * 2).min(std::time::Duration::from_secs(2));
+            }
+            match Self::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.unwrap().context(format!(
+            "serve daemon at {addr} unreachable after {attempts} attempts"
+        )))
+    }
+
     /// Send one request frame.
     pub fn send(&mut self, req: &Request) -> Result<()> {
         let mut line = req.to_line();

@@ -47,6 +47,21 @@ pub const DEFAULT_PORT: u16 = 7878;
 /// dropped for that subscriber (and counted by the hub).
 const CONN_BUFFER: usize = 4096;
 
+/// Hard cap on one incoming request frame. A line longer than this is
+/// answered with an `error` frame and skipped — the connection stays
+/// alive (a hostile or buggy client must not balloon daemon memory).
+const MAX_REQUEST_BYTES: usize = 1 << 20;
+
+/// Read timeout on the request socket: each expiry the reader re-checks
+/// the shutdown flag and whether the write half died (half-open client)
+/// instead of blocking forever on a silent socket.
+const READ_TIMEOUT: std::time::Duration =
+    std::time::Duration::from_millis(250);
+
+/// Checkpoint cadence injected into store-backed jobs that don't set
+/// their own `checkpoint.*` keys (iterations between checkpoint writes).
+const STORE_CKPT_EVERY_ITERS: u64 = 256;
+
 /// Daemon knobs (all CLI-settable; see `repro serve --help`).
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -157,6 +172,20 @@ impl Daemon {
             max_concurrent: cfg.max_concurrent.max(1),
             chunk: cfg.chunk,
         });
+        // Crash recovery: requeue runs a previous daemon process left
+        // running/queued in the store (they resume from their run-dir
+        // checkpoints once the scheduler claims them).
+        {
+            let mut reg = shared.lock_reg();
+            let requeued = reg.recover_from_store();
+            if !requeued.is_empty() {
+                println!(
+                    "serve: recovered {} interrupted run(s): {}",
+                    requeued.len(),
+                    requeued.join(", ")
+                );
+            }
+        }
         println!("serve: listening on {addr}");
         log::info!(
             "serve: max_concurrent={} history={} frame_cap={} store={:?}",
@@ -251,13 +280,61 @@ fn scheduler_loop(shared: Arc<Shared>) {
 
 /// One claimed job: build the config, run the simulation with a
 /// streaming observer, record the terminal state. The registry lock is
-/// only taken at the end — the simulation itself runs lock-free.
+/// only taken at the start (run-dir lookup) and end — the simulation
+/// itself runs lock-free.
+///
+/// Store-backed jobs checkpoint into their run directory
+/// (`<run_dir>/run.ckpt`, cadence [`STORE_CKPT_EVERY_ITERS`] unless the
+/// spec sets its own `checkpoint.*` keys) and resume from that file when
+/// it exists — the crash-recovery path: a SIGKILLed daemon restarts,
+/// requeues the run, and the tail it produces is bitwise-identical to
+/// the uninterrupted run's.
 fn run_job(shared: &Arc<Shared>, job: ClaimedJob, chunk: u64) {
+    let run_dir = shared.lock_reg().run_dir(&job.id);
     let outcome = (|| -> Result<Option<crate::metrics::RunSummary>> {
-        let cfg = job.spec.build_config(&job.id)?;
-        let sim = Simulation::builder(cfg)
-            .observer(StreamObserver::new(job.id.as_str(), job.hub.clone()))
-            .build()?;
+        let mut cfg = job.spec.build_config(&job.id)?;
+        if let Some(dir) = &run_dir {
+            if cfg.checkpoint.path.is_empty() {
+                cfg.checkpoint.path =
+                    dir.join("run.ckpt").to_string_lossy().into_owned();
+                if cfg.checkpoint.every_iters == 0
+                    && cfg.checkpoint.every_vsecs == 0.0
+                {
+                    cfg.checkpoint.every_iters = STORE_CKPT_EVERY_ITERS;
+                }
+            }
+        }
+        let build = |cfg: &crate::config::ExperimentConfig| {
+            Simulation::builder(cfg.clone())
+                .observer(StreamObserver::new(
+                    job.id.as_str(),
+                    job.hub.clone(),
+                ))
+                .build()
+        };
+        let mut sim = build(&cfg)?;
+        let ckpt = std::path::PathBuf::from(&cfg.checkpoint.path);
+        if !cfg.checkpoint.path.is_empty() && ckpt.exists() {
+            let restored = std::fs::read(&ckpt)
+                .map_err(anyhow::Error::from)
+                .and_then(|bytes| sim.load_checkpoint(&bytes));
+            match restored {
+                Ok(iter) => log::info!(
+                    "serve: {} resumed from iteration {iter}",
+                    job.id
+                ),
+                Err(e) => {
+                    // A half-restored simulation is not safely runnable;
+                    // rebuild and start the run from scratch.
+                    log::warn!(
+                        "serve: {} checkpoint unusable ({e:#}); \
+                         restarting from iteration 0",
+                        job.id
+                    );
+                    sim = build(&cfg)?;
+                }
+            }
+        }
         sim.run_with_cancel(&job.cancel, chunk)
     })();
     let mut reg = shared.lock_reg();
@@ -282,8 +359,11 @@ fn run_job(shared: &Arc<Shared>, job: ClaimedJob, chunk: u64) {
 }
 
 fn handle_connection(stream: TcpStream, shared: &Arc<Shared>) -> Result<()> {
-    use std::io::{BufRead, BufReader, Write};
+    use std::io::{BufRead, BufReader, Read, Write};
 
+    stream
+        .set_read_timeout(Some(READ_TIMEOUT))
+        .context("serve: setting read timeout")?;
     let write_half = stream
         .try_clone()
         .context("serve: cloning connection stream")?;
@@ -301,9 +381,76 @@ fn handle_connection(stream: TcpStream, shared: &Arc<Shared>) -> Result<()> {
         }
     });
 
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line.context("serve: reading request line")?;
+    let mut reader = BufReader::new(stream);
+    'conn: loop {
+        let mut buf: Vec<u8> = Vec::new();
+        let mut oversized = false;
+        // Assemble one newline-terminated request under the frame cap.
+        // Read timeouts are survival checks, not errors: each expiry
+        // re-checks shutdown and whether the write half died (half-open
+        // client), then resumes — `read_until` keeps partial bytes.
+        let bytes = loop {
+            let budget =
+                (MAX_REQUEST_BYTES + 1).saturating_sub(buf.len()) as u64;
+            let mut limited = Read::by_ref(&mut reader).take(budget);
+            match limited.read_until(b'\n', &mut buf) {
+                Ok(0) => {
+                    if buf.is_empty() || oversized {
+                        break 'conn; // clean EOF (or EOF mid-drain)
+                    }
+                    break std::mem::take(&mut buf); // EOF-terminated line
+                }
+                Ok(_) => {
+                    let ended = buf.last() == Some(&b'\n');
+                    if oversized {
+                        // Draining the rest of an over-cap line.
+                        buf.clear();
+                        if ended {
+                            send(
+                                &tx,
+                                protocol::error_frame(&format!(
+                                    "request frame exceeds \
+                                     {MAX_REQUEST_BYTES} bytes"
+                                )),
+                            )?;
+                            continue 'conn;
+                        }
+                    } else if ended {
+                        buf.pop();
+                        break std::mem::take(&mut buf);
+                    } else if buf.len() > MAX_REQUEST_BYTES {
+                        oversized = true;
+                        buf.clear();
+                    }
+                }
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock
+                            | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    if shared.stop.load(Ordering::SeqCst)
+                        || writer.is_finished()
+                    {
+                        break 'conn;
+                    }
+                }
+                Err(e) => {
+                    return Err(e).context("serve: reading request line")
+                }
+            }
+        };
+        let line = match String::from_utf8(bytes) {
+            Ok(s) => s,
+            Err(_) => {
+                send(
+                    &tx,
+                    protocol::error_frame("request frame is not UTF-8"),
+                )?;
+                continue;
+            }
+        };
         if line.trim().is_empty() {
             continue;
         }

@@ -2,9 +2,13 @@
 //! machine, and the per-run artifact store on disk.
 //!
 //! States: `queued → running → finished | failed | cancelled` (a queued
-//! run can also go straight to `cancelled`). The registry is a plain
-//! mutable-state machine — the daemon wraps it in one mutex — so the
-//! transitions are unit-testable without sockets or threads.
+//! run can also go straight to `cancelled`). Crash recovery adds
+//! `interrupted → requeued`: on startup [`RunRegistry::recover_from_store`]
+//! scans the store for runs a dead daemon process left `running`, marks
+//! them `interrupted`, and requeues them — their job threads then resume
+//! from the run directory's checkpoint when one exists. The registry is a
+//! plain mutable-state machine — the daemon wraps it in one mutex — so
+//! the transitions are unit-testable without sockets or threads.
 //!
 //! Terminal runs are kept in a bounded history ring (`history_cap`):
 //! once it overflows, the oldest terminal run is evicted from memory.
@@ -36,6 +40,12 @@ use crate::util::json::{obj, Json};
 pub enum RunState {
     Queued,
     Running,
+    /// The daemon process died while this run was `running` (observed by
+    /// the startup store scan). Transitional: recovery requeues it.
+    Interrupted,
+    /// An interrupted run put back on the queue; its job thread resumes
+    /// from the run directory's checkpoint when one exists.
+    Requeued,
     Finished,
     Failed,
     Cancelled,
@@ -46,6 +56,8 @@ impl RunState {
         match self {
             RunState::Queued => "queued",
             RunState::Running => "running",
+            RunState::Interrupted => "interrupted",
+            RunState::Requeued => "requeued",
             RunState::Finished => "finished",
             RunState::Failed => "failed",
             RunState::Cancelled => "cancelled",
@@ -123,6 +135,102 @@ impl RunRegistry {
             accepting: true,
             latest: None,
         }
+    }
+
+    /// Crash recovery: scan the store for per-run directories left by a
+    /// previous daemon process. Runs whose persisted status was `running`
+    /// when that process died are marked `interrupted` and put back on
+    /// the queue (`requeued`); runs that died `queued`/`requeued` are
+    /// requeued directly. Terminal runs stay on disk (the archive) and
+    /// are not pulled back into memory. `next_id` resumes past the
+    /// highest id found, so new submissions never collide with archived
+    /// directories. Returns the requeued ids, oldest first.
+    pub fn recover_from_store(&mut self) -> Vec<String> {
+        let Some(root) = self.store.clone() else {
+            return Vec::new();
+        };
+        let Ok(entries) = std::fs::read_dir(&root) else {
+            return Vec::new();
+        };
+        let mut found: Vec<(u64, String)> = Vec::new();
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(num) = name
+                .strip_prefix('r')
+                .and_then(|n| n.parse::<u64>().ok())
+            else {
+                continue;
+            };
+            self.next_id = self.next_id.max(num);
+            found.push((num, name.to_string()));
+        }
+        found.sort_unstable();
+        let mut requeued = Vec::new();
+        for (_, id) in found {
+            let dir = root.join(&id);
+            let Some(status) = read_json(&dir.join("status.json")) else {
+                continue;
+            };
+            let state = status
+                .get("state")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string();
+            let interrupted = state == "running";
+            if !(interrupted || state == "queued" || state == "requeued") {
+                continue; // terminal (or unreadable) — disk is the archive
+            }
+            let Some(spec_json) = read_json(&dir.join("spec.json")) else {
+                log::warn!("serve: {id}: no readable spec.json; not requeued");
+                continue;
+            };
+            let spec = match JobSpec::from_json(&spec_json) {
+                Ok(s) => s,
+                Err(e) => {
+                    log::warn!("serve: {id}: bad spec.json ({e:#}); skipped");
+                    continue;
+                }
+            };
+            let name = spec.name.clone().unwrap_or_else(|| id.clone());
+            let hub = Arc::new(FrameHub::new(self.frame_cap));
+            let entry = RunEntry {
+                id: id.clone(),
+                name,
+                spec,
+                state: RunState::Interrupted,
+                error: None,
+                summary: None,
+                hub: hub.clone(),
+                cancel: Arc::new(AtomicBool::new(false)),
+            };
+            self.runs.insert(id.clone(), entry);
+            if interrupted {
+                // Make the interruption observable (status.json + stream)
+                // before the requeue overwrites it.
+                self.persist_status(&id);
+                hub.publish(
+                    FrameKind::Lifecycle,
+                    &protocol::state_frame(&id, "interrupted", None),
+                );
+            }
+            if let Some(e) = self.runs.get_mut(&id) {
+                e.state = RunState::Requeued;
+            }
+            hub.publish(
+                FrameKind::Lifecycle,
+                &protocol::state_frame(&id, "requeued", None),
+            );
+            self.queue.push_back(id.clone());
+            self.latest = Some(id.clone());
+            self.persist_status(&id);
+            log::info!(
+                "serve: recovered {id} ({}) -> requeued",
+                if interrupted { "was running" } else { "was queued" }
+            );
+            requeued.push(id);
+        }
+        requeued
     }
 
     /// Register a job: assign the next run id (deterministic `r%06d` —
@@ -212,7 +320,7 @@ impl RunRegistry {
             None => bail!("unknown run {id:?}"),
         };
         match state {
-            RunState::Queued => {
+            RunState::Queued | RunState::Requeued | RunState::Interrupted => {
                 self.queue.retain(|q| q != id);
                 self.mark_cancelled(id);
                 Ok(RunState::Cancelled)
@@ -368,6 +476,19 @@ impl RunRegistry {
     fn write_artifact(&self, id: &str, file: &str, value: &Json) {
         if let Some(root) = &self.store {
             write_json(&root.join(id).join(file), value);
+        }
+    }
+}
+
+/// Best-effort JSON read for the recovery scan (unreadable/garbled
+/// artifacts mean the run is skipped, never a daemon failure).
+fn read_json(path: &std::path::Path) -> Option<Json> {
+    let text = std::fs::read_to_string(path).ok()?;
+    match Json::parse(&text) {
+        Ok(j) => Some(j),
+        Err(e) => {
+            log::warn!("serve: unparseable {path:?}: {e:#}");
+            None
         }
     }
 }

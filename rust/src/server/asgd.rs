@@ -1,7 +1,8 @@
 //! Plain asynchronous SGD (paper §2.1 "Async SGD Protocol").
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
+use crate::server::checkpoint::{CkptReader, CkptWriter};
 use crate::server::{Server, UpdateOutcome};
 use crate::tensor::axpy;
 
@@ -41,6 +42,25 @@ impl Server for Asgd {
 
     fn name(&self) -> &'static str {
         "asgd"
+    }
+
+    fn save_state(&self, w: &mut CkptWriter) -> Result<()> {
+        w.section("asgd");
+        w.put_u64(self.ts);
+        w.put_f32s(&self.params);
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut CkptReader) -> Result<()> {
+        r.expect_section("asgd")?;
+        self.ts = r.take_u64()?;
+        let p = r.take_f32s()?;
+        if p.len() != self.params.len() {
+            bail!("checkpoint P={} but server P={}", p.len(),
+                  self.params.len());
+        }
+        self.params = p;
+        Ok(())
     }
 }
 

@@ -1,0 +1,477 @@
+//! Versioned binary checkpoints of a run's complete resumable state.
+//!
+//! Layout: an 8-byte magic (`FASGDCKP`), a `u32` format version, a `u64`
+//! fingerprint of the full [`ExperimentConfig`] (a resume against a
+//! different config is an error, not silent divergence), the checkpoint's
+//! iteration, then the body — every stateful component serializes itself
+//! through [`CkptWriter`]/[`CkptReader`] (little-endian, length-prefixed
+//! containers). The contract (rust/tests/resume.rs): a run killed at
+//! iteration k and resumed from its last checkpoint produces a tail
+//! bitwise-identical to the uninterrupted run — evals, trace events, and
+//! `RunSummary` minus `wall_secs` — in both serial and pipelined-parallel
+//! modes, with faults enabled.
+//!
+//! Checkpoints are only written at quiescent boundaries (`run_until`
+//! returns fully drained: no in-flight gradients, no pending reorder
+//! buffer), so the saved state is exactly the serial-order state after
+//! iteration k and both execution modes write identical bodies.
+//! [`write_atomic`] stages to a temp file and renames, so a crash mid-write
+//! leaves the previous checkpoint intact.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ExperimentConfig;
+
+/// File magic: identifies a FASGD checkpoint.
+pub const MAGIC: [u8; 8] = *b"FASGDCKP";
+
+/// Checkpoint format version. Bump on any layout change; `open` rejects
+/// mismatches (no cross-version migration — checkpoints are short-lived
+/// crash-recovery artifacts, not archives).
+pub const VERSION: u32 = 1;
+
+/// FNV-1a fold of the config's full `Debug` rendering: every
+/// result-affecting knob participates, so any config drift between the
+/// writing run and the resuming run changes the fingerprint. The
+/// execution-geometry knobs (`workers`, `lookahead`, `pipeline`,
+/// `inflight`) are normalized out — they provably do not change results
+/// (rust/tests/parallel_equivalence.rs), and excluding them lets a run
+/// checkpointed serially resume on a worker pool and vice versa (the
+/// checkpoint record itself is mode-agnostic).
+pub fn config_fingerprint(cfg: &ExperimentConfig) -> u64 {
+    let mut cfg = cfg.clone();
+    cfg.workers = 1;
+    cfg.lookahead = 32;
+    cfg.pipeline = true;
+    cfg.inflight = 0;
+    let text = format!("{cfg:?}");
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in text.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Little-endian byte sink for checkpoint bodies.
+#[derive(Debug, Default)]
+pub struct CkptWriter {
+    buf: Vec<u8>,
+}
+
+impl CkptWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            Some(x) => {
+                self.put_bool(true);
+                self.put_f64(x);
+            }
+            None => self.put_bool(false),
+        }
+    }
+
+    pub fn put_str(&mut self, s: &str) {
+        self.put_usize(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn put_f32s(&mut self, xs: &[f32]) {
+        self.put_usize(xs.len());
+        for x in xs {
+            self.put_f32(*x);
+        }
+    }
+
+    pub fn put_f64s(&mut self, xs: &[f64]) {
+        self.put_usize(xs.len());
+        for x in xs {
+            self.put_f64(*x);
+        }
+    }
+
+    pub fn put_u64s(&mut self, xs: &[u64]) {
+        self.put_usize(xs.len());
+        for x in xs {
+            self.put_u64(*x);
+        }
+    }
+
+    pub fn put_bools(&mut self, xs: &[bool]) {
+        self.put_usize(xs.len());
+        for x in xs {
+            self.put_bool(*x);
+        }
+    }
+
+    /// A named section marker: cheap structural validation so a reader
+    /// that drifts out of sync fails with the section name instead of
+    /// garbage floats.
+    pub fn section(&mut self, name: &str) {
+        self.put_str(name);
+    }
+}
+
+/// Little-endian byte source for checkpoint bodies. Every take is
+/// bounds-checked and fails with context instead of panicking.
+#[derive(Debug)]
+pub struct CkptReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> CkptReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!(
+                "checkpoint truncated: wanted {n} bytes at offset {}, {} left",
+                self.pos,
+                self.remaining()
+            );
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn take_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn take_bool(&mut self) -> Result<bool> {
+        match self.take_u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => bail!("checkpoint: invalid bool byte {other}"),
+        }
+    }
+
+    pub fn take_u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn take_u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    pub fn take_usize(&mut self) -> Result<usize> {
+        let v = self.take_u64()?;
+        usize::try_from(v).context("checkpoint: usize overflow")
+    }
+
+    pub fn take_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.take_u64()?))
+    }
+
+    pub fn take_f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.take_u32()?))
+    }
+
+    pub fn take_opt_f64(&mut self) -> Result<Option<f64>> {
+        Ok(if self.take_bool()? {
+            Some(self.take_f64()?)
+        } else {
+            None
+        })
+    }
+
+    pub fn take_str(&mut self) -> Result<String> {
+        let n = self.take_usize()?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .context("checkpoint: invalid utf-8 string")
+    }
+
+    /// Bounded-length vector take: `cap` guards against a corrupt length
+    /// prefix allocating gigabytes before the bounds check trips.
+    fn take_len(&mut self, what: &str) -> Result<usize> {
+        let n = self.take_usize()?;
+        if n > self.remaining() {
+            bail!("checkpoint: {what} length {n} exceeds remaining bytes");
+        }
+        Ok(n)
+    }
+
+    pub fn take_f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.take_len("f32 vec")?;
+        (0..n).map(|_| self.take_f32()).collect()
+    }
+
+    pub fn take_f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.take_len("f64 vec")?;
+        (0..n).map(|_| self.take_f64()).collect()
+    }
+
+    pub fn take_u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.take_len("u64 vec")?;
+        (0..n).map(|_| self.take_u64()).collect()
+    }
+
+    pub fn take_bools(&mut self) -> Result<Vec<bool>> {
+        let n = self.take_len("bool vec")?;
+        (0..n).map(|_| self.take_bool()).collect()
+    }
+
+    /// Consume and verify a [`CkptWriter::section`] marker.
+    pub fn expect_section(&mut self, name: &str) -> Result<()> {
+        let got = self
+            .take_str()
+            .with_context(|| format!("reading section marker {name:?}"))?;
+        if got != name {
+            bail!("checkpoint: expected section {name:?}, found {got:?}");
+        }
+        Ok(())
+    }
+}
+
+/// Assemble a complete checkpoint file image: header + body.
+pub fn seal(cfg: &ExperimentConfig, iter: u64, body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(body.len() + 32);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&config_fingerprint(cfg).to_le_bytes());
+    out.extend_from_slice(&iter.to_le_bytes());
+    out.extend_from_slice(body);
+    out
+}
+
+/// Validate a checkpoint file image against `cfg` and return
+/// `(iteration, body reader)`.
+pub fn open<'a>(
+    cfg: &ExperimentConfig,
+    bytes: &'a [u8],
+) -> Result<(u64, CkptReader<'a>)> {
+    let mut r = CkptReader::new(bytes);
+    let magic = r.take(8).context("reading checkpoint magic")?;
+    if magic != MAGIC {
+        bail!("not a FASGD checkpoint (bad magic)");
+    }
+    let version = r.take_u32()?;
+    if version != VERSION {
+        bail!(
+            "checkpoint format version {version} unsupported \
+             (this build reads version {VERSION})"
+        );
+    }
+    let fp = r.take_u64()?;
+    let want = config_fingerprint(cfg);
+    if fp != want {
+        bail!(
+            "checkpoint was written by a different config \
+             (fingerprint {fp:#018x}, this config {want:#018x}); resume \
+             requires the exact config of the original run"
+        );
+    }
+    let iter = r.take_u64()?;
+    Ok((iter, r))
+}
+
+/// Write `bytes` to `path` atomically: stage to `<path>.tmp` in the same
+/// directory, fsync, rename. A crash mid-write leaves the previous
+/// checkpoint (if any) intact.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {dir:?}"))?;
+        }
+    }
+    let tmp = path.with_extension("ckpt.tmp");
+    {
+        use std::io::Write;
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {tmp:?}"))?;
+        f.write_all(bytes)
+            .with_context(|| format!("writing {tmp:?}"))?;
+        f.sync_all().with_context(|| format!("syncing {tmp:?}"))?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {tmp:?} -> {path:?}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writer_reader_roundtrip() {
+        let mut w = CkptWriter::new();
+        w.section("demo");
+        w.put_u64(42);
+        w.put_f64(-1.5);
+        w.put_f32(0.25);
+        w.put_bool(true);
+        w.put_opt_f64(None);
+        w.put_opt_f64(Some(2.0));
+        w.put_str("hello");
+        w.put_f32s(&[1.0, 2.0]);
+        w.put_u64s(&[7, 8, 9]);
+        w.put_bools(&[true, false]);
+        let bytes = w.into_bytes();
+        let mut r = CkptReader::new(&bytes);
+        r.expect_section("demo").unwrap();
+        assert_eq!(r.take_u64().unwrap(), 42);
+        assert_eq!(r.take_f64().unwrap(), -1.5);
+        assert_eq!(r.take_f32().unwrap(), 0.25);
+        assert!(r.take_bool().unwrap());
+        assert_eq!(r.take_opt_f64().unwrap(), None);
+        assert_eq!(r.take_opt_f64().unwrap(), Some(2.0));
+        assert_eq!(r.take_str().unwrap(), "hello");
+        assert_eq!(r.take_f32s().unwrap(), vec![1.0, 2.0]);
+        assert_eq!(r.take_u64s().unwrap(), vec![7, 8, 9]);
+        assert_eq!(r.take_bools().unwrap(), vec![true, false]);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn nan_round_trips_bitwise() {
+        let mut w = CkptWriter::new();
+        let weird = f64::from_bits(0x7ff8_dead_beef_0001);
+        w.put_f64(weird);
+        let bytes = w.into_bytes();
+        let mut r = CkptReader::new(&bytes);
+        assert_eq!(r.take_f64().unwrap().to_bits(), weird.to_bits());
+    }
+
+    #[test]
+    fn truncation_and_bad_section_fail_cleanly() {
+        let mut w = CkptWriter::new();
+        w.put_u64(1);
+        let bytes = w.into_bytes();
+        let mut r = CkptReader::new(&bytes[..4]);
+        assert!(r.take_u64().is_err());
+
+        let mut w = CkptWriter::new();
+        w.section("alpha");
+        let bytes = w.into_bytes();
+        let mut r = CkptReader::new(&bytes);
+        let err = r.expect_section("beta").unwrap_err();
+        assert!(format!("{err}").contains("beta"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_length_prefix_rejected_before_allocation() {
+        let mut w = CkptWriter::new();
+        w.put_usize(usize::MAX / 2);
+        let bytes = w.into_bytes();
+        let mut r = CkptReader::new(&bytes);
+        assert!(r.take_f32s().is_err());
+    }
+
+    #[test]
+    fn seal_open_validates_header() {
+        let cfg = ExperimentConfig::default();
+        let image = seal(&cfg, 123, &[1, 2, 3]);
+        let (iter, mut r) = open(&cfg, &image).unwrap();
+        assert_eq!(iter, 123);
+        assert_eq!(r.take_u8().unwrap(), 1);
+
+        // Wrong magic.
+        let mut bad = image.clone();
+        bad[0] = b'X';
+        assert!(open(&cfg, &bad).is_err());
+
+        // Wrong version.
+        let mut bad = image.clone();
+        bad[8] ^= 0xFF;
+        assert!(open(&cfg, &bad).is_err());
+
+        // Different config → fingerprint mismatch names the cause.
+        let mut other = cfg.clone();
+        other.seed += 1;
+        let err = open(&other, &image).unwrap_err();
+        assert!(format!("{err}").contains("fingerprint"), "{err}");
+    }
+
+    #[test]
+    fn fingerprint_sees_every_knob() {
+        let a = ExperimentConfig::default();
+        let mut b = a.clone();
+        assert_eq!(config_fingerprint(&a), config_fingerprint(&b));
+        b.fault.crash_prob = 0.25;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&b));
+    }
+
+    #[test]
+    fn fingerprint_ignores_execution_geometry() {
+        // Worker count / dispatch shape don't affect results, so a
+        // serial checkpoint must open under a parallel resume config.
+        let a = ExperimentConfig::default();
+        let mut b = a.clone();
+        b.workers = 8;
+        b.pipeline = false;
+        b.lookahead = 4;
+        b.inflight = 16;
+        assert_eq!(config_fingerprint(&a), config_fingerprint(&b));
+    }
+
+    #[test]
+    fn write_atomic_replaces_previous() {
+        let dir = std::env::temp_dir().join("fasgd_ckpt_atomic_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.ckpt");
+        write_atomic(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        write_atomic(&path, b"second").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second");
+        assert!(!path.with_extension("ckpt.tmp").exists());
+    }
+}

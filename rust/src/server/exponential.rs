@@ -4,8 +4,9 @@
 //! reduce the learning rate too far when staleness values are large" —
 //! implemented here so that claim is reproducible (benches/ablate.rs).
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
+use crate::server::checkpoint::{CkptReader, CkptWriter};
 use crate::server::{Server, UpdateOutcome};
 use crate::tensor::axpy;
 
@@ -47,6 +48,25 @@ impl Server for ExponentialPenalty {
 
     fn name(&self) -> &'static str {
         "exponential"
+    }
+
+    fn save_state(&self, w: &mut CkptWriter) -> Result<()> {
+        w.section("exponential");
+        w.put_u64(self.ts);
+        w.put_f32s(&self.params);
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut CkptReader) -> Result<()> {
+        r.expect_section("exponential")?;
+        self.ts = r.take_u64()?;
+        let p = r.take_f32s()?;
+        if p.len() != self.params.len() {
+            bail!("checkpoint P={} but server P={}", p.len(),
+                  self.params.len());
+        }
+        self.params = p;
+        Ok(())
     }
 }
 

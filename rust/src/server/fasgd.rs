@@ -12,9 +12,10 @@
 //! like all PJRT wrappers). Both are cross-validated in rust/tests; see
 //! EXPERIMENTS.md §Perf for the engine comparison.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::grad::XlaUpdateEngine;
+use crate::server::checkpoint::{CkptReader, CkptWriter};
 use crate::server::{ParamStore, Server, UpdateOutcome};
 use crate::tensor::{fasgd_update_fused, FasgdHparams};
 
@@ -273,6 +274,46 @@ impl<U: UpdateBackend> Server for FasgdServer<U> {
 
     fn name(&self) -> &'static str {
         "fasgd"
+    }
+
+    fn save_state(&self, w: &mut CkptWriter) -> Result<()> {
+        w.section("fasgd");
+        w.put_u64(self.ts);
+        w.put_f32s(&self.params);
+        w.put_f32s(&self.n);
+        w.put_f32s(&self.b);
+        w.put_f32s(&self.v);
+        w.put_opt_f64(self.v_mean);
+        w.put_f64s(&self.v_shard_means);
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut CkptReader) -> Result<()> {
+        r.expect_section("fasgd")?;
+        self.ts = r.take_u64()?;
+        let p = r.take_f32s()?;
+        if p.len() != self.params.len() {
+            bail!("checkpoint P={} but server P={}", p.len(),
+                  self.params.len());
+        }
+        self.params = p;
+        self.n = r.take_f32s()?;
+        self.b = r.take_f32s()?;
+        self.v = r.take_f32s()?;
+        if self.n.len() != self.params.len()
+            || self.b.len() != self.params.len()
+            || self.v.len() != self.params.len()
+        {
+            bail!("fasgd track lengths do not match P={}",
+                  self.params.len());
+        }
+        self.v_mean = r.take_opt_f64()?;
+        self.v_shard_means = r.take_f64s()?;
+        if self.v_shard_means.len() != self.store.count() {
+            bail!("checkpoint has {} shard means but store has {} shards",
+                  self.v_shard_means.len(), self.store.count());
+        }
+        Ok(())
     }
 }
 

@@ -29,8 +29,9 @@
 //! Cost: one ‖θ‖₂ pass per update plus 8 bytes of norm history per
 //! timestamp (an 100k-update run keeps ~800 KB).
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
+use crate::server::checkpoint::{CkptReader, CkptWriter};
 use crate::server::registry::{PolicyRegistry, PolicySpec};
 use crate::server::{Server, UpdateOutcome};
 use crate::tensor::{l2_norm, sasgd_apply};
@@ -104,6 +105,33 @@ impl Server for GapAware {
 
     fn name(&self) -> &'static str {
         "gap_aware"
+    }
+
+    fn save_state(&self, w: &mut CkptWriter) -> Result<()> {
+        w.section("gap_aware");
+        w.put_u64(self.ts);
+        w.put_f32s(&self.params);
+        w.put_f64s(&self.norms);
+        w.put_f64(self.step_ema);
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut CkptReader) -> Result<()> {
+        r.expect_section("gap_aware")?;
+        self.ts = r.take_u64()?;
+        let p = r.take_f32s()?;
+        if p.len() != self.params.len() {
+            bail!("checkpoint P={} but server P={}", p.len(),
+                  self.params.len());
+        }
+        self.params = p;
+        self.norms = r.take_f64s()?;
+        if self.norms.len() != self.ts as usize + 1 {
+            bail!("gap_aware norm history length {} != ts {} + 1",
+                  self.norms.len(), self.ts);
+        }
+        self.step_ema = r.take_f64()?;
+        Ok(())
     }
 }
 

@@ -6,6 +6,9 @@
 //! for large values of λ or large models". The cache tracks its own memory
 //! footprint so that cost is measurable (reported per run).
 
+use anyhow::Result;
+
+use crate::server::checkpoint::{CkptReader, CkptWriter};
 use crate::server::ParamStore;
 
 /// Most-recent gradient (+ its parameter timestamp) per client.
@@ -75,6 +78,48 @@ impl GradientCache {
 
     pub fn populated(&self) -> usize {
         self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Serialize for a resumable checkpoint
+    /// ([`crate::server::checkpoint`]).
+    pub fn save_state(&self, w: &mut CkptWriter) {
+        w.section("gradient_cache");
+        w.put_usize(self.slots.len());
+        for slot in &self.slots {
+            match slot {
+                Some((g, ts)) => {
+                    w.put_bool(true);
+                    w.put_u64(*ts);
+                    w.put_f32s(g);
+                }
+                None => w.put_bool(false),
+            }
+        }
+    }
+
+    /// Restore state saved by [`Self::save_state`]; `bytes` is
+    /// recomputed from the slots.
+    pub fn load_state(&mut self, r: &mut CkptReader) -> Result<()> {
+        r.expect_section("gradient_cache")?;
+        let n = r.take_usize()?;
+        if n != self.slots.len() {
+            anyhow::bail!(
+                "checkpoint has {n} cache slots but λ={}",
+                self.slots.len()
+            );
+        }
+        self.bytes = 0;
+        for slot in self.slots.iter_mut() {
+            *slot = if r.take_bool()? {
+                let ts = r.take_u64()?;
+                let g = r.take_f32s()?;
+                self.bytes += g.len() * std::mem::size_of::<f32>();
+                Some((g, ts))
+            } else {
+                None
+            };
+        }
+        Ok(())
     }
 }
 

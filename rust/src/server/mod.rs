@@ -26,6 +26,7 @@
 //! before parsing the config.
 
 pub mod asgd;
+pub mod checkpoint;
 pub mod exponential;
 pub mod fasgd;
 pub mod gap_aware;
@@ -36,6 +37,7 @@ pub mod shard;
 pub mod sync;
 
 pub use asgd::Asgd;
+pub use checkpoint::{CkptReader, CkptWriter};
 pub use exponential::ExponentialPenalty;
 pub use fasgd::{Fasgd, FasgdServer, RustBackend, UpdateEngine, XlaBackend};
 pub use gap_aware::GapAware;
@@ -102,6 +104,29 @@ pub trait Server {
 
     /// Policy name for reports.
     fn name(&self) -> &'static str;
+
+    /// Serialize the policy's complete resumable state (θ, timestamp,
+    /// and any per-policy statistics) into a checkpoint body
+    /// ([`checkpoint`]). The default refuses so the open registry stays
+    /// honest: a policy either opts into checkpoint/resume or resume
+    /// fails loudly, never silently dropping state.
+    fn save_state(&self, w: &mut CkptWriter) -> Result<()> {
+        let _ = w;
+        anyhow::bail!(
+            "policy '{}' does not support checkpointing",
+            self.name()
+        )
+    }
+
+    /// Restore state saved by [`Server::save_state`] into a freshly
+    /// built instance of the same policy/config.
+    fn load_state(&mut self, r: &mut CkptReader) -> Result<()> {
+        let _ = r;
+        anyhow::bail!(
+            "policy '{}' does not support checkpointing",
+            self.name()
+        )
+    }
 }
 
 /// Step-staleness τ = T − j, clamped ≥ 1 where it divides a learning rate

@@ -1,8 +1,9 @@
 //! Staleness-aware async SGD (Zhang et al. 2015) — the paper's main
 //! baseline: divide the learning rate by the step-staleness (eqs. 1–2).
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
+use crate::server::checkpoint::{CkptReader, CkptWriter};
 use crate::server::{Server, UpdateOutcome};
 use crate::tensor::sasgd_apply;
 
@@ -43,6 +44,25 @@ impl Server for Sasgd {
 
     fn name(&self) -> &'static str {
         "sasgd"
+    }
+
+    fn save_state(&self, w: &mut CkptWriter) -> Result<()> {
+        w.section("sasgd");
+        w.put_u64(self.ts);
+        w.put_f32s(&self.params);
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut CkptReader) -> Result<()> {
+        r.expect_section("sasgd")?;
+        self.ts = r.take_u64()?;
+        let p = r.take_f32s()?;
+        if p.len() != self.params.len() {
+            bail!("checkpoint P={} but server P={}", p.len(),
+                  self.params.len());
+        }
+        self.params = p;
+        Ok(())
     }
 }
 

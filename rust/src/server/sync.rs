@@ -3,6 +3,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::server::checkpoint::{CkptReader, CkptWriter};
 use crate::server::{Server, UpdateOutcome};
 
 /// Buffers one gradient per client; when all λ have reported, applies the
@@ -85,6 +86,51 @@ impl Server for SyncSgd {
 
     fn name(&self) -> &'static str {
         "sync"
+    }
+
+    fn save_state(&self, w: &mut CkptWriter) -> Result<()> {
+        w.section("sync");
+        w.put_u64(self.ts);
+        w.put_f32s(&self.params);
+        // Gradients parked at a half-filled barrier are resumable state:
+        // a checkpoint can land while some clients are blocked.
+        w.put_usize(self.pending.len());
+        for slot in &self.pending {
+            match slot {
+                Some(g) => {
+                    w.put_bool(true);
+                    w.put_f32s(g);
+                }
+                None => w.put_bool(false),
+            }
+        }
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut CkptReader) -> Result<()> {
+        r.expect_section("sync")?;
+        self.ts = r.take_u64()?;
+        let p = r.take_f32s()?;
+        if p.len() != self.params.len() {
+            bail!("checkpoint P={} but server P={}", p.len(),
+                  self.params.len());
+        }
+        self.params = p;
+        let slots = r.take_usize()?;
+        if slots != self.lambda {
+            bail!("checkpoint has {slots} barrier slots but λ={}",
+                  self.lambda);
+        }
+        self.pending_count = 0;
+        for slot in self.pending.iter_mut() {
+            *slot = if r.take_bool()? {
+                self.pending_count += 1;
+                Some(r.take_f32s()?)
+            } else {
+                None
+            };
+        }
+        Ok(())
     }
 }
 

@@ -21,11 +21,12 @@
 //! * attaches [`RunObserver`]s, the protocol trace, and the B-Staleness
 //!   probe.
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::config::ExperimentConfig;
 use crate::grad::EngineFactory;
 use crate::metrics::{History, RunSummary};
+use crate::server::checkpoint;
 use crate::server::Server;
 use crate::sim::observers::RunObserver;
 use crate::sim::parallel::ParallelSimulator;
@@ -191,10 +192,79 @@ impl Simulation {
     /// Run to `cfg.iters` with initial + final evaluations; consumes the
     /// simulation and returns its summary (observers get `on_finish`).
     pub fn run(self) -> Result<RunSummary> {
+        // Checkpoint writing and the resume path (skip the already-recorded
+        // t=0 eval) both live in the chunked driver; route through it only
+        // when either is active — the two drivers are bitwise-equivalent
+        // apart from `wall_secs`, so the summary is the same either way.
+        if self.core().cfg.checkpoint.enabled()
+            || !self.history().evals.is_empty()
+        {
+            let cancel = std::sync::atomic::AtomicBool::new(false);
+            let summary = self
+                .run_with_cancel(&cancel, 64)?
+                .expect("run cancelled without a cancel flag");
+            return Ok(summary);
+        }
         match self.exec {
             Exec::Serial(s) => s.run(),
             Exec::Parallel(p) => p.run(),
         }
+    }
+
+    /// Serialize a complete resumable checkpoint at the current (drained)
+    /// iteration boundary: θ and the server's auxiliary tracks, per-shard
+    /// bandwidth counters, the gradient cache, virtual clocks, every named
+    /// RNG stream position, metrics history, and the schedule state.
+    /// Sealed with a config fingerprint so a resume against a different
+    /// experiment fails loudly instead of silently diverging.
+    pub fn save_checkpoint(&self) -> Result<Vec<u8>> {
+        let mut w = checkpoint::CkptWriter::new();
+        match &self.exec {
+            Exec::Serial(s) => {
+                s.core().save_state(&mut w)?;
+                s.save_schedule_state(&mut w);
+            }
+            Exec::Parallel(p) => {
+                p.core().save_state(&mut w)?;
+                p.save_schedule_state(&mut w);
+            }
+        }
+        Ok(checkpoint::seal(
+            &self.core().cfg,
+            self.iterations(),
+            &w.into_bytes(),
+        ))
+    }
+
+    /// Restore a checkpoint produced by [`Self::save_checkpoint`] into a
+    /// freshly built simulation of the same config (either execution
+    /// mode — the record is mode-agnostic). Returns the restored
+    /// iteration count; a subsequent [`Self::run`] continues the run with
+    /// a tail bitwise-identical to the uninterrupted one.
+    pub fn load_checkpoint(&mut self, bytes: &[u8]) -> Result<u64> {
+        let (iter, mut r) = checkpoint::open(&self.core().cfg, bytes)?;
+        match &mut self.exec {
+            Exec::Serial(s) => {
+                s.core_mut().load_state(&mut r)?;
+                s.load_schedule_state(&mut r)?;
+            }
+            Exec::Parallel(p) => {
+                p.core_mut().load_state(&mut r)?;
+                p.load_schedule_state(&mut r)?;
+            }
+        }
+        ensure!(
+            self.iterations() == iter,
+            "checkpoint header says iteration {iter} but the restored \
+             state is at {}",
+            self.iterations()
+        );
+        ensure!(
+            r.remaining() == 0,
+            "checkpoint has {} unread trailing bytes",
+            r.remaining()
+        );
+        Ok(iter)
     }
 
     /// [`Simulation::run`] with a cooperative cancellation point every
@@ -214,14 +284,43 @@ impl Simulation {
         // lint:allow(D002, wall_secs measures host runtime for the summary)
         let start = std::time::Instant::now();
         let chunk = chunk.max(1);
-        self.core_mut().run_eval()?; // the t=0 point every curve has
+        if self.history().evals.is_empty() {
+            // The t=0 point every curve has — already recorded when this
+            // simulation was restored from a checkpoint.
+            self.core_mut().run_eval()?;
+        }
         let iters = self.core().cfg.iters;
+        let ck = self.core().cfg.checkpoint.clone();
+        // Iteration cadence is exact (targets clamp to the next multiple);
+        // the virtual-seconds cadence fires at the first chunk boundary
+        // past the threshold.
+        let mut last_ck_iter = self.iterations();
+        let mut last_ck_vsecs = self.virtual_secs();
         while self.iterations() < iters {
             if cancel.load(Ordering::Relaxed) {
                 return Ok(None);
             }
-            let target = self.iterations().saturating_add(chunk);
+            let mut target = self.iterations().saturating_add(chunk);
+            if ck.enabled() && ck.every_iters > 0 {
+                target = target.min(last_ck_iter + ck.every_iters);
+            }
             self.run_until(target)?;
+            if ck.enabled() {
+                let iter_due = ck.every_iters > 0
+                    && self.iterations() >= last_ck_iter + ck.every_iters;
+                let vsecs_due = ck.every_vsecs > 0.0
+                    && self.virtual_secs()
+                        >= last_ck_vsecs + ck.every_vsecs;
+                if iter_due || vsecs_due {
+                    let bytes = self.save_checkpoint()?;
+                    checkpoint::write_atomic(
+                        std::path::Path::new(&ck.path),
+                        &bytes,
+                    )?;
+                    last_ck_iter = self.iterations();
+                    last_ck_vsecs = self.virtual_secs();
+                }
+            }
         }
         self.core_mut().run_eval()?;
         let wall = start.elapsed().as_secs_f64();

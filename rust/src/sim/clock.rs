@@ -129,6 +129,28 @@ impl VirtualClock {
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
+
+    /// Snapshot the complete clock state for checkpointing:
+    /// `(now, next_seq, pending events)`. Events are returned sorted by
+    /// the clock's own `(time, seq)` order, so the snapshot is a stable
+    /// byte sequence independent of heap internals.
+    pub fn snapshot(&self) -> (f64, u64, Vec<ClockEvent>) {
+        let mut events: Vec<ClockEvent> =
+            self.heap.iter().map(|r| r.0).collect();
+        events.sort_by(|a, b| a.cmp(b));
+        (self.now, self.next_seq, events)
+    }
+
+    /// Rebuild a clock from a [`Self::snapshot`]. Pop order is a pure
+    /// function of `(time, seq)`, so the restored clock replays the
+    /// original's pops exactly.
+    pub fn restore(now: f64, next_seq: u64, events: &[ClockEvent]) -> Self {
+        Self {
+            heap: events.iter().map(|e| std::cmp::Reverse(*e)).collect(),
+            now,
+            next_seq,
+        }
+    }
 }
 
 /// One delay source (compute or network), resolved from a
@@ -170,6 +192,19 @@ impl DelaySampler {
             }
         }
     }
+
+    fn cached_variate(&self) -> Option<f64> {
+        match self {
+            DelaySampler::LogNormal { normal } => normal.cached_variate(),
+            _ => None,
+        }
+    }
+
+    fn set_cached_variate(&mut self, z: Option<f64>) {
+        if let DelaySampler::LogNormal { normal } = self {
+            normal.set_cached_variate(z);
+        }
+    }
 }
 
 /// The bimodal model's slow cohort is the index prefix
@@ -201,6 +236,19 @@ impl LatencyModel {
     /// bimodal ≥ 1), so scheduled events strictly advance the clock.
     pub fn draw(&mut self, client: usize, rng: &mut Xoshiro256pp) -> f64 {
         self.compute.draw(client, rng) + self.network.draw(client, rng)
+    }
+
+    /// Checkpoint state: the Box–Muller cached variates of the two delay
+    /// sources — the only mutable state a latency model holds (whether
+    /// the next lognormal draw consumes uniforms depends on them).
+    pub fn cached_variates(&self) -> [Option<f64>; 2] {
+        [self.compute.cached_variate(), self.network.cached_variate()]
+    }
+
+    /// Restore variates captured by [`Self::cached_variates`].
+    pub fn set_cached_variates(&mut self, vs: [Option<f64>; 2]) {
+        self.compute.set_cached_variate(vs[0]);
+        self.network.set_cached_variate(vs[1]);
     }
 }
 
@@ -299,6 +347,24 @@ mod tests {
                 c.schedule((i + 3) % 7, c.now() + 2.0 * rng.f64());
             }
         }
+    }
+
+    #[test]
+    fn snapshot_restore_replays_pops() {
+        let mut c = VirtualClock::new();
+        for (client, t) in [(0, 3.0), (1, 1.5), (2, 3.0), (3, 2.25)] {
+            c.schedule(client, t);
+        }
+        c.pop();
+        let (now, next_seq, events) = c.snapshot();
+        let mut r = VirtualClock::restore(now, next_seq, &events);
+        assert_eq!(r.now(), c.now());
+        assert_eq!(r.len(), c.len());
+        for _ in 0..3 {
+            assert_eq!(r.pop(), c.pop());
+        }
+        // Sequence numbering continues where the original left off.
+        assert_eq!(r.schedule(9, r.now() + 1.0), c.schedule(9, c.now() + 1.0));
     }
 
     #[test]

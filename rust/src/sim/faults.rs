@@ -1,0 +1,369 @@
+//! Deterministic fault-injection plane: client crash/rejoin plus
+//! per-message loss/duplication (ROADMAP "Fault plane").
+//!
+//! Every fault decision is drawn from the dedicated `"faults"` RNG stream
+//! *inside* [`complete_iteration`]'s schedule order — the same discipline
+//! the bandwidth gate uses — so the pipelined dispatcher replays faults
+//! for free and the serial↔parallel bitwise contract extends to faulty
+//! runs with no dispatcher changes (rust/tests/faults.rs).
+//!
+//! Semantics (async policies):
+//! * **Crash** — with probability `fault.crash_prob` per round, the
+//!   selected client crashes: the round's gradient is discarded (no push,
+//!   no apply, no fetch, no wire traffic), the client sits out
+//!   `fault.downtime` virtual seconds, then rejoins with its old θ_j — so
+//!   its next applied push carries an emergently spiked staleness τ, the
+//!   extreme tail the paper's τ-mitigation policies exist for. While
+//!   down, rounds the scheduler still hands the client are likewise
+//!   discarded (`recomputed_after_crash` counts that wasted work).
+//! * **Message loss** — a transmitted push is lost with `fault.push_loss`:
+//!   wire bytes are charged (the packet occupied the link) but the server
+//!   never applies the gradient. A lost fetch (`fault.fetch_loss`) leaves
+//!   the client on its stale θ_j.
+//! * **Duplication** — a surviving push duplicates with `fault.push_dup`
+//!   and applies twice (stressing policy idempotence — FASGD's n/b/v
+//!   tracks advance twice); a duplicated fetch is idempotent but pays
+//!   double wire bytes.
+//!
+//! Under a **barrier** policy the round of a crashed/down client instead
+//! proceeds through normal barrier bookkeeping with a **zeroed
+//! gradient** — discarding it would desynchronize the planner's
+//! independent barrier replay and a parked crashed member would deadlock
+//! the release — and message faults are suppressed entirely (a lost push
+//! would park its client forever, the same deadlock the config layer
+//! rejects for bandwidth gating). Both branches are config-static, so RNG
+//! draw counts stay a pure function of the schedule.
+//!
+//! With every probability at 0 (the default) the plane draws nothing and
+//! emits nothing: traces are byte-identical to a build without it.
+
+use crate::config::FaultConfig;
+use crate::rng::Xoshiro256pp;
+use crate::server::checkpoint::{CkptReader, CkptWriter};
+
+/// What happened to the selected client's round.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RoundFate {
+    /// No crash: the round proceeds normally.
+    Normal,
+    /// Fresh crash this round; the client is down until `down_until`
+    /// virtual seconds.
+    Crashed { down_until: f64 },
+    /// Still down from an earlier crash; the round's work is discarded.
+    Down,
+}
+
+/// [`FaultPlane::round_fate`]'s report: the fate plus whether the client
+/// rejoined at the top of this round (emit `ClientRejoined` first).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FateReport {
+    pub rejoined: bool,
+    pub fate: RoundFate,
+}
+
+/// What happened to one transmitted message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MessageFate {
+    Delivered,
+    Lost,
+    Duplicated,
+}
+
+/// Fault counters, reported in `RunSummary.to_json()`'s `faults` block
+/// and reconciled against trace events by rust/tests/faults.rs.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// Fresh crashes (`ClientCrashed` events).
+    pub crashes: u64,
+    /// Rejoins after downtime (`ClientRejoined` events).
+    pub rejoins: u64,
+    /// Pushes lost on the wire.
+    pub push_lost: u64,
+    /// Fetch replies lost on the wire.
+    pub fetch_lost: u64,
+    /// Pushes applied twice.
+    pub push_duplicated: u64,
+    /// Fetches delivered twice (idempotent, double bytes).
+    pub fetch_duplicated: u64,
+    /// Rounds discarded (or zero-filled, under barrier) because the
+    /// client was still down — wasted gradient computations.
+    pub recomputed_after_crash: u64,
+}
+
+impl FaultCounters {
+    pub fn any(&self) -> bool {
+        *self != Self::default()
+    }
+}
+
+/// The per-run fault state machine. Owned by the protocol core; all
+/// methods are called from `complete_iteration` in schedule order.
+#[derive(Debug, Clone)]
+pub struct FaultPlane {
+    cfg: FaultConfig,
+    rng: Xoshiro256pp,
+    down: Vec<bool>,
+    down_until: Vec<f64>,
+    counters: FaultCounters,
+}
+
+impl FaultPlane {
+    pub fn new(cfg: FaultConfig, lambda: usize, rng: Xoshiro256pp) -> Self {
+        Self {
+            cfg,
+            rng,
+            down: vec![false; lambda],
+            down_until: vec![0.0; lambda],
+            counters: FaultCounters::default(),
+        }
+    }
+
+    /// Any fault source configured? False ⇒ zero RNG draws, zero events.
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled()
+    }
+
+    /// Message-level faults configured? (The core suppresses these under
+    /// barrier policies; this predicate is config-static.)
+    pub fn message_faults_enabled(&self) -> bool {
+        self.cfg.message_faults_enabled()
+    }
+
+    /// Is `client` currently down?
+    pub fn is_down(&self, client: usize) -> bool {
+        self.down[client]
+    }
+
+    /// Decide the selected client's fate for this round, at virtual time
+    /// `vnow`. Draw discipline: a down client consumes no draws (its
+    /// status is schedule-ordered state); an up client consumes exactly
+    /// one uniform when `crash_prob > 0`, else zero.
+    pub fn round_fate(&mut self, client: usize, vnow: f64) -> FateReport {
+        if self.cfg.crash_prob <= 0.0 {
+            return FateReport { rejoined: false, fate: RoundFate::Normal };
+        }
+        let mut rejoined = false;
+        if self.down[client] {
+            if vnow >= self.down_until[client] {
+                self.down[client] = false;
+                self.counters.rejoins += 1;
+                rejoined = true;
+            } else {
+                self.counters.recomputed_after_crash += 1;
+                return FateReport { rejoined: false, fate: RoundFate::Down };
+            }
+        }
+        if self.rng.f64() < self.cfg.crash_prob {
+            let down_until = vnow + self.cfg.downtime;
+            self.down[client] = true;
+            self.down_until[client] = down_until;
+            self.counters.crashes += 1;
+            return FateReport {
+                rejoined,
+                fate: RoundFate::Crashed { down_until },
+            };
+        }
+        FateReport { rejoined, fate: RoundFate::Normal }
+    }
+
+    /// Fate of one transmitted push. Loss is drawn first; a surviving
+    /// push then draws duplication — each only when its probability is
+    /// nonzero (config-static draw counts).
+    pub fn push_fate(&mut self) -> MessageFate {
+        if self.cfg.push_loss > 0.0 && self.rng.f64() < self.cfg.push_loss {
+            self.counters.push_lost += 1;
+            return MessageFate::Lost;
+        }
+        if self.cfg.push_dup > 0.0 && self.rng.f64() < self.cfg.push_dup {
+            self.counters.push_duplicated += 1;
+            return MessageFate::Duplicated;
+        }
+        MessageFate::Delivered
+    }
+
+    /// Fate of one transmitted fetch reply (same draw discipline).
+    pub fn fetch_fate(&mut self) -> MessageFate {
+        if self.cfg.fetch_loss > 0.0 && self.rng.f64() < self.cfg.fetch_loss {
+            self.counters.fetch_lost += 1;
+            return MessageFate::Lost;
+        }
+        if self.cfg.fetch_dup > 0.0 && self.rng.f64() < self.cfg.fetch_dup {
+            self.counters.fetch_duplicated += 1;
+            return MessageFate::Duplicated;
+        }
+        MessageFate::Delivered
+    }
+
+    pub fn counters(&self) -> FaultCounters {
+        self.counters
+    }
+
+    /// Serialize the full fault state (RNG position, down map, counters).
+    pub fn save_state(&self, w: &mut CkptWriter) {
+        w.section("faults");
+        for word in self.rng.state() {
+            w.put_u64(word);
+        }
+        w.put_bools(&self.down);
+        w.put_f64s(&self.down_until);
+        let c = &self.counters;
+        for v in [
+            c.crashes,
+            c.rejoins,
+            c.push_lost,
+            c.fetch_lost,
+            c.push_duplicated,
+            c.fetch_duplicated,
+            c.recomputed_after_crash,
+        ] {
+            w.put_u64(v);
+        }
+    }
+
+    pub fn load_state(&mut self, r: &mut CkptReader) -> anyhow::Result<()> {
+        r.expect_section("faults")?;
+        let mut s = [0u64; 4];
+        for word in &mut s {
+            *word = r.take_u64()?;
+        }
+        self.rng.restore_state(s);
+        self.down = r.take_bools()?;
+        self.down_until = r.take_f64s()?;
+        if self.down.len() != self.down_until.len() {
+            anyhow::bail!("checkpoint: fault down-map length mismatch");
+        }
+        self.counters = FaultCounters {
+            crashes: r.take_u64()?,
+            rejoins: r.take_u64()?,
+            push_lost: r.take_u64()?,
+            fetch_lost: r.take_u64()?,
+            push_duplicated: r.take_u64()?,
+            fetch_duplicated: r.take_u64()?,
+            recomputed_after_crash: r.take_u64()?,
+        };
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng;
+
+    fn plane(cfg: FaultConfig) -> FaultPlane {
+        FaultPlane::new(cfg, 4, rng::stream(7, "faults", 0))
+    }
+
+    #[test]
+    fn disabled_plane_draws_nothing() {
+        let mut p = plane(FaultConfig::default());
+        assert!(!p.enabled());
+        let before = p.rng.state();
+        for c in 0..4 {
+            assert_eq!(
+                p.round_fate(c, 10.0),
+                FateReport { rejoined: false, fate: RoundFate::Normal }
+            );
+            assert_eq!(p.push_fate(), MessageFate::Delivered);
+            assert_eq!(p.fetch_fate(), MessageFate::Delivered);
+        }
+        assert_eq!(p.rng.state(), before, "zero RNG draws when disabled");
+        assert!(!p.counters().any());
+    }
+
+    #[test]
+    fn crash_down_rejoin_cycle() {
+        let cfg = FaultConfig {
+            crash_prob: 0.999, // first draw crashes with near-certainty
+            downtime: 5.0,
+            ..FaultConfig::default()
+        };
+        let mut p = plane(cfg);
+        let rep = p.round_fate(2, 10.0);
+        assert!(!rep.rejoined);
+        match rep.fate {
+            RoundFate::Crashed { down_until } => {
+                assert_eq!(down_until, 15.0)
+            }
+            other => panic!("expected crash, got {other:?}"),
+        }
+        assert!(p.is_down(2));
+        // Before down_until: discarded, counted, no draw.
+        let before = p.rng.state();
+        assert_eq!(
+            p.round_fate(2, 12.0),
+            FateReport { rejoined: false, fate: RoundFate::Down }
+        );
+        assert_eq!(p.rng.state(), before, "down rounds make no draws");
+        // At/after down_until: rejoin, then a fresh crash draw fires.
+        let rep = p.round_fate(2, 15.0);
+        assert!(rep.rejoined);
+        assert!(matches!(rep.fate, RoundFate::Crashed { .. }));
+        let c = p.counters();
+        assert_eq!(c.crashes, 2);
+        assert_eq!(c.rejoins, 1);
+        assert_eq!(c.recomputed_after_crash, 1);
+        // Other clients are unaffected.
+        assert!(!p.is_down(0));
+    }
+
+    #[test]
+    fn message_fates_count_and_split_by_direction() {
+        let cfg = FaultConfig {
+            push_loss: 0.5,
+            fetch_dup: 0.5,
+            ..FaultConfig::default()
+        };
+        let mut p = plane(cfg);
+        let mut lost = 0;
+        let mut dup = 0;
+        for _ in 0..2000 {
+            if p.push_fate() == MessageFate::Lost {
+                lost += 1;
+            }
+            if p.fetch_fate() == MessageFate::Duplicated {
+                dup += 1;
+            }
+        }
+        let c = p.counters();
+        assert_eq!(c.push_lost, lost);
+        assert_eq!(c.fetch_duplicated, dup);
+        assert_eq!(c.fetch_lost, 0);
+        assert_eq!(c.push_duplicated, 0);
+        assert!((800..1200).contains(&lost), "p=0.5 over 2000: {lost}");
+        assert!((800..1200).contains(&dup), "p=0.5 over 2000: {dup}");
+    }
+
+    #[test]
+    fn save_load_round_trips_mid_stream() {
+        let cfg = FaultConfig {
+            crash_prob: 0.3,
+            downtime: 4.0,
+            push_loss: 0.2,
+            fetch_loss: 0.1,
+            push_dup: 0.1,
+            fetch_dup: 0.1,
+        };
+        let mut a = plane(cfg.clone());
+        for i in 0..50 {
+            a.round_fate(i % 4, i as f64);
+            a.push_fate();
+            a.fetch_fate();
+        }
+        let mut w = CkptWriter::new();
+        a.save_state(&mut w);
+        let bytes = w.into_bytes();
+        let mut b = plane(cfg);
+        let mut r = CkptReader::new(&bytes);
+        b.load_state(&mut r).unwrap();
+        assert_eq!(b.counters(), a.counters());
+        for i in 50..80 {
+            assert_eq!(
+                a.round_fate(i % 4, i as f64),
+                b.round_fate(i % 4, i as f64)
+            );
+            assert_eq!(a.push_fate(), b.push_fate());
+            assert_eq!(a.fetch_fate(), b.fetch_fate());
+        }
+    }
+}

@@ -56,6 +56,7 @@ pub mod builder;
 pub mod client;
 pub mod clock;
 pub mod dispatcher;
+pub mod faults;
 pub mod observers;
 pub mod parallel;
 pub mod probe;
@@ -66,6 +67,7 @@ pub mod trace;
 
 pub use builder::{Simulation, SimulationBuilder};
 pub use clock::{ClockEvent, LatencyModel, LinkModel, VirtualClock};
+pub use faults::{FaultCounters, FaultPlane, MessageFate, RoundFate};
 pub use observers::{
     CsvCurveWriter, EvalLogger, EventCounter, FrameHub, FrameKind,
     RunObserver, StreamObserver, Subscription,

@@ -190,6 +190,50 @@ impl ParallelSimulator {
         })
     }
 
+    /// Serialize the schedule state (selector + pending window-cut pick)
+    /// after the protocol core's record — the second half of a resumable
+    /// checkpoint body ([`crate::server::checkpoint`]). Only called at
+    /// drained `run_until` boundaries, where the pipeline is empty
+    /// (planned == applied), so no in-flight dispatcher state exists to
+    /// save.
+    pub(crate) fn save_schedule_state(
+        &self,
+        w: &mut crate::server::checkpoint::CkptWriter,
+    ) {
+        debug_assert_eq!(self.outstanding, 0, "checkpoint of a live pipeline");
+        self.planner.save_selector_state(w);
+    }
+
+    /// Restore the schedule state written by either driver and re-arm the
+    /// dispatcher at the checkpoint's (drained) iteration boundary: the
+    /// planner resumes the pick stream around the restored selector, the
+    /// apply queue restarts at the core's iteration, and the speculation
+    /// state machine starts empty (nothing was in flight at a quiescent
+    /// checkpoint; epochs only matter relative to in-flight tags).
+    pub(crate) fn load_schedule_state(
+        &mut self,
+        r: &mut crate::server::checkpoint::CkptReader,
+    ) -> Result<()> {
+        let mut selector = Selector::with_delays(
+            self.core.cfg.selection.clone(),
+            self.core.cfg.clients,
+            rng::stream(self.core.cfg.seed, "dispatcher", 0),
+            &self.core.cfg.delay,
+        );
+        selector.load_state(r)?;
+        let pending = crate::sim::selection::load_pending_pick(r)?;
+        self.planner = SchedulePlanner::from_restored(
+            selector,
+            self.core.blocked.clone(),
+            self.core.cfg.policy.is_barrier(),
+            pending,
+        );
+        self.queue = ApplyQueue::new(self.core.iter);
+        self.next_seq = self.core.iter;
+        self.barrier_pending = false;
+        Ok(())
+    }
+
     /// Enable the protocol trace (ring buffer of `cap` events).
     pub fn enable_trace(&mut self, cap: usize) {
         self.core.trace = Trace::new(cap);

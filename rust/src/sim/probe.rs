@@ -88,6 +88,43 @@ impl ProbeLog {
         self.records.iter().map(|r| r.b_staleness).sum::<f64>()
             / self.records.len() as f64
     }
+
+    /// Serialize for a resumable checkpoint
+    /// ([`crate::server::checkpoint`]).
+    pub fn save_state(
+        &self,
+        w: &mut crate::server::checkpoint::CkptWriter,
+    ) {
+        w.section("probes");
+        w.put_usize(self.records.len());
+        for r in &self.records {
+            w.put_u64(r.iter);
+            w.put_u64(r.tau);
+            w.put_f64(r.b_staleness);
+            w.put_f64(r.grad_norm);
+            w.put_opt_f64(r.v_mean);
+        }
+    }
+
+    /// Restore state saved by [`Self::save_state`].
+    pub fn load_state(
+        &mut self,
+        r: &mut crate::server::checkpoint::CkptReader,
+    ) -> anyhow::Result<()> {
+        r.expect_section("probes")?;
+        let n = r.take_usize()?;
+        self.records = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            self.records.push(ProbeRecord {
+                iter: r.take_u64()?,
+                tau: r.take_u64()?,
+                b_staleness: r.take_f64()?,
+                grad_norm: r.take_f64()?,
+                v_mean: r.take_opt_f64()?,
+            });
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -25,9 +25,11 @@ use crate::data::{corpus::Corpus, sampler::{BatchSampler, WindowSampler},
                   Split};
 use crate::grad::{Batch, EvalEngine, GradientEngine, OwnedBatch};
 use crate::metrics::{EvalPoint, History, RunSummary, StalenessHistogram};
+use crate::server::checkpoint::{CkptReader, CkptWriter};
 use crate::server::{GradientCache, ParamStore, Server};
 use crate::sim::client::{Accumulator, ClientState, SamplerKind};
 use crate::sim::clock::LinkModel;
+use crate::sim::faults::{FaultPlane, MessageFate, RoundFate};
 use crate::sim::observers::RunObserver;
 use crate::sim::probe::{ProbeLog, ProbeRecord};
 use crate::sim::trace::{Event, Trace};
@@ -116,6 +118,11 @@ pub(crate) struct ProtocolCore {
     /// Does the policy park clients at a barrier (sync-style)? Resolved
     /// once from the registry — keeps string compares off the hot loop.
     pub(crate) barrier: bool,
+    /// Deterministic fault injection ([`crate::sim::faults`]): crash/
+    /// rejoin and message loss/duplication, drawn from the `"faults"`
+    /// stream in schedule order. With `fault.*` all zero it draws
+    /// nothing and emits nothing.
+    pub(crate) faults: FaultPlane,
     /// Composable run subscribers (see [`crate::sim::observers`]): each
     /// sees the event stream, eval points, and the final summary, in
     /// schedule order — identical between serial and parallel drivers.
@@ -178,9 +185,15 @@ impl ProtocolCore {
             BandwidthAccounting::with_shards(store.total_bytes(), store.count());
         let link = LinkModel::from_config(&cfg.link);
         let barrier = cfg.policy.is_barrier();
+        let faults = FaultPlane::new(
+            cfg.fault.clone(),
+            lambda,
+            crate::rng::stream(cfg.seed, "faults", 0),
+        );
         let core = Self {
             blocked: vec![false; lambda],
             barrier,
+            faults,
             observers: Vec::new(),
             bw,
             acc,
@@ -319,8 +332,57 @@ impl ProtocolCore {
             client: l,
             vtime: self.vnow,
         });
-        self.history.record_train_loss(loss as f64);
+        // 1. Fault plane: decide this round's fate first — a crashed (or
+        // still-down) client's gradient never reaches the protocol, so
+        // its loss must not pollute the train EMA either. Zero RNG draws
+        // when faults are disabled (the `fault.* = none` byte-compat
+        // guarantee); a down client's state is schedule-ordered, so both
+        // execution modes replay identical fault histories.
+        let fate = self.faults.round_fate(l, self.vnow);
+        let discarded = !matches!(fate.fate, RoundFate::Normal);
+        if !discarded {
+            self.history.record_train_loss(loss as f64);
+        }
         self.iter += 1;
+        if fate.rejoined {
+            self.emit(Event::ClientRejoined {
+                iter: self.iter,
+                client: l,
+                vtime: self.vnow,
+            });
+        }
+        if let RoundFate::Crashed { down_until } = fate.fate {
+            self.emit(Event::ClientCrashed {
+                iter: self.iter,
+                client: l,
+                down_until,
+                vtime: self.vnow,
+            });
+        }
+        if discarded && !self.barrier {
+            // Async policies: the round is fully discarded — no push, no
+            // apply, no fetch, no wire traffic, no bandwidth draws. θ_j
+            // stays put (ThetaReplaced::None, so the pipelined
+            // dispatcher's epochs are untouched), and staleness spikes
+            // emergently when the client's next surviving push lands.
+            // The eval/log cadences still run: virtual time advanced.
+            self.run_cadences()?;
+            return Ok(ThetaReplaced::None);
+        }
+        // Barrier policies instead push a **zeroed** gradient through the
+        // full protocol path: the planner replays barrier parking purely
+        // from the pick sequence, so a discarded round would desync its
+        // blocked-model from the core's (and a parked crashed member
+        // would deadlock the release). A zero gradient keeps every
+        // barrier invariant — park, push, release at the λth arrival —
+        // while contributing nothing to the mean.
+        let zeroed: Vec<f32>;
+        let grad: &[f32] = if discarded {
+            zeroed = vec![0.0; grad.len()];
+            &zeroed
+        } else {
+            grad
+        };
         let client_ts = self.clients[l].ts;
 
         // B-Staleness probe (eq. 3): recompute the same minibatch at the
@@ -384,14 +446,46 @@ impl ProtocolCore {
         });
         let mut wire_bytes = push_bytes;
 
+        // 2b. Message faults on the push (async only: under a barrier a
+        // lost push would park its client forever — the same deadlock
+        // the config layer rejects for bandwidth gating — so barrier
+        // runs suppress message faults entirely; the branch is
+        // config-static, keeping draw counts deterministic). Drawn only
+        // when the gate actually transmitted.
+        let push_fate =
+            if push && !self.barrier && self.faults.message_faults_enabled()
+            {
+                self.faults.push_fate()
+            } else {
+                MessageFate::Delivered
+            };
+        let push_dup = push_fate == MessageFate::Duplicated;
+
         let mut outcome = None;
-        if push_all {
+        let mut dup_outcome = None;
+        if push_fate == MessageFate::Lost {
+            // The packet occupied the link (its bytes stay charged) but
+            // the server never saw it: no apply, no cache store. In
+            // Accumulate mode the pending fold stays client-side for the
+            // next transmitted push — only this round's packet is lost.
+            self.emit(Event::MessageLost {
+                iter: self.iter,
+                client: l,
+                push: true,
+                bytes: push_bytes,
+                vtime: self.vnow,
+            });
+        } else if push_all {
             // Accumulate mode folds any unsent gradients into this push.
             let acc_state = self.clients[l].accum.as_mut();
             if let Some(a) = acc_state.filter(|a| !a.is_empty()) {
                 let spare = std::mem::take(&mut self.accum_spare);
                 let (mean, ts) = a.flush_with(grad, client_ts, spare);
                 outcome = Some(self.server.apply_update(&mean, ts, l)?);
+                if push_dup {
+                    dup_outcome =
+                        Some(self.server.apply_update(&mean, ts, l)?);
+                }
                 if let Some(cache) = &mut self.cache {
                     cache.store(l, &mean, ts);
                 }
@@ -400,6 +494,10 @@ impl ProtocolCore {
             } else {
                 outcome =
                     Some(self.server.apply_update(grad, client_ts, l)?);
+                if push_dup {
+                    dup_outcome =
+                        Some(self.server.apply_update(grad, client_ts, l)?);
+                }
                 if let Some(cache) = &mut self.cache {
                     cache.store(l, grad, client_ts);
                 }
@@ -437,6 +535,10 @@ impl ProtocolCore {
                 }
             }
             let out = self.server.apply_update(&masked, apply_ts, l)?;
+            if push_dup {
+                dup_outcome =
+                    Some(self.server.apply_update(&masked, apply_ts, l)?);
+            }
             if let Some(cache) = &mut self.cache {
                 cache.store_shards(
                     l,
@@ -530,6 +632,37 @@ impl ProtocolCore {
             }
         }
 
+        // 2c. A duplicated push applied twice (the retransmitted packet
+        // is byte-identical, so the second apply sees the same payload
+        // and timestamp — only the server's own clock has moved). It is
+        // a real server update with its own staleness sample and wire
+        // cost. `unblock_all` is impossible here: duplication is
+        // async-only (barrier suppressed above) and async policies never
+        // release barriers.
+        if let Some(out) = dup_outcome {
+            if out.applied {
+                self.server_updates += 1;
+            }
+            if let Some(tau) = out.staleness {
+                self.staleness.record(tau);
+                self.emit(Event::Applied {
+                    iter: self.iter,
+                    client: l,
+                    tau,
+                    reapplied: false,
+                    vtime: self.vnow,
+                });
+            }
+            wire_bytes += push_bytes;
+            self.emit(Event::MessageDuplicated {
+                iter: self.iter,
+                client: l,
+                push: true,
+                bytes: push_bytes,
+                vtime: self.vnow,
+            });
+        }
+
         if self.barrier {
             // Parked until the barrier releases (unless it just did).
             if outcome.map_or(true, |o| !o.unblock_all) {
@@ -550,7 +683,27 @@ impl ProtocolCore {
                 vtime: self.vnow,
             });
             wire_bytes += fetch_bytes;
-            if fetch_all {
+            // 3b'. Message faults on the fetch reply (this branch is
+            // async by construction). A lost reply leaves the client on
+            // its stale θ_j — exactly the emergent-staleness mechanism
+            // the paper's τ histograms measure; a duplicated reply is
+            // pure extra wire traffic (the second copy overwrites the
+            // first with identical bytes).
+            let fetch_fate =
+                if fetch && self.faults.message_faults_enabled() {
+                    self.faults.fetch_fate()
+                } else {
+                    MessageFate::Delivered
+                };
+            if fetch_fate == MessageFate::Lost {
+                self.emit(Event::MessageLost {
+                    iter: self.iter,
+                    client: l,
+                    push: false,
+                    bytes: fetch_bytes,
+                    vtime: self.vnow,
+                });
+            } else if fetch_all {
                 let client = &mut self.clients[l];
                 client.theta = Arc::new(self.server.params().to_vec());
                 client.ts = self.server.timestamp();
@@ -573,6 +726,16 @@ impl ProtocolCore {
                 self.clients[l].theta = Arc::new(theta);
                 replaced = ThetaReplaced::Client;
             }
+            if fetch_fate == MessageFate::Duplicated {
+                wire_bytes += fetch_bytes;
+                self.emit(Event::MessageDuplicated {
+                    iter: self.iter,
+                    client: l,
+                    push: false,
+                    bytes: fetch_bytes,
+                    vtime: self.vnow,
+                });
+            }
         }
 
         // 3c. Wire time: the bytes this iteration actually transmitted
@@ -588,6 +751,14 @@ impl ProtocolCore {
             self.vnow = self.vclock + self.wire_secs;
         }
 
+        self.run_cadences()?;
+        Ok(replaced)
+    }
+
+    /// The per-iteration tail: eval cadences + progress logging. Shared
+    /// by the normal path and the crashed-round early exit, so faulty
+    /// runs keep the exact eval schedule of their healthy prefix.
+    fn run_cadences(&mut self) -> Result<()> {
         // 4. Validation cadence (in server updates, like the paper's plots).
         let mut evaluated = false;
         if self.server.timestamp() >= self.next_eval_ts {
@@ -632,7 +803,7 @@ impl ProtocolCore {
                 self.history.train_ema().unwrap_or(f64::NAN)
             );
         }
-        Ok(replaced)
+        Ok(())
     }
 
     /// Evaluate validation cost on the whole val set (chunked).
@@ -720,6 +891,146 @@ impl ProtocolCore {
         Ok(())
     }
 
+    /// Serialize the core's complete resumable state into a checkpoint
+    /// body ([`crate::server::checkpoint`]). Scratch buffers and the
+    /// bounded trace ring are rebuilt empty on resume; everything that
+    /// influences a future protocol decision travels. Must be called at
+    /// a quiescent boundary (no in-flight iterations) — the execution
+    /// drivers only checkpoint after a fully drained `run_until`.
+    pub(crate) fn save_state(&self, w: &mut CkptWriter) -> Result<()> {
+        w.section("core");
+        w.put_u64(self.iter);
+        w.put_u64(self.server_updates);
+        w.put_u64(self.next_eval_ts);
+        w.put_f64(self.vnow);
+        w.put_f64(self.vclock);
+        w.put_f64(self.wire_secs);
+        w.put_f64(self.next_eval_vtime);
+        w.put_bools(&self.blocked);
+        w.section("clients");
+        w.put_usize(self.clients.len());
+        for c in &self.clients {
+            w.put_u64(c.ts);
+            w.put_u64(c.steps);
+            w.put_f32s(&c.theta);
+            let rng = match &c.sampler {
+                SamplerKind::Classif(s) => s.rng_state(),
+                SamplerKind::Lm(s) => s.rng_state(),
+            };
+            for word in rng {
+                w.put_u64(word);
+            }
+            match &c.accum {
+                Some(a) => {
+                    w.put_bool(true);
+                    w.put_u32(a.count);
+                    w.put_u64(a.newest_ts);
+                    w.put_f32s(&a.sum);
+                }
+                None => w.put_bool(false),
+            }
+        }
+        self.server.save_state(w)?;
+        self.bw.save_state(w);
+        self.acc.save_state(w);
+        w.section("cache");
+        w.put_bool(self.cache.is_some());
+        if let Some(cache) = &self.cache {
+            cache.save_state(w);
+        }
+        self.history.save_state(w);
+        self.staleness.save_state(w);
+        self.probes.save_state(w);
+        self.faults.save_state(w);
+        Ok(())
+    }
+
+    /// Restore state saved by [`Self::save_state`] into a freshly built
+    /// core of the same config (the checkpoint header's config
+    /// fingerprint guarantees the geometry matches; the length checks
+    /// here are defense in depth against corrupt bodies).
+    pub(crate) fn load_state(&mut self, r: &mut CkptReader) -> Result<()> {
+        r.expect_section("core")?;
+        self.iter = r.take_u64()?;
+        self.server_updates = r.take_u64()?;
+        self.next_eval_ts = r.take_u64()?;
+        self.vnow = r.take_f64()?;
+        self.vclock = r.take_f64()?;
+        self.wire_secs = r.take_f64()?;
+        self.next_eval_vtime = r.take_f64()?;
+        let blocked = r.take_bools()?;
+        if blocked.len() != self.blocked.len() {
+            bail!(
+                "checkpoint has {} clients but config has {}",
+                blocked.len(),
+                self.blocked.len()
+            );
+        }
+        self.blocked = blocked;
+        r.expect_section("clients")?;
+        let n = r.take_usize()?;
+        if n != self.clients.len() {
+            bail!(
+                "checkpoint has {n} client records but config has {}",
+                self.clients.len()
+            );
+        }
+        for c in self.clients.iter_mut() {
+            c.ts = r.take_u64()?;
+            c.steps = r.take_u64()?;
+            let theta = r.take_f32s()?;
+            if theta.len() != c.theta.len() {
+                bail!(
+                    "checkpoint θ_j has {} params but model has {}",
+                    theta.len(),
+                    c.theta.len()
+                );
+            }
+            c.theta = Arc::new(theta);
+            let mut s = [0u64; 4];
+            for word in s.iter_mut() {
+                *word = r.take_u64()?;
+            }
+            match &mut c.sampler {
+                SamplerKind::Classif(smp) => smp.restore_rng_state(s),
+                SamplerKind::Lm(smp) => smp.restore_rng_state(s),
+            }
+            if r.take_bool()? {
+                let Some(a) = c.accum.as_mut() else {
+                    bail!(
+                        "checkpoint carries accumulator state but \
+                         Accumulate push-drop mode is off"
+                    );
+                };
+                a.count = r.take_u32()?;
+                a.newest_ts = r.take_u64()?;
+                let sum = r.take_f32s()?;
+                if sum.len() != a.sum.len() {
+                    bail!("accumulator length mismatch");
+                }
+                a.sum = sum;
+            }
+        }
+        self.server.load_state(r)?;
+        self.bw.load_state(r)?;
+        self.acc.load_state(r)?;
+        r.expect_section("cache")?;
+        if r.take_bool()? {
+            let Some(cache) = self.cache.as_mut() else {
+                bail!(
+                    "checkpoint carries a gradient cache but the \
+                     re-apply push-drop mode is off"
+                );
+            };
+            cache.load_state(r)?;
+        }
+        self.history.load_state(r)?;
+        self.staleness.load_state(r)?;
+        self.probes.load_state(r)?;
+        self.faults.load_state(r)?;
+        Ok(())
+    }
+
     /// Fold the finished run into its summary record, notifying observers.
     pub(crate) fn into_summary(self, wall_secs: f64) -> RunSummary {
         let summary = RunSummary {
@@ -735,6 +1046,7 @@ impl ProtocolCore {
             virtual_secs: self.vnow,
             server_updates: self.server_updates,
             probes: self.probes,
+            faults: self.faults.counters(),
         };
         let mut observers = self.observers;
         for o in &mut observers {

@@ -4,9 +4,12 @@
 //! where the next iteration belongs to the earliest-finishing client on a
 //! deterministic virtual clock ([`crate::sim::clock`]).
 
+use anyhow::{bail, Result};
+
 use crate::config::{DelayConfig, SelectionRule};
 use crate::rng::{Categorical, Normal, Xoshiro256pp};
-use crate::sim::clock::{LatencyModel, VirtualClock};
+use crate::server::checkpoint::{CkptReader, CkptWriter};
+use crate::sim::clock::{ClockEvent, LatencyModel, VirtualClock};
 
 /// Virtual-time machinery for completion-order selection. Lives inside
 /// [`Selector`] so the parallel planner's serial-order replay of `pick()`
@@ -199,6 +202,121 @@ impl Selector {
             }
         }
     }
+
+    /// Serialize the selector's complete mutable state for a resumable
+    /// checkpoint ([`crate::server::checkpoint`]). Mode-agnostic: both
+    /// execution drivers restore the same record — the parallel driver
+    /// rebuilds its planner around the restored selector via
+    /// [`SchedulePlanner::from_restored`].
+    pub fn save_state(&self, w: &mut CkptWriter) {
+        w.section("selector");
+        for word in self.rng.state() {
+            w.put_u64(word);
+        }
+        match &self.weights {
+            Some(cat) => {
+                w.put_bool(true);
+                let ws: Vec<f64> =
+                    (0..cat.len()).map(|i| cat.weight(i)).collect();
+                w.put_f64s(&ws);
+                w.put_f64(cat.total());
+            }
+            None => w.put_bool(false),
+        }
+        match &self.completion {
+            Some(cm) => {
+                w.put_bool(true);
+                let (now, next_seq, events) = cm.clock.snapshot();
+                w.put_f64(now);
+                w.put_u64(next_seq);
+                w.put_usize(events.len());
+                for e in &events {
+                    w.put_f64(e.time);
+                    w.put_u64(e.seq);
+                    w.put_usize(e.client);
+                }
+                for v in cm.latency.cached_variates() {
+                    w.put_opt_f64(v);
+                }
+                w.put_usize(cm.unscheduled.len());
+                for &i in &cm.unscheduled {
+                    w.put_usize(i);
+                }
+            }
+            None => w.put_bool(false),
+        }
+        w.put_opt_f64(self.last_vtime);
+    }
+
+    /// Restore state saved by [`Self::save_state`] into a freshly built
+    /// selector of the same config.
+    pub fn load_state(&mut self, r: &mut CkptReader) -> Result<()> {
+        r.expect_section("selector")?;
+        let mut s = [0u64; 4];
+        for word in s.iter_mut() {
+            *word = r.take_u64()?;
+        }
+        self.rng.restore_state(s);
+        let has_weights = r.take_bool()?;
+        if has_weights != self.weights.is_some() {
+            bail!(
+                "checkpoint selection-weight presence does not match the \
+                 configured rule"
+            );
+        }
+        if has_weights {
+            let ws = r.take_f64s()?;
+            if ws.len() != self.lambda {
+                bail!(
+                    "checkpoint has {} selection weights but λ={}",
+                    ws.len(),
+                    self.lambda
+                );
+            }
+            let total = r.take_f64()?;
+            self.weights = Some(Categorical::from_parts(ws, total));
+        }
+        let has_completion = r.take_bool()?;
+        if has_completion != self.completion.is_some() {
+            bail!(
+                "checkpoint completion-mode presence does not match the \
+                 configured delay models"
+            );
+        }
+        if has_completion {
+            let now = r.take_f64()?;
+            let next_seq = r.take_u64()?;
+            let n = r.take_usize()?;
+            let mut events = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                events.push(ClockEvent {
+                    time: r.take_f64()?,
+                    seq: r.take_u64()?,
+                    client: r.take_usize()?,
+                });
+            }
+            let cm = self.completion.as_mut().unwrap();
+            cm.clock = VirtualClock::restore(now, next_seq, &events);
+            let mut vs = [None; 2];
+            for v in vs.iter_mut() {
+                *v = r.take_opt_f64()?;
+            }
+            cm.latency.set_cached_variates(vs);
+            let n = r.take_usize()?;
+            let mut unscheduled = std::collections::BTreeSet::new();
+            for _ in 0..n {
+                let i = r.take_usize()?;
+                if i >= self.lambda {
+                    bail!("unscheduled client {i} out of range (λ={})",
+                          self.lambda);
+                }
+                unscheduled.insert(i);
+            }
+            cm.unscheduled = unscheduled;
+        }
+        self.last_vtime = r.take_opt_f64()?;
+        Ok(())
+    }
 }
 
 /// One planned iteration from the streaming schedule (pipelined mode).
@@ -272,6 +390,45 @@ impl SchedulePlanner {
         }
     }
 
+    /// Rebuild a planner around a selector restored from a checkpoint
+    /// ([`Selector::load_state`]): `blocked` is the core's restored
+    /// blocked vector, and under sync the parked count is its population
+    /// count — the planner's barrier-replay model resumes mid-fill
+    /// exactly where the core's did. `pending` is the buffered
+    /// window-cut pick from the checkpoint's schedule record
+    /// ([`load_pending_pick`]): a windowed run checkpoints *after* its
+    /// repeat-cut draw, so dropping it would skip an RNG-consumed pick.
+    pub fn from_restored(
+        selector: Selector,
+        blocked: Vec<bool>,
+        sync_barrier: bool,
+        pending: Option<(usize, Option<f64>)>,
+    ) -> Self {
+        let lambda = blocked.len();
+        let parked = sync_barrier
+            .then(|| blocked.iter().filter(|&&b| b).count());
+        Self {
+            selector,
+            blocked,
+            parked,
+            pending,
+            in_window: vec![0; lambda],
+            generation: 0,
+        }
+    }
+
+    /// Checkpoint the schedule state: the wrapped selector plus the
+    /// buffered window-cut pick. The planner's barrier-replay state is
+    /// reconstructed from the core's blocked vector by
+    /// [`Self::from_restored`].
+    pub fn save_selector_state(
+        &self,
+        w: &mut crate::server::checkpoint::CkptWriter,
+    ) {
+        self.selector.save_state(w);
+        save_pending_pick(w, self.pending);
+    }
+
     /// Stream the next pick in serial schedule order (pipelined mode).
     /// Consumes any pick buffered by a previous [`Self::next_window`]
     /// repeat-cut first, so the two draw styles can hand over mid-run
@@ -338,6 +495,40 @@ impl SchedulePlanner {
         }
         (l, released, vtime)
     }
+}
+
+/// Write the schedule-level pending-pick record: a pick the windowed
+/// planner drew (RNG already advanced, `on_selected`/`step_recover`
+/// already applied) but buffered past the window cut. Serial runs and
+/// pipelined runs always write `None`; the record exists so one
+/// checkpoint layout serves every execution mode.
+pub fn save_pending_pick(
+    w: &mut CkptWriter,
+    pending: Option<(usize, Option<f64>)>,
+) {
+    w.section("schedule");
+    match pending {
+        Some((client, vtime)) => {
+            w.put_bool(true);
+            w.put_usize(client);
+            w.put_opt_f64(vtime);
+        }
+        None => w.put_bool(false),
+    }
+}
+
+/// Read the record written by [`save_pending_pick`].
+pub fn load_pending_pick(
+    r: &mut CkptReader,
+) -> Result<Option<(usize, Option<f64>)>> {
+    r.expect_section("schedule")?;
+    Ok(if r.take_bool()? {
+        let client = r.take_usize()?;
+        let vtime = r.take_opt_f64()?;
+        Some((client, vtime))
+    } else {
+        None
+    })
 }
 
 #[cfg(test)]

@@ -25,6 +25,10 @@ pub struct Simulator {
     core: ProtocolCore,
     grad_engine: Box<dyn GradientEngine>,
     selector: Selector,
+    /// A pick restored from a windowed-parallel checkpoint's schedule
+    /// record: its RNG draws already happened before the checkpoint, so
+    /// the next [`Simulator::step`] must consume it instead of drawing.
+    pending_pick: Option<(usize, Option<f64>)>,
     // reusable buffers (hot loop stays allocation-free)
     grad_buf: Vec<f32>,
     x_buf: Vec<f32>,
@@ -46,10 +50,33 @@ impl Simulator {
             core,
             grad_engine,
             selector,
+            pending_pick: None,
             grad_buf: vec![0.0; p],
             x_buf: Vec::new(),
             y_buf: Vec::new(),
         })
+    }
+
+    /// Serialize the schedule state (selector + pending pick) after the
+    /// protocol core's record — the second half of a resumable checkpoint
+    /// body ([`crate::server::checkpoint`]).
+    pub(crate) fn save_schedule_state(
+        &self,
+        w: &mut crate::server::checkpoint::CkptWriter,
+    ) {
+        self.selector.save_state(w);
+        crate::sim::selection::save_pending_pick(w, self.pending_pick);
+    }
+
+    /// Restore the schedule state written by [`Self::save_schedule_state`]
+    /// (or by the parallel driver — the record is mode-agnostic).
+    pub(crate) fn load_schedule_state(
+        &mut self,
+        r: &mut crate::server::checkpoint::CkptReader,
+    ) -> Result<()> {
+        self.selector.load_state(r)?;
+        self.pending_pick = crate::sim::selection::load_pending_pick(r)?;
+        Ok(())
     }
 
     /// Enable the protocol trace (ring buffer of `cap` events).
@@ -108,10 +135,18 @@ impl Simulator {
 
     /// One iteration: one client computes one stochastic gradient.
     pub fn step(&mut self) -> Result<()> {
-        let l = self.selector.pick(&self.core.blocked);
-        let vtime = self.selector.last_vtime();
-        self.selector.on_selected(l);
-        self.selector.step_recover();
+        // A restored pending pick already consumed its RNG draws
+        // (pick/on_selected/step_recover ran before the checkpoint).
+        let (l, vtime) = match self.pending_pick.take() {
+            Some(p) => p,
+            None => {
+                let l = self.selector.pick(&self.core.blocked);
+                let vtime = self.selector.last_vtime();
+                self.selector.on_selected(l);
+                self.selector.step_recover();
+                (l, vtime)
+            }
+        };
 
         // 1. Client computes its gradient at its (possibly stale) θ_j.
         let (loss, classif) = {

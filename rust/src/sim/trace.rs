@@ -39,6 +39,24 @@ pub enum Event {
     /// the wire cost of that broadcast (λ full-model copies).
     BarrierRelease { iter: u64, server_ts: u64, bytes: u64, vtime: f64 },
     Eval { iter: u64, server_ts: u64, vtime: f64 },
+    /// Fault plane: the client crashed mid-round (the round's gradient is
+    /// lost) and stays down until virtual time `down_until`.
+    ClientCrashed { iter: u64, client: usize, down_until: f64, vtime: f64 },
+    /// Fault plane: a previously crashed client rejoined with its stale
+    /// θ_j (τ spikes emergently on its next push).
+    ClientRejoined { iter: u64, client: usize, vtime: f64 },
+    /// Fault plane: a transmitted message was lost on the wire (`push` =
+    /// direction; bytes were still charged).
+    MessageLost { iter: u64, client: usize, push: bool, bytes: u64, vtime: f64 },
+    /// Fault plane: a surviving message was duplicated (`bytes` is the
+    /// extra wire cost; a duplicated push applies twice).
+    MessageDuplicated {
+        iter: u64,
+        client: usize,
+        push: bool,
+        bytes: u64,
+        vtime: f64,
+    },
 }
 
 impl Event {
@@ -50,7 +68,11 @@ impl Event {
             | Event::Applied { vtime, .. }
             | Event::Fetch { vtime, .. }
             | Event::BarrierRelease { vtime, .. }
-            | Event::Eval { vtime, .. } => *vtime,
+            | Event::Eval { vtime, .. }
+            | Event::ClientCrashed { vtime, .. }
+            | Event::ClientRejoined { vtime, .. }
+            | Event::MessageLost { vtime, .. }
+            | Event::MessageDuplicated { vtime, .. } => *vtime,
         }
     }
 
@@ -63,6 +85,10 @@ impl Event {
             Event::Fetch { .. } => "fetch",
             Event::BarrierRelease { .. } => "barrier_release",
             Event::Eval { .. } => "eval",
+            Event::ClientCrashed { .. } => "client_crashed",
+            Event::ClientRejoined { .. } => "client_rejoined",
+            Event::MessageLost { .. } => "message_lost",
+            Event::MessageDuplicated { .. } => "message_duplicated",
         }
     }
 
@@ -105,6 +131,25 @@ impl Event {
             Event::Eval { iter, server_ts, vtime } => {
                 fields.push(("iter", iter.into()));
                 fields.push(("server_ts", server_ts.into()));
+                fields.push(("vtime", num_or_null(vtime)));
+            }
+            Event::ClientCrashed { iter, client, down_until, vtime } => {
+                fields.push(("iter", iter.into()));
+                fields.push(("client", client.into()));
+                fields.push(("down_until", num_or_null(down_until)));
+                fields.push(("vtime", num_or_null(vtime)));
+            }
+            Event::ClientRejoined { iter, client, vtime } => {
+                fields.push(("iter", iter.into()));
+                fields.push(("client", client.into()));
+                fields.push(("vtime", num_or_null(vtime)));
+            }
+            Event::MessageLost { iter, client, push, bytes, vtime }
+            | Event::MessageDuplicated { iter, client, push, bytes, vtime } => {
+                fields.push(("iter", iter.into()));
+                fields.push(("client", client.into()));
+                fields.push(("push", push.into()));
+                fields.push(("bytes", bytes.into()));
                 fields.push(("vtime", num_or_null(vtime)));
             }
         }
@@ -240,7 +285,57 @@ mod tests {
                 vtime: 1.5,
             },
             Event::Eval { iter: 1, server_ts: 1, vtime: 1.5 },
+            Event::ClientCrashed {
+                iter: 1,
+                client: 0,
+                down_until: 9.0,
+                vtime: 1.5,
+            },
+            Event::ClientRejoined { iter: 1, client: 0, vtime: 1.5 },
+            Event::MessageLost {
+                iter: 1,
+                client: 0,
+                push: true,
+                bytes: 64,
+                vtime: 1.5,
+            },
+            Event::MessageDuplicated {
+                iter: 1,
+                client: 0,
+                push: false,
+                bytes: 64,
+                vtime: 1.5,
+            },
         ];
         assert!(evs.iter().all(|e| e.vtime() == 1.5));
+    }
+
+    #[test]
+    fn fault_event_json_round_trips() {
+        use crate::util::json::Json;
+        let e = Event::ClientCrashed {
+            iter: 12,
+            client: 4,
+            down_until: 37.5,
+            vtime: 12.0,
+        };
+        let j = e.to_json();
+        assert_eq!(
+            j.get("kind").and_then(Json::as_str),
+            Some("client_crashed")
+        );
+        assert_eq!(j.get("down_until").and_then(Json::as_f64), Some(37.5));
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+        let e = Event::MessageLost {
+            iter: 3,
+            client: 1,
+            push: true,
+            bytes: 128,
+            vtime: 3.0,
+        };
+        let j = e.to_json();
+        assert_eq!(j.get("kind").and_then(Json::as_str), Some("message_lost"));
+        assert_eq!(j.get("push").and_then(Json::as_bool), Some(true));
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
     }
 }

@@ -1,0 +1,303 @@
+//! The fault plane's contract: crash/rejoin, message loss, and
+//! duplication are drawn inside the protocol core in schedule order, so
+//! the bitwise serial↔parallel guarantee extends to faulty runs — over
+//! policies × fault modes × in-flight depths — and every fault counter
+//! reconciles with the trace events the run emitted. With `fault.*` off
+//! the plane draws nothing: traces carry zero fault events and the
+//! counters block is all zeros (the committed golden traces pin the
+//! byte-level no-op).
+
+use fasgd::config::{ExperimentConfig, FaultConfig, Policy};
+use fasgd::experiments::common::fast_test_config;
+use fasgd::metrics::RunSummary;
+use fasgd::sim::{Event, Simulation};
+
+fn faulty_cfg(policy: Policy, seed: u64) -> ExperimentConfig {
+    let mut cfg = fast_test_config(policy);
+    cfg.seed = seed;
+    cfg.clients = 5;
+    cfg.iters = 240;
+    cfg.eval_every = 60;
+    cfg
+}
+
+/// The fault scenarios of the chaos matrix: each source alone, then all
+/// at once. Probabilities are high enough that every enabled source
+/// fires within 240 iterations.
+fn fault_modes() -> Vec<(&'static str, FaultConfig)> {
+    vec![
+        (
+            "crash_rejoin",
+            FaultConfig {
+                crash_prob: 0.08,
+                downtime: 4.0,
+                ..FaultConfig::default()
+            },
+        ),
+        (
+            "message_loss",
+            FaultConfig {
+                push_loss: 0.15,
+                fetch_loss: 0.1,
+                ..FaultConfig::default()
+            },
+        ),
+        (
+            "duplication",
+            FaultConfig {
+                push_dup: 0.12,
+                fetch_dup: 0.1,
+                ..FaultConfig::default()
+            },
+        ),
+        (
+            "chaos",
+            FaultConfig {
+                crash_prob: 0.05,
+                downtime: 3.0,
+                push_loss: 0.1,
+                fetch_loss: 0.05,
+                push_dup: 0.08,
+                fetch_dup: 0.05,
+            },
+        ),
+    ]
+}
+
+/// Everything in a summary that must match bitwise (wall time excluded),
+/// fault counters included.
+fn fingerprint(s: &RunSummary) -> String {
+    let mut out = String::new();
+    for p in &s.history.evals {
+        out.push_str(&format!(
+            "eval {} {} {:?} {:?} {:?}\n",
+            p.iter,
+            p.server_ts,
+            p.vtime.to_bits(),
+            p.val_loss.to_bits(),
+            p.val_acc.to_bits()
+        ));
+    }
+    out.push_str(&format!(
+        "vsecs {:?} updates {} staleness {} {} faults {:?}\n",
+        s.virtual_secs.to_bits(),
+        s.server_updates,
+        s.staleness.total(),
+        s.staleness.max(),
+        s.faults
+    ));
+    out
+}
+
+fn run_with(cfg: &ExperimentConfig, workers: usize) -> RunSummary {
+    Simulation::builder(cfg.clone())
+        .workers(workers)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap()
+}
+
+#[test]
+fn bitwise_equal_across_fault_modes_policies_inflight() {
+    // The tentpole invariant: fault draws live inside complete_iteration
+    // in schedule order, so serial and pipelined-parallel runs replay
+    // identical fault histories — no dispatcher changes, any in-flight
+    // depth. (Message faults are config-suppressed under Sync; the crash
+    // plane still runs there with zero-gradient barrier semantics.)
+    for policy in [Policy::Fasgd, Policy::GapAware, Policy::Sync] {
+        for (mode, fault) in fault_modes() {
+            let mut cfg = faulty_cfg(policy.clone(), 97);
+            cfg.fault = fault;
+            let serial = run_with(&cfg, 1);
+            let want = fingerprint(&serial);
+            if policy != Policy::Sync && cfg.fault.crash_prob > 0.0 {
+                assert!(
+                    serial.faults.crashes > 0,
+                    "{mode}: crash_prob never fired in {} iters",
+                    cfg.iters
+                );
+            }
+            for inflight in [1usize, 8] {
+                cfg.inflight = inflight;
+                let parallel = run_with(&cfg, 4);
+                assert_eq!(
+                    want,
+                    fingerprint(&parallel),
+                    "serial != parallel for policy {:?} fault mode \
+                     {mode} inflight {inflight}",
+                    cfg.policy
+                );
+            }
+            // The legacy windowed loop replays the same fault history.
+            cfg.inflight = 0;
+            cfg.pipeline = false;
+            let windowed = run_with(&cfg, 4);
+            assert_eq!(
+                want,
+                fingerprint(&windowed),
+                "windowed diverged for policy {:?} fault mode {mode}",
+                cfg.policy
+            );
+        }
+    }
+}
+
+#[test]
+fn crash_during_barrier_completes_without_deadlock() {
+    // A crashed client's round proceeds through barrier bookkeeping with
+    // a zeroed gradient — discarding it would leave the barrier parked
+    // forever. High crash rate, long downtime: the run must still reach
+    // cfg.iters in both modes, with identical results.
+    let mut cfg = faulty_cfg(Policy::Sync, 31);
+    cfg.clients = 4;
+    cfg.iters = 200;
+    cfg.fault.crash_prob = 0.3;
+    cfg.fault.downtime = 10.0;
+    let serial = run_with(&cfg, 1);
+    assert_eq!(serial.iters, 200);
+    assert!(
+        serial.faults.crashes > 0,
+        "crash plane never fired under the barrier: {:?}",
+        serial.faults
+    );
+    let parallel = run_with(&cfg, 4);
+    assert_eq!(fingerprint(&serial), fingerprint(&parallel));
+}
+
+#[test]
+fn counters_reconcile_with_trace_and_server_updates() {
+    let mut cfg = faulty_cfg(Policy::Fasgd, 1009);
+    cfg.iters = 300;
+    cfg.fault = FaultConfig {
+        crash_prob: 0.05,
+        downtime: 4.0,
+        push_loss: 0.15,
+        fetch_loss: 0.1,
+        push_dup: 0.12,
+        fetch_dup: 0.1,
+    };
+
+    // Counters come from a summary run; events from an identical traced
+    // run — legal because the whole point of the plane is determinism.
+    let summary = run_with(&cfg, 1);
+    let mut sim = Simulation::builder(cfg.clone())
+        .workers(1)
+        .trace(1 << 15)
+        .build()
+        .unwrap();
+    sim.run_until(cfg.iters).unwrap();
+    let trace = sim.trace();
+    assert_eq!(
+        trace.recorded() as usize,
+        trace.events().len(),
+        "trace ring overflowed; counts below would be partial"
+    );
+
+    let mut crashed = 0u64;
+    let mut rejoined = 0u64;
+    let (mut push_lost, mut fetch_lost) = (0u64, 0u64);
+    let (mut push_dup, mut fetch_dup) = (0u64, 0u64);
+    for e in trace.events() {
+        match e {
+            Event::ClientCrashed { .. } => crashed += 1,
+            Event::ClientRejoined { .. } => rejoined += 1,
+            Event::MessageLost { push: true, .. } => push_lost += 1,
+            Event::MessageLost { push: false, .. } => fetch_lost += 1,
+            Event::MessageDuplicated { push: true, .. } => push_dup += 1,
+            Event::MessageDuplicated { push: false, .. } => {
+                fetch_dup += 1
+            }
+            _ => {}
+        }
+    }
+    let c = summary.faults;
+    assert_eq!(c.crashes, crashed);
+    assert_eq!(c.rejoins, rejoined);
+    assert_eq!(c.push_lost, push_lost);
+    assert_eq!(c.fetch_lost, fetch_lost);
+    assert_eq!(c.push_duplicated, push_dup);
+    assert_eq!(c.fetch_duplicated, fetch_dup);
+    // Every fault source must actually have fired, or the test is vacuous.
+    assert!(c.crashes > 0, "{c:?}");
+    assert!(c.push_lost > 0 && c.fetch_lost > 0, "{c:?}");
+    assert!(c.push_duplicated > 0 && c.fetch_duplicated > 0, "{c:?}");
+    assert!(c.rejoins <= c.crashes, "{c:?}");
+
+    // Apply-count bookkeeping: under bandwidth `always` with no shards,
+    // every surviving push applies once, a duplicated push twice, and
+    // crashed/down rounds and lost pushes apply nothing.
+    assert_eq!(
+        summary.server_updates,
+        cfg.iters - c.crashes - c.recomputed_after_crash - c.push_lost
+            + c.push_duplicated,
+        "{c:?}"
+    );
+}
+
+#[test]
+fn disabled_faults_draw_and_emit_nothing() {
+    // `fault.* = 0` (the default) must be a byte-level no-op: zero fault
+    // events in the trace, an all-zero counters block in the summary.
+    // (The committed golden traces already pin the full event stream
+    // against a pre-fault-plane build.)
+    let cfg = faulty_cfg(Policy::Fasgd, 7);
+    let mut sim = Simulation::builder(cfg.clone())
+        .workers(1)
+        .trace(1 << 14)
+        .build()
+        .unwrap();
+    sim.run_until(cfg.iters).unwrap();
+    for e in sim.trace().events() {
+        assert!(
+            !matches!(
+                e,
+                Event::ClientCrashed { .. }
+                    | Event::ClientRejoined { .. }
+                    | Event::MessageLost { .. }
+                    | Event::MessageDuplicated { .. }
+            ),
+            "fault event emitted with faults disabled: {e:?}"
+        );
+    }
+    let summary = run_with(&cfg, 1);
+    assert!(!summary.faults.any(), "{:?}", summary.faults);
+    let j = summary.to_json();
+    let f = j.get("faults").expect("summary json faults block");
+    assert_eq!(f.get("crashes").unwrap().as_f64(), Some(0.0));
+}
+
+#[test]
+fn faulty_traces_identical_serial_and_parallel() {
+    // Event-granularity equality (stronger than summary fingerprints):
+    // the full protocol stream including fault events matches across
+    // execution modes.
+    let mut cfg = faulty_cfg(Policy::Fasgd, 4242);
+    cfg.fault = FaultConfig {
+        crash_prob: 0.06,
+        downtime: 3.0,
+        push_loss: 0.1,
+        fetch_loss: 0.05,
+        push_dup: 0.08,
+        fetch_dup: 0.05,
+    };
+    let trace_of = |workers: usize| {
+        let mut sim = Simulation::builder(cfg.clone())
+            .workers(workers)
+            .trace(1 << 15)
+            .build()
+            .unwrap();
+        sim.run_until(cfg.iters).unwrap();
+        sim.trace().events()
+    };
+    let serial = trace_of(1);
+    let parallel = trace_of(3);
+    assert_eq!(serial, parallel, "faulty event streams diverged");
+    assert!(
+        serial.iter().any(|e| matches!(
+            e,
+            Event::ClientCrashed { .. } | Event::MessageLost { .. }
+        )),
+        "no fault events fired; the comparison is vacuous"
+    );
+}

@@ -65,6 +65,29 @@ fn fmt_event(e: &Event) -> String {
         Event::Eval { iter, server_ts, vtime } => {
             format!("eval iter={iter} T={server_ts} vtime={vtime:?}")
         }
+        Event::ClientCrashed { iter, client, down_until, vtime } => {
+            format!(
+                "client_crashed iter={iter} client={client} \
+                 down_until={down_until:?} vtime={vtime:?}"
+            )
+        }
+        Event::ClientRejoined { iter, client, vtime } => {
+            format!(
+                "client_rejoined iter={iter} client={client} vtime={vtime:?}"
+            )
+        }
+        Event::MessageLost { iter, client, push, bytes, vtime } => {
+            format!(
+                "message_lost iter={iter} client={client} push={push} \
+                 bytes={bytes} vtime={vtime:?}"
+            )
+        }
+        Event::MessageDuplicated { iter, client, push, bytes, vtime } => {
+            format!(
+                "message_duplicated iter={iter} client={client} \
+                 push={push} bytes={bytes} vtime={vtime:?}"
+            )
+        }
     }
 }
 
@@ -207,6 +230,27 @@ fn golden_sharded_link() {
     // degenerate clock.
     cfg.link.rate_bytes_per_vsec = 1e6;
     check_scenario("sharded_link", &cfg);
+}
+
+#[test]
+fn golden_faulty_async() {
+    // The fault plane: crash/rejoin cycles, lost and duplicated
+    // messages, all drawn from the "faults" stream in schedule order —
+    // locks the fault draw discipline (a moved or extra draw reshuffles
+    // every later fate) alongside the usual protocol stream.
+    let mut cfg = fast_test_config(Policy::Fasgd);
+    cfg.name = "golden_faulty_async".into();
+    cfg.seed = 2028;
+    cfg.clients = 4;
+    cfg.iters = 64;
+    cfg.eval_every = 16;
+    cfg.fault.crash_prob = 0.05;
+    cfg.fault.downtime = 3.0;
+    cfg.fault.push_loss = 0.1;
+    cfg.fault.fetch_loss = 0.05;
+    cfg.fault.push_dup = 0.05;
+    cfg.fault.fetch_dup = 0.05;
+    check_scenario("faulty_async", &cfg);
 }
 
 #[test]

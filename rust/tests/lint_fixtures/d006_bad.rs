@@ -1,0 +1,10 @@
+// D006 positive: bare abort macros in crash-recoverable code. A host
+// panic is the one failure checkpoint/requeue cannot absorb.
+pub fn dispatch(kind: u8) -> u64 {
+    match kind {
+        0 => 1,
+        1 => todo!("windowed dispatch"),
+        2 => unimplemented!(),
+        _ => panic!("unknown dispatch kind {kind}"),
+    }
+}

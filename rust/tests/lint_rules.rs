@@ -27,7 +27,7 @@ fn rules_hit(findings: &[Finding]) -> Vec<&'static str> {
 
 #[test]
 fn each_bad_fixture_triggers_its_rule() {
-    for rule in ["D001", "D002", "D003", "D004", "D005"] {
+    for rule in ["D001", "D002", "D003", "D004", "D005", "D006"] {
         let name = format!("{}_bad.rs", rule.to_lowercase());
         let findings = lint_fixture(&name);
         assert!(
@@ -43,7 +43,7 @@ fn each_bad_fixture_triggers_its_rule() {
 
 #[test]
 fn each_ok_fixture_is_clean() {
-    for rule in ["d001", "d002", "d003", "d004", "d005"] {
+    for rule in ["d001", "d002", "d003", "d004", "d005", "d006"] {
         let name = format!("{rule}_ok.rs");
         let findings = lint_fixture(&name);
         assert!(findings.is_empty(), "{name} must be clean: {findings:?}");
@@ -110,6 +110,13 @@ fn scope_inference_by_path() {
     let scope_serve = lint::scope_for("serve/daemon.rs");
     assert!(scope_serve.d001 && scope_serve.d004 && !scope_serve.d002);
     assert!(!lint::scope_for("cli/serve_cmds.rs").d004);
+    // D006 (no bare abort macros, PR 8) covers the crash-recoverable
+    // trees: sim/, server/, serve/ — not the CLI or metrics writers.
+    assert!(lint::scope_for("sim/faults.rs").d006);
+    assert!(lint::scope_for("server/checkpoint.rs").d006);
+    assert!(scope_serve.d006);
+    assert!(!lint::scope_for("cli/serve_cmds.rs").d006);
+    assert!(!lint::scope_for("metrics/writer.rs").d006);
 }
 
 #[test]
@@ -138,5 +145,8 @@ fn serve_scope_fixture_fires_d001_and_d004() {
 #[test]
 fn rulebook_is_complete() {
     let codes: Vec<&str> = lint::RULEBOOK.iter().map(|(c, _)| *c).collect();
-    assert_eq!(codes, vec!["D001", "D002", "D003", "D004", "D005"]);
+    assert_eq!(
+        codes,
+        vec!["D001", "D002", "D003", "D004", "D005", "D006"]
+    );
 }

@@ -296,7 +296,8 @@ fn csv_curve_writer_observer_writes_on_finish() {
     let mut lines = text.lines();
     assert_eq!(
         lines.next().unwrap(),
-        "run,policy,iter,server_ts,vsecs,val_loss,val_acc"
+        "run,policy,iter,server_ts,vsecs,val_loss,val_acc,\
+         crashes,rejoins,msgs_lost,msgs_duplicated"
     );
     assert_eq!(lines.count(), summary.history.evals.len());
 }

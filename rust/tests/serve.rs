@@ -3,6 +3,11 @@
 //! schedule order with exactly one finish per run, and the determinism
 //! contract — a served job's `RunSummary` is identical to a direct
 //! same-config run, except `wall_secs` (host time).
+//!
+//! Also covered here: connection hardening (malformed/oversized frames
+//! get an `error` reply and the connection survives) and crash recovery
+//! (a store left by a dead daemon process is requeued and finished by
+//! the next one, summary identical to a direct run).
 
 use std::time::{Duration, Instant};
 
@@ -353,6 +358,218 @@ fn cancel_over_the_wire_queued_and_running() -> Result<()> {
         run: "r999999".to_string(),
     })?;
     assert!(client.expect_frame().is_err(), "unknown run must error");
+
+    handle.shutdown(ShutdownMode::Drain);
+    handle.join()
+}
+
+// ---------------------------------------------------------------------------
+// connection hardening + crash recovery
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hostile_frames_get_error_replies_and_the_connection_survives()
+-> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    // Send raw bytes, read the daemon's one-line reply.
+    fn roundtrip(
+        w: &mut TcpStream,
+        r: &mut BufReader<TcpStream>,
+        bytes: &[u8],
+    ) -> Result<Json> {
+        w.write_all(bytes)?;
+        let mut line = String::new();
+        r.read_line(&mut line)?;
+        Ok(Json::parse(line.trim())?)
+    }
+    fn msg(f: &Json) -> String {
+        f.get("message")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string()
+    }
+
+    let handle = start_daemon(1, 32)?;
+    let addr = handle.addr().to_string();
+    let stream = TcpStream::connect(&addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+
+    // Garbage that is not JSON at all.
+    let f = roundtrip(&mut writer, &mut reader, b"definitely not json\n")?;
+    assert_eq!(frame_type(&f), Some("error"));
+    assert!(msg(&f).contains("malformed request frame"), "{f:?}");
+
+    // Valid JSON, unknown request type.
+    let f = roundtrip(
+        &mut writer,
+        &mut reader,
+        b"{\"v\":1,\"type\":\"frobnicate\"}\n",
+    )?;
+    assert_eq!(frame_type(&f), Some("error"));
+    assert!(msg(&f).contains("unknown request type"), "{f:?}");
+
+    // Wrong wire version.
+    let f =
+        roundtrip(&mut writer, &mut reader, b"{\"v\":9,\"type\":\"list\"}\n")?;
+    assert_eq!(frame_type(&f), Some("error"));
+    assert!(msg(&f).contains("wire version"), "{f:?}");
+
+    // Bytes that are not UTF-8.
+    let f = roundtrip(&mut writer, &mut reader, &[0xff, 0xfe, 0xfd, b'\n'])?;
+    assert_eq!(frame_type(&f), Some("error"));
+    assert!(msg(&f).contains("not UTF-8"), "{f:?}");
+
+    // A single line far over the 1 MiB request cap: the daemon must
+    // drain it without buffering it, then answer with an error frame.
+    let mut big = vec![b'x'; (1 << 20) + 4096];
+    big.push(b'\n');
+    let f = roundtrip(&mut writer, &mut reader, &big)?;
+    assert_eq!(frame_type(&f), Some("error"));
+    assert!(msg(&f).contains("exceeds"), "{f:?}");
+
+    // Blank lines are skipped without a reply, and after all of the
+    // above the same connection still serves real requests: the very
+    // next frame is the `runs` ack, not a leftover error.
+    writer.write_all(b"\n")?;
+    let list = format!("{}\n", Request::List.to_line());
+    let f = roundtrip(&mut writer, &mut reader, list.as_bytes())?;
+    assert_eq!(frame_type(&f), Some("runs"), "{f:?}");
+
+    handle.shutdown(ShutdownMode::Drain);
+    handle.join()
+}
+
+#[test]
+fn connect_with_retry_bounds_attempts_then_succeeds_when_up() -> Result<()> {
+    // Nothing listens on the reserved port: the retry loop must give up
+    // after exactly the requested number of attempts, naming them.
+    let err = Client::connect_with_retry(
+        "127.0.0.1:1",
+        3,
+        Duration::from_millis(5),
+    )
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("after 3 attempts"), "{msg}");
+
+    // Against a live daemon it behaves exactly like `connect`.
+    let handle = start_daemon(1, 32)?;
+    let mut client = Client::connect_with_retry(
+        &handle.addr().to_string(),
+        3,
+        Duration::from_millis(5),
+    )?;
+    client.send(&Request::List)?;
+    assert_eq!(frame_type(&client.expect_frame()?), Some("runs"));
+
+    handle.shutdown(ShutdownMode::Drain);
+    handle.join()
+}
+
+#[test]
+fn daemon_requeues_interrupted_store_runs_and_finishes_them() -> Result<()> {
+    // Forge the store a SIGKILLed daemon leaves behind: a run directory
+    // whose persisted status still says `running`. The next daemon on
+    // the same store must surface the interruption, requeue the run,
+    // finish it, and produce the summary a direct run produces.
+    let store = std::env::temp_dir()
+        .join("fasgd_serve_recovery")
+        .join(std::process::id().to_string());
+    let _ = std::fs::remove_dir_all(&store);
+    let run = "r000007";
+    let dir = store.join(run);
+    std::fs::create_dir_all(&dir)?;
+    let spec = JobSpec {
+        name: Some("revived".into()),
+        settings: fast_settings("fasgd", 77),
+    };
+    std::fs::write(dir.join("spec.json"), spec.to_json().to_string())?;
+    std::fs::write(
+        dir.join("status.json"),
+        format!(
+            "{{\"run\":\"{run}\",\"name\":\"revived\",\
+             \"state\":\"running\"}}\n"
+        ),
+    )?;
+
+    let handle = Daemon::start(ServeConfig {
+        port: 0,
+        max_concurrent: 1,
+        chunk: 32,
+        store: Some(store.clone()),
+        ..ServeConfig::default()
+    })?;
+    let mut client = Client::connect(&handle.addr().to_string())?;
+
+    // The replayed lifecycle stream shows the recovery transitions
+    // (recovery runs before the listener accepts, so the frames are
+    // buffered in the hub by the time anyone attaches).
+    client.send(&Request::Attach {
+        run: run.to_string(),
+        events: false,
+    })?;
+    let mut states = Vec::new();
+    let mut finish = None;
+    let mut attached = false;
+    while finish.is_none() || !attached {
+        let f = client.expect_frame()?;
+        match frame_type(&f) {
+            Some("state") => states.push(
+                f.get("state")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+            ),
+            Some("finish") => finish = Some(f),
+            Some("attached") => attached = true,
+            _ => {}
+        }
+    }
+    assert!(
+        states.iter().any(|s| s == "interrupted"),
+        "recovery must surface the interruption: {states:?}"
+    );
+    assert!(
+        states.iter().any(|s| s == "requeued"),
+        "interrupted runs go back on the queue: {states:?}"
+    );
+    let finish = finish.context("no finish frame")?;
+    let streamed = finish
+        .get("summary")
+        .cloned()
+        .context("finish frame missing summary")?;
+    let direct = fasgd::experiments::common::run_experiment(
+        &spec.build_config(run)?,
+    )?;
+    assert_eq!(
+        scrub(&streamed),
+        scrub(&direct.to_json()),
+        "a recovered run must match the direct run bit for bit \
+         (except wall_secs)"
+    );
+
+    // Store-backed artifacts: the injected checkpoint cadence fired
+    // mid-run (iters=300, cadence 256), and the terminal state, summary,
+    // and curve were archived to disk.
+    assert!(dir.join("run.ckpt").exists(), "store-backed checkpoint");
+    assert!(dir.join("summary.json").exists(), "archived summary");
+    assert!(dir.join("curve.csv").exists(), "archived curve");
+    let status = std::fs::read_to_string(dir.join("status.json"))?;
+    assert!(status.contains("finished"), "{status}");
+
+    // `next_id` resumed past the recovered directory: a new submission
+    // never collides with an archived run.
+    client.send(&Request::Submit(JobSpec {
+        name: Some("after".into()),
+        settings: fast_settings("asgd", 8),
+    }))?;
+    let ack = client.expect_frame()?;
+    assert_eq!(frame_type(&ack), Some("submitted"));
+    assert_eq!(run_id(&ack)?, "r000008");
 
     handle.shutdown(ShutdownMode::Drain);
     handle.join()
