@@ -341,6 +341,75 @@ fn main() -> anyhow::Result<()> {
         ("virtual_secs_always", always_run.virtual_secs.into()),
     ]);
 
+    // --- concurrent sharded commits: server apply throughput ----------------
+    // The PR 9 striped commit plane vs the serial oracle at the paper MLP
+    // size (P=159010, 8 shards, fasgd rule). Serial applies run inline on
+    // the caller; sharded applies enqueue to the committer pool, and the
+    // clock stops only after a quiesce so every enqueued commit is paid
+    // for inside the measured window.
+    use fasgd::server::{
+        FasgdServer, ParamStore, RustBackend, Server, ShardedServer,
+    };
+    let cshards = 8usize;
+    let capply = fasgd::bench_util::bench_iters(600);
+    let cinit = vec![0.0f32; P];
+    let mut serial_srv = FasgdServer::with_backend_sharded(
+        cinit.clone(),
+        5e-4,
+        hp.clone(),
+        RustBackend,
+        ParamStore::new(P, cshards, 4),
+    );
+    let t0 = std::time::Instant::now();
+    for _ in 0..capply {
+        let ts = serial_srv.timestamp().saturating_sub(2);
+        serial_srv.apply_update(&g, ts, 0)?;
+    }
+    let serial_aps = capply as f64 / t0.elapsed().as_secs_f64();
+    println!(
+        "server apply serial  (fasgd, P=159010, 8 shards)  {serial_aps:>10.0} applies/s"
+    );
+    let mut conc_rows: Vec<Json> = Vec::new();
+    let mut shard_ts_buf = vec![0u64; cshards];
+    for committers in [1usize, 2, 4] {
+        let mut srv = ShardedServer::new_fasgd(
+            cinit.clone(),
+            ParamStore::new(P, cshards, 4),
+            5e-4,
+            hp.clone(),
+            committers,
+        );
+        let spawned = srv.committer_count();
+        let t0 = std::time::Instant::now();
+        for _ in 0..capply {
+            let ts = srv.timestamp().saturating_sub(2);
+            shard_ts_buf.iter_mut().for_each(|t| *t = ts);
+            srv.apply_update_sharded(&g, &shard_ts_buf, 0)?;
+        }
+        srv.quiesce()?;
+        let aps = capply as f64 / t0.elapsed().as_secs_f64();
+        println!(
+            "server apply sharded (fasgd, P=159010, 8 shards, {committers} committers) {aps:>10.0} applies/s  ({:.2}x serial)",
+            aps / serial_aps
+        );
+        conc_rows.push(obj(vec![
+            ("committers", committers.into()),
+            ("committers_spawned", spawned.into()),
+            ("applies_per_sec", aps.into()),
+            ("speedup_vs_serial", (aps / serial_aps).into()),
+        ]));
+    }
+    let concurrency_block = obj(vec![
+        (
+            "workload",
+            "fasgd apply, P=159010, 8 shards, uniform shard_ts \
+             (enqueue + drain measured)"
+                .into(),
+        ),
+        ("serial_applies_per_sec", serial_aps.into()),
+        ("sharded", Json::Arr(conc_rows)),
+    ]);
+
     // --- per-policy dispatcher throughput (serial, via the builder) ---------
     // Coordination + policy apply_update cost per step at the paper MLP
     // size; gap_aware pays an extra ||theta||_2 pass per update, fasgd the
@@ -387,6 +456,7 @@ fn main() -> anyhow::Result<()> {
             ),
             ("per_policy_serial", Json::Arr(policy_rows)),
             ("bandwidth", bandwidth_block),
+            ("concurrency", concurrency_block),
             ("speedup_at_4_workers", speedup_at_4.into()),
             (
                 "pipelined_vs_barrier_at_4_workers",

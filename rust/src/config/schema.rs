@@ -280,6 +280,62 @@ impl DelayConfig {
     }
 }
 
+/// How server applies commit ([`crate::server::concurrent`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ServerConcurrency {
+    /// The deterministic oracle: applies run on the coordinator thread in
+    /// schedule order (bitwise serial↔parallel; the default).
+    #[default]
+    Serial,
+    /// Real multi-writer commits: a committer pool applies each update
+    /// shard by shard under per-shard locks, so disjoint shards commit
+    /// concurrently. Commit order is nondeterministic — fixed-seed runs
+    /// are validated *statistically* against the serial oracle
+    /// (rust/tests/concurrent_server.rs), not bitwise.
+    Sharded,
+}
+
+impl FromStr for ServerConcurrency {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "serial" => ServerConcurrency::Serial,
+            "sharded" | "concurrent" => ServerConcurrency::Sharded,
+            other => bail!(
+                "unknown concurrency.server {other:?} (serial|sharded)"
+            ),
+        })
+    }
+}
+
+/// Concurrent-commit configuration. `server = sharded` swaps the policy
+/// server for the striped-lock [`crate::server::ShardedServer`]: worker
+/// results are handed to a committer pool that updates disjoint
+/// [`crate::server::ParamStore`] shards concurrently. Execution geometry
+/// only — the checkpoint fingerprint normalizes it like `workers` /
+/// `inflight`, so checkpoints move freely across settings.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConcurrencyConfig {
+    pub server: ServerConcurrency,
+    /// Committer threads applying shard updates (sharded mode only).
+    /// 0 = auto: min(shards.count, available cores).
+    pub committers: usize,
+}
+
+impl Default for ConcurrencyConfig {
+    fn default() -> Self {
+        Self { server: ServerConcurrency::Serial, committers: 0 }
+    }
+}
+
+impl ConcurrencyConfig {
+    /// Is the concurrent sharded commit path active?
+    pub fn sharded(&self) -> bool {
+        self.server == ServerConcurrency::Sharded
+    }
+}
+
 /// Deterministic fault-injection plane ([`crate::sim::faults`]): client
 /// crash/rejoin plus per-message loss/duplication, all drawn from the
 /// dedicated `"faults"` RNG stream inside the protocol core so serial and
@@ -522,6 +578,10 @@ pub struct ExperimentConfig {
     /// dependency). 0 = auto (2 × workers). Bounds speculation depth and
     /// snapshot/buffer memory.
     pub inflight: usize,
+    /// Server commit concurrency: `serial` (deterministic oracle, the
+    /// default) or `sharded` (striped-lock committer pool; statistical
+    /// validation). See [`ConcurrencyConfig`].
+    pub concurrency: ConcurrencyConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -557,6 +617,7 @@ impl Default for ExperimentConfig {
             lookahead: 32,
             pipeline: true,
             inflight: 0,
+            concurrency: ConcurrencyConfig::default(),
         }
     }
 }
@@ -682,6 +743,12 @@ impl ExperimentConfig {
             "shards.count" => self.shards.count = value.parse()?,
             "shards.bytes_per_param" => {
                 self.shards.bytes_per_param = value.parse()?
+            }
+            "concurrency.server" => {
+                self.concurrency.server = value.parse()?
+            }
+            "concurrency.committers" => {
+                self.concurrency.committers = value.parse()?
             }
             "link.rate_bytes_per_vsec" | "link.rate" => {
                 self.link.rate_bytes_per_vsec = value.parse()?
@@ -927,6 +994,55 @@ impl ExperimentConfig {
                      artifact and cannot apply per shard; shards.count > 1 \
                      requires update_engine = rust"
                 );
+            }
+        }
+        if self.concurrency.committers > 1024 {
+            bail!(
+                "concurrency.committers must be <= 1024 (0 = auto: \
+                 min(shards.count, available cores))"
+            );
+        }
+        if self.concurrency.sharded() {
+            if self.shards.count < 2 {
+                bail!(
+                    "concurrency.server = sharded commits disjoint shards \
+                     concurrently and needs shards.count >= 2 (per-shard \
+                     locks over a single shard serialize trivially; use \
+                     concurrency.server = serial)"
+                );
+            }
+            if policy_entry.barrier {
+                bail!(
+                    "concurrency.server = sharded cannot run barrier policy \
+                     {:?}: barrier release replaces every client's theta in \
+                     one schedule-ordered step, which the nondeterministic \
+                     committer pool cannot provide (use concurrency.server \
+                     = serial)",
+                    self.policy.name()
+                );
+            }
+            let supported = ["asgd", "sasgd", "fasgd"];
+            if !supported.contains(&self.policy.name()) {
+                bail!(
+                    "concurrency.server = sharded implements the striped \
+                     commit rule for policies: {} (policy {:?} needs \
+                     whole-vector state per apply; use concurrency.server = \
+                     serial)",
+                    supported.join(", "),
+                    self.policy.name()
+                );
+            }
+            if let BandwidthMode::Probabilistic { c_push, c_fetch, .. } =
+                self.bandwidth
+            {
+                if c_push > 0.0 || c_fetch > 0.0 {
+                    bail!(
+                        "concurrency.server = sharded does not publish the \
+                         moving-average v statistics the probabilistic \
+                         gate reads (they live inside the shard slots); \
+                         use bandwidth.mode = fixed or always"
+                    );
+                }
             }
         }
         if self.mlp_hidden == 0 {
@@ -1234,6 +1350,50 @@ mod tests {
         assert!(c.validate().is_err());
         c.link.rate_bytes_per_vsec = f64::INFINITY;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn concurrency_keys_and_validation() {
+        let mut c = ExperimentConfig::default();
+        assert_eq!(c.concurrency, ConcurrencyConfig::default());
+        assert!(!c.concurrency.sharded(), "serial is the default");
+        c.validate().unwrap();
+
+        // Sharded needs a real shard plane.
+        c.set("concurrency.server", "sharded").unwrap();
+        assert!(c.concurrency.sharded());
+        let err = c.validate().unwrap_err();
+        assert!(format!("{err}").contains("shards.count"), "{err}");
+        c.set("shards.count", "4").unwrap();
+        c.set("concurrency.committers", "2").unwrap();
+        c.validate().unwrap();
+
+        // Barrier policies cannot commit out of schedule order.
+        c.set("policy", "sync").unwrap();
+        let err = c.validate().unwrap_err();
+        assert!(format!("{err}").contains("barrier"), "{err}");
+
+        // Policies outside the striped rule set are named in the error.
+        c.set("policy", "gap_aware").unwrap();
+        let err = c.validate().unwrap_err();
+        assert!(format!("{err}").contains("asgd, sasgd, fasgd"), "{err}");
+
+        // The concurrent store publishes no v statistics.
+        c.set("policy", "fasgd").unwrap();
+        c.set("bandwidth.mode", "probabilistic").unwrap();
+        c.set("bandwidth.c_push", "0.3").unwrap();
+        let err = c.validate().unwrap_err();
+        assert!(format!("{err}").contains("statistics"), "{err}");
+        c.set("bandwidth.mode", "fixed").unwrap();
+        c.set("bandwidth.k_push", "2").unwrap();
+        c.validate().unwrap();
+
+        assert!(c.set("concurrency.server", "bogus").is_err());
+        c.set("concurrency.server", "serial").unwrap();
+        c.set("concurrency.committers", "2000").unwrap();
+        assert!(c.validate().is_err(), "committer cap enforced");
+        c.set("concurrency.committers", "0").unwrap();
+        c.validate().unwrap();
     }
 
     #[test]

@@ -9,7 +9,7 @@ use anyhow::{bail, Context, Result};
 use crate::config::{ExperimentConfig, GradEngineKind, ModelKind, Policy,
                     UpdateEngineKind};
 use crate::data::{self, corpus};
-use crate::grad::{EngineFactory, GradientEngine, RustMlpEngine,
+use crate::grad::{EngineFactory, EngineHost, GradientEngine, RustMlpEngine,
                   XlaEvalEngine, XlaGradEngine, XlaUpdateEngine};
 use crate::metrics::RunSummary;
 use crate::runtime::Engine;
@@ -141,10 +141,13 @@ pub fn build_sim(cfg: &ExperimentConfig) -> Result<Simulator> {
 }
 
 /// Per-worker gradient-engine factory for the parallel dispatcher. The
-/// closure runs inside each worker thread: the pure-rust engine is built
-/// directly; the XLA path opens that thread's own PJRT client via the
-/// thread-local [`shared_engine`] (the published `xla` crate's wrappers
-/// are thread-bound, so engines must never cross threads).
+/// pure-rust engine is free to construct, so each worker builds its own
+/// inside its thread. The XLA path used to do the same — opening a PJRT
+/// client and re-loading the AOT executable once *per worker thread* —
+/// so `--workers N` paid N identical compile/load passes. It now spawns
+/// one [`EngineHost`] that loads the artifact exactly once; every
+/// factory call hands the worker a channel client of that shared engine
+/// (PJRT handles still never cross threads).
 pub fn engine_factory(cfg: &ExperimentConfig) -> Result<EngineFactory> {
     cfg.validate()?;
     let batch = cfg.batch;
@@ -161,12 +164,15 @@ pub fn engine_factory(cfg: &ExperimentConfig) -> Result<EngineFactory> {
                 ModelKind::Mlp => "mlp",
                 m => transformer_model_name(m),
             };
-            Arc::new(move || {
+            let host = EngineHost::spawn(move || {
                 let engine = shared_engine()?;
                 let grad = XlaGradEngine::new(&engine, name, batch)
-                    .context("loading grad artifact in worker thread")?;
+                    .context(
+                        "loading grad artifact on the engine host thread",
+                    )?;
                 Ok(Box::new(grad) as Box<dyn GradientEngine>)
-            })
+            })?;
+            host.into_factory()
         }
         _ => unreachable!("validate() rejects transformer+rust"),
     };

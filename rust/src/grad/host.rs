@@ -1,0 +1,294 @@
+//! A dedicated host thread that owns one gradient engine and serves it
+//! to many pool workers — the fix for the per-worker recompile bug.
+//!
+//! The published `xla` crate's PJRT wrappers are thread-bound, so the
+//! worker-pool factory used to open a fresh PJRT client *and re-load the
+//! AOT executable* inside every worker thread: `--workers 8` paid eight
+//! identical compile/load passes for one artifact. [`EngineHost`] loads
+//! the engine exactly once on its own named thread; each worker gets a
+//! [`HostedEngine`] — a cheap channel client implementing
+//! [`GradientEngine`] — so the executable is shared without ever moving
+//! a PJRT handle across threads.
+//!
+//! Cost model: a hosted `grad` call round-trips `(θ, batch)` over a
+//! channel and serializes execute calls on the host thread. The PJRT CPU
+//! client parallelizes internally, and for the pure-rust engine (which
+//! is `Send` and free to construct) the pool keeps building per-worker
+//! engines directly — the host exists for engines whose *construction*
+//! is the expensive, non-shareable part.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Mutex, PoisonError};
+
+use anyhow::{anyhow, Result};
+
+use crate::grad::{Batch, EngineFactory, GradientEngine, OwnedBatch};
+
+/// One gradient request: owned inputs in, owned buffers back out.
+struct HostReq {
+    theta: Vec<f32>,
+    batch: OwnedBatch,
+    grad: Vec<f32>,
+    reply: Sender<HostReply>,
+}
+
+struct HostReply {
+    loss: Result<f32>,
+    theta: Vec<f32>,
+    grad: Vec<f32>,
+}
+
+fn own_batch(b: &Batch<'_>) -> OwnedBatch {
+    match b {
+        Batch::Classif { x, y } => {
+            OwnedBatch::Classif { x: x.to_vec(), y: y.to_vec() }
+        }
+        Batch::Lm { tokens, targets } => OwnedBatch::Lm {
+            tokens: tokens.to_vec(),
+            targets: targets.to_vec(),
+        },
+    }
+}
+
+/// Owns the host thread's request channel. Dropping the host (and every
+/// [`HostedEngine`] cloned from it) closes the channel; the host thread
+/// drops its engine and exits on its own — no join handle is kept, so
+/// drop order between the host and a worker pool holding clients is
+/// free.
+pub struct EngineHost {
+    /// `Sender` is `Send` but not `Sync`; the mutex makes the host (and
+    /// the factory closure capturing it) shareable across threads.
+    req_tx: Mutex<Sender<HostReq>>,
+    param_count: usize,
+}
+
+impl EngineHost {
+    /// Spawn the host thread and build the engine *on it* with `build`.
+    /// Blocks until the build finishes so construction errors (missing
+    /// artifact, PJRT failure) surface here, not at first gradient.
+    pub fn spawn<F>(build: F) -> Result<Self>
+    where
+        F: FnOnce() -> Result<Box<dyn GradientEngine>> + Send + 'static,
+    {
+        let (req_tx, req_rx) = channel::<HostReq>();
+        let (ready_tx, ready_rx) = channel::<Result<usize>>();
+        std::thread::Builder::new()
+            .name("engine-host".into())
+            .spawn(move || host_loop(build, req_rx, ready_tx))?;
+        let param_count = ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine host thread died during build"))??;
+        Ok(Self { req_tx: Mutex::new(req_tx), param_count })
+    }
+
+    /// Flat parameter count P of the hosted engine.
+    pub fn param_count(&self) -> usize {
+        self.param_count
+    }
+
+    /// A new channel client (each worker thread gets its own).
+    pub fn client(&self) -> HostedEngine {
+        let tx = self
+            .req_tx
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .clone();
+        let (reply_tx, reply_rx) = channel();
+        HostedEngine {
+            req_tx: tx,
+            reply_tx,
+            reply_rx,
+            param_count: self.param_count,
+            theta_buf: Vec::new(),
+            grad_buf: Vec::new(),
+        }
+    }
+
+    /// Wrap the host as a worker-pool [`EngineFactory`]: every factory
+    /// call hands out a fresh client of the one shared engine.
+    pub fn into_factory(self) -> EngineFactory {
+        std::sync::Arc::new(move || {
+            Ok(Box::new(self.client()) as Box<dyn GradientEngine>)
+        })
+    }
+}
+
+fn host_loop<F>(
+    build: F,
+    req_rx: Receiver<HostReq>,
+    ready_tx: Sender<Result<usize>>,
+) where
+    F: FnOnce() -> Result<Box<dyn GradientEngine>>,
+{
+    let mut engine = match build() {
+        Ok(e) => {
+            let _ = ready_tx.send(Ok(e.param_count()));
+            e
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(mut req) = req_rx.recv() {
+        let loss =
+            engine.grad(&req.theta, &req.batch.as_batch(), &mut req.grad);
+        // A client that gave up waiting is the only failed send; fine to
+        // drop the reply on the floor.
+        let _ = req.reply.send(HostReply {
+            loss,
+            theta: req.theta,
+            grad: req.grad,
+        });
+    }
+}
+
+/// The per-worker channel client. Implements [`GradientEngine`] by
+/// shipping owned copies of `(θ, batch)` to the host thread and blocking
+/// on the reply; the θ/∇ buffers round-trip and are reused, so the
+/// steady state allocates only the batch copy.
+pub struct HostedEngine {
+    req_tx: Sender<HostReq>,
+    reply_tx: Sender<HostReply>,
+    reply_rx: Receiver<HostReply>,
+    param_count: usize,
+    theta_buf: Vec<f32>,
+    grad_buf: Vec<f32>,
+}
+
+impl Clone for HostedEngine {
+    fn clone(&self) -> Self {
+        let (reply_tx, reply_rx) = channel();
+        Self {
+            req_tx: self.req_tx.clone(),
+            reply_tx,
+            reply_rx,
+            param_count: self.param_count,
+            theta_buf: Vec::new(),
+            grad_buf: Vec::new(),
+        }
+    }
+}
+
+impl GradientEngine for HostedEngine {
+    fn param_count(&self) -> usize {
+        self.param_count
+    }
+
+    fn grad(
+        &mut self,
+        theta: &[f32],
+        batch: &Batch<'_>,
+        grad_out: &mut [f32],
+    ) -> Result<f32> {
+        let mut t = std::mem::take(&mut self.theta_buf);
+        t.clear();
+        t.extend_from_slice(theta);
+        let mut g = std::mem::take(&mut self.grad_buf);
+        g.clear();
+        g.resize(grad_out.len(), 0.0);
+        self.req_tx
+            .send(HostReq {
+                theta: t,
+                batch: own_batch(batch),
+                grad: g,
+                reply: self.reply_tx.clone(),
+            })
+            .map_err(|_| anyhow!("engine host thread is gone"))?;
+        let reply = self.reply_rx.recv().map_err(|_| {
+            anyhow!("engine host dropped the request (host thread panic?)")
+        })?;
+        self.theta_buf = reply.theta;
+        grad_out.copy_from_slice(&reply.grad);
+        self.grad_buf = reply.grad;
+        reply.loss
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grad::rust_mlp::{init_params, RustMlpEngine};
+
+    fn direct() -> (Vec<f32>, RustMlpEngine) {
+        let sizes = vec![4, 3, 2];
+        (init_params(7, &sizes), RustMlpEngine::new(sizes, 2))
+    }
+
+    fn batch_data() -> (Vec<f32>, Vec<i32>) {
+        ((0..8).map(|i| (i as f32) * 0.25 - 1.0).collect(), vec![0, 1])
+    }
+
+    #[test]
+    fn hosted_grads_match_direct_engine() {
+        let (theta, mut eng) = direct();
+        let p = eng.param_count();
+        let (x, y) = batch_data();
+        let b = Batch::Classif { x: &x, y: &y };
+        let mut want = vec![0.0; p];
+        let want_loss = eng.grad(&theta, &b, &mut want).unwrap();
+
+        let host = EngineHost::spawn(|| {
+            let sizes = vec![4, 3, 2];
+            Ok(Box::new(RustMlpEngine::new(sizes, 2))
+                as Box<dyn GradientEngine>)
+        })
+        .unwrap();
+        assert_eq!(host.param_count(), p);
+        let mut client = host.client();
+        let mut got = vec![0.0; p];
+        // Twice: the second call exercises the recycled buffers.
+        for _ in 0..2 {
+            let loss = client.grad(&theta, &b, &mut got).unwrap();
+            assert_eq!(loss, want_loss);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn clients_share_one_host_across_threads() {
+        let (theta, mut eng) = direct();
+        let p = eng.param_count();
+        let (x, y) = batch_data();
+        let mut want = vec![0.0; p];
+        eng.grad(&theta, &Batch::Classif { x: &x, y: &y }, &mut want)
+            .unwrap();
+
+        let host = EngineHost::spawn(|| {
+            Ok(Box::new(RustMlpEngine::new(vec![4, 3, 2], 2))
+                as Box<dyn GradientEngine>)
+        })
+        .unwrap();
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let mut c = host.client();
+                let theta = theta.clone();
+                let (x, y) = (x.clone(), y.clone());
+                let want = want.clone();
+                std::thread::spawn(move || {
+                    let mut g = vec![0.0; want.len()];
+                    for _ in 0..8 {
+                        c.grad(
+                            &theta,
+                            &Batch::Classif { x: &x, y: &y },
+                            &mut g,
+                        )
+                        .unwrap();
+                        assert_eq!(g, want);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn build_failure_surfaces_at_spawn() {
+        let err = EngineHost::spawn(|| Err(anyhow!("no artifact")))
+            .err()
+            .map(|e| e.to_string());
+        assert_eq!(err.as_deref(), Some("no artifact"));
+    }
+}

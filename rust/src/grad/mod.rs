@@ -8,10 +8,12 @@
 //! independent numerical cross-check of the whole AOT pipeline
 //! (rust/tests/runtime_roundtrip.rs).
 
+pub mod host;
 pub mod pool;
 pub mod rust_mlp;
 pub mod xla;
 
+pub use host::{EngineHost, HostedEngine};
 pub use pool::{EngineFactory, EnginePool, GradResult, GradTask};
 pub use rust_mlp::RustMlpEngine;
 pub use xla::{XlaEvalEngine, XlaGradEngine, XlaUpdateEngine};

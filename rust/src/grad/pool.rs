@@ -3,9 +3,12 @@
 //! Engines are built *inside* each worker thread by an [`EngineFactory`]
 //! closure, so engine types never need to be `Send` — only the factory
 //! does. That matters for the PJRT path: the published `xla` crate's
-//! wrappers are thread-bound raw pointers, but each worker can open its own
-//! thread-local PJRT client (see `experiments::common::shared_engine`).
-//! The pure-rust MLP engine is trivially constructible per thread.
+//! wrappers are thread-bound raw pointers. Expensive-to-build engines
+//! should not be constructed once per worker, though — the XLA factory
+//! hands each worker a [`crate::grad::EngineHost`] client so the AOT
+//! executable is loaded exactly once instead of once per thread. The
+//! pure-rust MLP engine is trivially constructible per thread and is
+//! still built directly.
 //!
 //! The pool is a plain fan-out: submit [`GradTask`]s, receive
 //! [`GradResult`]s in completion order (the caller reorders with

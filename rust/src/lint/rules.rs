@@ -67,9 +67,13 @@ pub fn scope_for(rel: &str) -> Scope {
         // D003: named streams everywhere except the stream implementation.
         d003: !in_dir("rng"),
         // D004: multi-writer paths must not panic — the server apply
-        // path, and the serve daemon (a panicking thread would wedge a
-        // multi-tenant process).
+        // path (which now includes the sharded concurrent commit plane,
+        // server/concurrent.rs), the parallel dispatcher that feeds it,
+        // and the serve daemon (a panicking thread would wedge a
+        // multi-tenant process; a panicking shard-commit thread must not
+        // poison the store).
         d004: rel == "sim/protocol.rs"
+            || rel == "sim/parallel.rs"
             || in_dir("server")
             || in_dir("serve"),
         // D005 applies tree-wide.
@@ -104,7 +108,9 @@ pub const RULEBOOK: &[(&str, &str)] = &[
     (
         "D004",
         "no unwrap()/expect() in the protocol core (sim/protocol.rs), \
-         the server apply path (server/), and the serve daemon (serve/)",
+         the parallel dispatcher (sim/parallel.rs), the server apply \
+         path incl. the concurrent commit plane (server/), and the \
+         serve daemon (serve/)",
     ),
     ("D005", "every unsafe block carries a // SAFETY: comment"),
     (
@@ -366,8 +372,10 @@ pub fn lint_source(file: &str, src: &str, scope: Scope) -> Vec<Finding> {
                     "D004",
                     format!(
                         ".{name}() in the protocol core / server apply \
-                         path — these paths go concurrent (ROADMAP Open \
-                         item 1); return an error or restructure"
+                         path — these paths run concurrent (sharded \
+                         commit plane, parallel dispatcher, serve \
+                         daemon) and a panicking thread must not poison \
+                         shared state; return an error or restructure"
                     ),
                 )
             }
@@ -493,6 +501,24 @@ mod tests {
         // ... while a non-scoped tree (cli/) only gets the global rules.
         let g = lint_source("cli/serve_cmds.rs", src, scope_for("cli/serve_cmds.rs"));
         assert!(g.is_empty(), "{g:?}");
+    }
+
+    #[test]
+    fn concurrent_commit_paths_are_in_d004_scope() {
+        // PR 9: the sharded commit plane and the dispatcher that feeds
+        // it are multi-writer — panics there poison shared state.
+        for rel in
+            ["server/concurrent.rs", "server/shard.rs", "sim/parallel.rs"]
+        {
+            let scope = scope_for(rel);
+            assert!(scope.d004, "{rel} must be D004-scoped");
+            assert!(scope.d006, "{rel} must be D006-scoped");
+        }
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }";
+        let f = lint_source("sim/parallel.rs", src, scope_for("sim/parallel.rs"));
+        assert!(f.iter().any(|x| x.rule == "D004"), "{f:?}");
+        // Other sim/ files stay out of D004 (they are coordinator-only).
+        assert!(!scope_for("sim/selection.rs").d004);
     }
 
     #[test]

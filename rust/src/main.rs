@@ -49,6 +49,15 @@
 //! accounted per shard. `--link.rate_bytes_per_vsec R` charges
 //! transmitted bytes as virtual seconds on the server link, so gated
 //! traffic shows up on the error-vs-runtime axis.
+//!
+//! `--concurrency.server sharded` commits updates concurrently: worker
+//! results release in completion order and a committer pool
+//! (`--concurrency.committers N`, 0 = auto) applies disjoint shards
+//! under striped locks. Coordinator bookkeeping (schedule, RNG draws,
+//! staleness timestamps) stays deterministic; float state is validated
+//! statistically against the serial oracle
+//! (rust/tests/concurrent_server.rs). The default `serial` keeps the
+//! bitwise guarantee.
 
 use anyhow::{bail, Context, Result};
 
@@ -254,6 +263,11 @@ fn print_help() {
          \x20                --shards.bytes_per_param B (wire bytes per param, default 4)\n\
          \x20                --link.rate_bytes_per_vsec R (finite-rate server link:\n\
          \x20                   transmitted bytes cost virtual seconds; 0 = off)\n\
+         \x20                --concurrency.server serial|sharded (sharded:\n\
+         \x20                   commits run concurrently per shard, validated\n\
+         \x20                   statistically; serial default stays bitwise)\n\
+         \x20                --concurrency.committers N (sharded commit\n\
+         \x20                   threads; 0 = auto, one per core)\n\
          \x20                --fault.crash_prob P --fault.downtime S\n\
          \x20                --fault.push_loss P --fault.fetch_loss P\n\
          \x20                --fault.push_dup P --fault.fetch_dup P\n\

@@ -29,23 +29,28 @@ pub const MAGIC: [u8; 8] = *b"FASGDCKP";
 
 /// Checkpoint format version. Bump on any layout change; `open` rejects
 /// mismatches (no cross-version migration — checkpoints are short-lived
-/// crash-recovery artifacts, not archives).
-pub const VERSION: u32 = 1;
+/// crash-recovery artifacts, not archives). v2: per-shard client fetch
+/// timestamps in the clients section (PR 9).
+pub const VERSION: u32 = 2;
 
 /// FNV-1a fold of the config's full `Debug` rendering: every
 /// result-affecting knob participates, so any config drift between the
 /// writing run and the resuming run changes the fingerprint. The
 /// execution-geometry knobs (`workers`, `lookahead`, `pipeline`,
-/// `inflight`) are normalized out — they provably do not change results
-/// (rust/tests/parallel_equivalence.rs), and excluding them lets a run
-/// checkpointed serially resume on a worker pool and vice versa (the
-/// checkpoint record itself is mode-agnostic).
+/// `inflight`, and since PR 9 the `concurrency.*` block) are normalized
+/// out — workers/lookahead/pipeline/inflight provably do not change
+/// results (rust/tests/parallel_equivalence.rs), and the concurrent
+/// sharded server writes the serial server's byte-compatible record at a
+/// quiescent drain, so a checkpoint crosses `concurrency.server`
+/// settings the same way it crosses worker counts
+/// (rust/tests/concurrent_server.rs).
 pub fn config_fingerprint(cfg: &ExperimentConfig) -> u64 {
     let mut cfg = cfg.clone();
     cfg.workers = 1;
     cfg.lookahead = 32;
     cfg.pipeline = true;
     cfg.inflight = 0;
+    cfg.concurrency = crate::config::ConcurrencyConfig::default();
     let text = format!("{cfg:?}");
     let mut h: u64 = 0xcbf29ce484222325;
     for b in text.as_bytes() {
@@ -460,6 +465,8 @@ mod tests {
         b.pipeline = false;
         b.lookahead = 4;
         b.inflight = 16;
+        b.concurrency.server = crate::config::ServerConcurrency::Sharded;
+        b.concurrency.committers = 3;
         assert_eq!(config_fingerprint(&a), config_fingerprint(&b));
     }
 

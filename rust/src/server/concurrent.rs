@@ -1,0 +1,660 @@
+//! The concurrent sharded parameter server (`concurrency.server =
+//! sharded`, ROADMAP Open item 1): committer threads apply disjoint
+//! shards concurrently through the striped-lock plane
+//! ([`crate::server::StripedShards`]), while the deterministic serial
+//! server stays untouched as the oracle.
+//!
+//! Division of labor: the coordinator keeps **all** protocol bookkeeping
+//! (RNG draws, events, gating, timestamps) and assigns every commit its
+//! server timestamp at enqueue time — deterministically, in schedule
+//! order. Only the *numeric* commit (the update rule on each shard's
+//! slice) runs on the committer pool, so the sharded mode's
+//! nondeterminism is confined to floating-point commit order: which
+//! earlier commits' writes a given θ read observes. That is exactly the
+//! relaxation real parameter servers run with, and why sharded runs are
+//! validated *statistically* against the serial oracle
+//! (rust/tests/concurrent_server.rs) instead of bitwise — the τ
+//! bookkeeping itself stays deterministic.
+//!
+//! Per-shard staleness: each commit carries the client's per-shard fetch
+//! timestamps ([`Server::apply_update_sharded`]), and each committer
+//! charges shard `s` the penalty α / max(τ_s, 1) with
+//! τ_s = commit_ts − shard_ts[s] — the finer-grained per-chunk τ the
+//! PR 9 tentpole folds in (Barkai et al. 2019's gap, in update-count
+//! form), instead of penalizing every chunk at the oldest chunk's age.
+//!
+//! Crash containment (lint D004/D006 contract): a committer that panics
+//! mid-commit decrements the pending counter through a drop guard, its
+//! stripe's poison is recovered by [`StripedShards::lock`], and the
+//! remaining committers keep draining the queue — one dead committer
+//! never wedges or poisons the store. Only if *every* committer dies
+//! does the server start returning errors (enqueue fails loudly).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::ExperimentConfig;
+use crate::server::checkpoint::{CkptReader, CkptWriter};
+use crate::server::shard::{ParamStore, StripedShards};
+use crate::server::{Server, UpdateOutcome};
+use crate::tensor::{fasgd_update_fused, sasgd_apply, FasgdHparams};
+
+/// How long a drain waits before concluding the committer pool is dead
+/// (backstop only: with the pending-count drop guard a live pool always
+/// drains; this fires only if every committer thread has died with jobs
+/// still queued).
+const DRAIN_STALL: Duration = Duration::from_secs(30);
+
+/// The numeric update rule a committer applies to one shard slice. Only
+/// `Send` rules can live here (committers are threads), which is why the
+/// sharded server owns its rule instead of boxing a registry policy —
+/// and why `validate()` restricts `concurrency.server = sharded` to the
+/// policies below.
+enum CommitRule {
+    /// θ ← θ − α·g (plain async SGD).
+    Asgd { alpha: f32 },
+    /// θ ← θ − (α/τ_s)·g (Zhang et al. 2015, per shard).
+    Sasgd { alpha: f32 },
+    /// Eqs. 4–8 with per-shard α/τ_s (the paper's FASGD).
+    Fasgd { alpha: f32, hp: FasgdHparams },
+}
+
+/// One enqueued commit: the whole gradient plus the per-shard fetch
+/// timestamps of the θ_j it was computed at, stamped with the server
+/// timestamp the coordinator assigned in schedule order.
+struct CommitJob {
+    grad: Vec<f32>,
+    shard_ts: Vec<u64>,
+    commit_ts: u64,
+}
+
+/// Shared drain state: outstanding job count + its condvar.
+type Pending = (Mutex<u64>, Condvar);
+
+fn lock_pending(pending: &Pending) -> std::sync::MutexGuard<'_, u64> {
+    pending.0.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Decrements the pending count when dropped — on the normal path *and*
+/// during a committer panic's unwind, so a dying committer can never
+/// leave `quiesce` waiting on a job nobody will finish.
+struct PendingGuard<'a>(&'a Pending);
+
+impl Drop for PendingGuard<'_> {
+    fn drop(&mut self) {
+        let mut n = lock_pending(self.0);
+        *n = n.saturating_sub(1);
+        self.0 .1.notify_all();
+    }
+}
+
+fn committer_loop(
+    rx: Arc<Mutex<Receiver<CommitJob>>>,
+    plane: Arc<StripedShards>,
+    rule: Arc<CommitRule>,
+    pending: Arc<Pending>,
+) {
+    loop {
+        // Hold the dequeue lock only for the recv; a poisoned dequeue
+        // mutex (sibling died mid-recv) is recovered, not propagated.
+        let job = match rx.lock() {
+            Ok(q) => q.recv(),
+            Err(p) => p.into_inner().recv(),
+        };
+        let Ok(job) = job else {
+            return; // server dropped: no more commits
+        };
+        let _done = PendingGuard(&pending);
+        let store = plane.store();
+        for s in 0..store.count() {
+            let r = store.range(s);
+            let tau = job
+                .commit_ts
+                .saturating_sub(job.shard_ts[s])
+                .max(1) as f32;
+            let mut slot = plane.lock(s);
+            let slot = &mut *slot;
+            match &*rule {
+                CommitRule::Asgd { alpha } => {
+                    sasgd_apply(&mut slot.theta, &job.grad[r], *alpha);
+                }
+                CommitRule::Sasgd { alpha } => {
+                    sasgd_apply(&mut slot.theta, &job.grad[r], alpha / tau);
+                }
+                CommitRule::Fasgd { alpha, hp } => {
+                    fasgd_update_fused(
+                        &mut slot.theta,
+                        &mut slot.n,
+                        &mut slot.b,
+                        &mut slot.v,
+                        &job.grad[r],
+                        alpha / tau,
+                        hp,
+                    );
+                }
+            }
+            slot.commits += 1;
+        }
+    }
+}
+
+/// The `Server` implementation behind `concurrency.server = sharded`.
+pub struct ShardedServer {
+    name: &'static str,
+    plane: Arc<StripedShards>,
+    rule: Arc<CommitRule>,
+    job_tx: Option<Sender<CommitJob>>,
+    committers: Vec<JoinHandle<()>>,
+    pending: Arc<Pending>,
+    /// Commits enqueued so far — the server clock T, assigned on the
+    /// coordinator in schedule order (deterministic; only the floats
+    /// race).
+    issued: u64,
+    /// Coordinator-visible θ, refreshed from the live plane after every
+    /// enqueue and at `quiesce` — the per-shard-consistent snapshot
+    /// fetches and evals read.
+    snapshot: Vec<f32>,
+    /// Scratch for the scalar (`apply_update`) compatibility path.
+    uniform_ts: Vec<u64>,
+}
+
+impl ShardedServer {
+    /// Assemble from config — the [`crate::server::build_server`] route
+    /// for `concurrency.server = sharded`. `validate()` has already
+    /// enforced `shards.count >= 2`, a supported policy, and the absence
+    /// of v-statistic gating (this server keeps no v aggregate).
+    pub fn build(
+        cfg: &ExperimentConfig,
+        init: Vec<f32>,
+    ) -> Result<Box<dyn Server>> {
+        let rule = match cfg.policy.name() {
+            "asgd" => CommitRule::Asgd { alpha: cfg.alpha },
+            "sasgd" => CommitRule::Sasgd { alpha: cfg.alpha },
+            "fasgd" => CommitRule::Fasgd {
+                alpha: cfg.alpha,
+                hp: cfg.fasgd.clone(),
+            },
+            other => bail!(
+                "concurrency.server = sharded supports asgd, sasgd, \
+                 fasgd (got {other:?})"
+            ),
+        };
+        let store = ParamStore::from_config(init.len(), &cfg.shards);
+        Ok(Box::new(Self::with_rule(
+            init,
+            store,
+            rule,
+            cfg.concurrency.committers,
+        )))
+    }
+
+    /// Direct FASGD construction (benches and tests).
+    pub fn new_fasgd(
+        init: Vec<f32>,
+        store: ParamStore,
+        alpha: f32,
+        hp: FasgdHparams,
+        committers: usize,
+    ) -> Self {
+        Self::with_rule(init, store, CommitRule::Fasgd { alpha, hp },
+                        committers)
+    }
+
+    /// Direct SASGD construction (per-shard τ unit tests).
+    pub fn new_sasgd(
+        init: Vec<f32>,
+        store: ParamStore,
+        alpha: f32,
+        committers: usize,
+    ) -> Self {
+        Self::with_rule(init, store, CommitRule::Sasgd { alpha },
+                        committers)
+    }
+
+    fn with_rule(
+        init: Vec<f32>,
+        store: ParamStore,
+        rule: CommitRule,
+        committers: usize,
+    ) -> Self {
+        let committers = match committers {
+            // 0 = auto: one committer per shard, capped at the host's
+            // cores (more than S committers can never overlap further —
+            // stripe locks serialize same-shard work anyway).
+            0 => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(store.count())
+                .max(1),
+            n => n,
+        };
+        let name = match &rule {
+            CommitRule::Asgd { .. } => "asgd",
+            CommitRule::Sasgd { .. } => "sasgd",
+            CommitRule::Fasgd { .. } => "fasgd",
+        };
+        let snapshot = init.clone();
+        let plane = Arc::new(StripedShards::new(&init, store));
+        let rule = Arc::new(rule);
+        let pending: Arc<Pending> =
+            Arc::new((Mutex::new(0), Condvar::new()));
+        let (job_tx, job_rx) = channel::<CommitJob>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let mut handles = Vec::with_capacity(committers);
+        for c in 0..committers {
+            let rx = Arc::clone(&job_rx);
+            let plane = Arc::clone(&plane);
+            let rule = Arc::clone(&rule);
+            let pending = Arc::clone(&pending);
+            let spawned = std::thread::Builder::new()
+                .name(format!("shard-committer-{c}"))
+                .spawn(move || committer_loop(rx, plane, rule, pending));
+            match spawned {
+                Ok(h) => handles.push(h),
+                // Thread spawn failure at construction: fall through with
+                // fewer committers; enqueue fails loudly if none exist.
+                Err(e) => log::warn!("spawning shard committer {c}: {e}"),
+            }
+        }
+        Self {
+            name,
+            plane,
+            rule,
+            job_tx: Some(job_tx),
+            committers: handles,
+            pending,
+            issued: 0,
+            snapshot,
+            uniform_ts: Vec::new(),
+        }
+    }
+
+    /// Committer threads serving the commit queue.
+    pub fn committer_count(&self) -> usize {
+        self.committers.len()
+    }
+
+    /// Block until every enqueued commit has been applied to the plane.
+    /// `&self` so the checkpoint path (which holds the server immutably)
+    /// can drain too.
+    fn wait_drained(&self) -> Result<()> {
+        let (_, cv) = &*self.pending;
+        let mut n = lock_pending(&self.pending);
+        while *n > 0 {
+            let (guard, timeout) = cv
+                .wait_timeout(n, DRAIN_STALL)
+                .unwrap_or_else(PoisonError::into_inner);
+            n = guard;
+            if timeout.timed_out() && *n > 0 {
+                bail!(
+                    "sharded committer pool stalled with {} pending \
+                     commits (all committers dead?)",
+                    *n
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Stamp, count, and hand one commit to the pool.
+    fn enqueue(
+        &mut self,
+        grad: &[f32],
+        shard_ts: &[u64],
+    ) -> Result<UpdateOutcome> {
+        let p = self.plane.store().param_count();
+        if grad.len() != p {
+            bail!("gradient P={} but server P={p}", grad.len());
+        }
+        if shard_ts.len() != self.plane.count() {
+            bail!(
+                "shard_ts has {} entries but store has {} shards",
+                shard_ts.len(),
+                self.plane.count()
+            );
+        }
+        let commit_ts = self.issued;
+        *lock_pending(&self.pending) += 1;
+        let sent = self
+            .job_tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("sharded committer pool is shut down"))?
+            .send(CommitJob {
+                grad: grad.to_vec(),
+                shard_ts: shard_ts.to_vec(),
+                commit_ts,
+            });
+        if sent.is_err() {
+            let mut n = lock_pending(&self.pending);
+            *n = n.saturating_sub(1);
+            bail!("sharded committer pool is gone (all committers exited)");
+        }
+        self.issued += 1;
+        // Refresh the coordinator-visible θ with whatever commits have
+        // landed so far — fetches observe the live plane, not the state
+        // at the last quiesce.
+        self.plane.snapshot_into(&mut self.snapshot);
+        let oldest =
+            shard_ts.iter().copied().min().unwrap_or(commit_ts);
+        Ok(UpdateOutcome {
+            applied: true,
+            staleness: Some(commit_ts.saturating_sub(oldest)),
+            unblock_all: false,
+        })
+    }
+}
+
+impl Server for ShardedServer {
+    fn params(&self) -> &[f32] {
+        &self.snapshot
+    }
+
+    fn timestamp(&self) -> u64 {
+        self.issued
+    }
+
+    fn apply_update(
+        &mut self,
+        grad: &[f32],
+        grad_timestamp: u64,
+        _client: usize,
+    ) -> Result<UpdateOutcome> {
+        // Scalar compatibility path: a uniform timestamp vector (every
+        // full fetch produces one).
+        let count = self.plane.count();
+        let mut uniform = std::mem::take(&mut self.uniform_ts);
+        uniform.clear();
+        uniform.resize(count, grad_timestamp);
+        let out = self.enqueue(grad, &uniform);
+        self.uniform_ts = uniform;
+        out
+    }
+
+    fn apply_update_sharded(
+        &mut self,
+        grad: &[f32],
+        shard_ts: &[u64],
+        _client: usize,
+    ) -> Result<UpdateOutcome> {
+        self.enqueue(grad, shard_ts)
+    }
+
+    fn quiesce(&mut self) -> Result<()> {
+        self.wait_drained()?;
+        self.plane.snapshot_into(&mut self.snapshot);
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn save_state(&self, w: &mut CkptWriter) -> Result<()> {
+        // Byte-compatible with the serial FASGD record, so a sharded
+        // checkpoint resumes on a serial server and vice versa
+        // (rust/tests/concurrent_server.rs). After a drain, every shard
+        // has absorbed all `issued` commits, so the reassembled tracks
+        // are a quiescent, exact server state.
+        if !matches!(&*self.rule, CommitRule::Fasgd { .. }) {
+            bail!(
+                "policy '{}' does not support checkpointing under \
+                 concurrency.server = sharded",
+                self.name
+            );
+        }
+        self.wait_drained()?;
+        let store = self.plane.store();
+        let p = store.param_count();
+        let mut params = vec![0.0f32; p];
+        let mut n = vec![0.0f32; p];
+        let mut b = vec![0.0f32; p];
+        let mut v = vec![0.0f32; p];
+        for (s, r) in store.ranges().enumerate() {
+            let slot = self.plane.lock(s);
+            params[r.clone()].copy_from_slice(&slot.theta);
+            n[r.clone()].copy_from_slice(&slot.n);
+            b[r.clone()].copy_from_slice(&slot.b);
+            v[r].copy_from_slice(&slot.v);
+        }
+        w.section("fasgd");
+        w.put_u64(self.issued);
+        w.put_f32s(&params);
+        w.put_f32s(&n);
+        w.put_f32s(&b);
+        w.put_f32s(&v);
+        // No v aggregate is maintained concurrently: record "no stats
+        // yet" (the serial server rebuilds both on its first apply).
+        w.put_opt_f64(None);
+        w.put_f64s(&vec![0.0; store.count()]);
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut CkptReader) -> Result<()> {
+        if !matches!(&*self.rule, CommitRule::Fasgd { .. }) {
+            bail!(
+                "policy '{}' does not support checkpointing under \
+                 concurrency.server = sharded",
+                self.name
+            );
+        }
+        r.expect_section("fasgd")?;
+        let ts = r.take_u64()?;
+        let params = r.take_f32s()?;
+        let store = self.plane.store().clone();
+        if params.len() != store.param_count() {
+            bail!(
+                "checkpoint P={} but server P={}",
+                params.len(),
+                store.param_count()
+            );
+        }
+        let n = r.take_f32s()?;
+        let b = r.take_f32s()?;
+        let v = r.take_f32s()?;
+        if n.len() != params.len()
+            || b.len() != params.len()
+            || v.len() != params.len()
+        {
+            bail!("fasgd track lengths do not match P={}", params.len());
+        }
+        let _v_mean = r.take_opt_f64()?;
+        let v_shard_means = r.take_f64s()?;
+        if v_shard_means.len() != store.count() {
+            bail!(
+                "checkpoint has {} shard means but store has {} shards",
+                v_shard_means.len(),
+                store.count()
+            );
+        }
+        self.wait_drained()?;
+        for (s, rg) in store.ranges().enumerate() {
+            let mut slot = self.plane.lock(s);
+            slot.theta.copy_from_slice(&params[rg.clone()]);
+            slot.n.copy_from_slice(&n[rg.clone()]);
+            slot.b.copy_from_slice(&b[rg.clone()]);
+            slot.v.copy_from_slice(&v[rg]);
+            slot.commits = ts;
+        }
+        self.issued = ts;
+        self.snapshot = params;
+        Ok(())
+    }
+}
+
+impl Drop for ShardedServer {
+    fn drop(&mut self) {
+        // Closing the job channel ends every committer's recv loop.
+        self.job_tx.take();
+        for h in self.committers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::fasgd::{FasgdServer, RustBackend};
+
+    #[test]
+    fn quiesced_uniform_commits_match_serial_fasgd() {
+        // One committer + a quiesce per apply serializes the commit
+        // order, and uniform timestamps make τ identical per shard — the
+        // state tracks must then match the serial sharded server
+        // bitwise.
+        let p = 37;
+        let store = ParamStore::new(p, 5, 4);
+        let mut serial = FasgdServer::with_backend_sharded(
+            vec![0.0; p],
+            0.1,
+            FasgdHparams::default(),
+            RustBackend,
+            store.clone(),
+        );
+        let mut sharded = ShardedServer::new_fasgd(
+            vec![0.0; p],
+            store,
+            0.1,
+            FasgdHparams::default(),
+            1,
+        );
+        let mut rng = crate::rng::Xoshiro256pp::new(11);
+        for _ in 0..20 {
+            let g: Vec<f32> = (0..p).map(|_| rng.f32() - 0.5).collect();
+            let ts = serial.timestamp();
+            let a = serial.apply_update(&g, ts, 0).unwrap();
+            let b = sharded.apply_update(&g, ts, 0).unwrap();
+            assert_eq!(a.staleness, b.staleness);
+            sharded.quiesce().unwrap();
+        }
+        assert_eq!(serial.timestamp(), sharded.timestamp());
+        assert_eq!(serial.params(), sharded.params());
+    }
+
+    #[test]
+    fn concurrent_commits_drain_and_stay_finite() {
+        let p = 64;
+        let mut s = ShardedServer::new_fasgd(
+            vec![0.0; p],
+            ParamStore::new(p, 8, 4),
+            0.05,
+            FasgdHparams::default(),
+            4,
+        );
+        let mut rng = crate::rng::Xoshiro256pp::new(7);
+        for _ in 0..200 {
+            let g: Vec<f32> = (0..p).map(|_| rng.f32() - 0.5).collect();
+            let ts = s.timestamp();
+            let out = s.apply_update(&g, ts.saturating_sub(2), 0).unwrap();
+            assert!(out.applied);
+        }
+        s.quiesce().unwrap();
+        assert_eq!(s.timestamp(), 200);
+        assert_eq!(s.plane.min_commits(), 200, "every shard saw every commit");
+        assert!(s.params().iter().all(|t| t.is_finite()));
+        // The constant negative drift must have moved θ somewhere.
+        assert!(s.params().iter().any(|&t| t != 0.0));
+    }
+
+    #[test]
+    fn per_shard_tau_penalizes_old_chunks_harder() {
+        // 2 params / 2 shards, SASGD rule, α=1: after 4 warmup commits,
+        // a gradient whose shard 0 was fetched at ts 0 (τ=4) and shard 1
+        // at ts 4 (τ→1) steps shard 0 by α/4 and shard 1 by α.
+        let mut s = ShardedServer::new_sasgd(
+            vec![0.0; 2],
+            ParamStore::new(2, 2, 4),
+            1.0,
+            1,
+        );
+        for _ in 0..4 {
+            let ts = s.timestamp();
+            s.apply_update(&[0.0, 0.0], ts, 0).unwrap();
+        }
+        s.quiesce().unwrap();
+        let out =
+            s.apply_update_sharded(&[1.0, 1.0], &[0, 4], 0).unwrap();
+        assert_eq!(out.staleness, Some(4), "reported τ is the oldest");
+        s.quiesce().unwrap();
+        assert!((s.params()[0] + 0.25).abs() < 1e-6, "{}", s.params()[0]);
+        assert!((s.params()[1] + 1.0).abs() < 1e-6, "{}", s.params()[1]);
+    }
+
+    #[test]
+    fn checkpoint_roundtrips_against_serial_format() {
+        let p = 23;
+        let store = ParamStore::new(p, 4, 4);
+        let mut a = ShardedServer::new_fasgd(
+            vec![0.1; p],
+            store.clone(),
+            0.1,
+            FasgdHparams::default(),
+            2,
+        );
+        let mut rng = crate::rng::Xoshiro256pp::new(3);
+        for _ in 0..10 {
+            let g: Vec<f32> = (0..p).map(|_| rng.f32() - 0.5).collect();
+            let ts = a.timestamp();
+            a.apply_update(&g, ts, 0).unwrap();
+        }
+        a.quiesce().unwrap();
+        let mut w = CkptWriter::new();
+        a.save_state(&mut w).unwrap();
+        let bytes = w.into_bytes();
+        // Sharded → sharded.
+        let mut b = ShardedServer::new_fasgd(
+            vec![0.0; p],
+            store.clone(),
+            0.1,
+            FasgdHparams::default(),
+            2,
+        );
+        b.load_state(&mut CkptReader::new(&bytes)).unwrap();
+        assert_eq!(b.timestamp(), 10);
+        assert_eq!(a.params(), b.params());
+        // Sharded → serial (byte-compatible record).
+        let mut c = FasgdServer::with_backend_sharded(
+            vec![0.0; p],
+            0.1,
+            FasgdHparams::default(),
+            RustBackend,
+            store,
+        );
+        c.load_state(&mut CkptReader::new(&bytes)).unwrap();
+        assert_eq!(c.timestamp(), 10);
+        assert_eq!(a.params(), c.params());
+    }
+
+    #[test]
+    fn dead_committer_does_not_wedge_the_store() {
+        // Force a committer panic via a length-mismatched job pushed
+        // around the public API? The public API length-checks, so
+        // instead kill the stripe the hard way: poison a lock from a
+        // test thread, then drive commits through it.
+        let p = 8;
+        let mut s = ShardedServer::new_fasgd(
+            vec![0.0; p],
+            ParamStore::new(p, 2, 4),
+            0.1,
+            FasgdHparams::default(),
+            2,
+        );
+        let plane = Arc::clone(&s.plane);
+        let _ = std::thread::spawn(move || {
+            let _g = plane.lock(0);
+            panic!("die holding stripe 0");
+        })
+        .join();
+        for _ in 0..5 {
+            let ts = s.timestamp();
+            s.apply_update(&[1.0; 8], ts, 0).unwrap();
+        }
+        s.quiesce().unwrap();
+        assert_eq!(s.timestamp(), 5);
+        assert!(s.params().iter().all(|&t| t < 0.0));
+    }
+}

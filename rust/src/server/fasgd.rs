@@ -263,6 +263,52 @@ impl<U: UpdateBackend> Server for FasgdServer<U> {
         })
     }
 
+    /// Per-shard staleness (PR 9): after a partial fetch the chunks of
+    /// θ_j carry different ages, so each shard's update divides by its
+    /// own τ_s instead of the whole-model minimum. A uniform timestamp
+    /// vector (every full fetch / barrier release, and every run before
+    /// partial fetches existed) delegates to the scalar path and stays
+    /// bitwise identical to it.
+    fn apply_update_sharded(
+        &mut self,
+        grad: &[f32],
+        shard_ts: &[u64],
+        client: usize,
+    ) -> Result<UpdateOutcome> {
+        let oldest = shard_ts.iter().copied().min().unwrap_or(0);
+        let uniform = shard_ts.iter().all(|&t| t == oldest);
+        if uniform || shard_ts.len() != self.store.count() {
+            // Mismatched geometry falls back to the conservative scalar
+            // (the trait-default contract), as does the uniform case.
+            return self.apply_update(grad, oldest, client);
+        }
+        let tau = super::staleness(self.ts, oldest);
+        let mut weighted = 0.0f64;
+        for s in 0..self.store.count() {
+            let r = self.store.range(s);
+            let aot =
+                self.alpha / super::staleness_divisor(self.ts, shard_ts[s]);
+            let m = self.backend.apply(
+                &mut self.params[r.clone()],
+                &mut self.n[r.clone()],
+                &mut self.b[r.clone()],
+                &mut self.v[r.clone()],
+                &grad[r.clone()],
+                aot,
+                &self.hp,
+            )?;
+            self.v_shard_means[s] = m;
+            weighted += m * r.len() as f64;
+        }
+        self.v_mean = Some(weighted / self.params.len().max(1) as f64);
+        self.ts += 1;
+        Ok(UpdateOutcome {
+            applied: true,
+            staleness: Some(tau),
+            unblock_all: false,
+        })
+    }
+
     fn v_mean(&self) -> Option<f64> {
         self.v_mean
     }
@@ -416,6 +462,39 @@ mod tests {
             (whole.v_mean().unwrap() - sharded.v_mean().unwrap()).abs()
                 < 1e-6
         );
+    }
+
+    #[test]
+    fn uniform_shard_ts_is_bitwise_scalar() {
+        // A uniform timestamp vector must route through the scalar path:
+        // serial-mode runs (which only ever see uniform vectors until a
+        // partial fetch happens) stay bitwise identical to PR 8.
+        let mut scalar = sharded_server(24, 3);
+        let mut vector = sharded_server(24, 3);
+        let mut rng = crate::rng::Xoshiro256pp::new(11);
+        for _ in 0..15 {
+            let g: Vec<f32> = (0..24).map(|_| rng.f32() - 0.5).collect();
+            let ts = scalar.timestamp().saturating_sub(2);
+            scalar.apply_update(&g, ts, 0).unwrap();
+            vector.apply_update_sharded(&g, &[ts; 3], 0).unwrap();
+        }
+        assert_eq!(scalar.params(), vector.params());
+        assert_eq!(scalar.v(), vector.v());
+    }
+
+    #[test]
+    fn per_shard_tau_shrinks_older_chunks_more() {
+        let mut s = sharded_server(8, 2);
+        s.ts = 8;
+        // Shard 0 fetched at ts=0 (τ=8), shard 1 fresh at ts=8 (τ=1 via
+        // max(τ,1)); with identical gradients the older chunk must move
+        // ~8x less.
+        let out = s.apply_update_sharded(&[1.0; 8], &[0, 8], 0).unwrap();
+        assert_eq!(out.staleness, Some(8), "reported τ is the oldest chunk");
+        let old_step = s.params()[0].abs();
+        let new_step = s.params()[4].abs();
+        let ratio = new_step / old_step;
+        assert!((ratio - 8.0).abs() < 1e-3, "{ratio}");
     }
 
     #[test]

@@ -103,6 +103,53 @@ impl Server for GapAware {
         })
     }
 
+    /// Per-shard gap (PR 9): a partially fetched θ_j holds chunks
+    /// fetched at different timestamps, and the gap — norm movement
+    /// since fetch — differs per chunk. Each shard's slice is damped by
+    /// the gap measured from *its* fetch time. The shard ranges are
+    /// derived from `shard_ts.len()` exactly as [`ParamStore`] tiles
+    /// them (ranges depend only on `(P, count)`), so they line up with
+    /// the protocol's geometry. Uniform timestamp vectors route through
+    /// the scalar path bitwise-unchanged.
+    fn apply_update_sharded(
+        &mut self,
+        grad: &[f32],
+        shard_ts: &[u64],
+        client: usize,
+    ) -> Result<UpdateOutcome> {
+        let oldest = shard_ts.iter().copied().min().unwrap_or(0);
+        if shard_ts.iter().all(|&t| t == oldest) {
+            return self.apply_update(grad, oldest, client);
+        }
+        let tau = super::staleness(self.ts, oldest);
+        let store =
+            crate::server::ParamStore::new(self.params.len(), shard_ts.len(), 4);
+        for s in 0..store.count() {
+            let r = store.range(s);
+            let gap = self.gap(shard_ts[s]);
+            sasgd_apply(
+                &mut self.params[r.clone()],
+                &grad[r],
+                (self.alpha as f64 / gap) as f32,
+            );
+        }
+        let prev = self.norms[self.ts as usize];
+        let cur = l2_norm(&self.params);
+        self.ts += 1;
+        self.norms.push(cur);
+        let delta = (cur - prev).abs();
+        self.step_ema = if self.ts == 1 {
+            delta
+        } else {
+            EMA_DECAY * self.step_ema + (1.0 - EMA_DECAY) * delta
+        };
+        Ok(UpdateOutcome {
+            applied: true,
+            staleness: Some(tau),
+            unblock_all: false,
+        })
+    }
+
     fn name(&self) -> &'static str {
         "gap_aware"
     }
@@ -188,6 +235,38 @@ mod tests {
         s.apply_update(&[1.0, 1.0], 0, 0).unwrap();
         let step = (s.params()[0] - moved).abs();
         assert!(step < 1.0, "stale step {step} should be damped");
+    }
+
+    #[test]
+    fn per_shard_gap_damps_old_chunks_harder() {
+        let mut s = GapAware::new(vec![0.0; 4], 1.0);
+        // Move the master so ts=0 carries a real gap.
+        for i in 0..6 {
+            s.apply_update(&[1.0; 4], i, 0).unwrap();
+        }
+        let before: Vec<f32> = s.params().to_vec();
+        let now = s.timestamp();
+        // Shard 0 (params 0..2) fetched at ts=0, shard 1 fresh.
+        s.apply_update_sharded(&[1.0; 4], &[0, now], 0).unwrap();
+        let old_step = (s.params()[0] - before[0]).abs();
+        let new_step = (s.params()[2] - before[2]).abs();
+        assert!(
+            old_step < new_step,
+            "stale chunk step {old_step} should be smaller than {new_step}"
+        );
+        assert!((new_step - 1.0).abs() < 1e-6, "fresh chunk gets full α");
+    }
+
+    #[test]
+    fn uniform_shard_ts_matches_scalar_apply() {
+        let mut a = GapAware::new(vec![0.0; 4], 0.7);
+        let mut b = GapAware::new(vec![0.0; 4], 0.7);
+        for i in 0..5 {
+            a.apply_update(&[1.0; 4], i, 0).unwrap();
+            b.apply_update_sharded(&[1.0; 4], &[i, i], 0).unwrap();
+        }
+        assert_eq!(a.params(), b.params());
+        assert_eq!(a.timestamp(), b.timestamp());
     }
 
     #[test]

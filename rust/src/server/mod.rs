@@ -27,6 +27,7 @@
 
 pub mod asgd;
 pub mod checkpoint;
+pub mod concurrent;
 pub mod exponential;
 pub mod fasgd;
 pub mod gap_aware;
@@ -38,6 +39,7 @@ pub mod sync;
 
 pub use asgd::Asgd;
 pub use checkpoint::{CkptReader, CkptWriter};
+pub use concurrent::ShardedServer;
 pub use exponential::ExponentialPenalty;
 pub use fasgd::{Fasgd, FasgdServer, RustBackend, UpdateEngine, XlaBackend};
 pub use gap_aware::GapAware;
@@ -47,7 +49,7 @@ pub use registry::{
     PolicyRegistry, PolicySpec, ThreadedPolicyFactory,
 };
 pub use sasgd::Sasgd;
-pub use shard::ParamStore;
+pub use shard::{ParamStore, ShardSlot, StripedShards};
 pub use sync::SyncSgd;
 
 use std::cmp::Ordering;
@@ -85,6 +87,33 @@ pub trait Server {
         grad_timestamp: u64,
         client: usize,
     ) -> Result<UpdateOutcome>;
+
+    /// Shard-granular apply (PR 9): `shard_ts[s]` is the fetch timestamp
+    /// of shard `s` of the θ_j copy the gradient was computed at — after
+    /// partial fetches a client's chunks age independently, so staleness
+    /// penalties can be charged per shard instead of at the oldest
+    /// chunk's age. The default collapses to the scalar path with the
+    /// most conservative (oldest) timestamp, which is bitwise-identical
+    /// to the pre-PR-9 behavior for uniform vectors — and every full
+    /// fetch produces a uniform vector.
+    fn apply_update_sharded(
+        &mut self,
+        grad: &[f32],
+        shard_ts: &[u64],
+        client: usize,
+    ) -> Result<UpdateOutcome> {
+        let oldest = shard_ts.iter().copied().min().unwrap_or(0);
+        self.apply_update(grad, oldest, client)
+    }
+
+    /// Make every update handed to the server visible in [`Self::params`]
+    /// before returning. A no-op for the synchronous policies (an apply
+    /// is visible when `apply_update` returns); the concurrent sharded
+    /// server ([`concurrent::ShardedServer`]) drains its committer pool
+    /// here. Called before evaluations and checkpoints.
+    fn quiesce(&mut self) -> Result<()> {
+        Ok(())
+    }
 
     /// Mean of the per-parameter moving-average std `v` (FASGD only) —
     /// consumed every opportunity by the B-FASGD bandwidth gate.
@@ -155,6 +184,12 @@ pub fn staleness_divisor(server_ts: u64, grad_ts: u64) -> f32 {
 /// caller can recompute it and re-push the same seq.
 pub struct ApplyQueue<T> {
     next_seq: u64,
+    /// `true` (the default): release strictly in sequence — the bitwise
+    /// serial-equivalence mode. `false` (`concurrency.server = sharded`):
+    /// release the lowest-seq item *currently buffered* without waiting
+    /// for sequence continuity, so commits land in completion order and
+    /// the striped server sees real multi-writer interleavings.
+    ordered: bool,
     pending: BinaryHeap<SeqEntry<T>>,
 }
 
@@ -198,23 +233,52 @@ impl<T> Ord for SeqEntry<T> {
 }
 
 impl<T> ApplyQueue<T> {
-    /// Start at sequence number `first_seq`.
+    /// Start at sequence number `first_seq` (strict in-sequence release).
     pub fn new(first_seq: u64) -> Self {
-        Self { next_seq: first_seq, pending: BinaryHeap::new() }
+        Self {
+            next_seq: first_seq,
+            ordered: true,
+            pending: BinaryHeap::new(),
+        }
+    }
+
+    /// Relaxed (completion-order) release for the concurrent sharded
+    /// commit path: pops return the lowest buffered seq immediately
+    /// instead of gating on the sequence cursor, so an apply never waits
+    /// on a slower worker's earlier iteration.
+    pub fn new_relaxed(first_seq: u64) -> Self {
+        Self {
+            next_seq: first_seq,
+            ordered: false,
+            pending: BinaryHeap::new(),
+        }
+    }
+
+    /// Is this queue gating releases on sequence continuity?
+    pub fn is_ordered(&self) -> bool {
+        self.ordered
     }
 
     pub fn push(&mut self, seq: u64, item: T) {
-        debug_assert!(seq >= self.next_seq, "seq {seq} already released");
+        // Relaxed mode legitimately re-pushes a seq below the high-water
+        // mark (a recompute after an out-of-order release).
+        debug_assert!(
+            !self.ordered || seq >= self.next_seq,
+            "seq {seq} already released"
+        );
         self.pending.push(SeqEntry { seq, item });
     }
 
-    /// The next in-sequence item, if it has arrived.
+    /// The next releasable item: in-sequence (ordered mode) or the lowest
+    /// buffered seq (relaxed mode), if any has arrived.
     pub fn pop_ready(&mut self) -> Option<T> {
-        if self.pending.peek().map(|e| e.seq) != Some(self.next_seq) {
+        if self.ordered
+            && self.pending.peek().map(|e| e.seq) != Some(self.next_seq)
+        {
             return None;
         }
         let entry = self.pending.pop()?;
-        self.next_seq += 1;
+        self.next_seq = self.next_seq.max(entry.seq + 1);
         Some(entry.item)
     }
 
@@ -226,14 +290,16 @@ impl<T> ApplyQueue<T> {
         &mut self,
         valid: impl FnOnce(&T) -> bool,
     ) -> PopReady<T> {
-        if self.pending.peek().map(|e| e.seq) != Some(self.next_seq) {
+        if self.ordered
+            && self.pending.peek().map(|e| e.seq) != Some(self.next_seq)
+        {
             return PopReady::Empty;
         }
         let Some(entry) = self.pending.pop() else {
             return PopReady::Empty;
         };
         if valid(&entry.item) {
-            self.next_seq += 1;
+            self.next_seq = self.next_seq.max(entry.seq + 1);
             PopReady::Valid(entry.item)
         } else {
             PopReady::Invalid(entry.item)
@@ -265,6 +331,13 @@ pub fn build_server(
     init: Vec<f32>,
     update_engine: UpdateEngine,
 ) -> Result<Box<dyn Server>> {
+    if cfg.concurrency.sharded() {
+        // The concurrent striped server owns its commit rule (the fused
+        // Send backend — PJRT update engines are thread-bound and cannot
+        // cross committer threads; validate() rejects that combination
+        // via the shards.count >= 2 requirement).
+        return concurrent::ShardedServer::build(cfg, init);
+    }
     registry().build(cfg, init, update_engine)
 }
 
@@ -330,6 +403,66 @@ mod tests {
         assert_eq!(q.pop_ready_validated(|_| true), PopReady::Empty);
         assert_eq!(q.next_seq(), 2);
         assert_eq!(q.pending_len(), 0);
+    }
+
+    #[test]
+    fn relaxed_queue_releases_in_completion_order() {
+        let mut q = ApplyQueue::new_relaxed(0);
+        assert!(!q.is_ordered());
+        // Out-of-order arrivals release immediately, lowest seq first.
+        q.push(3, "d");
+        q.push(1, "b");
+        assert_eq!(q.pop_ready(), Some("b"));
+        assert_eq!(q.pop_ready(), Some("d"));
+        assert!(q.pop_ready().is_none());
+        // A lower seq arriving after a higher one released still flows
+        // (no cursor gate), including through the validated pop.
+        q.push(0, "a");
+        assert_eq!(q.pop_ready(), Some("a"));
+        q.push(2, "c");
+        assert_eq!(q.pop_ready_validated(|_| true), PopReady::Valid("c"));
+        assert_eq!(
+            q.pop_ready_validated(|_: &&str| true),
+            PopReady::<&str>::Empty
+        );
+        // An invalid item is handed back for recompute and its re-push
+        // under the same (now below-high-water) seq is accepted.
+        q.push(4, "e");
+        assert_eq!(q.pop_ready_validated(|_| false), PopReady::Invalid("e"));
+        q.push(4, "e2");
+        assert_eq!(q.pop_ready_validated(|_| true), PopReady::Valid("e2"));
+        assert_eq!(q.pending_len(), 0);
+    }
+
+    #[test]
+    fn sharded_default_collapses_to_oldest_scalar() {
+        // The trait default must hand the scalar path the most
+        // conservative (minimum) shard timestamp.
+        let mut s =
+            Fasgd::new_rust(vec![0.0; 6], 0.1, Default::default());
+        for _ in 0..5 {
+            let ts = s.timestamp();
+            s.apply_update(&[1.0; 6], ts, 0).unwrap();
+        }
+        let out = s.apply_update_sharded(&[1.0; 6], &[2, 5, 4], 0).unwrap();
+        assert_eq!(out.staleness, Some(3)); // ts=5, oldest shard ts=2
+        assert!(s.quiesce().is_ok(), "default quiesce is a no-op");
+    }
+
+    #[test]
+    fn build_server_routes_sharded_concurrency() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.policy = crate::config::Policy::Fasgd;
+        cfg.shards.count = 4;
+        cfg.concurrency.server = crate::config::ServerConcurrency::Sharded;
+        let mut s =
+            build_server(&cfg, vec![0.0; 16], UpdateEngine::Rust).unwrap();
+        assert_eq!(s.name(), "fasgd");
+        assert_eq!(s.params().len(), 16);
+        let out = s.apply_update_sharded(&[1.0; 16], &[0; 4], 0).unwrap();
+        assert!(out.applied);
+        s.quiesce().unwrap();
+        assert!(s.params().iter().all(|&t| t < 0.0));
     }
 
     #[test]

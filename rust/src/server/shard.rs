@@ -14,6 +14,7 @@
 //! compatibility).
 
 use std::ops::Range;
+use std::sync::{Mutex, MutexGuard, PoisonError};
 
 use crate::config::ShardConfig;
 
@@ -108,6 +109,95 @@ impl ParamStore {
     }
 }
 
+/// One shard's live numeric state on the concurrent commit path: the θ
+/// chunk plus the same-shaped FASGD state tracks and the shard's own
+/// commit counter (its per-shard timestamp). Allocated once per shard
+/// by [`StripedShards`]; a slot never resizes.
+#[derive(Debug)]
+pub struct ShardSlot {
+    pub theta: Vec<f32>,
+    pub n: Vec<f32>,
+    pub b: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Commits that have touched this shard so far.
+    pub commits: u64,
+}
+
+/// The striped-lock shard plane behind `concurrency.server = sharded`
+/// (ROADMAP Open item 1): one mutex per shard, so commits against
+/// disjoint shards proceed concurrently while same-shard commits
+/// serialize on that shard's stripe alone. The plane is purely numeric —
+/// protocol bookkeeping (events, RNG draws, gating decisions) stays on
+/// the coordinator thread, which confines the sharded mode's
+/// nondeterminism to floating-point commit order.
+pub struct StripedShards {
+    store: ParamStore,
+    slots: Vec<Mutex<ShardSlot>>,
+}
+
+impl StripedShards {
+    /// Split `init` into per-shard slots with zeroed state tracks
+    /// (matching a fresh [`crate::server::FasgdServer`]).
+    pub fn new(init: &[f32], store: ParamStore) -> Self {
+        assert_eq!(
+            store.param_count(),
+            init.len(),
+            "ParamStore geometry does not match the parameter vector"
+        );
+        let slots = store
+            .ranges()
+            .map(|r| {
+                Mutex::new(ShardSlot {
+                    theta: init[r.clone()].to_vec(),
+                    n: vec![0.0; r.len()],
+                    b: vec![0.0; r.len()],
+                    v: vec![0.0; r.len()],
+                    commits: 0,
+                })
+            })
+            .collect();
+        Self { store, slots }
+    }
+
+    /// The geometry the slots were tiled with.
+    pub fn store(&self) -> &ParamStore {
+        &self.store
+    }
+
+    /// Number of stripes (= shards).
+    pub fn count(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Lock shard `s`'s stripe. Poison-immune: a committer thread that
+    /// panicked mid-commit leaves at worst a partially updated slot
+    /// (every write in the fused update is elementwise-local), and the
+    /// concurrent-path contract (lint D004/D006) is that one dead
+    /// committer must never wedge the whole store — so the guard is
+    /// recovered from a [`PoisonError`] instead of propagating it.
+    pub fn lock(&self, s: usize) -> MutexGuard<'_, ShardSlot> {
+        self.slots[s].lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Copy every shard's θ into `out` (length P), taking each stripe
+    /// lock briefly in turn. The copy is consistent *per shard*, not
+    /// globally atomic — exactly the visibility a concurrent parameter
+    /// server offers its readers; call [`Self::min_commits`] around it
+    /// if you need a quiescent snapshot.
+    pub fn snapshot_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.store.param_count());
+        for (s, r) in self.store.ranges().enumerate() {
+            out[r].copy_from_slice(&self.lock(s).theta);
+        }
+    }
+
+    /// Smallest per-shard commit count — the "every shard has absorbed
+    /// at least this many commits" watermark.
+    pub fn min_commits(&self) -> u64 {
+        (0..self.count()).map(|s| self.lock(s).commits).min().unwrap_or(0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -160,5 +250,56 @@ mod tests {
     #[should_panic(expected = "out of")]
     fn out_of_range_shard_panics() {
         ParamStore::new(8, 2, 4).range(2);
+    }
+
+    #[test]
+    fn striped_slots_tile_and_snapshot() {
+        let init: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let plane = StripedShards::new(&init, ParamStore::new(10, 4, 4));
+        assert_eq!(plane.count(), 4);
+        // Slots carry the right chunks and zeroed tracks.
+        {
+            let s1 = plane.lock(1);
+            assert_eq!(s1.theta, vec![3.0, 4.0, 5.0]);
+            assert!(s1.n.iter().all(|&x| x == 0.0));
+            assert_eq!(s1.commits, 0);
+        }
+        // Snapshot reassembles the full vector.
+        let mut out = vec![0.0f32; 10];
+        plane.snapshot_into(&mut out);
+        assert_eq!(out, init);
+        // Mutate one shard under its lock; only its range changes.
+        plane.lock(2).theta.fill(-1.0);
+        plane.lock(2).commits += 1;
+        plane.snapshot_into(&mut out);
+        assert_eq!(&out[6..8], &[-1.0, -1.0]);
+        assert_eq!(&out[0..6], &init[0..6]);
+        assert_eq!(plane.min_commits(), 0);
+        for s in [0, 1, 3] {
+            plane.lock(s).commits += 2;
+        }
+        assert_eq!(plane.min_commits(), 1);
+    }
+
+    #[test]
+    fn striped_lock_recovers_from_poison() {
+        use std::sync::Arc;
+        let plane = Arc::new(StripedShards::new(
+            &[1.0, 2.0],
+            ParamStore::new(2, 2, 4),
+        ));
+        let p2 = Arc::clone(&plane);
+        // A committer panics while holding shard 0's stripe...
+        let _ = std::thread::spawn(move || {
+            let _guard = p2.lock(0);
+            panic!("committer dies mid-commit");
+        })
+        .join();
+        // ...and the store stays fully usable: both stripes lock fine.
+        assert_eq!(plane.lock(0).theta, vec![1.0]);
+        plane.lock(1).theta[0] = 9.0;
+        let mut out = vec![0.0; 2];
+        plane.snapshot_into(&mut out);
+        assert_eq!(out, vec![1.0, 9.0]);
     }
 }

@@ -67,8 +67,15 @@ pub struct ClientState {
     /// P floats per task (a fetch replaces the whole Arc; a barrier
     /// release shares one snapshot across all λ clients).
     pub theta: Arc<Vec<f32>>,
-    /// Timestamp j of that copy.
+    /// Timestamp j of that copy — always `min(shard_ts)`, the age of the
+    /// oldest chunk (the conservative scalar every whole-model staleness
+    /// penalty uses).
     pub ts: u64,
+    /// Per-shard fetch timestamps (PR 9): after a partial fetch the
+    /// chunks of θ_j age independently — `shard_ts[s]` is the server
+    /// timestamp at which shard `s` was last refreshed. Full fetches and
+    /// barrier releases make the vector uniform (= `ts`).
+    pub shard_ts: Vec<u64>,
     pub sampler: SamplerKind,
     /// Present only in `Accumulate` push-drop mode.
     pub accum: Option<Accumulator>,

@@ -31,13 +31,21 @@
 //! serial schedule order, so runs are bitwise identical to `--workers 1`
 //! (rust/tests/parallel_equivalence.rs — including runs where speculation
 //! misses and recomputes).
+//!
+//! **Exception** — `--concurrency.server sharded` (PR 9): the apply
+//! queue runs relaxed (completion order) and the
+//! [`ShardedServer`](crate::server::ShardedServer) commits updates
+//! concurrently on its striped shard plane, so runs are validated
+//! *statistically* against the serial oracle instead of bitwise
+//! (rust/tests/concurrent_server.rs). The default (`serial`) is
+//! untouched.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
 // lint:allow(D002, wall_secs is host-side reporting, never a protocol input)
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::config::{BandwidthMode, ExperimentConfig};
 use crate::grad::{EngineFactory, EnginePool, GradResult, GradTask,
@@ -165,13 +173,23 @@ impl ParallelSimulator {
         .max(1);
         let defer_repeats = cfg.bandwidth == BandwidthMode::Always;
         let lambda = cfg.clients;
+        // Sharded-server mode trades the bitwise schedule-order guarantee
+        // for throughput: results release in completion order and commits
+        // overlap on the shard plane (validated statistically,
+        // rust/tests/concurrent_server.rs). Serial mode keeps the strict
+        // ordered queue — the oracle stays bitwise.
+        let relaxed = cfg.concurrency.sharded();
         let (core, probe_engine) = ProtocolCore::new(cfg, parts)?;
         Ok(Self {
             core,
             planner,
             pool: EnginePool::spawn(workers, factory),
             probe_engine,
-            queue: ApplyQueue::new(0),
+            queue: if relaxed {
+                ApplyQueue::new_relaxed(0)
+            } else {
+                ApplyQueue::new(0)
+            },
             grad_free: Vec::new(),
             batch_free: Vec::new(),
             epochs: vec![0; lambda],
@@ -228,7 +246,11 @@ impl ParallelSimulator {
             self.core.cfg.policy.is_barrier(),
             pending,
         );
-        self.queue = ApplyQueue::new(self.core.iter);
+        self.queue = if self.core.cfg.concurrency.sharded() {
+            ApplyQueue::new_relaxed(self.core.iter)
+        } else {
+            ApplyQueue::new(self.core.iter)
+        };
         self.next_seq = self.core.iter;
         self.barrier_pending = false;
         Ok(())
@@ -419,13 +441,19 @@ impl ParallelSimulator {
             }
             OwnedBatch::Lm { .. } => None,
         };
-        // Applies drain strictly in seq order, so the planning-time FIFO
-        // head is always this iteration's virtual timestamp.
-        let (seq, vtime) = self
-            .planned_times
-            .pop_front()
-            .expect("apply without a planned vtime");
-        debug_assert_eq!(seq, r.seq, "planned-time FIFO out of sync");
+        // Ordered mode drains strictly in seq order (the match is always
+        // the FIFO head); relaxed mode (sharded server) releases in
+        // completion order, so look the seq up — the scan is bounded by
+        // the in-flight window.
+        let idx = self.planned_times.iter().position(|&(s, _)| s == r.seq);
+        let vtime = match idx.and_then(|i| self.planned_times.remove(i)) {
+            Some((_, v)) => v,
+            None => bail!(
+                "apply for seq {} without a planned vtime (planning and \
+                 apply streams desynchronized)",
+                r.seq
+            ),
+        };
         let replaced = self.core.complete_iteration(
             r.client,
             r.loss,

@@ -107,6 +107,11 @@ pub(crate) struct ProtocolCore {
     shard_mask: Vec<bool>,
     /// Scratch composite gradient for partial (mixed-shard) pushes.
     masked_buf: Vec<f32>,
+    /// Scratch per-shard gradient timestamps for sharded applies
+    /// (PR 9): chunk `s` of the pushed composite carries the fetch
+    /// timestamp of the θ chunk it was computed at (or its cached
+    /// entry's age on the reapply path).
+    shard_ts_buf: Vec<u64>,
     /// Every N iterations, measure the true B-Staleness Γ (eq. 3) by
     /// re-running the probed minibatch at the server parameters. 0 = off.
     pub(crate) probe_every: u64,
@@ -149,6 +154,7 @@ impl ProtocolCore {
         let init = Arc::new(parts.server.params().to_vec());
         let accumulate = cfg.push_drop == PushDropMode::Accumulate
             && cfg.bandwidth != BandwidthMode::Always;
+        let store = ParamStore::from_config(p, &cfg.shards);
         let mut clients = Vec::with_capacity(lambda);
         for c in 0..lambda {
             let sampler = match &parts.data {
@@ -164,6 +170,7 @@ impl ProtocolCore {
             clients.push(ClientState {
                 theta: init.clone(),
                 ts: 0,
+                shard_ts: vec![0; store.count()],
                 sampler,
                 accum: accumulate.then(|| Accumulator::new(p)),
                 steps: 0,
@@ -174,7 +181,6 @@ impl ProtocolCore {
         let cache = (cfg.bandwidth != BandwidthMode::Always
             && cfg.push_drop == PushDropMode::ReapplyCached)
             .then(|| GradientCache::new(lambda));
-        let store = ParamStore::from_config(p, &cfg.shards);
         let bw = BandwidthPolicy::with_shards(
             cfg.bandwidth.clone(),
             lambda,
@@ -211,6 +217,7 @@ impl ProtocolCore {
             link,
             shard_mask: Vec::new(),
             masked_buf: Vec::new(),
+            shard_ts_buf: Vec::new(),
             next_eval_vtime: if cfg.eval_every_vsecs > 0.0 {
                 cfg.eval_every_vsecs
             } else {
@@ -492,11 +499,26 @@ impl ProtocolCore {
                 // Hand the drained mean buffer back for the next flush.
                 self.accum_spare = mean;
             } else {
-                outcome =
-                    Some(self.server.apply_update(grad, client_ts, l)?);
+                // The gradient inherits the per-shard ages of the θ_j
+                // it was computed at (PR 9). After a full fetch the
+                // vector is uniform and the sharded apply collapses to
+                // the scalar path bitwise; only chunks left behind by
+                // partial fetches are penalized at their own (younger)
+                // age instead of the oldest chunk's.
+                self.shard_ts_buf.clear();
+                self.shard_ts_buf
+                    .extend_from_slice(&self.clients[l].shard_ts);
+                outcome = Some(self.server.apply_update_sharded(
+                    grad,
+                    &self.shard_ts_buf,
+                    l,
+                )?);
                 if push_dup {
-                    dup_outcome =
-                        Some(self.server.apply_update(grad, client_ts, l)?);
+                    dup_outcome = Some(self.server.apply_update_sharded(
+                        grad,
+                        &self.shard_ts_buf,
+                        l,
+                    )?);
                 }
                 if let Some(cache) = &mut self.cache {
                     cache.store(l, grad, client_ts);
@@ -516,12 +538,15 @@ impl ProtocolCore {
             let cached = (self.cfg.push_drop == PushDropMode::ReapplyCached)
                 .then(|| self.cache.as_ref().and_then(|c| c.get(l)))
                 .flatten();
-            // The composite mixes ages; with one scalar timestamp per
-            // apply, the oldest constituent is the conservative choice
-            // (overstating τ shrinks the step — same direction as the
-            // partial-fetch rule below; per-shard timestamps are the
-            // finer-grained follow-up).
-            let mut apply_ts = client_ts;
+            // The composite mixes ages, and each chunk carries its own
+            // (PR 9): a transmitted shard is as old as the θ chunk the
+            // gradient was computed at, a reapplied shard as old as its
+            // cache entry. Scalar servers see `min(shard_ts)` through
+            // the trait default — the oldest constituent, exactly the
+            // conservative pre-PR-9 choice.
+            self.shard_ts_buf.clear();
+            self.shard_ts_buf
+                .extend_from_slice(&self.clients[l].shard_ts);
             for s in 0..self.store.count() {
                 if self.shard_mask[s] {
                     continue;
@@ -529,15 +554,24 @@ impl ProtocolCore {
                 let r = self.store.range(s);
                 if let Some((g, ts)) = cached {
                     masked[r.clone()].copy_from_slice(&g[r]);
-                    apply_ts = apply_ts.min(ts);
+                    self.shard_ts_buf[s] = ts;
                 } else {
+                    // A zeroed chunk contributes nothing; its (current)
+                    // client age keeps it from dragging τ up.
                     masked[r].fill(0.0);
                 }
             }
-            let out = self.server.apply_update(&masked, apply_ts, l)?;
+            let out = self.server.apply_update_sharded(
+                &masked,
+                &self.shard_ts_buf,
+                l,
+            )?;
             if push_dup {
-                dup_outcome =
-                    Some(self.server.apply_update(&masked, apply_ts, l)?);
+                dup_outcome = Some(self.server.apply_update_sharded(
+                    &masked,
+                    &self.shard_ts_buf,
+                    l,
+                )?);
             }
             if let Some(cache) = &mut self.cache {
                 cache.store_shards(
@@ -612,6 +646,7 @@ impl ProtocolCore {
                 {
                     c.theta = params.clone();
                     c.ts = ts;
+                    c.shard_ts.iter_mut().for_each(|t| *t = ts);
                     *b = false; // barrier over: everyone schedulable again
                 }
                 for _ in 0..lambda {
@@ -707,23 +742,29 @@ impl ProtocolCore {
                 let client = &mut self.clients[l];
                 client.theta = Arc::new(self.server.params().to_vec());
                 client.ts = self.server.timestamp();
+                client.shard_ts.iter_mut().for_each(|t| *t = client.ts);
                 replaced = ThetaReplaced::Client;
             } else if fetch {
                 // Partial fetch: overwrite only the transmitted ranges.
-                // The scalar staleness timestamp j stays put — the copy
-                // still holds chunks from the older fetch, and overstating
-                // τ is the conservative direction for every staleness
-                // penalty (per-shard timestamps are the finer-grained
-                // follow-up).
+                // Each refreshed chunk stamps its own shard_ts (PR 9);
+                // the scalar timestamp j advances to `min(shard_ts)` —
+                // the age of the oldest chunk still in the copy, so a
+                // whole-model staleness penalty stays conservative
+                // without overstating τ once every shard has caught up.
+                let server_ts = self.server.timestamp();
                 let mut theta = (*self.clients[l].theta).clone();
                 for s in 0..self.store.count() {
                     if self.shard_mask[s] {
                         let r = self.store.range(s);
                         theta[r.clone()]
                             .copy_from_slice(&self.server.params()[r]);
+                        self.clients[l].shard_ts[s] = server_ts;
                     }
                 }
-                self.clients[l].theta = Arc::new(theta);
+                let client = &mut self.clients[l];
+                client.ts =
+                    client.shard_ts.iter().copied().min().unwrap_or(server_ts);
+                client.theta = Arc::new(theta);
                 replaced = ThetaReplaced::Client;
             }
             if fetch_fate == MessageFate::Duplicated {
@@ -808,6 +849,10 @@ impl ProtocolCore {
 
     /// Evaluate validation cost on the whole val set (chunked).
     pub(crate) fn run_eval(&mut self) -> Result<()> {
+        // A sharded server may still be committing enqueued updates on
+        // its worker threads; evaluation reads θ_T, so drain first
+        // (serial servers quiesce as a no-op).
+        self.server.quiesce()?;
         let (loss, acc) = match &self.data {
             DataSource::Classif(split) => {
                 let b = self.eval_engine.batch_size();
@@ -912,6 +957,7 @@ impl ProtocolCore {
         for c in &self.clients {
             w.put_u64(c.ts);
             w.put_u64(c.steps);
+            w.put_u64s(&c.shard_ts);
             w.put_f32s(&c.theta);
             let rng = match &c.sampler {
                 SamplerKind::Classif(s) => s.rng_state(),
@@ -978,6 +1024,16 @@ impl ProtocolCore {
         for c in self.clients.iter_mut() {
             c.ts = r.take_u64()?;
             c.steps = r.take_u64()?;
+            let shard_ts = r.take_u64s()?;
+            if shard_ts.len() != c.shard_ts.len() {
+                bail!(
+                    "checkpoint client has {} shard timestamps but the \
+                     store has {} shards",
+                    shard_ts.len(),
+                    c.shard_ts.len()
+                );
+            }
+            c.shard_ts = shard_ts;
             let theta = r.take_f32s()?;
             if theta.len() != c.theta.len() {
                 bail!(
