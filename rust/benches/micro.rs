@@ -5,9 +5,12 @@
 //! the serial vs. barrier-windowed vs. pipelined-speculative
 //! dispatcher comparison (with the speculation miss-rate counter),
 //! virtual-time throughput (simulated-seconds/sec on a straggler-fleet
-//! delay-model workload), and the sharded-gating workload
+//! delay-model workload), the sharded-gating workload
 //! (bytes-on-wire/sec + the gated-vs-always byte reduction under
-//! per-shard B-FASGD gating on a finite-rate link).
+//! per-shard B-FASGD gating on a finite-rate link), the effective GB/s
+//! of the chunks_exact(8)/mul_add kernels in tensor/ops.rs, and the
+//! bounded-memory fleet row (lambda=1e5 snapshot-backed clients:
+//! steps/sec + resident theta bytes).
 //!
 //! `cargo bench --bench micro -- --json BENCH_pr3.json` additionally
 //! writes the throughput snapshot as JSON (the per-PR perf trajectory).
@@ -51,15 +54,37 @@ fn main() -> anyhow::Result<()> {
         fasgd_update_fused(&mut theta, &mut n, &mut b, &mut v, &g, 1e-3, &hp);
     });
     let bytes = (P * 4 * 5) as f64; // 4 state streams rw + grad read ≈ 5 streams
+    let fasgd_gbps = bytes * stats.per_sec() / 1e9;
     println!(
-        "    -> {:.2} GB/s effective, {:.1} Melem/s",
-        bytes * stats.per_sec() / 1e9,
+        "    -> {fasgd_gbps:.2} GB/s effective, {:.1} Melem/s",
         P as f64 * stats.per_sec() / 1e6
     );
 
-    bench.run("sasgd axpy apply (P=159010)", || {
+    let sasgd_stats = bench.run("sasgd axpy apply (P=159010)", || {
         fasgd::tensor::sasgd_apply(&mut theta, &g, 1e-4);
     });
+    let axpy_bytes = (P * 4 * 2) as f64; // theta rmw + grad read
+    let axpy_gbps = axpy_bytes * sasgd_stats.per_sec() / 1e9;
+    println!("    -> {axpy_gbps:.2} GB/s effective");
+
+    // Blocked axpy: four gradient streams folded into theta in one pass
+    // (the sync barrier's fan-in shape).
+    let g1: Vec<f32> = (0..P).map(|_| rng.f32() - 0.5).collect();
+    let g2: Vec<f32> = (0..P).map(|_| rng.f32() - 0.5).collect();
+    let g3: Vec<f32> = (0..P).map(|_| rng.f32() - 0.5).collect();
+    let coef = [-2.5e-4f32; 4];
+    let block_stats = bench.run("axpy_block 4-stream (P=159010)", || {
+        fasgd::tensor::axpy_block(&mut theta, &coef, &g, &g1, &g2, &g3);
+    });
+    let block_bytes = (P * 4 * 5) as f64; // theta rmw + four grad reads
+    let axpy_block_gbps = block_bytes * block_stats.per_sec() / 1e9;
+    println!("    -> {axpy_block_gbps:.2} GB/s effective");
+    let kernels_block = obj(vec![
+        ("p", P.into()),
+        ("axpy_gb_per_sec", axpy_gbps.into()),
+        ("axpy_block_gb_per_sec", axpy_block_gbps.into()),
+        ("fasgd_update_fused_gb_per_sec", fasgd_gbps.into()),
+    ]);
 
     // --- pure-rust grad engine ----------------------------------------------
     let split = fasgd::data::synthetic::generate(0, 256, 0, 0.35);
@@ -435,6 +460,43 @@ fn main() -> anyhow::Result<()> {
         ]));
     }
 
+    // --- bounded-memory fleet: lambda=1e5 snapshot-backed clients -----------
+    // A hundred thousand bimodal-straggler clients share the epoch-indexed
+    // snapshot ring: per-client state is shard epoch ids + a sampler
+    // cursor, so resident theta memory is ring-depth * P * 4 bytes no
+    // matter how large lambda grows. `resident_param_bytes` is the
+    // run-end ring residency that the CI fleet smoke asserts a hard cap
+    // on; steps/sec shows the dispatcher's cost of scheduling a fleet
+    // four orders of magnitude wider than the worker pool.
+    let mut fleet_cfg =
+        fasgd::experiments::common::fast_test_config(Policy::Fasgd);
+    fleet_cfg.clients = 100_000;
+    fleet_cfg.iters = fasgd::bench_util::bench_iters(1_000);
+    fleet_cfg.eval_every = u64::MAX >> 2;
+    fleet_cfg.shards.count = 4;
+    fleet_cfg.delay.compute = fasgd::config::DelayModel::Bimodal {
+        straggler_frac: 0.1,
+        slow_mult: 8.0,
+    };
+    let fleet_run = fasgd::experiments::common::run_experiment(&fleet_cfg)?;
+    let fleet_sps = fleet_run.iters as f64 / fleet_run.wall_secs;
+    println!(
+        "fleet lambda=1e5 (bimodal, 4 shards, snapshots)  {fleet_sps:>10.0} steps/s  {:>8.3} MB resident theta",
+        fleet_run.resident_param_bytes as f64 / 1e6
+    );
+    let fleet_block = obj(vec![
+        (
+            "workload",
+            "lambda=1e5 snapshot-backed clients, bimodal stragglers \
+             (10% at 8x), fasgd, 4 shards"
+                .into(),
+        ),
+        ("lambda", 100_000usize.into()),
+        ("shards", 4usize.into()),
+        ("steps_per_sec", fleet_sps.into()),
+        ("resident_param_bytes", fleet_run.resident_param_bytes.into()),
+    ]);
+
     if let Some(path) = json_path {
         let snapshot = obj(vec![
             ("bench", "micro".into()),
@@ -457,6 +519,8 @@ fn main() -> anyhow::Result<()> {
             ("per_policy_serial", Json::Arr(policy_rows)),
             ("bandwidth", bandwidth_block),
             ("concurrency", concurrency_block),
+            ("kernels", kernels_block),
+            ("fleet", fleet_block),
             ("speedup_at_4_workers", speedup_at_4.into()),
             (
                 "pipelined_vs_barrier_at_4_workers",

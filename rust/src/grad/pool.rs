@@ -23,6 +23,7 @@ use std::thread::JoinHandle;
 use anyhow::{anyhow, Result};
 
 use crate::grad::{GradientEngine, OwnedBatch};
+use crate::server::snapshot::ThetaSnapshot;
 
 /// Builds one gradient engine; called once per worker thread, in that
 /// thread.
@@ -40,8 +41,11 @@ pub struct GradTask {
     /// computed from a stale snapshot and is recomputed (speculation
     /// miss). Opaque to the pool — it just rides along.
     pub epoch: u64,
-    /// Snapshot of the client's parameters at schedule time.
-    pub theta: Arc<Vec<f32>>,
+    /// Snapshot of the client's parameters at schedule time: a shared
+    /// ring chunk (single shard, zero-copy) or an assembled scratch
+    /// buffer (multi-shard) — see
+    /// [`ThetaSnapshot`](crate::server::snapshot::ThetaSnapshot).
+    pub theta: ThetaSnapshot,
     pub batch: OwnedBatch,
     /// Recycled gradient buffer (resized by the worker as needed).
     pub grad_buf: Vec<f32>,
@@ -58,6 +62,9 @@ pub struct GradResult {
     pub loss: f32,
     pub grad: Vec<f32>,
     pub batch: OwnedBatch,
+    /// The task's θ snapshot, handed back so the dispatcher can release
+    /// its ring reference (shared) or recycle the scratch (owned).
+    pub theta: ThetaSnapshot,
 }
 
 pub struct EnginePool {
@@ -168,6 +175,7 @@ fn worker_loop(
                 loss,
                 grad,
                 batch: task.batch,
+                theta: task.theta,
             }),
             Err(e) => Err(e),
         };
@@ -193,7 +201,7 @@ mod tests {
     fn pool_matches_inline_engine() {
         let sizes = vec![6, 5, 3];
         let mu = 2;
-        let theta = Arc::new(init_params(3, &sizes));
+        let theta: Arc<[f32]> = init_params(3, &sizes).into();
         let mut rng = crate::rng::stream(9, "pool", 0);
         let pool = EnginePool::spawn(3, mlp_factory(sizes.clone(), mu));
         let mut inline = RustMlpEngine::new(sizes.clone(), mu);
@@ -211,7 +219,10 @@ mod tests {
                 seq: i as u64,
                 client: i,
                 epoch: 7,
-                theta: Arc::clone(&theta),
+                theta: ThetaSnapshot::Shared {
+                    epoch: 7,
+                    chunk: Arc::clone(&theta),
+                },
                 batch: b.clone(),
                 grad_buf: Vec::new(),
             })
@@ -239,7 +250,7 @@ mod tests {
             seq: 0,
             client: 0,
             epoch: 0,
-            theta: Arc::new(vec![0.0]),
+            theta: ThetaSnapshot::Owned(vec![0.0]),
             batch: OwnedBatch::Classif { x: vec![], y: vec![] },
             grad_buf: Vec::new(),
         })

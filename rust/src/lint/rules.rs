@@ -522,6 +522,29 @@ mod tests {
     }
 
     #[test]
+    fn snapshot_ring_is_in_deterministic_core_scope() {
+        // PR 10: the snapshot ring is protocol-core state — its
+        // (epoch, shard) iteration order reaches checkpoint bytes
+        // (D001), and its eviction path runs under the parallel
+        // dispatcher's buffer recycling, where a panic would poison
+        // shared state (D004/D006). `SnapshotRing::release` returning
+        // `Result` on a missing key instead of unwrapping is exactly
+        // the D004 contract; this pins server/snapshot.rs in scope so
+        // a regression to panicking bookkeeping trips the tree lint.
+        let scope = scope_for("server/snapshot.rs");
+        assert!(scope.d001, "ring iteration order reaches checkpoints");
+        assert!(scope.d004, "eviction runs on multi-writer paths");
+        assert!(scope.d006, "eviction must error, never abort");
+        let src = "
+            use std::collections::HashMap;
+            fn evict(x: Option<u32>) -> u32 { x.unwrap() }
+        ";
+        let f = lint_source("server/snapshot.rs", src, scope);
+        assert!(f.iter().any(|x| x.rule == "D001"), "{f:?}");
+        assert!(f.iter().any(|x| x.rule == "D004"), "{f:?}");
+    }
+
+    #[test]
     fn d006_flags_abort_macros_not_panic_paths() {
         let bad = "fn f(x: u8) { if x > 3 { panic!(\"bad {x}\") } }";
         let f = lint_all(bad);

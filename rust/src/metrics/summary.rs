@@ -107,6 +107,10 @@ pub struct RunSummary {
     /// Fault-plane counters ([`crate::sim::faults`]); all zero when
     /// fault injection is off.
     pub faults: FaultCounters,
+    /// Bytes resident in live θ snapshot chunks at run end (PR 10):
+    /// `ring_depth · P · 4` — the fleet-memory bound the epoch-indexed
+    /// snapshot ring guarantees, independent of λ.
+    pub resident_param_bytes: u64,
 }
 
 impl RunSummary {
@@ -164,6 +168,9 @@ impl RunSummary {
             ),
             ("wall_secs", self.wall_secs.into()),
             ("virtual_secs", self.virtual_secs.into()),
+            // Fleet-memory readout (PR 10): live snapshot-ring bytes —
+            // bounded by ring depth, not client count.
+            ("resident_param_bytes", self.resident_param_bytes.into()),
             // Fault-plane tallies; zeros when `fault.*` is off, so the
             // block is cheap to keep unconditional (stable schema for
             // downstream parsers).
@@ -221,6 +228,7 @@ mod tests {
             server_updates: 4,
             probes: Default::default(),
             faults: Default::default(),
+            resident_param_bytes: 0,
         };
         let j = summary.to_json().to_string_pretty();
         let parsed = crate::util::json::Json::parse(&j).unwrap();
@@ -252,6 +260,7 @@ mod tests {
             server_updates: 0,
             probes: Default::default(),
             faults: Default::default(),
+            resident_param_bytes: 0,
         };
         let j = summary.to_json();
         assert_eq!(j.get("final_val_loss"), Some(&Json::Null));
@@ -278,6 +287,7 @@ mod tests {
             server_updates: 4,
             probes: Default::default(),
             faults: Default::default(),
+            resident_param_bytes: 0,
         };
         summary.faults.crashes = 3;
         summary.faults.push_lost = 2;

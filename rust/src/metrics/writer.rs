@@ -141,6 +141,7 @@ mod tests {
             server_updates: 10,
             probes: Default::default(),
             faults: Default::default(),
+            resident_param_bytes: 0,
         }
     }
 

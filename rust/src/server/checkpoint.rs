@@ -28,10 +28,17 @@ use crate::config::ExperimentConfig;
 pub const MAGIC: [u8; 8] = *b"FASGDCKP";
 
 /// Checkpoint format version. Bump on any layout change; `open` rejects
-/// mismatches (no cross-version migration — checkpoints are short-lived
-/// crash-recovery artifacts, not archives). v2: per-shard client fetch
-/// timestamps in the clients section (PR 9).
-pub const VERSION: u32 = 2;
+/// versions it cannot read. v2: per-shard client fetch timestamps in the
+/// clients section (PR 9). v3: epoch-indexed shared θ snapshots (PR 10) —
+/// a `ring` section carries each live `(epoch, shard)` chunk once and the
+/// per-client θ vectors are gone (views are rebuilt from `shard_ts`
+/// keys). v2 files are still readable: the protocol core adopts their
+/// per-client θ copies into the ring on load, so old crash-recovery
+/// artifacts resume into the bounded-memory world.
+pub const VERSION: u32 = 3;
+
+/// Oldest version [`open`] still reads (see the per-version notes above).
+pub const MIN_VERSION: u32 = 2;
 
 /// FNV-1a fold of the config's full `Debug` rendering: every
 /// result-affecting knob participates, so any config drift between the
@@ -168,11 +175,20 @@ impl CkptWriter {
 pub struct CkptReader<'a> {
     buf: &'a [u8],
     pos: usize,
+    /// Format version of the file this body came from ([`open`] stamps
+    /// it; raw readers over hand-built bytes default to [`VERSION`]).
+    /// Body deserializers branch on this to read older layouts.
+    version: u32,
 }
 
 impl<'a> CkptReader<'a> {
     pub fn new(buf: &'a [u8]) -> Self {
-        Self { buf, pos: 0 }
+        Self { buf, pos: 0, version: VERSION }
+    }
+
+    /// The checkpoint format version this body was written under.
+    pub fn version(&self) -> u32 {
+        self.version
     }
 
     pub fn remaining(&self) -> usize {
@@ -309,12 +325,13 @@ pub fn open<'a>(
         bail!("not a FASGD checkpoint (bad magic)");
     }
     let version = r.take_u32()?;
-    if version != VERSION {
+    if !(MIN_VERSION..=VERSION).contains(&version) {
         bail!(
             "checkpoint format version {version} unsupported \
-             (this build reads version {VERSION})"
+             (this build reads versions {MIN_VERSION}..={VERSION})"
         );
     }
+    r.version = version;
     let fp = r.take_u64()?;
     let want = config_fingerprint(cfg);
     if fp != want {
@@ -444,6 +461,21 @@ mod tests {
         other.seed += 1;
         let err = open(&other, &image).unwrap_err();
         assert!(format!("{err}").contains("fingerprint"), "{err}");
+    }
+
+    #[test]
+    fn open_reads_previous_version_header() {
+        let cfg = ExperimentConfig::default();
+        let mut image = seal(&cfg, 9, &[7]);
+        assert_eq!(CkptReader::new(&[]).version(), VERSION);
+        image[8..12].copy_from_slice(&2u32.to_le_bytes());
+        let (iter, mut r) = open(&cfg, &image).unwrap();
+        assert_eq!(iter, 9);
+        assert_eq!(r.version(), 2);
+        assert_eq!(r.take_u8().unwrap(), 7);
+        // Below the compatibility floor: rejected.
+        image[8..12].copy_from_slice(&1u32.to_le_bytes());
+        assert!(open(&cfg, &image).is_err());
     }
 
     #[test]

@@ -35,6 +35,7 @@ pub mod gradient_cache;
 pub mod registry;
 pub mod sasgd;
 pub mod shard;
+pub mod snapshot;
 pub mod sync;
 
 pub use asgd::Asgd;
@@ -50,6 +51,7 @@ pub use registry::{
 };
 pub use sasgd::Sasgd;
 pub use shard::{ParamStore, ShardSlot, StripedShards};
+pub use snapshot::{SnapshotRef, SnapshotRing, ThetaSnapshot};
 pub use sync::SyncSgd;
 
 use std::cmp::Ordering;

@@ -1,0 +1,263 @@
+//! Epoch-indexed shared θ snapshots (PR 10, ROADMAP Open item 2).
+//!
+//! Every simulated client used to hold a private full copy of θ_j, so a
+//! λ-client fleet cost λ·P·4 bytes — a 10⁶-client run on a 100k-param
+//! model needed ~400 GB. The ring replaces owned copies with shared
+//! immutable snapshots: when the protocol core hands parameters to a
+//! client (full fetch, partial fetch, barrier broadcast) it *publishes*
+//! the current server state per shard under the key `(epoch, shard)`
+//! (`epoch` = the server timestamp at publication) and the client's view
+//! becomes a [`SnapshotRef`] per shard — a pointer swap plus a refcount
+//! bump instead of a P-float copy. Clients on the same epoch share one
+//! buffer, so resident parameter memory is `ring_depth · P · 4` bytes
+//! (depth = distinct live epochs, bounded by the oldest epoch any live
+//! client still references) plus O(λ) small per-client state.
+//!
+//! Eviction is exact-key refcounting, not scanning: every site that
+//! drops a snapshot reference (a client view swap in the protocol core,
+//! a gradient task recycled by the parallel dispatcher) calls
+//! [`SnapshotRing::release`] for the `(epoch, shard)` it dropped. When
+//! the ring holds the last reference the entry is removed; releasing a
+//! key the ring no longer holds is a bookkeeping bug and returns an
+//! error (determinism rule D004: failure paths surface as `Result`,
+//! never `unwrap`).
+//!
+//! The ring changes memory layout only — never the protocol stream.
+//! Publication happens on the coordinator (for the serial server *and*
+//! the [`ShardedServer`](crate::server::ShardedServer) commit plane, via
+//! its coordinator-side snapshot), so fixed-seed runs stay bitwise
+//! identical and golden traces are unchanged.
+
+use std::collections::BTreeMap;
+use std::ops::{Deref, Range};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+/// A client's handle on one shard of a published θ epoch: the epoch id
+/// (server timestamp at publication — always equal to the client's
+/// `shard_ts[s]` for that shard) plus the shared immutable chunk.
+#[derive(Debug, Clone)]
+pub struct SnapshotRef {
+    pub epoch: u64,
+    pub chunk: Arc<[f32]>,
+}
+
+/// The θ snapshot a gradient task computes against. Single-shard runs
+/// ride the shared chunk zero-copy (the epoch travels along so the
+/// dispatcher can release the reference when the task's buffers are
+/// recycled); multi-shard runs assemble a contiguous scratch buffer,
+/// recycled through the dispatcher's free list like `grad_buf`.
+#[derive(Debug)]
+pub enum ThetaSnapshot {
+    Shared { epoch: u64, chunk: Arc<[f32]> },
+    Owned(Vec<f32>),
+}
+
+impl Deref for ThetaSnapshot {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        match self {
+            ThetaSnapshot::Shared { chunk, .. } => chunk,
+            ThetaSnapshot::Owned(v) => v,
+        }
+    }
+}
+
+/// Reference-counted ring of `(epoch, shard)` snapshot chunks.
+///
+/// A `BTreeMap` keeps iteration in `(epoch, shard)` order, so the
+/// checkpoint serialization of the ring is deterministic (rule D001).
+#[derive(Debug, Default)]
+pub struct SnapshotRing {
+    chunks: BTreeMap<(u64, usize), Arc<[f32]>>,
+    /// Total f32s copied into freshly published chunks — the currency of
+    /// the no-full-θ-allocation regression test: a partial fetch may only
+    /// grow this by the masked shard lengths, never by P.
+    copied_params: u64,
+}
+
+impl SnapshotRing {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get-or-copy: the chunk for `(epoch, shard)`, copying
+    /// `params[range]` only if this key has not been published yet.
+    /// Republishing an existing key is a pure refcount bump — that is
+    /// what makes barrier broadcasts and same-timestamp fetches O(1) in
+    /// parameter traffic.
+    pub fn publish(
+        &mut self,
+        epoch: u64,
+        shard: usize,
+        params: &[f32],
+        range: Range<usize>,
+    ) -> Arc<[f32]> {
+        if let Some(c) = self.chunks.get(&(epoch, shard)) {
+            return Arc::clone(c);
+        }
+        let chunk: Arc<[f32]> = Arc::from(&params[range]);
+        self.copied_params += chunk.len() as u64;
+        self.chunks.insert((epoch, shard), Arc::clone(&chunk));
+        chunk
+    }
+
+    /// A live chunk by key (checkpoint restore rebuilds client views
+    /// through this).
+    pub fn get(&self, epoch: u64, shard: usize) -> Option<Arc<[f32]>> {
+        self.chunks.get(&(epoch, shard)).map(Arc::clone)
+    }
+
+    /// Drop-site bookkeeping: the caller just dropped one reference to
+    /// `(epoch, shard)`. If the ring now holds the last reference, the
+    /// entry is evicted (`Ok(true)`); if other clients or in-flight
+    /// tasks still share it, it stays (`Ok(false)`). Releasing a key the
+    /// ring does not hold means the refcount protocol was violated —
+    /// that is an error, never a silent no-op.
+    pub fn release(&mut self, epoch: u64, shard: usize) -> Result<bool> {
+        match self.chunks.get(&(epoch, shard)) {
+            None => bail!(
+                "snapshot ring: release of missing entry (epoch {epoch}, \
+                 shard {shard}) — reference bookkeeping desynchronized"
+            ),
+            Some(c) if Arc::strong_count(c) == 1 => {
+                self.chunks.remove(&(epoch, shard));
+                Ok(true)
+            }
+            Some(_) => Ok(false),
+        }
+    }
+
+    /// Adopt a chunk read back from a checkpoint (not counted as a
+    /// publication copy — the regression accounting tracks run-time
+    /// fetch traffic).
+    pub fn restore(&mut self, epoch: u64, shard: usize, data: Vec<f32>) {
+        self.chunks.insert((epoch, shard), Arc::from(data));
+    }
+
+    /// Bytes resident in live snapshot chunks — the `ring_depth · P · 4`
+    /// term of the memory bound, reported as `resident_param_bytes` in
+    /// the run summary.
+    pub fn resident_param_bytes(&self) -> u64 {
+        self.chunks.values().map(|c| c.len() as u64 * 4).sum()
+    }
+
+    /// Total f32s ever copied into published chunks.
+    pub fn copied_params(&self) -> u64 {
+        self.copied_params
+    }
+
+    /// Distinct live epochs (the ring depth of the memory bound) —
+    /// tracks the span between the newest publication and the oldest
+    /// epoch any live client still references.
+    pub fn depth(&self) -> usize {
+        let mut last = None;
+        let mut n = 0;
+        for (e, _) in self.chunks.keys() {
+            if last != Some(*e) {
+                last = Some(*e);
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Live `(epoch, shard)` entries.
+    pub fn len(&self) -> usize {
+        self.chunks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chunks.is_empty()
+    }
+
+    /// Sorted iteration over live entries (checkpoint serialization).
+    pub fn iter(&self) -> impl Iterator<Item = (&(u64, usize), &Arc<[f32]>)> {
+        self.chunks.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publish_is_get_or_copy() {
+        let mut ring = SnapshotRing::new();
+        let params: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let a = ring.publish(3, 0, &params, 0..4);
+        assert_eq!(&a[..], &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(ring.copied_params(), 4);
+        // Same key again: refcount bump, no copy.
+        let b = ring.publish(3, 0, &params, 0..4);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(ring.copied_params(), 4);
+        // A different shard of the same epoch copies its own range.
+        let c = ring.publish(3, 1, &params, 4..10);
+        assert_eq!(&c[..], &[4.0, 5.0, 6.0, 7.0, 8.0, 9.0]);
+        assert_eq!(ring.copied_params(), 10);
+        assert_eq!(ring.len(), 2);
+        assert_eq!(ring.depth(), 1);
+        assert_eq!(ring.resident_param_bytes(), 10 * 4);
+    }
+
+    #[test]
+    fn release_evicts_only_the_last_reference() {
+        let mut ring = SnapshotRing::new();
+        let params = vec![1.0f32; 8];
+        let a = ring.publish(0, 0, &params, 0..8);
+        let b = ring.publish(0, 0, &params, 0..8); // second holder
+        drop(b);
+        assert!(!ring.release(0, 0).expect("live key")); // `a` still holds
+        assert_eq!(ring.len(), 1);
+        drop(a);
+        assert!(ring.release(0, 0).expect("live key")); // last ref: evict
+        assert!(ring.is_empty());
+        assert_eq!(ring.resident_param_bytes(), 0);
+    }
+
+    #[test]
+    fn release_of_missing_key_is_an_error() {
+        let mut ring = SnapshotRing::new();
+        let err = ring.release(7, 1).expect_err("missing key must error");
+        let msg = format!("{err}");
+        assert!(msg.contains("epoch 7"), "unhelpful error: {msg}");
+        assert!(msg.contains("shard 1"), "unhelpful error: {msg}");
+    }
+
+    #[test]
+    fn depth_counts_distinct_epochs() {
+        let mut ring = SnapshotRing::new();
+        let params = vec![0.0f32; 6];
+        let _a = ring.publish(1, 0, &params, 0..3);
+        let _b = ring.publish(1, 1, &params, 3..6);
+        let _c = ring.publish(5, 0, &params, 0..3);
+        assert_eq!(ring.len(), 3);
+        assert_eq!(ring.depth(), 2);
+    }
+
+    #[test]
+    fn theta_snapshot_derefs_to_params() {
+        let mut ring = SnapshotRing::new();
+        let params = vec![2.0f32; 4];
+        let shared = ThetaSnapshot::Shared {
+            epoch: 0,
+            chunk: ring.publish(0, 0, &params, 0..4),
+        };
+        assert_eq!(&shared[..], &params[..]);
+        let owned = ThetaSnapshot::Owned(params.clone());
+        assert_eq!(&owned[..], &params[..]);
+    }
+
+    #[test]
+    fn restore_reinserts_without_counting_copies() {
+        let mut ring = SnapshotRing::new();
+        ring.restore(4, 2, vec![9.0, 8.0]);
+        assert_eq!(ring.copied_params(), 0);
+        let c = ring.get(4, 2).expect("restored entry");
+        assert_eq!(&c[..], &[9.0, 8.0]);
+        assert!(ring.get(4, 3).is_none());
+    }
+}

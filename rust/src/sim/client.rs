@@ -1,8 +1,7 @@
 //! Simulated client state.
 
-use std::sync::Arc;
-
 use crate::data::sampler::{BatchSampler, WindowSampler};
+use crate::server::snapshot::SnapshotRef;
 
 /// The gradient accumulator for the `PushDropMode::Accumulate` variant
 /// (paper §2.3: "averaging unsent gradients on the clients until
@@ -62,12 +61,16 @@ pub enum SamplerKind {
 
 /// One simulated client (model replica).
 pub struct ClientState {
-    /// The client's parameter copy θ_j. Behind an `Arc` so the parallel
-    /// dispatcher can hand a snapshot to a gradient worker without copying
-    /// P floats per task (a fetch replaces the whole Arc; a barrier
-    /// release shares one snapshot across all λ clients).
-    pub theta: Arc<Vec<f32>>,
-    /// Timestamp j of that copy — always `min(shard_ts)`, the age of the
+    /// The client's view of θ_j: one shared `(epoch, chunk)` snapshot
+    /// reference per shard of the server's
+    /// [`ParamStore`](crate::server::ParamStore), drawn from the
+    /// protocol core's [`SnapshotRing`](crate::server::SnapshotRing)
+    /// (PR 10). Fetches and barrier releases are per-shard pointer swaps
+    /// — clients on the same epoch share one buffer, so λ clients cost
+    /// O(λ) small state instead of λ·P·4 bytes. Invariant:
+    /// `view[s].epoch == shard_ts[s]` at all times.
+    pub view: Vec<SnapshotRef>,
+    /// Timestamp j of that view — always `min(shard_ts)`, the age of the
     /// oldest chunk (the conservative scalar every whole-model staleness
     /// penalty uses).
     pub ts: u64,
@@ -76,11 +79,28 @@ pub struct ClientState {
     /// timestamp at which shard `s` was last refreshed. Full fetches and
     /// barrier releases make the vector uniform (= `ts`).
     pub shard_ts: Vec<u64>,
+    /// θ-view generation: bumped by the protocol core exactly when this
+    /// client's view is replaced at apply time (its own fetch, or a
+    /// barrier release bumping all λ). The pipelined dispatcher tags
+    /// each speculative gradient task with the generation of the view it
+    /// snapshotted and recomputes on mismatch — this unifies the old
+    /// dispatcher-side θ-epoch counters with the snapshot scheme.
+    pub view_gen: u64,
     pub sampler: SamplerKind,
     /// Present only in `Accumulate` push-drop mode.
     pub accum: Option<Accumulator>,
     /// Iterations this client has run (diagnostics).
     pub steps: u64,
+}
+
+/// Assemble a sharded view into one contiguous θ buffer (shard chunks
+/// tile `0..P` in [`ParamStore`](crate::server::ParamStore) order). The
+/// single-shard fast path never needs this — `view[0].chunk` *is* θ_j.
+pub fn assemble_theta(view: &[SnapshotRef], out: &mut Vec<f32>) {
+    out.clear();
+    for r in view {
+        out.extend_from_slice(&r.chunk);
+    }
 }
 
 #[cfg(test)]

@@ -159,7 +159,10 @@ impl VirtualClock {
 enum DelaySampler {
     None,
     LogNormal { normal: Normal },
-    Bimodal { stragglers: usize, slow_mult: f64 },
+    /// Cohort-compressed bimodal fleet (PR 10): two `(client-index
+    /// range, seconds-per-draw)` table rows are the *entire* per-fleet
+    /// state — a λ=10⁶ fleet costs the same two entries as λ=4.
+    Bimodal { cohorts: [(std::ops::Range<usize>, f64); 2] },
 }
 
 impl DelaySampler {
@@ -170,9 +173,12 @@ impl DelaySampler {
                 normal: Normal::new(*mu, *sigma),
             },
             DelayModel::Bimodal { straggler_frac, slow_mult } => {
+                let stragglers = straggler_count(*straggler_frac, lambda);
                 DelaySampler::Bimodal {
-                    stragglers: straggler_count(*straggler_frac, lambda),
-                    slow_mult: *slow_mult,
+                    cohorts: [
+                        (0..stragglers, *slow_mult),
+                        (stragglers..lambda, 1.0),
+                    ],
                 }
             }
         }
@@ -183,13 +189,11 @@ impl DelaySampler {
         match self {
             DelaySampler::None => 0.0,
             DelaySampler::LogNormal { normal } => normal.sample(rng).exp(),
-            DelaySampler::Bimodal { stragglers, slow_mult } => {
-                if client < *stragglers {
-                    *slow_mult
-                } else {
-                    1.0
-                }
-            }
+            DelaySampler::Bimodal { cohorts } => cohorts
+                .iter()
+                .find(|(cohort, _)| cohort.contains(&client))
+                .map(|(_, secs)| *secs)
+                .unwrap_or(1.0),
         }
     }
 
@@ -383,6 +387,26 @@ mod tests {
         assert_eq!(straggler_count(0.0, 8), 0);
         assert_eq!(straggler_count(1.0, 8), 8);
         assert_eq!(straggler_count(2.0, 8), 8); // clamp
+    }
+
+    #[test]
+    fn bimodal_cohorts_are_two_table_rows() {
+        // A million-client fleet costs the same two (range, secs) rows
+        // as a four-client one — the cohort table IS the per-fleet state.
+        let mut rng = rng::stream(5, "clock-test", 0);
+        let cfg = DelayConfig {
+            compute: DelayModel::Bimodal {
+                straggler_frac: 0.1,
+                slow_mult: 8.0,
+            },
+            network: DelayModel::None,
+        };
+        let lambda = 1_000_000;
+        let mut m = LatencyModel::from_config(&cfg, lambda);
+        assert_eq!(m.draw(0, &mut rng), 8.0);
+        assert_eq!(m.draw(99_999, &mut rng), 8.0);
+        assert_eq!(m.draw(100_000, &mut rng), 1.0);
+        assert_eq!(m.draw(lambda - 1, &mut rng), 1.0);
     }
 
     #[test]

@@ -52,6 +52,7 @@ use crate::grad::{EngineFactory, EnginePool, GradResult, GradTask,
                   GradientEngine, OwnedBatch};
 use crate::metrics::RunSummary;
 use crate::rng;
+use crate::server::snapshot::ThetaSnapshot;
 use crate::server::{ApplyQueue, PopReady, Server};
 use crate::sim::observers::RunObserver;
 use crate::sim::probe::ProbeLog;
@@ -103,13 +104,14 @@ pub struct ParallelSimulator {
     /// probe's recomputation at server parameters.
     probe_engine: Box<dyn GradientEngine>,
     queue: ApplyQueue<GradResult>,
-    /// Recycled gradient / batch buffers (bounded by the in-flight window
-    /// size) — the steady-state fan-out loop allocates nothing.
+    /// Recycled gradient / batch / assembled-θ buffers (bounded by the
+    /// in-flight window size) — the steady-state fan-out loop allocates
+    /// nothing.
     grad_free: Vec<Vec<f32>>,
     batch_free: Vec<OwnedBatch>,
-    /// Per-client θ-epoch: bumped exactly when that client's θ_j is
-    /// replaced at apply time (authoritative [`ThetaReplaced`] report).
-    epochs: Vec<u64>,
+    /// Recycled multi-shard θ assembly buffers (PR 10): single-shard
+    /// runs snapshot zero-copy through the ring and never touch this.
+    snap_free: Vec<Vec<f32>>,
     /// Per-client submitted-but-not-yet-applied task count.
     in_flight: Vec<u32>,
     /// Per-client FIFO of guaranteed-miss picks awaiting their
@@ -192,7 +194,7 @@ impl ParallelSimulator {
             },
             grad_free: Vec::new(),
             batch_free: Vec::new(),
-            epochs: vec![0; lambda],
+            snap_free: Vec::new(),
             in_flight: vec![0; lambda],
             deferred: (0..lambda).map(|_| VecDeque::new()).collect(),
             deferred_total: 0,
@@ -320,16 +322,49 @@ impl ParallelSimulator {
         self.stats
     }
 
-    /// Submit one planned iteration against the client's *current* θ_j,
-    /// tagged with its current epoch.
+    /// Snapshot client `l`'s current θ view for a gradient task: the
+    /// single-shard fast path clones the shared ring chunk (a refcount
+    /// bump, released when the result's buffers are recycled);
+    /// multi-shard views assemble into a recycled scratch buffer.
+    fn snapshot_theta(&mut self, l: usize) -> ThetaSnapshot {
+        let view = &self.core.clients[l].view;
+        if view.len() == 1 {
+            ThetaSnapshot::Shared {
+                epoch: view[0].epoch,
+                chunk: Arc::clone(&view[0].chunk),
+            }
+        } else {
+            let mut buf = self.snap_free.pop().unwrap_or_default();
+            crate::sim::client::assemble_theta(view, &mut buf);
+            ThetaSnapshot::Owned(buf)
+        }
+    }
+
+    /// Retire a finished task's θ snapshot: release the shared ring
+    /// reference (the exact-key eviction protocol — a missing entry is a
+    /// bookkeeping bug and surfaces as an error) or recycle the
+    /// assembled scratch.
+    fn retire_snapshot(&mut self, theta: ThetaSnapshot) -> Result<()> {
+        match theta {
+            ThetaSnapshot::Shared { epoch, chunk } => {
+                drop(chunk);
+                self.core.ring.release(epoch, 0)?;
+            }
+            ThetaSnapshot::Owned(buf) => self.snap_free.push(buf),
+        }
+        Ok(())
+    }
+
+    /// Submit one planned iteration against the client's *current* θ
+    /// view, tagged with its current view generation.
     fn submit(&mut self, seq: u64, client: usize, batch: OwnedBatch)
               -> Result<()> {
-        let theta = Arc::clone(&self.core.clients[client].theta);
+        let theta = self.snapshot_theta(client);
         let grad_buf = self.grad_free.pop().unwrap_or_default();
         self.pool.submit(GradTask {
             seq,
             client,
-            epoch: self.epochs[client],
+            epoch: self.core.clients[client].view_gen,
             theta,
             batch,
             grad_buf,
@@ -346,11 +381,12 @@ impl ParallelSimulator {
     /// stale result's buffers. `outstanding`/`in_flight` stay counted —
     /// the seq is still owed an apply.
     fn resubmit(&mut self, r: GradResult) -> Result<()> {
-        let theta = Arc::clone(&self.core.clients[r.client].theta);
+        self.retire_snapshot(r.theta)?;
+        let theta = self.snapshot_theta(r.client);
         self.pool.submit(GradTask {
             seq: r.seq,
             client: r.client,
-            epoch: self.epochs[r.client],
+            epoch: self.core.clients[r.client].view_gen,
             theta,
             batch: r.batch,
             grad_buf: r.grad,
@@ -397,10 +433,10 @@ impl ParallelSimulator {
     /// head then waits for).
     fn drain(&mut self, target_iter: u64) -> Result<()> {
         while self.core.iter < target_iter {
-            let epochs = &self.epochs;
+            let clients = &self.core.clients;
             match self
                 .queue
-                .pop_ready_validated(|r| r.epoch == epochs[r.client])
+                .pop_ready_validated(|r| r.epoch == clients[r.client].view_gen)
             {
                 PopReady::Valid(r) => {
                     self.apply_result(r)?;
@@ -430,10 +466,12 @@ impl ParallelSimulator {
     }
 
     /// Complete one iteration in schedule order and maintain the
-    /// speculation state machine: bump θ-epochs from the authoritative
-    /// replacement report, resume planning after a barrier release, and
-    /// promote the client's oldest deferred pick (its θ_j is now exactly
-    /// what the serial dispatcher would use).
+    /// speculation state machine: the protocol core bumps `view_gen`
+    /// itself when it replaces a θ view (the [`ThetaReplaced`] report
+    /// still resumes planning after a barrier release), then the task's
+    /// snapshot is retired and the client's oldest deferred pick is
+    /// promoted (its θ_j is now exactly what the serial dispatcher
+    /// would use).
     fn apply_result(&mut self, r: GradResult) -> Result<()> {
         let probe_xy = match &r.batch {
             OwnedBatch::Classif { x, y } => {
@@ -464,16 +502,13 @@ impl ParallelSimulator {
         )?;
         self.outstanding -= 1;
         self.in_flight[r.client] -= 1;
-        match replaced {
-            ThetaReplaced::None => {}
-            ThetaReplaced::Client => self.epochs[r.client] += 1,
-            ThetaReplaced::All => {
-                for e in self.epochs.iter_mut() {
-                    *e += 1;
-                }
-                self.barrier_pending = false;
-            }
+        if replaced == ThetaReplaced::All {
+            self.barrier_pending = false;
         }
+        // Retire the task's snapshot *after* the apply: a same-epoch
+        // fetch inside `complete_iteration` must still see this task's
+        // reference alive, so the ring entry survives until here.
+        self.retire_snapshot(r.theta)?;
         self.grad_free.push(r.grad);
         self.batch_free.push(r.batch);
         if let Some(d) = self.deferred[r.client].pop_front() {

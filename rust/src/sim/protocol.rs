@@ -15,8 +15,6 @@
 //! schedule order, the two modes are bitwise identical
 //! (rust/tests/parallel_equivalence.rs).
 
-use std::sync::Arc;
-
 use anyhow::{bail, Result};
 
 use crate::bandwidth::{BandwidthAccounting, BandwidthPolicy, Direction};
@@ -26,6 +24,7 @@ use crate::data::{corpus::Corpus, sampler::{BatchSampler, WindowSampler},
 use crate::grad::{Batch, EvalEngine, GradientEngine, OwnedBatch};
 use crate::metrics::{EvalPoint, History, RunSummary, StalenessHistogram};
 use crate::server::checkpoint::{CkptReader, CkptWriter};
+use crate::server::snapshot::{SnapshotRef, SnapshotRing};
 use crate::server::{GradientCache, ParamStore, Server};
 use crate::sim::client::{Accumulator, ClientState, SamplerKind};
 use crate::sim::clock::LinkModel;
@@ -101,6 +100,12 @@ pub(crate) struct ProtocolCore {
     /// Shard geometry of θ (and the gradient): the unit of bandwidth
     /// gating and byte accounting. `shards.count = 1` = whole-model.
     pub(crate) store: ParamStore,
+    /// Epoch-indexed shared θ snapshots (PR 10): every client view chunk
+    /// and every in-flight gradient snapshot references an entry here
+    /// instead of owning a copy, so fleet memory is `ring_depth · P · 4`
+    /// bytes + O(λ) per-client state. Published on the coordinator in
+    /// schedule order — layout only, never a protocol decision.
+    pub(crate) ring: SnapshotRing,
     /// Finite-rate server link for wire-time charging.
     pub(crate) link: LinkModel,
     /// Scratch per-shard transmit mask, refilled per opportunity.
@@ -151,10 +156,24 @@ impl ProtocolCore {
             );
         }
         let lambda = cfg.clients;
-        let init = Arc::new(parts.server.params().to_vec());
         let accumulate = cfg.push_drop == PushDropMode::Accumulate
             && cfg.bandwidth != BandwidthMode::Always;
         let store = ParamStore::from_config(p, &cfg.shards);
+        // Publish the initial parameters once as epoch 0: every client
+        // starts on the same shared chunks (λ refcount bumps, one copy
+        // of θ total — the old layout copied θ λ times here).
+        let mut ring = SnapshotRing::new();
+        let init_view: Vec<SnapshotRef> = (0..store.count())
+            .map(|s| SnapshotRef {
+                epoch: 0,
+                chunk: ring.publish(
+                    0,
+                    s,
+                    parts.server.params(),
+                    store.range(s),
+                ),
+            })
+            .collect();
         let mut clients = Vec::with_capacity(lambda);
         for c in 0..lambda {
             let sampler = match &parts.data {
@@ -168,9 +187,10 @@ impl ProtocolCore {
                 ),
             };
             clients.push(ClientState {
-                theta: init.clone(),
+                view: init_view.clone(),
                 ts: 0,
                 shard_ts: vec![0; store.count()],
+                view_gen: 0,
                 sampler,
                 accum: accumulate.then(|| Accumulator::new(p)),
                 steps: 0,
@@ -214,6 +234,7 @@ impl ProtocolCore {
             vclock: 0.0,
             wire_secs: 0.0,
             store,
+            ring,
             link,
             shard_mask: Vec::new(),
             masked_buf: Vec::new(),
@@ -637,16 +658,39 @@ impl ProtocolCore {
             // gate) and charged wire time, so sync pays its real traffic
             // on the virtual-time axis next to the async policies.
             if out.unblock_all {
-                let params = Arc::new(self.server.params().to_vec());
                 let ts = self.server.timestamp();
                 let lambda = self.clients.len() as u64;
                 let copy = self.store.total_bytes();
+                // One publication per shard; the broadcast to λ clients
+                // is pure pointer swaps + refcount bumps (the old layout
+                // shared one Arc here too — the ring generalizes that to
+                // the per-shard fetch paths).
+                let broadcast: Vec<SnapshotRef> = (0..self.store.count())
+                    .map(|s| SnapshotRef {
+                        epoch: ts,
+                        chunk: self.ring.publish(
+                            ts,
+                            s,
+                            self.server.params(),
+                            self.store.range(s),
+                        ),
+                    })
+                    .collect();
                 for (c, b) in
                     self.clients.iter_mut().zip(self.blocked.iter_mut())
                 {
-                    c.theta = params.clone();
+                    for (s, slot) in c.view.iter_mut().enumerate() {
+                        let old = std::mem::replace(
+                            slot,
+                            broadcast[s].clone(),
+                        );
+                        let old_epoch = old.epoch;
+                        drop(old);
+                        self.ring.release(old_epoch, s)?;
+                    }
                     c.ts = ts;
                     c.shard_ts.iter_mut().for_each(|t| *t = ts);
+                    c.view_gen += 1;
                     *b = false; // barrier over: everyone schedulable again
                 }
                 for _ in 0..lambda {
@@ -739,32 +783,65 @@ impl ProtocolCore {
                     vtime: self.vnow,
                 });
             } else if fetch_all {
+                // Full fetch: swap every shard of the view onto the
+                // current server epoch — publication copies each chunk
+                // at most once per epoch, shared across all fetchers.
+                let ts = self.server.timestamp();
+                for s in 0..self.store.count() {
+                    let chunk = self.ring.publish(
+                        ts,
+                        s,
+                        self.server.params(),
+                        self.store.range(s),
+                    );
+                    let client = &mut self.clients[l];
+                    let old = std::mem::replace(
+                        &mut client.view[s],
+                        SnapshotRef { epoch: ts, chunk },
+                    );
+                    client.shard_ts[s] = ts;
+                    let old_epoch = old.epoch;
+                    drop(old);
+                    self.ring.release(old_epoch, s)?;
+                }
                 let client = &mut self.clients[l];
-                client.theta = Arc::new(self.server.params().to_vec());
-                client.ts = self.server.timestamp();
-                client.shard_ts.iter_mut().for_each(|t| *t = client.ts);
+                client.ts = ts;
+                client.view_gen += 1;
                 replaced = ThetaReplaced::Client;
             } else if fetch {
-                // Partial fetch: overwrite only the transmitted ranges.
-                // Each refreshed chunk stamps its own shard_ts (PR 9);
-                // the scalar timestamp j advances to `min(shard_ts)` —
-                // the age of the oldest chunk still in the copy, so a
-                // whole-model staleness penalty stays conservative
-                // without overstating τ once every shard has caught up.
+                // Partial fetch: swap only the transmitted shards onto
+                // the current server epoch — per-shard pointer swaps, no
+                // whole-θ copy (the pre-ring layout cloned all P floats
+                // here to refresh a few ranges). Each refreshed chunk
+                // stamps its own shard_ts (PR 9); the scalar timestamp j
+                // advances to `min(shard_ts)` — the age of the oldest
+                // chunk still in the view, so a whole-model staleness
+                // penalty stays conservative without overstating τ once
+                // every shard has caught up.
                 let server_ts = self.server.timestamp();
-                let mut theta = (*self.clients[l].theta).clone();
                 for s in 0..self.store.count() {
                     if self.shard_mask[s] {
-                        let r = self.store.range(s);
-                        theta[r.clone()]
-                            .copy_from_slice(&self.server.params()[r]);
-                        self.clients[l].shard_ts[s] = server_ts;
+                        let chunk = self.ring.publish(
+                            server_ts,
+                            s,
+                            self.server.params(),
+                            self.store.range(s),
+                        );
+                        let client = &mut self.clients[l];
+                        let old = std::mem::replace(
+                            &mut client.view[s],
+                            SnapshotRef { epoch: server_ts, chunk },
+                        );
+                        client.shard_ts[s] = server_ts;
+                        let old_epoch = old.epoch;
+                        drop(old);
+                        self.ring.release(old_epoch, s)?;
                     }
                 }
                 let client = &mut self.clients[l];
                 client.ts =
                     client.shard_ts.iter().copied().min().unwrap_or(server_ts);
-                client.theta = Arc::new(theta);
+                client.view_gen += 1;
                 replaced = ThetaReplaced::Client;
             }
             if fetch_fate == MessageFate::Duplicated {
@@ -952,13 +1029,23 @@ impl ProtocolCore {
         w.put_f64(self.wire_secs);
         w.put_f64(self.next_eval_vtime);
         w.put_bools(&self.blocked);
+        // VERSION 3: the snapshot ring travels once — client views are
+        // rebuilt from `(shard_ts[s], s)` keys on load (the invariant
+        // `view[s].epoch == shard_ts[s]` holds at every quiescent
+        // boundary), so λ clients no longer serialize λ·P floats.
+        w.section("ring");
+        w.put_usize(self.ring.len());
+        for (&(epoch, shard), chunk) in self.ring.iter() {
+            w.put_u64(epoch);
+            w.put_usize(shard);
+            w.put_f32s(chunk);
+        }
         w.section("clients");
         w.put_usize(self.clients.len());
         for c in &self.clients {
             w.put_u64(c.ts);
             w.put_u64(c.steps);
             w.put_u64s(&c.shard_ts);
-            w.put_f32s(&c.theta);
             let rng = match &c.sampler {
                 SamplerKind::Classif(s) => s.rng_state(),
                 SamplerKind::Lm(s) => s.rng_state(),
@@ -1013,6 +1100,42 @@ impl ProtocolCore {
             );
         }
         self.blocked = blocked;
+        // The fresh core's clients reference the fresh ring's epoch-0
+        // entries; both are replaced wholesale below, so drop the views
+        // first — the old ring dies with its refcounts, no release
+        // bookkeeping to unwind.
+        for c in self.clients.iter_mut() {
+            c.view.clear();
+        }
+        self.ring = SnapshotRing::new();
+        let v2 = r.version() < 3;
+        if !v2 {
+            // VERSION 3: the ring section carries every live chunk once;
+            // client views are rebuilt from their shard_ts keys below.
+            r.expect_section("ring")?;
+            let entries = r.take_usize()?;
+            for _ in 0..entries {
+                let epoch = r.take_u64()?;
+                let shard = r.take_usize()?;
+                if shard >= self.store.count() {
+                    bail!(
+                        "checkpoint ring entry names shard {shard} but \
+                         the store has {} shards",
+                        self.store.count()
+                    );
+                }
+                let chunk = r.take_f32s()?;
+                if chunk.len() != self.store.range(shard).len() {
+                    bail!(
+                        "checkpoint ring chunk for shard {shard} has {} \
+                         params but the shard spans {}",
+                        chunk.len(),
+                        self.store.range(shard).len()
+                    );
+                }
+                self.ring.restore(epoch, shard, chunk);
+            }
+        }
         r.expect_section("clients")?;
         let n = r.take_usize()?;
         if n != self.clients.len() {
@@ -1021,6 +1144,8 @@ impl ProtocolCore {
                 self.clients.len()
             );
         }
+        let p: usize =
+            (0..self.store.count()).map(|s| self.store.range(s).len()).sum();
         for c in self.clients.iter_mut() {
             c.ts = r.take_u64()?;
             c.steps = r.take_u64()?;
@@ -1034,15 +1159,43 @@ impl ProtocolCore {
                 );
             }
             c.shard_ts = shard_ts;
-            let theta = r.take_f32s()?;
-            if theta.len() != c.theta.len() {
-                bail!(
-                    "checkpoint θ_j has {} params but model has {}",
-                    theta.len(),
-                    c.theta.len()
-                );
+            if v2 {
+                // VERSION 2 carried an owned θ_j per client. Adopt it
+                // into the snapshot world by publishing each shard under
+                // its `(shard_ts[s], s)` key — get-or-copy dedups the
+                // (common) case of many clients on the same epoch, so
+                // even a V2 file resumes into bounded memory.
+                let theta = r.take_f32s()?;
+                if theta.len() != p {
+                    bail!(
+                        "checkpoint θ_j has {} params but model has {p}",
+                        theta.len()
+                    );
+                }
+                for s in 0..self.store.count() {
+                    let epoch = c.shard_ts[s];
+                    c.view.push(SnapshotRef {
+                        epoch,
+                        chunk: self.ring.publish(
+                            epoch,
+                            s,
+                            &theta,
+                            self.store.range(s),
+                        ),
+                    });
+                }
+            } else {
+                for s in 0..self.store.count() {
+                    let epoch = c.shard_ts[s];
+                    let Some(chunk) = self.ring.get(epoch, s) else {
+                        bail!(
+                            "checkpoint ring is missing (epoch {epoch}, \
+                             shard {s}) referenced by a client view"
+                        );
+                    };
+                    c.view.push(SnapshotRef { epoch, chunk });
+                }
             }
-            c.theta = Arc::new(theta);
             let mut s = [0u64; 4];
             for word in s.iter_mut() {
                 *word = r.take_u64()?;
@@ -1103,11 +1256,203 @@ impl ProtocolCore {
             server_updates: self.server_updates,
             probes: self.probes,
             faults: self.faults.counters(),
+            resident_param_bytes: self.ring.resident_param_bytes(),
         };
         let mut observers = self.observers;
         for o in &mut observers {
             o.on_finish(&summary);
         }
         summary
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Policy;
+    use crate::experiments::common::{build_parts, build_sim,
+                                     fast_test_config};
+    use crate::server::checkpoint;
+    use crate::sim::serial::Simulator;
+    use crate::sim::Simulation;
+
+    #[test]
+    fn partial_fetch_copies_only_masked_shards() {
+        // PR 10 regression: a partial fetch used to clone the WHOLE θ
+        // into a fresh allocation even when one of four shards
+        // transmitted. Snapshot publication copies at most the masked
+        // shards (and nothing at all on a ring hit), so the run's total
+        // copied params stay within init + fetched — far below one full
+        // θ clone per transmitted fetch.
+        let mut cfg = fast_test_config(Policy::Fasgd);
+        cfg.seed = 71;
+        cfg.clients = 5;
+        cfg.iters = 250;
+        cfg.eval_every = 50;
+        cfg.shards.count = 4;
+        cfg.bandwidth = BandwidthMode::Probabilistic {
+            c_push: 0.3,
+            c_fetch: 0.6,
+            eps: 1e-8,
+        };
+        let mut sim = build_sim(&cfg).unwrap();
+        sim.enable_trace(1 << 14);
+        sim.run_until(cfg.iters).unwrap();
+
+        let core = sim.core();
+        let p: usize = (0..core.store.count())
+            .map(|s| core.store.range(s).len())
+            .sum();
+        let mut partial_fetches = 0u64;
+        for e in core.trace.events() {
+            if let Event::Fetch { shards_tx, transmitted, .. } = e {
+                if transmitted && shards_tx > 0 && shards_tx < 4 {
+                    partial_fetches += 1;
+                }
+            }
+        }
+        assert!(
+            partial_fetches > 0,
+            "no partial fetch exercised — widen c_fetch or iters"
+        );
+
+        let report = core.acc.report();
+        let fetched_params = report.fetch_bytes / 4;
+        let copied = core.ring.copied_params();
+        assert!(
+            copied <= p as u64 + fetched_params,
+            "copied {copied} params but init + fetched is only {}",
+            p as u64 + fetched_params
+        );
+        // The pre-snapshot protocol paid one full-θ clone per transmitted
+        // fetch on top of the λ init copies.
+        let old_cost = p as u64 + report.fetch_copies * p as u64;
+        assert!(
+            copied < old_cost,
+            "no saving over whole-θ clones: {copied} vs {old_cost}"
+        );
+        // Resident memory is bounded by live references (≤ one view per
+        // client + the freshest epoch), never by iteration count.
+        assert!(core.ring.resident_param_bytes() > 0);
+        assert!(
+            core.ring.resident_param_bytes()
+                <= ((cfg.clients + 1) * p * 4) as u64
+        );
+    }
+
+    /// The retired VERSION 2 body layout: no ring section, an owned θ_j
+    /// inside every client record. Kept only so the cross-version test
+    /// below can fabricate a faithful old-format file.
+    fn save_state_v2(core: &ProtocolCore, w: &mut CkptWriter) -> Result<()> {
+        w.section("core");
+        w.put_u64(core.iter);
+        w.put_u64(core.server_updates);
+        w.put_u64(core.next_eval_ts);
+        w.put_f64(core.vnow);
+        w.put_f64(core.vclock);
+        w.put_f64(core.wire_secs);
+        w.put_f64(core.next_eval_vtime);
+        w.put_bools(&core.blocked);
+        w.section("clients");
+        w.put_usize(core.clients.len());
+        let mut theta = Vec::new();
+        for c in &core.clients {
+            w.put_u64(c.ts);
+            w.put_u64(c.steps);
+            w.put_u64s(&c.shard_ts);
+            crate::sim::client::assemble_theta(&c.view, &mut theta);
+            w.put_f32s(&theta);
+            let rng = match &c.sampler {
+                SamplerKind::Classif(s) => s.rng_state(),
+                SamplerKind::Lm(s) => s.rng_state(),
+            };
+            for word in rng {
+                w.put_u64(word);
+            }
+            match &c.accum {
+                Some(a) => {
+                    w.put_bool(true);
+                    w.put_u32(a.count);
+                    w.put_u64(a.newest_ts);
+                    w.put_f32s(&a.sum);
+                }
+                None => w.put_bool(false),
+            }
+        }
+        core.server.save_state(w)?;
+        core.bw.save_state(w);
+        core.acc.save_state(w);
+        w.section("cache");
+        w.put_bool(core.cache.is_some());
+        if let Some(cache) = &core.cache {
+            cache.save_state(w);
+        }
+        core.history.save_state(w);
+        core.staleness.save_state(w);
+        core.probes.save_state(w);
+        core.faults.save_state(w);
+        Ok(())
+    }
+
+    #[test]
+    fn v2_checkpoint_resumes_into_snapshot_world() {
+        let mut cfg = fast_test_config(Policy::Fasgd);
+        cfg.seed = 29;
+        cfg.clients = 5;
+        cfg.iters = 300;
+        cfg.eval_every = 60;
+        cfg.shards.count = 4;
+
+        let uninterrupted = Simulation::builder(cfg.clone())
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+
+        // Drive a fresh run to iteration 150 and write it out in the
+        // retired VERSION 2 layout (per-client θ, no ring section),
+        // stamping the old version into the sealed header.
+        let mut sim =
+            Simulator::new(cfg.clone(), build_parts(&cfg).unwrap())
+                .unwrap();
+        sim.core_mut().run_eval().unwrap();
+        sim.run_until(150).unwrap();
+        let mut w = CkptWriter::new();
+        save_state_v2(sim.core(), &mut w).unwrap();
+        sim.save_schedule_state(&mut w);
+        let mut image = checkpoint::seal(&cfg, 150, &w.into_bytes());
+        image[8..12].copy_from_slice(&2u32.to_le_bytes());
+
+        // Adoption dedups: the restored ring holds one entry per distinct
+        // (epoch, shard) key across all client views — not λ θ copies.
+        let mut probe =
+            Simulator::new(cfg.clone(), build_parts(&cfg).unwrap())
+                .unwrap();
+        let (iter, mut r) = checkpoint::open(&cfg, &image).unwrap();
+        assert_eq!(iter, 150);
+        assert_eq!(r.version(), 2);
+        probe.core_mut().load_state(&mut r).unwrap();
+        let distinct: std::collections::BTreeSet<(u64, usize)> = probe
+            .core()
+            .clients
+            .iter()
+            .flat_map(|c| {
+                c.view.iter().enumerate().map(|(s, v)| (v.epoch, s))
+            })
+            .collect();
+        assert_eq!(probe.core().ring.len(), distinct.len());
+
+        // The public resume path accepts the V2 file and reproduces the
+        // uninterrupted tail bitwise.
+        let mut resumed =
+            Simulation::builder(cfg.clone()).build().unwrap();
+        assert_eq!(resumed.load_checkpoint(&image).unwrap(), 150);
+        let summary = resumed.run().unwrap();
+        assert_eq!(uninterrupted.history.evals, summary.history.evals);
+        assert_eq!(uninterrupted.server_updates, summary.server_updates);
+        assert_eq!(
+            uninterrupted.virtual_secs.to_bits(),
+            summary.virtual_secs.to_bits()
+        );
     }
 }

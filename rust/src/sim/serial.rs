@@ -33,6 +33,10 @@ pub struct Simulator {
     grad_buf: Vec<f32>,
     x_buf: Vec<f32>,
     y_buf: Vec<i32>,
+    /// Contiguous θ assembled from a multi-shard snapshot view (PR 10);
+    /// single-shard runs borrow the shared chunk directly and never
+    /// touch this.
+    theta_buf: Vec<f32>,
 }
 
 impl Simulator {
@@ -54,6 +58,7 @@ impl Simulator {
             grad_buf: vec![0.0; p],
             x_buf: Vec::new(),
             y_buf: Vec::new(),
+            theta_buf: Vec::new(),
         })
     }
 
@@ -148,16 +153,27 @@ impl Simulator {
             }
         };
 
-        // 1. Client computes its gradient at its (possibly stale) θ_j.
+        // 1. Client computes its gradient at its (possibly stale) θ_j —
+        // the single-shard fast path borrows the shared snapshot chunk
+        // directly; multi-shard views assemble into `theta_buf` (PR 10).
         let (loss, classif) = {
             let client = &mut self.core.clients[l];
             client.steps += 1;
+            let theta: &[f32] = if client.view.len() == 1 {
+                &client.view[0].chunk
+            } else {
+                crate::sim::client::assemble_theta(
+                    &client.view,
+                    &mut self.theta_buf,
+                );
+                &self.theta_buf
+            };
             match (&mut client.sampler, &self.core.data) {
                 (SamplerKind::Classif(s), DataSource::Classif(split)) => {
                     s.next_batch(&split.train, &mut self.x_buf, &mut self.y_buf);
                     let batch =
                         Batch::Classif { x: &self.x_buf, y: &self.y_buf };
-                    let loss = self.grad_engine.grad(&client.theta, &batch,
+                    let loss = self.grad_engine.grad(theta, &batch,
                                                      &mut self.grad_buf)?;
                     (loss, true)
                 }
@@ -171,7 +187,7 @@ impl Simulator {
                         targets: &targets,
                     };
                     let loss = self.grad_engine.grad(
-                        &client.theta, &batch, &mut self.grad_buf)?;
+                        theta, &batch, &mut self.grad_buf)?;
                     self.y_buf = tokens;
                     (loss, false)
                 }

@@ -1,11 +1,46 @@
 //! Elementwise kernels over flat `f32` slices.
+//!
+//! The hot kernels (`axpy`, `axpy_block`, the fused FASGD loop) are
+//! written as fixed-width 8-lane blocks of `f32::mul_add` with a scalar
+//! tail: `chunks_exact(8)` gives LLVM a straight-line body with no
+//! length-dependent control flow to vectorize, and `mul_add` maps to one
+//! FMA per lane on any target with fused multiply-add (x86-64-v3, NEON)
+//! — one rounding per element instead of mul-then-add's two. Both
+//! execution modes share these kernels, so the formulation change is
+//! determinism-neutral: serial and parallel runs move bit-for-bit
+//! together.
 
-/// `y += a * x` (the plain-SGD apply).
+/// `y += a * x` (the plain-SGD apply), as one FMA per element.
 pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
     assert_eq!(y.len(), x.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += a * *xi;
+    let mut yc = y.chunks_exact_mut(8);
+    let mut xc = x.chunks_exact(8);
+    for (yo, xo) in (&mut yc).zip(&mut xc) {
+        for (yi, xi) in yo.iter_mut().zip(xo) {
+            *yi = xi.mul_add(a, *yi);
+        }
     }
+    for (yi, xi) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *yi = xi.mul_add(a, *yi);
+    }
+}
+
+/// One `axpy_block` element: four chained FMAs into `y`. The chain is
+/// serial *within* an element but the 8-lane caller blocks give the CPU
+/// independent chains across lanes.
+#[inline(always)]
+fn axpy_block_lane(
+    y: &mut f32,
+    a: &[f32; 4],
+    x0: f32,
+    x1: f32,
+    x2: f32,
+    x3: f32,
+) {
+    *y = x3.mul_add(
+        a[3],
+        x2.mul_add(a[2], x1.mul_add(a[1], x0.mul_add(a[0], *y))),
+    );
 }
 
 /// `y[i] += a[0]·x0[i] + a[1]·x1[i] + a[2]·x2[i] + a[3]·x3[i]` — four
@@ -14,9 +49,7 @@ pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
 /// The MLP forward accumulation (`out += x_k · w_row_k` per input k) is
 /// branch-free here where the scalar loop pays a data-dependent
 /// `if xv == 0.0` test per element; processing four weight rows per pass
-/// also quarters the `y` read/write traffic. The two independent
-/// two-term products per element give LLVM separate dependency chains to
-/// vectorize across.
+/// also quarters the `y` read/write traffic.
 pub fn axpy_block(
     y: &mut [f32],
     a: &[f32; 4],
@@ -30,10 +63,23 @@ pub fn axpy_block(
         x0.len() == n && x1.len() == n && x2.len() == n && x3.len() == n,
         "axpy_block length mismatch"
     );
-    for i in 0..n {
-        let p01 = a[0] * x0[i] + a[1] * x1[i];
-        let p23 = a[2] * x2[i] + a[3] * x3[i];
-        y[i] += p01 + p23;
+    let mut yc = y.chunks_exact_mut(8);
+    let mut c0 = x0.chunks_exact(8);
+    let mut c1 = x1.chunks_exact(8);
+    let mut c2 = x2.chunks_exact(8);
+    let mut c3 = x3.chunks_exact(8);
+    for ((((yo, o0), o1), o2), o3) in
+        (&mut yc).zip(&mut c0).zip(&mut c1).zip(&mut c2).zip(&mut c3)
+    {
+        for i in 0..8 {
+            axpy_block_lane(&mut yo[i], a, o0[i], o1[i], o2[i], o3[i]);
+        }
+    }
+    let yr = yc.into_remainder();
+    let (r0, r1, r2, r3) =
+        (c0.remainder(), c1.remainder(), c2.remainder(), c3.remainder());
+    for i in 0..yr.len() {
+        axpy_block_lane(&mut yr[i], a, r0[i], r1[i], r2[i], r3[i]);
     }
 }
 
@@ -152,6 +198,38 @@ pub fn fasgd_update_fused(
     mean_fast(v)
 }
 
+/// One FASGD element in FMA form. `#[inline(always)]` so the derived
+/// `1 − γ` / `1 − β` constants hoist out of the caller's loops.
+#[inline(always)]
+fn fasgd_lane<const INVERSE: bool>(
+    theta: &mut f32,
+    n: &mut f32,
+    b: &mut f32,
+    v: &mut f32,
+    gi: f32,
+    alpha_over_tau: f32,
+    hp: &FasgdHparams,
+) {
+    let gamma = hp.gamma;
+    let one_m_gamma = 1.0 - gamma;
+    let beta = hp.beta;
+    let one_m_beta = 1.0 - beta;
+    let ni = (gi * gi).mul_add(one_m_gamma, gamma * *n);
+    let bi = gi.mul_add(one_m_gamma, gamma * *b);
+    // n − b² as an FMA keeps the subtraction's rounding inside the fuse.
+    let var = bi.mul_add(-bi, ni).max(0.0) + hp.eps;
+    let s = var.sqrt();
+    let vi = if INVERSE {
+        (1.0 / s).mul_add(one_m_beta, beta * *v)
+    } else {
+        s.mul_add(one_m_beta, beta * *v)
+    };
+    *n = ni;
+    *b = bi;
+    *v = vi;
+    *theta = gi.mul_add(-(alpha_over_tau / vi.max(hp.v_floor)), *theta);
+}
+
 #[inline(always)]
 fn fasgd_loop<const INVERSE: bool>(
     theta: &mut [f32],
@@ -162,25 +240,43 @@ fn fasgd_loop<const INVERSE: bool>(
     alpha_over_tau: f32,
     hp: &FasgdHparams,
 ) {
-    let gamma = hp.gamma;
-    let one_m_gamma = 1.0 - hp.gamma;
-    let beta = hp.beta;
-    let one_m_beta = 1.0 - hp.beta;
-    for i in 0..theta.len() {
-        let gi = g[i];
-        let ni = gamma * n[i] + one_m_gamma * gi * gi;
-        let bi = gamma * b[i] + one_m_gamma * gi;
-        let var = (ni - bi * bi).max(0.0) + hp.eps;
-        let s = var.sqrt();
-        let vi = if INVERSE {
-            beta * v[i] + one_m_beta / s
-        } else {
-            beta * v[i] + one_m_beta * s
-        };
-        n[i] = ni;
-        b[i] = bi;
-        v[i] = vi;
-        theta[i] -= alpha_over_tau / vi.max(hp.v_floor) * gi;
+    let mut tc = theta.chunks_exact_mut(8);
+    let mut nc = n.chunks_exact_mut(8);
+    let mut bc = b.chunks_exact_mut(8);
+    let mut vc = v.chunks_exact_mut(8);
+    let mut gc = g.chunks_exact(8);
+    for ((((to, no), bo), vo), go) in
+        (&mut tc).zip(&mut nc).zip(&mut bc).zip(&mut vc).zip(&mut gc)
+    {
+        for i in 0..8 {
+            fasgd_lane::<INVERSE>(
+                &mut to[i],
+                &mut no[i],
+                &mut bo[i],
+                &mut vo[i],
+                go[i],
+                alpha_over_tau,
+                hp,
+            );
+        }
+    }
+    let (tr, nr, br, vr) = (
+        tc.into_remainder(),
+        nc.into_remainder(),
+        bc.into_remainder(),
+        vc.into_remainder(),
+    );
+    let gr = gc.remainder();
+    for i in 0..tr.len() {
+        fasgd_lane::<INVERSE>(
+            &mut tr[i],
+            &mut nr[i],
+            &mut br[i],
+            &mut vr[i],
+            gr[i],
+            alpha_over_tau,
+            hp,
+        );
     }
 }
 
@@ -289,16 +385,18 @@ mod tests {
 
         let mut vsum = 0.0f64;
         for i in 0..p {
+            // The kernel is FMA-formulated; recompute each element with
+            // the same `mul_add` shape so `assert_eq!` compares bits.
             let gi = g[i];
-            let ni = hp.gamma * n0[i] + (1.0 - hp.gamma) * gi * gi;
-            let bi = hp.gamma * b0[i] + (1.0 - hp.gamma) * gi;
-            let s = ((ni - bi * bi).max(0.0) + hp.eps).sqrt();
-            let vi = hp.beta * v0[i] + (1.0 - hp.beta) * s;
+            let ni = (gi * gi).mul_add(1.0 - hp.gamma, hp.gamma * n0[i]);
+            let bi = gi.mul_add(1.0 - hp.gamma, hp.gamma * b0[i]);
+            let s = (bi.mul_add(-bi, ni).max(0.0) + hp.eps).sqrt();
+            let vi = s.mul_add(1.0 - hp.beta, hp.beta * v0[i]);
             vsum += vi as f64;
             assert_eq!(n[i], ni);
             assert_eq!(b[i], bi);
             assert_eq!(v[i], vi);
-            let want = t0[i] - 0.01 / vi.max(hp.v_floor) * gi;
+            let want = gi.mul_add(-(0.01 / vi.max(hp.v_floor)), t0[i]);
             assert_eq!(theta[i], want);
         }
         // vbar accumulates per-chunk in f32; compare at f32 precision.

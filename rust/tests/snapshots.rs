@@ -1,0 +1,239 @@
+//! Epoch-indexed shared θ snapshots (PR 10): ring refcount properties
+//! under randomized fleet traffic, the serial↔parallel bitwise contract
+//! for snapshot-backed client views, and the bounded-memory invariant
+//! `resident_param_bytes ≤ ring_depth · P · 4` on real runs.
+
+use std::collections::BTreeSet;
+
+use fasgd::config::{BandwidthMode, ExperimentConfig, Policy};
+use fasgd::experiments::common::{build_parallel_sim, build_sim,
+                                 fast_test_config};
+use fasgd::grad::{GradientEngine, RustMlpEngine};
+use fasgd::metrics::RunSummary;
+use fasgd::server::{SnapshotRef, SnapshotRing};
+
+// ---------------------------------------------------------------------------
+// Ring refcount property test: randomized publish/swap/release traffic.
+
+/// Deterministic LCG (no external rand dep; same constants as MMIX).
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self
+            .0
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+}
+
+#[test]
+fn prop_ring_tracks_exactly_the_held_references() {
+    // A model fleet: `clients` views over `shards` chunks of a parameter
+    // vector that advances through epochs. Every operation either bumps
+    // the server epoch (mutating θ) or re-fetches one client's shard
+    // (publish + swap + release, the protocol core's exact drop order).
+    // After every step the ring must hold exactly the distinct
+    // (epoch, shard) keys some client still references — never a stale
+    // entry (leak), never a missing one (premature eviction) — and every
+    // held chunk must still carry the θ content of its publication epoch.
+    let shards = 3usize;
+    let p = 12usize; // 3 shards x 4 params
+    let ranges: Vec<std::ops::Range<usize>> =
+        (0..shards).map(|s| s * 4..(s + 1) * 4).collect();
+    let n_clients = 7usize;
+
+    let mut rng = Lcg(0x9E3779B97F4A7C15);
+    let mut ring = SnapshotRing::new();
+    let mut params = vec![0.0f32; p];
+    let mut epoch = 0u64;
+    let mut published: BTreeSet<(u64, usize)> = BTreeSet::new();
+
+    let fetch = |ring: &mut SnapshotRing,
+                     published: &mut BTreeSet<(u64, usize)>,
+                     epoch: u64,
+                     shard: usize,
+                     params: &[f32]| {
+        published.insert((epoch, shard));
+        SnapshotRef {
+            epoch,
+            chunk: ring.publish(epoch, shard, params, ranges[shard].clone()),
+        }
+    };
+
+    let mut views: Vec<Vec<SnapshotRef>> = (0..n_clients)
+        .map(|_| {
+            (0..shards)
+                .map(|s| fetch(&mut ring, &mut published, 0, s, &params))
+                .collect()
+        })
+        .collect();
+
+    for _ in 0..2_000 {
+        if rng.below(4) == 0 {
+            // Server update: θ changes, the timestamp advances.
+            epoch += 1;
+            params.iter_mut().for_each(|x| *x = epoch as f32);
+        } else {
+            // One client re-fetches one shard at the current epoch:
+            // publish-then-swap, drop the old handle, then release its
+            // key — the protocol core's ordering, which guarantees the
+            // ring sees strong_count >= 2 for a same-key swap.
+            let c = rng.below(n_clients as u64) as usize;
+            let s = rng.below(shards as u64) as usize;
+            let fresh = fetch(&mut ring, &mut published, epoch, s, &params);
+            let old = std::mem::replace(&mut views[c][s], fresh);
+            let oe = old.epoch;
+            drop(old);
+            ring.release(oe, s).expect("held key must exist");
+        }
+
+        // Invariants.
+        let held: BTreeSet<(u64, usize)> = views
+            .iter()
+            .flat_map(|v| {
+                v.iter().enumerate().map(|(s, r)| (r.epoch, s))
+            })
+            .collect();
+        assert_eq!(
+            ring.len(),
+            held.len(),
+            "ring entries != distinct held keys (leak or premature evict)"
+        );
+        let epochs: BTreeSet<u64> = held.iter().map(|(e, _)| *e).collect();
+        assert_eq!(ring.depth(), epochs.len());
+        for &(e, s) in &held {
+            let chunk = ring
+                .get(e, s)
+                .unwrap_or_else(|| panic!("held ({e},{s}) evicted"));
+            assert!(
+                chunk.iter().all(|&x| x == e as f32),
+                "chunk ({e},{s}) mutated after publication"
+            );
+        }
+        assert_eq!(
+            ring.resident_param_bytes(),
+            ring.len() as u64 * 4 * 4,
+            "resident bytes != live chunks x shard bytes"
+        );
+        // publish is get-or-copy: total copies == distinct keys ever
+        // published x shard length, no matter how many clients shared
+        // each chunk.
+        assert_eq!(ring.copied_params(), published.len() as u64 * 4);
+    }
+
+    // Teardown: dropping every view must drain the ring to empty, and a
+    // release after that is the D004 bookkeeping error, not a no-op.
+    let mut last_key = None;
+    for view in views.drain(..) {
+        for (s, r) in view.into_iter().enumerate() {
+            let e = r.epoch;
+            drop(r);
+            if ring.release(e, s).expect("held key must exist") {
+                last_key = Some((e, s));
+            }
+        }
+    }
+    assert!(ring.is_empty(), "refs all dropped but ring not empty");
+    assert_eq!(ring.resident_param_bytes(), 0);
+    let (e, s) = last_key.expect("some key must have been evicted");
+    ring.release(e, s)
+        .expect_err("release after eviction must surface as an error");
+}
+
+// ---------------------------------------------------------------------------
+// Serial↔parallel bitwise contract for snapshot-backed views, and the
+// memory bound on real runs.
+
+fn fingerprint(s: &RunSummary) -> String {
+    let mut out = String::new();
+    for p in &s.history.evals {
+        out.push_str(&format!(
+            "eval {} {} {:?} {:?} {:?}\n",
+            p.iter,
+            p.server_ts,
+            p.vtime.to_bits(),
+            p.val_loss.to_bits(),
+            p.val_acc.to_bits()
+        ));
+    }
+    out.push_str(&format!("vsecs {:?}\n", s.virtual_secs.to_bits()));
+    out.push_str(&format!(
+        "updates {} bytes {} {} resident {}\n",
+        s.server_updates,
+        s.bandwidth.push_bytes,
+        s.bandwidth.fetch_bytes,
+        s.resident_param_bytes
+    ));
+    out
+}
+
+fn snapshot_cfg(shards: usize) -> ExperimentConfig {
+    // Bimodal stragglers + the probabilistic per-shard gate: clients'
+    // shard views age independently and fetches are partial, so the ring
+    // carries several live epochs at once — the regime the sharing
+    // actually matters in.
+    let mut cfg = fast_test_config(Policy::Fasgd);
+    cfg.seed = 83;
+    cfg.clients = 5;
+    cfg.iters = 250;
+    cfg.eval_every = 50;
+    cfg.shards.count = shards;
+    cfg.bandwidth = BandwidthMode::Probabilistic {
+        c_push: 0.3,
+        c_fetch: 0.6,
+        eps: 1e-8,
+    };
+    cfg.delay.compute = fasgd::config::DelayModel::Bimodal {
+        straggler_frac: 0.25,
+        slow_mult: 4.0,
+    };
+    cfg
+}
+
+#[test]
+fn bitwise_equal_snapshot_views_across_shards_and_inflight() {
+    // shards ∈ {1, 4, 7} × --inflight {1, 8}: the pipelined speculative
+    // dispatcher hands out shared chunks and releases them on recycle,
+    // and must still replay the serial schedule bit for bit — including
+    // the run-end ring residency.
+    for shards in [1usize, 4, 7] {
+        let cfg = snapshot_cfg(shards);
+        let serial = build_sim(&cfg).unwrap().run().unwrap();
+        let want = fingerprint(&serial);
+        for inflight in [1usize, 8] {
+            let mut cfg = cfg.clone();
+            cfg.inflight = inflight;
+            let parallel =
+                build_parallel_sim(&cfg, 4).unwrap().run().unwrap();
+            assert_eq!(
+                want,
+                fingerprint(&parallel),
+                "serial != parallel for shards={shards} inflight={inflight}"
+            );
+        }
+    }
+}
+
+#[test]
+fn resident_theta_is_bounded_by_ring_depth_not_fleet_size() {
+    // The run-end ring residency must be a handful of epochs' worth of
+    // θ — bounded by the live-epoch span (at most one distinct epoch per
+    // client view plus the freshest), never λ private copies.
+    let cfg = snapshot_cfg(4);
+    let p = RustMlpEngine::new(vec![784, cfg.mlp_hidden, 10], cfg.batch)
+        .param_count() as u64;
+    let s = build_sim(&cfg).unwrap().run().unwrap();
+    assert!(s.resident_param_bytes > 0, "views must hold live snapshots");
+    let bound = (cfg.clients as u64 + 1) * p * 4;
+    assert!(
+        s.resident_param_bytes <= bound,
+        "resident {} exceeds (clients+1)·P·4 = {bound}",
+        s.resident_param_bytes
+    );
+}

@@ -48,7 +48,8 @@ fn first_barrier_matches_manual_bigbatch_step() {
         }
     }
     // NOTE: the server applies per-client axpy in client order; replicate
-    // that exact association for the bitwise comparison.
+    // that exact association — including axpy's FMA form (one rounding
+    // per element) — for the bitwise comparison.
     let mut manual = theta0.clone();
     for c in 0..cfg.clients {
         let mut sampler = BatchSampler::new(
@@ -61,7 +62,7 @@ fn first_barrier_matches_manual_bigbatch_step() {
             .unwrap();
         let scale = cfg.alpha / cfg.clients as f32;
         for (t, gval) in manual.iter_mut().zip(&grad) {
-            *t -= scale * gval;
+            *t = gval.mul_add(-scale, *t);
         }
     }
     assert_eq!(sim_params, manual, "sync barrier != manual big-batch step");
